@@ -1,0 +1,88 @@
+//! The paper's full pipeline on the pedestrian catalog: hyperparameter
+//! search on the six training sequences, then evaluation of the chosen
+//! H_opt against every fixed baseline on all seven sequences — with the
+//! telemetry summary of §IV.D.
+//!
+//! ```bash
+//! cargo run --release --example pedestrian_campaign
+//! ```
+
+use tod::app::Campaign;
+use tod::coordinator::search::{grid_search_oracle, SearchSpace};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::telemetry::tegrastats::TegrastatsSim;
+use tod::util::table::AsciiTable;
+use tod::DnnKind;
+
+fn main() {
+    // ---- phase 1: hyperparameter search (Table I) --------------------
+    println!("phase 1: hyperparameter grid search over training sequences");
+    let train_seqs: Vec<_> =
+        SequenceId::TRAIN.iter().map(|&id| generate(id)).collect();
+    let train: Vec<(&_, f64)> =
+        train_seqs.iter().map(|s| (s, 30.0)).collect();
+    let result = grid_search_oracle(&SearchSpace::paper(), &train);
+    let h = result.best_thresholds().clone();
+    let hv = h.values().to_vec();
+    println!(
+        "  H_opt = {{{}, {}, {}}} (mean AP {:.3})\n",
+        hv[0],
+        hv[1],
+        hv[2],
+        result.rows[result.best].mean_ap
+    );
+
+    // ---- phase 2: campaign evaluation with H_opt ----------------------
+    println!("phase 2: evaluating TOD{{H_opt}} vs fixed DNNs (real-time)");
+    let mut campaign = Campaign::with_thresholds(h);
+    let mut table = AsciiTable::new(
+        "",
+        vec!["sequence", "best-fixed", "AP", "TOD AP", "TOD picks"],
+    );
+    for id in SequenceId::ALL {
+        let (best_kind, best_ap) = campaign.best_fixed_realtime(id);
+        let tod = campaign.tod(id).clone();
+        let freq = tod.deploy_freq();
+        let dominant = DnnKind::ALL
+            .iter()
+            .max_by(|a, b| {
+                freq[a.index()].partial_cmp(&freq[b.index()]).unwrap()
+            })
+            .unwrap();
+        table.push(vec![
+            id.name().to_string(),
+            best_kind.artifact_name().to_string(),
+            format!("{best_ap:.3}"),
+            format!("{:.3}", tod.ap),
+            format!(
+                "{} {:.0}%",
+                dominant.short_label(),
+                freq[dominant.index()] * 100.0
+            ),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let imp = campaign.improvement_over_fixed();
+    println!(
+        "TOD mean-AP improvement: {:+.1}% vs tiny-288, {:+.1}% vs tiny-416, \
+         {:+.1}% vs 288, {:+.1}% vs 416",
+        imp[0], imp[1], imp[2], imp[3]
+    );
+
+    // ---- phase 3: telemetry (§IV.D) -----------------------------------
+    let sim = TegrastatsSim::default();
+    let tod_trace = campaign.tod(SequenceId::Mot05).trace.clone();
+    let y416_trace = campaign
+        .realtime_fixed(SequenceId::Mot05, DnnKind::Y416)
+        .trace
+        .clone();
+    println!(
+        "\nMOT17-05 telemetry: TOD {:.1} W / {:.1}% GPU vs always-Y-416 \
+         {:.1} W / {:.1}% GPU",
+        sim.mean_power(&tod_trace),
+        sim.mean_gpu(&tod_trace),
+        sim.mean_power(&y416_trace),
+        sim.mean_gpu(&y416_trace),
+    );
+}

@@ -1,0 +1,75 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! Loads the four AOT-compiled detector variants (JAX + Pallas -> HLO
+//! text, built once by `make artifacts`), preloads them on the PJRT CPU
+//! client, and serves a synthetic pedestrian stream through the TOD
+//! coordinator with REAL inference on every request: rasterize frame ->
+//! PJRT execute -> Rust YOLO decode -> MBBS -> Algorithm 1 selection for
+//! the next frame. Python never runs here.
+//!
+//! Reports per-variant latency percentiles and end-to-end throughput;
+//! the run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts   # once
+//! cargo run --release --example serve_pjrt -- [n_frames]
+//! ```
+
+use std::path::PathBuf;
+
+use tod::coordinator::policy::MbbsPolicy;
+use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::runtime::pool::EnginePool;
+use tod::runtime::serve::serve_sequence;
+
+fn main() {
+    let frames: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let artifacts = PathBuf::from(
+        std::env::var("TOD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+
+    println!("loading + compiling 4 AOT variants from {artifacts:?} ...");
+    let t0 = std::time::Instant::now();
+    let pool = match EnginePool::load(&artifacts) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#}\nrun `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "pool ready in {:.1?}: {:?}\n",
+        t0.elapsed(),
+        pool.loaded()
+            .iter()
+            .map(|k| k.artifact_name())
+            .collect::<Vec<_>>()
+    );
+
+    // a close-range walking-camera stream (MOT17-05-like, scaled down)
+    let seq = Sequence::generate(SequenceSpec {
+        name: "SERVE".into(),
+        width: 640,
+        height: 480,
+        fps: 30.0,
+        frames,
+        density: 6,
+        ref_height: 260.0,
+        depth_range: (1.0, 2.2),
+        walk_speed: 1.5,
+        camera: CameraMotion::Walking { pan_speed: 8.0 },
+        seed: 42,
+    });
+
+    let mut policy = MbbsPolicy::tod_default();
+    let report = serve_sequence(&pool, &seq, &mut policy).expect("serve");
+    println!("{report}");
+    println!(
+        "note: absolute latencies are CPU-PJRT with interpret-mode Pallas \
+         grids — see DESIGN.md §Hardware-Adaptation; the Jetson-calibrated \
+         latency model drives the accuracy experiments."
+    );
+}

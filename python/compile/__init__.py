@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX detector + AOT.
+
+Nothing in this package runs at serve time — ``aot.py`` lowers the four
+detector variants to HLO text once, and the Rust runtime owns the rest.
+"""

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX detector variants -> HLO text artifacts + manifest.
+
+Runs once at build time (``make artifacts``); Python never executes on the
+request path. Each of the four paper operating points lowers to one
+``artifacts/<name>.hlo.txt`` module (weights baked as constants) that the
+Rust runtime loads via ``HloModuleProto::from_text_file`` and compiles on
+the PJRT CPU client.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` describes every artifact (input shape, head
+grids/strides/anchors, confidence decode layout) for the Rust decoder.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked detector weights must survive the
+    # text round-trip — the default printer elides them as `{...}`, which
+    # the Rust-side parser would reject.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(cfg: model.VariantConfig, use_pallas: bool = True) -> str:
+    fn = model.detector_fn(cfg, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(model.input_spec(cfg))
+    return to_hlo_text(lowered)
+
+
+def variant_manifest(cfg: model.VariantConfig, artifact: str,
+                     hlo_sha256: str, hlo_bytes: int) -> dict:
+    return {
+        "name": cfg.name,
+        "artifact": artifact,
+        "input_shape": [1, cfg.input_size, cfg.input_size, 3],
+        "input_size": cfg.input_size,
+        "tiny": cfg.tiny,
+        "param_count": model.param_count(cfg),
+        "num_classes": model.NUM_CLASSES,
+        "anchors_per_scale": model.ANCHORS_PER_SCALE,
+        "hlo_sha256": hlo_sha256,
+        "hlo_bytes": hlo_bytes,
+        "heads": [
+            {
+                "stride": stride,
+                "grid": cfg.grid_size(stride),
+                "channels": model.HEAD_CHANNELS,
+                "anchors": [list(a) for a in cfg.anchors[i]],
+            }
+            for i, stride in enumerate(cfg.head_strides)
+        ],
+    }
+
+
+def build_all(out_dir: str, variants=None, use_pallas: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    names = variants or list(model.VARIANTS)
+    manifest = {
+        "format": "hlo-text",
+        "generator": "python/compile/aot.py",
+        "jax_version": jax.__version__,
+        "pallas": use_pallas,
+        "variants": [],
+    }
+    for name in names:
+        cfg = model.VARIANTS[name]
+        t0 = time.time()
+        text = lower_variant(cfg, use_pallas=use_pallas)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        sha = hashlib.sha256(text.encode()).hexdigest()
+        manifest["variants"].append(
+            variant_manifest(cfg, fname, sha, len(text))
+        )
+        print(
+            f"[aot] {name}: {len(text) / 1e6:.2f} MB HLO text, "
+            f"{model.param_count(cfg)} params, "
+            f"lowered in {time.time() - t0:.1f}s",
+            file=sys.stderr,
+        )
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--variant", action="append",
+                    help="lower only the named variant(s)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="ablation: lower via the pure-lax conv path")
+    args = ap.parse_args()
+    build_all(args.out, variants=args.variant,
+              use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Convolution = im2col patch extraction + fused Pallas matmul.
+
+The paper's inference hot-spot is the Darknet conv stack of YOLOv4; on our
+TPU-shaped substrate every conv becomes
+
+    patches = im2col(x)                    # (N*OH*OW, KH*KW*CIN)
+    out     = fused_matmul_bias_act(...)   # L1 Pallas kernel
+
+so the whole backbone funnels through the L1 kernel and lowers into a
+single HLO module per detector variant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_matmul_bias_act
+from .kernels import ref as kref
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Extract SAME-padded (kh, kw) patches from an NHWC tensor.
+
+    Returns (N, OH, OW, kh*kw*C) with the patch axis ordered (kh, kw, c)
+    to match a (kh, kw, cin, cout) weight reshaped to (kh*kw*cin, cout).
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns channels ordered (c, kh, kw) on
+    # the feature axis; reorder to (kh, kw, c) for the HWIO weight layout.
+    n, oh, ow, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(n, oh, ow, c, kh * kw)
+    patches = jnp.moveaxis(patches, -2, -1)  # (..., kh*kw, c)
+    return patches.reshape(n, oh, ow, kh * kw * c)
+
+
+def conv2d_fused(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    activation: str = "leaky_relu",
+    use_pallas: bool = True,
+) -> jax.Array:
+    """SAME conv + bias + activation through the L1 Pallas kernel.
+
+    Args:
+      x: (N, H, W, CIN).
+      w: (KH, KW, CIN, COUT).
+      b: (COUT,).
+      stride: spatial stride.
+      activation: forwarded to the kernel.
+      use_pallas: when False, falls back to the pure-lax oracle — used by
+        tests and by HLO-size ablations (see DESIGN.md §Perf).
+    """
+    if not use_pallas:
+        return kref.ref_conv2d_bias_act(x, w, b, stride=stride,
+                                        activation=activation)
+    kh, kw, cin, cout = w.shape
+    n = x.shape[0]
+    patches = im2col(x, kh, kw, stride)
+    _, oh, ow, k = patches.shape
+    out = fused_matmul_bias_act(
+        patches.reshape(n * oh * ow, k),
+        w.reshape(kh * kw * cin, cout),
+        b,
+        activation=activation,
+    )
+    return out.reshape(n, oh, ow, cout)

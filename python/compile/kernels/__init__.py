@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the TOD detector hot-spots.
+
+``fused_matmul.fused_matmul_bias_act`` — tiled matmul + bias + activation
+(the im2col convolution core); ``pool.maxpool2x2`` — stride-2 max-pool.
+``ref`` holds the pure-jnp oracles used by the test suite.
+"""
+
+from .fused_matmul import (  # noqa: F401
+    fused_matmul_bias_act,
+    mxu_utilisation_estimate,
+    vmem_footprint_bytes,
+)
+from .pool import maxpool2x2  # noqa: F401

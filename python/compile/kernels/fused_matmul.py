@@ -1,0 +1,185 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation.
+
+This is the compute hot-spot of the YOLO-style detector backbone: every
+convolution is lowered to an im2col patch extraction followed by this
+kernel, which computes
+
+    out = act(x @ w + b)
+
+in (bm, bn) output tiles with a bk-step contraction loop, accumulating in
+a float32 VMEM scratch accumulator.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper's TensorRT
+FP16 tensor-core path becomes an MXU-shaped tiled matmul. Block shapes
+default to multiples of (8, 128) so the systolic array is fed full tiles;
+the accumulator lives in VMEM scratch; the HBM→VMEM schedule is expressed
+with BlockSpec index maps over a (M/bm, N/bn, K/bk) grid.
+
+CPU note: kernels are lowered with ``interpret=True`` so they emit plain
+HLO (a grid loop with dynamic slices) executable by the CPU PJRT client —
+real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Activation = Literal["linear", "relu", "leaky_relu"]
+
+# Default MXU-shaped tile sizes (multiples of the 8x128 register tile /
+# 128x128 systolic array). bk is kept modest so x-tile + w-tile + acc fit
+# VMEM with double-buffering headroom; see DESIGN.md §Perf for the budget.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+LEAKY_SLOPE = 0.1  # YOLO / Darknet convention
+
+
+def _apply_act(x, activation: Activation):
+    if activation == "linear":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "leaky_relu":
+        return jnp.where(x >= 0.0, x, LEAKY_SLOPE * x)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int,
+                   activation: Activation):
+    """Grid = (M/bm, N/bn, K/bk); k is the innermost (fastest) dimension.
+
+    The output tile doubles as the accumulator (float32), persisting
+    across the k steps of one (i, j) tile; the bias-add + activation are
+    fused into the final k step so no separate epilogue pass over HBM is
+    needed.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...]
+        o_ref[...] = _apply_act(out, activation).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple: int, axis: int):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bn", "bk", "interpret"),
+)
+def fused_matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: Activation = "leaky_relu",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Args:
+      x: (M, K) float array.
+      w: (K, N) float array.
+      b: (N,) float array.
+      activation: "linear" | "relu" | "leaky_relu".
+      bm/bn/bk: tile sizes; inputs are zero-padded up to tile multiples
+        and the result is sliced back, so arbitrary shapes are accepted.
+      interpret: must stay True for CPU PJRT execution (see module doc).
+
+    Returns:
+      (M, N) array with x's dtype.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(
+            f"bad ranks: x{x.shape} w{w.shape} b{b.shape}"
+        )
+    m, kx = x.shape
+    kw, n = w.shape
+    if kx != kw or b.shape[0] != n:
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}"
+        )
+
+    # Clamp tiles to (padded) problem size so tiny problems stay tiny.
+    bm_ = min(bm, _ceil_mult(m, 8))
+    bn_ = min(bn, _ceil_mult(n, 128))
+    bk_ = min(bk, _ceil_mult(kx, 128))
+
+    xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
+    wp = _pad_to(_pad_to(w, bk_, 0), bn_, 1)
+    bp = _pad_to(b, bn_, 0).reshape(1, -1)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM budget for one grid step (double-buffered inputs).
+
+    x-tile + w-tile are double-buffered by the pipeline; the accumulator
+    and output tile are single instances. Used by DESIGN.md §Perf and the
+    kernel structure tests — interpret mode gives no TPU wallclock, so
+    structure is what we optimise.
+    """
+    x_tile = bm * bk * dtype_bytes * 2
+    w_tile = bk * bn * dtype_bytes * 2
+    b_tile = bn * dtype_bytes * 2
+    acc = bm * bn * 4
+    out = bm * bn * dtype_bytes
+    return x_tile + w_tile + b_tile + acc + out
+
+
+def mxu_utilisation_estimate(m: int, n: int, k: int,
+                             bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp, np_, kp = (_ceil_mult(m, bm), _ceil_mult(n, bn), _ceil_mult(k, bk))
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued

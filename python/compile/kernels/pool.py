@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: 2x2/stride-2 max-pool over NHWC feature maps.
+
+YOLOv4-tiny downsamples with max-pool between conv stages; this kernel
+tiles the feature map over (rows, channel) blocks so each grid step holds
+one input row-pair strip in VMEM and emits one output row strip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    # x_ref: (1, 2*bh, W, bc) input strip; o_ref: (1, bh, W//2, bc).
+    x = x_ref[...]
+    _, h2, w, c = x.shape
+    x = x.reshape(1, h2 // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bc", "interpret"))
+def maxpool2x2(
+    x: jax.Array,
+    *,
+    bh: int = 8,
+    bc: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """2x2 stride-2 max pool on an NHWC tensor via Pallas.
+
+    H and W must be even (the detector keeps all spatial dims powers of
+    two times the stem size, so this always holds in-model).
+    """
+    n, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even H, W; got {x.shape}")
+    oh, ow = h // 2, w // 2
+    bh_ = min(bh, oh)
+    while oh % bh_:
+        bh_ -= 1
+    bc_ = min(bc, c)
+    while c % bc_:
+        bc_ -= 1
+    grid = (n, oh // bh_, c // bc_)
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2 * bh_, w, bc_), lambda i, j, k: (i, j, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bh_, ow, bc_), lambda i, j, k: (i, j, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)

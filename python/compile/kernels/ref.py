@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy / lax ops only. pytest (and the hypothesis
+sweeps) assert allclose between kernel and reference across shapes and
+dtypes — this is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.1
+
+
+def ref_matmul_bias_act(x, w, b, activation: str = "leaky_relu"):
+    """act(x @ w + b) with float32 accumulation, matching the kernel."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "linear":
+        pass
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "leaky_relu":
+        out = jnp.where(out >= 0.0, out, LEAKY_SLOPE * out)
+    else:
+        raise ValueError(f"unknown activation: {activation}")
+    return out.astype(x.dtype)
+
+
+def ref_maxpool2x2(x):
+    """2x2 stride-2 max pool on NHWC."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def ref_conv2d_bias_act(x, w, b, stride: int = 1,
+                        activation: str = "leaky_relu"):
+    """Direct NHWC conv + bias + activation via lax.conv (SAME padding).
+
+    w layout: (kh, kw, cin, cout). This is the oracle for the im2col +
+    fused-matmul convolution path in ``compile.conv``.
+    """
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b
+    if activation == "linear":
+        pass
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "leaky_relu":
+        out = jnp.where(out >= 0.0, out, LEAKY_SLOPE * out)
+    else:
+        raise ValueError(f"unknown activation: {activation}")
+    return out.astype(x.dtype)

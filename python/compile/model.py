@@ -1,0 +1,190 @@
+"""L2: YOLOv4-style detector graphs at the paper's four operating points.
+
+The paper serves four TensorRT engines: YOLOv4-tiny-288, YOLOv4-tiny-416,
+YOLOv4-288 and YOLOv4-416. We reproduce the *serving architecture* — four
+preloaded engines with distinct capacity/latency operating points — with
+compact Darknet-style detectors whose convs all route through the L1
+Pallas kernel (``compile.conv.conv2d_fused``).
+
+Weights are deterministic (seeded He-init): there is no COCO training in
+this reproduction (see DESIGN.md §3 — detection *quality* is modelled by
+the Rust-side oracle calibrated to the paper's Fig. 4, while these graphs
+carry the real compute on the request path).
+
+Each variant lowers to one HLO module: image (1, S, S, 3) → tuple of raw
+head tensors (1, GH, GW, A*(5+C)); box decoding happens in Rust
+(``rust/src/runtime/decode.rs``) from the manifest this module emits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .conv import conv2d_fused
+from .kernels import maxpool2x2
+
+NUM_CLASSES = 1  # 'person' — the paper filters detections to that label
+ANCHORS_PER_SCALE = 3
+HEAD_CHANNELS = ANCHORS_PER_SCALE * (5 + NUM_CLASSES)
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantConfig:
+    """One detector operating point (name matches the paper's)."""
+
+    name: str
+    input_size: int          # square input resolution (288 or 416)
+    tiny: bool               # tiny topology (pool downsampling, 1 head)
+    widths: tuple            # channel plan per stage
+    head_strides: tuple      # output strides, one per detection head
+    anchors: tuple           # per head: ((w, h) pixels at input scale, ...)
+    seed: int = 0
+
+    def grid_size(self, stride: int) -> int:
+        assert self.input_size % stride == 0
+        return self.input_size // stride
+
+
+def _tiny_cfg(size: int) -> VariantConfig:
+    return VariantConfig(
+        name=f"yolov4-tiny-{size}",
+        input_size=size,
+        tiny=True,
+        widths=(16, 32, 32, 64, 128),
+        head_strides=(32,),
+        anchors=(((23, 56), (52, 128), (110, 245)),),
+        seed=1011,
+    )
+
+
+def _full_cfg(size: int) -> VariantConfig:
+    return VariantConfig(
+        name=f"yolov4-{size}",
+        input_size=size,
+        tiny=False,
+        widths=(16, 32, 64, 96, 128),
+        head_strides=(32, 16),
+        anchors=(
+            ((52, 128), (78, 180), (110, 245)),
+            ((13, 30), (23, 56), (36, 88)),
+        ),
+        seed=2022,
+    )
+
+
+VARIANTS: dict = {
+    "yolov4-tiny-288": _tiny_cfg(288),
+    "yolov4-tiny-416": _tiny_cfg(416),
+    "yolov4-288": _full_cfg(288),
+    "yolov4-416": _full_cfg(416),
+}
+
+
+def _he_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def build_params(cfg: VariantConfig) -> dict:
+    """Deterministic parameter pytree for a variant (seeded He init)."""
+    key = jax.random.PRNGKey(cfg.seed + cfg.input_size)
+    params: dict = {}
+
+    def conv_param(name, kh, kw, cin, cout):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params[f"{name}.w"] = _he_init(sub, kh, kw, cin, cout)
+        params[f"{name}.b"] = jnp.zeros((cout,), jnp.float32)
+
+    w = cfg.widths
+    conv_param("stem", 3, 3, 3, w[0])           # /2
+    conv_param("down2", 3, 3, w[0], w[1])       # /4
+    if cfg.tiny:
+        # Stages downsample with the Pallas max-pool kernel.
+        conv_param("s3", 3, 3, w[1], w[2])      # pool -> /8
+        conv_param("s4", 3, 3, w[2], w[3])      # pool -> /16
+        conv_param("s5", 3, 3, w[3], w[4])      # pool -> /32
+        conv_param("neck", 3, 3, w[4], w[4])
+        conv_param("head32", 1, 1, w[4], HEAD_CHANNELS)
+    else:
+        conv_param("s3", 3, 3, w[1], w[2])      # stride 2 -> /8
+        conv_param("s3b", 3, 3, w[2], w[2])
+        conv_param("s4", 3, 3, w[2], w[3])      # stride 2 -> /16
+        conv_param("s4b", 3, 3, w[3], w[3])
+        conv_param("s5", 3, 3, w[3], w[4])      # stride 2 -> /32
+        conv_param("s5b", 3, 3, w[4], w[4])
+        conv_param("neck32", 3, 3, w[4], w[4])
+        conv_param("head32", 1, 1, w[4], HEAD_CHANNELS)
+        conv_param("neck16", 3, 3, w[3], w[3])
+        conv_param("head16", 1, 1, w[3], HEAD_CHANNELS)
+    return params
+
+
+def forward(params: dict, image: jax.Array, cfg: VariantConfig,
+            use_pallas: bool = True):
+    """Detector forward pass: image -> tuple of raw head tensors.
+
+    All convs run through the L1 fused Pallas kernel; tiny variants also
+    exercise the Pallas max-pool kernel.
+    """
+
+    def conv(name, x, stride=1, act="leaky_relu"):
+        return conv2d_fused(
+            x, params[f"{name}.w"], params[f"{name}.b"],
+            stride=stride, activation=act, use_pallas=use_pallas,
+        )
+
+    x = conv("stem", image, stride=2)
+    x = conv("down2", x, stride=2)
+    if cfg.tiny:
+        x = conv("s3", x)
+        x = maxpool2x2(x) if use_pallas else _ref_pool(x)
+        x = conv("s4", x)
+        x = maxpool2x2(x) if use_pallas else _ref_pool(x)
+        x = conv("s5", x)
+        x = maxpool2x2(x) if use_pallas else _ref_pool(x)
+        x = conv("neck", x)
+        h32 = conv("head32", x, act="linear")
+        return (h32,)
+    x = conv("s3", x, stride=2)
+    x = conv("s3b", x)
+    x = conv("s4", x, stride=2)
+    x16 = conv("s4b", x)
+    x = conv("s5", x16, stride=2)
+    x = conv("s5b", x)
+    x = conv("neck32", x)
+    h32 = conv("head32", x, act="linear")
+    y16 = conv("neck16", x16)
+    h16 = conv("head16", y16, act="linear")
+    return (h32, h16)
+
+
+def _ref_pool(x):
+    from .kernels import ref as kref
+
+    return kref.ref_maxpool2x2(x)
+
+
+def detector_fn(cfg: VariantConfig, use_pallas: bool = True) -> Callable:
+    """Close over deterministic params: image -> head tuple (jit-able)."""
+    params = build_params(cfg)
+
+    def fn(image):
+        return forward(params, image, cfg, use_pallas=use_pallas)
+
+    return fn
+
+
+def input_spec(cfg: VariantConfig) -> jax.ShapeDtypeStruct:
+    s = cfg.input_size
+    return jax.ShapeDtypeStruct((1, s, s, 3), jnp.float32)
+
+
+def param_count(cfg: VariantConfig) -> int:
+    params = build_params(cfg)
+    return sum(int(p.size) for p in params.values())

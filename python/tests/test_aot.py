@@ -1,0 +1,74 @@
+"""AOT path: HLO text artifacts + manifest consumed by the Rust runtime."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    return aot.lower_variant(model.VARIANTS["yolov4-tiny-288"])
+
+
+def test_hlo_text_parseable_header(tiny_hlo):
+    assert tiny_hlo.startswith("HloModule")
+
+
+def test_hlo_constants_not_elided(tiny_hlo):
+    """print_large_constants must be in effect — `{...}` elision would
+    silently drop the baked weights on the Rust side."""
+    assert "constant({...})" not in tiny_hlo
+
+
+def test_hlo_has_single_image_parameter(tiny_hlo):
+    # The ENTRY computation takes exactly one runtime parameter — the
+    # image (weights are baked constants). Inner fusion computations may
+    # have their own parameter(N) lines, so inspect only ENTRY's body.
+    entry = tiny_hlo[tiny_hlo.index("ENTRY "):]
+    body = entry[: entry.index("\n}")]
+    param_lines = [
+        ln for ln in body.splitlines() if "= f32" in ln and "parameter(" in ln
+    ]
+    assert len(param_lines) == 1, param_lines
+    assert "parameter(0)" in param_lines[0]
+    assert "f32[1,288,288,3]" in param_lines[0]
+
+
+def test_manifest_structure(tmp_path):
+    man = aot.build_all(str(tmp_path), variants=["yolov4-tiny-288"])
+    assert man["format"] == "hlo-text"
+    v = man["variants"][0]
+    assert v["name"] == "yolov4-tiny-288"
+    assert v["input_shape"] == [1, 288, 288, 3]
+    assert v["heads"][0]["grid"] == 9
+    assert v["heads"][0]["stride"] == 32
+    assert v["heads"][0]["channels"] == 18
+    assert len(v["heads"][0]["anchors"]) == 3
+    # artifact file exists and matches recorded size
+    path = os.path.join(str(tmp_path), v["artifact"])
+    assert os.path.getsize(path) == v["hlo_bytes"]
+    # manifest json round-trips
+    with open(os.path.join(str(tmp_path), "manifest.json")) as f:
+        man2 = json.load(f)
+    assert man2 == man
+
+
+def test_checked_in_artifacts_fresh_if_present():
+    """If `make artifacts` has run, the manifest must list all four
+    variants with consistent grids (guards stale artifacts)."""
+    mpath = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        man = json.load(f)
+    names = {v["name"] for v in man["variants"]}
+    assert names == set(model.VARIANTS)
+    for v in man["variants"]:
+        cfg = model.VARIANTS[v["name"]]
+        for head, stride in zip(v["heads"], cfg.head_strides):
+            assert head["grid"] == cfg.input_size // stride

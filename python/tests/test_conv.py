@@ -1,0 +1,78 @@
+"""im2col + fused-matmul convolution vs direct lax.conv oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.conv import conv2d_fused, im2col
+from compile.kernels import ref
+
+
+def _rand(shape, seed, scale=0.2):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("kh,kw", [(1, 1), (3, 3)])
+@pytest.mark.parametrize("h,w,cin,cout", [(8, 8, 3, 5), (16, 12, 7, 9)])
+def test_conv_matches_lax(stride, kh, kw, h, w, cin, cout):
+    x = _rand((1, h, w, cin), seed=h + w)
+    wt = _rand((kh, kw, cin, cout), seed=cin * cout)
+    b = _rand((cout,), seed=cout)
+    out = conv2d_fused(x, wt, b, stride=stride)
+    expect = ref.ref_conv2d_bias_act(x, wt, b, stride=stride)
+    assert out.shape == expect.shape
+    np.testing.assert_allclose(out, expect, rtol=5e-4, atol=5e-4)
+
+
+def test_conv_activation_modes():
+    x = _rand((1, 6, 6, 2), seed=0)
+    wt = _rand((3, 3, 2, 4), seed=1)
+    b = _rand((4,), seed=2)
+    for act in ["linear", "relu", "leaky_relu"]:
+        out = conv2d_fused(x, wt, b, activation=act)
+        expect = ref.ref_conv2d_bias_act(x, wt, b, activation=act)
+        np.testing.assert_allclose(out, expect, rtol=5e-4, atol=5e-4)
+
+
+def test_im2col_layout_matches_hwio():
+    """Patch feature axis must be ordered (kh, kw, c): a conv via im2col
+    with identity-like weights must equal lax.conv exactly."""
+    x = _rand((1, 5, 5, 3), seed=3)
+    wt = _rand((3, 3, 3, 2), seed=4)
+    patches = im2col(x, 3, 3, 1)
+    out = patches.reshape(-1, 27) @ wt.reshape(27, 2)
+    expect = ref.ref_conv2d_bias_act(
+        x, wt, jnp.zeros((2,), jnp.float32), activation="linear"
+    )
+    np.testing.assert_allclose(
+        out.reshape(1, 5, 5, 2), expect, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_batch_dim():
+    x = _rand((3, 8, 8, 2), seed=5)
+    wt = _rand((3, 3, 2, 4), seed=6)
+    b = _rand((4,), seed=7)
+    out = conv2d_fused(x, wt, b)
+    expect = ref.ref_conv2d_bias_act(x, wt, b)
+    np.testing.assert_allclose(out, expect, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(2, 12).map(lambda v: 2 * v),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_conv_sweep(h, cin, cout, stride, seed):
+    x = _rand((1, h, h, cin), seed=seed)
+    wt = _rand((3, 3, cin, cout), seed=seed + 1)
+    b = _rand((cout,), seed=seed + 2)
+    out = conv2d_fused(x, wt, b, stride=stride)
+    expect = ref.ref_conv2d_bias_act(x, wt, b, stride=stride)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,155 @@
+"""L1 kernel vs pure-jnp oracle: fused matmul + bias + activation.
+
+The hypothesis sweep is the core correctness signal — it drives the
+kernel across arbitrary (M, K, N) shapes, including those that require
+zero-padding to the tile grid, and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_matmul_bias_act,
+    mxu_utilisation_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+ACTIVATIONS = ["linear", "relu", "leaky_relu"]
+
+
+def _rand(shape, seed, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (8, 16, 8),         # sub-tile
+        (128, 128, 128),    # exactly one tile
+        (129, 130, 131),    # one past the tile boundary everywhere
+        (256, 64, 384),     # multi-tile M and N
+        (1000, 27, 16),     # first-conv-like (im2col K=3*3*3)
+    ],
+)
+def test_matmul_matches_ref(m, k, n, activation):
+    x = _rand((m, k), seed=m * 7 + k)
+    w = _rand((k, n), seed=n * 13 + k)
+    b = _rand((n,), seed=n)
+    out = fused_matmul_bias_act(x, w, b, activation=activation)
+    expect = ref.ref_matmul_bias_act(x, w, b, activation=activation)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (32, 128, 256),
+                                      (128, 256, 128), (16, 128, 64)])
+def test_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on tile configuration."""
+    x = _rand((200, 96), seed=1)
+    w = _rand((96, 72), seed=2)
+    b = _rand((72,), seed=3)
+    base = fused_matmul_bias_act(x, w, b)
+    tiled = fused_matmul_bias_act(x, w, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(base, tiled, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_k_padding_is_inert():
+    """Padded K region must contribute exactly zero (bias still applied)."""
+    x = jnp.zeros((4, 5), jnp.float32)
+    w = jnp.zeros((5, 3), jnp.float32)
+    b = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+    out = fused_matmul_bias_act(x, w, b, activation="linear")
+    np.testing.assert_allclose(out, np.tile([1.0, -2.0, 0.5], (4, 1)),
+                               atol=1e-7)
+
+
+def test_leaky_relu_negative_slope():
+    x = jnp.asarray([[1.0]], jnp.float32)
+    w = jnp.asarray([[-1.0]], jnp.float32)
+    b = jnp.zeros((1,), jnp.float32)
+    out = fused_matmul_bias_act(x, w, b, activation="leaky_relu")
+    np.testing.assert_allclose(out, [[-0.1]], rtol=1e-6)
+
+
+def test_bfloat16_close_to_ref():
+    x = _rand((64, 48), seed=10, dtype=jnp.bfloat16)
+    w = _rand((48, 32), seed=11, dtype=jnp.bfloat16)
+    b = _rand((32,), seed=12, dtype=jnp.bfloat16)
+    out = fused_matmul_bias_act(x, w, b)
+    expect = ref.ref_matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_bad_shapes_raise():
+    x = jnp.zeros((4, 5), jnp.float32)
+    w = jnp.zeros((6, 3), jnp.float32)  # K mismatch
+    b = jnp.zeros((3,), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_matmul_bias_act(x, w, b)
+    with pytest.raises(ValueError):
+        fused_matmul_bias_act(x[0], w, b)  # rank
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 180),
+    k=st.integers(1, 140),
+    n=st.integers(1, 150),
+    activation=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(m, k, n, activation, seed):
+    x = _rand((m, k), seed=seed)
+    w = _rand((k, n), seed=seed + 1)
+    b = _rand((n,), seed=seed + 2)
+    out = fused_matmul_bias_act(x, w, b, activation=activation)
+    expect = ref.ref_matmul_bias_act(x, w, b, activation=activation)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+)
+def test_hypothesis_dtype_sweep(dtype, m, k, n):
+    x = _rand((m, k), seed=m, dtype=dtype)
+    w = _rand((k, n), seed=n, dtype=dtype)
+    b = _rand((n,), seed=k, dtype=dtype)
+    out = fused_matmul_bias_act(x, w, b)
+    expect = ref.ref_matmul_bias_act(x, w, b)
+    tol = 1e-4 if dtype == jnp.float32 else 7e-2
+    assert out.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_vmem_footprint_budget():
+    """Default tile config must fit a Jetson-class VMEM-ish budget with
+    double-buffering (16 MiB VMEM on TPU; we keep < 4 MiB headroom)."""
+    bytes_ = vmem_footprint_bytes(128, 128, 128)
+    assert bytes_ < 4 * 1024 * 1024
+    assert bytes_ > 0
+
+
+def test_mxu_utilisation_estimate_bounds():
+    assert mxu_utilisation_estimate(128, 128, 128, 128, 128, 128) == 1.0
+    u = mxu_utilisation_estimate(129, 1, 1, 128, 128, 128)
+    assert 0.0 < u < 0.01
+    # utilisation never exceeds 1
+    for mnk in [(7, 9, 11), (300, 5, 77)]:
+        assert mxu_utilisation_estimate(*mnk, 128, 128, 128) <= 1.0

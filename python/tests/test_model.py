@@ -1,0 +1,86 @@
+"""L2 detector graph: shapes, determinism, pallas/lax path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.mark.parametrize("name", list(model.VARIANTS))
+def test_head_shapes(name):
+    cfg = model.VARIANTS[name]
+    fn = jax.jit(model.detector_fn(cfg, use_pallas=False))
+    img = jnp.zeros((1, cfg.input_size, cfg.input_size, 3), jnp.float32)
+    heads = fn(img)
+    assert len(heads) == len(cfg.head_strides)
+    for h, stride in zip(heads, cfg.head_strides):
+        g = cfg.input_size // stride
+        assert h.shape == (1, g, g, model.HEAD_CHANNELS)
+
+
+def test_variant_catalog_matches_paper():
+    """The four operating points the paper serves, by name."""
+    assert set(model.VARIANTS) == {
+        "yolov4-tiny-288", "yolov4-tiny-416", "yolov4-288", "yolov4-416",
+    }
+    # tiny nets have one head at stride 32; full nets add stride 16
+    assert model.VARIANTS["yolov4-tiny-416"].head_strides == (32,)
+    assert model.VARIANTS["yolov4-416"].head_strides == (32, 16)
+    # full nets are strictly larger than tiny nets
+    assert (model.param_count(model.VARIANTS["yolov4-416"])
+            > model.param_count(model.VARIANTS["yolov4-tiny-416"]))
+
+
+def test_params_deterministic():
+    cfg = model.VARIANTS["yolov4-tiny-288"]
+    p1 = model.build_params(cfg)
+    p2 = model.build_params(cfg)
+    assert sorted(p1) == sorted(p2)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_same_topology_shares_weights_across_sizes():
+    """288 and 416 variants of the same topology are the same network at
+    a different input resolution (weights identical), like the paper's
+    TensorRT engines built from one .weights file."""
+    p288 = model.build_params(model.VARIANTS["yolov4-tiny-288"])
+    p416 = model.build_params(model.VARIANTS["yolov4-tiny-416"])
+    assert sorted(p288) == sorted(p416)
+    for k in p288:
+        assert p288[k].shape == p416[k].shape
+
+
+def test_pallas_and_lax_paths_agree():
+    cfg = model.VARIANTS["yolov4-tiny-288"]
+    img = jnp.asarray(
+        np.random.default_rng(0).uniform(size=(1, 288, 288, 3)), jnp.float32
+    )
+    out_p = jax.jit(model.detector_fn(cfg, use_pallas=True))(img)
+    out_l = jax.jit(model.detector_fn(cfg, use_pallas=False))(img)
+    for a, b in zip(out_p, out_l):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=3e-3, atol=3e-3
+        )
+
+
+def test_head_output_is_finite_and_nonconstant():
+    cfg = model.VARIANTS["yolov4-288"]
+    img = jnp.asarray(
+        np.random.default_rng(1).uniform(size=(1, 288, 288, 3)), jnp.float32
+    )
+    heads = jax.jit(model.detector_fn(cfg, use_pallas=False))(img)
+    for h in heads:
+        h = np.asarray(h)
+        assert np.isfinite(h).all()
+        assert h.std() > 1e-6
+
+
+def test_grid_size_validation():
+    cfg = model.VARIANTS["yolov4-416"]
+    assert cfg.grid_size(32) == 13
+    assert cfg.grid_size(16) == 26
+    with pytest.raises(AssertionError):
+        cfg.grid_size(30)

@@ -1,0 +1,88 @@
+"""L1 structural perf checks (DESIGN.md §8): interpret mode gives no TPU
+wallclock, so the optimization targets are VMEM footprint and MXU
+utilisation of the actual layer shapes the detectors lower."""
+
+import pytest
+
+from compile import model
+from compile.kernels import mxu_utilisation_estimate, vmem_footprint_bytes
+from compile.kernels.fused_matmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN
+
+VMEM_BYTES = 16 * 1024 * 1024  # TPU v4-class VMEM
+
+
+def layer_matmul_shapes(cfg):
+    """(M, K, N) of every im2col matmul in a variant's forward pass."""
+    shapes = []
+    s = cfg.input_size
+    params = model.build_params(cfg)
+    # walk the conv plan the same way forward() does
+    convs = []
+    w = cfg.widths
+    if cfg.tiny:
+        convs = [
+            ("stem", 2), ("down2", 2), ("s3", 1), ("s4", 1), ("s5", 1),
+            ("neck", 1), ("head32", 1),
+        ]
+        pools_after = {"s3", "s4", "s5"}
+    else:
+        convs = [
+            ("stem", 2), ("down2", 2), ("s3", 2), ("s3b", 1), ("s4", 2),
+            ("s4b", 1), ("s5", 2), ("s5b", 1), ("neck32", 1),
+            ("head32", 1),
+        ]
+        pools_after = set()
+    cur = s
+    for name, stride in convs:
+        kh, kw, cin, cout = params[f"{name}.w"].shape
+        cur = cur // stride
+        shapes.append((cur * cur, kh * kw * cin, cout))
+        if name in pools_after:
+            cur //= 2
+    return shapes
+
+
+def test_default_tiles_fit_vmem_with_headroom():
+    fp = vmem_footprint_bytes(DEFAULT_BM, DEFAULT_BN, DEFAULT_BK)
+    assert fp < VMEM_BYTES // 4, f"{fp} bytes leaves no double-buffer room"
+
+
+@pytest.mark.parametrize("name", list(model.VARIANTS))
+def test_body_conv_mxu_utilisation(name):
+    """Full-width body convs (K and N >= 128) must keep >= 50% useful
+    MACs under the default tiling. Narrow-channel layers (N = 32) are
+    inherently padding-bound at a 128-lane MXU (~14%) — a property of
+    compact edge variants, not of the tiling; the K=27 im2col stem
+    likewise. Both are documented in EXPERIMENTS.md §Perf."""
+    cfg = model.VARIANTS[name]
+    saw_wide = False
+    for m, k, n in layer_matmul_shapes(cfg):
+        u = mxu_utilisation_estimate(m, n, k, DEFAULT_BM, DEFAULT_BN,
+                                     DEFAULT_BK)
+        assert u > 0.02, f"{name} (M={m},K={k},N={n}): util {u:.2f}"
+        if k >= 128 and n >= 128:
+            saw_wide = True
+            assert u >= 0.50, \
+                f"{name} wide layer (M={m},K={k},N={n}): util {u:.2f}"
+    assert saw_wide, f"{name} has no full-width layer"
+
+
+def test_stem_utilisation_documented_bound():
+    # the stem's padding-bound utilisation: keep the documented ~21%
+    u = mxu_utilisation_estimate(20736, 16, 27, DEFAULT_BM, DEFAULT_BN,
+                                 DEFAULT_BK)
+    assert 0.01 < u < 0.30
+
+
+def test_pallas_and_lax_lowerings_differ():
+    """The --no-pallas ablation must actually change the lowered HLO
+    (guards against the kernel silently not being used)."""
+    from compile import aot
+
+    cfg = model.VARIANTS["yolov4-tiny-288"]
+    hlo_pallas = aot.lower_variant(cfg, use_pallas=True)
+    hlo_lax = aot.lower_variant(cfg, use_pallas=False)
+    assert hlo_pallas != hlo_lax
+    # the pallas build lowers to explicit loops/dynamic slices; the lax
+    # build contains convolution ops instead
+    assert "convolution" in hlo_lax

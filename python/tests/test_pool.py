@@ -1,0 +1,53 @@
+"""Pallas max-pool kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import maxpool2x2
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "n,h,w,c",
+    [(1, 2, 2, 1), (1, 8, 8, 3), (2, 16, 12, 7), (1, 36, 36, 32),
+     (1, 10, 6, 130)],
+)
+def test_pool_matches_ref(n, h, w, c):
+    x = _rand((n, h, w, c), seed=h * w + c)
+    out = maxpool2x2(x)
+    np.testing.assert_allclose(out, ref.ref_maxpool2x2(x), rtol=1e-6)
+
+
+def test_pool_odd_shape_raises():
+    with pytest.raises(ValueError):
+        maxpool2x2(jnp.zeros((1, 3, 4, 1), jnp.float32))
+    with pytest.raises(ValueError):
+        maxpool2x2(jnp.zeros((1, 4, 5, 1), jnp.float32))
+
+
+def test_pool_selects_max_not_mean():
+    x = jnp.asarray(
+        [[[[1.0], [2.0]], [[3.0], [4.0]]]], jnp.float32
+    )  # (1,2,2,1)
+    np.testing.assert_allclose(maxpool2x2(x), [[[[4.0]]]])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 20).map(lambda v: 2 * v),
+    w=st.integers(1, 20).map(lambda v: 2 * v),
+    c=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_pool_sweep(h, w, c, seed):
+    x = _rand((1, h, w, c), seed=seed)
+    out = maxpool2x2(x)
+    assert out.shape == (1, h // 2, w // 2, c)
+    np.testing.assert_allclose(out, ref.ref_maxpool2x2(x), rtol=1e-6)

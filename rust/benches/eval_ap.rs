@@ -1,0 +1,46 @@
+//! Bench: the evaluation substrate (IoU matching + AP integration),
+//! sized like one MOT sequence.
+
+use tod::bench::{black_box, Bench};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::eval::ap::{ApMethod, SequenceEval};
+use tod::eval::matching::{match_frame, IOU_THRESHOLD};
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+fn main() {
+    let mut b = Bench::new();
+    let seq = generate(SequenceId::Mot04); // densest sequence (42 peds)
+    let oracle = OracleDetector::new(seq.spec.seed, 1920.0, 1080.0);
+    let gt = seq.gt(100);
+    let dets = oracle.detect(100, gt, DnnKind::Y416);
+
+    b.case("match_frame/dense_42gt", || {
+        black_box(match_frame(black_box(&dets), black_box(gt), IOU_THRESHOLD));
+    });
+
+    // a whole-sequence AP evaluation (matching pre-computed)
+    let matches: Vec<_> = (1..=seq.n_frames())
+        .map(|f| {
+            let d = oracle.detect(f, seq.gt(f), DnnKind::Y416);
+            match_frame(&d, seq.gt(f), IOU_THRESHOLD)
+        })
+        .collect();
+    b.case("ap/sequence_1050_frames", || {
+        let mut e = SequenceEval::new();
+        for m in &matches {
+            e.push(m);
+        }
+        black_box(e.ap(ApMethod::AllPoint));
+    });
+
+    b.case("oracle/detect_dense_frame", || {
+        black_box(oracle.detect(
+            black_box(100),
+            black_box(gt),
+            DnnKind::Y416,
+        ));
+    });
+
+    b.save_csv("eval_ap.csv").ok();
+}

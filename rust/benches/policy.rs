@@ -1,0 +1,65 @@
+//! Bench: the per-frame scheduling overhead the paper claims is
+//! "negligible" — Algorithm 1 selection and the MBBS median.
+//!
+//! Target (EXPERIMENTS.md §Perf): both well under a microsecond, i.e.
+//! 4-5 orders of magnitude below the 27-153 ms inference latencies.
+
+use tod::bench::{black_box, Bench};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::detection::{mbbs, nms, Detection, PERSON_CLASS};
+use tod::geometry::BBox;
+use tod::util::rng::Rng;
+
+fn synth_dets(n: usize, seed: u64) -> Vec<Detection> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            Detection::new(
+                BBox::new(
+                    rng.uniform(0.0, 1800.0),
+                    rng.uniform(0.0, 1000.0),
+                    rng.uniform(10.0, 300.0),
+                    rng.uniform(20.0, 500.0),
+                ),
+                rng.uniform(0.05, 1.0) as f32,
+                PERSON_CLASS,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let policy = MbbsPolicy::tod_default();
+
+    b.case("policy/select_pure_x1000", || {
+        // 1000 selections per iteration: divide the reported time by
+        // 1000 for the per-frame cost (~3 ns)
+        for i in 0..1000u32 {
+            black_box(policy.select_pure(black_box(i as f64 * 1e-4)));
+        }
+    });
+
+    for n in [5usize, 20, 45] {
+        let dets = synth_dets(n, n as u64);
+        b.case(&format!("mbbs/n={n}"), || {
+            black_box(mbbs(black_box(&dets), 1920.0, 1080.0));
+        });
+    }
+
+    for n in [20usize, 45, 100] {
+        let dets = synth_dets(n, n as u64);
+        b.case(&format!("nms/n={n}"), || {
+            black_box(nms(black_box(&dets), 0.45));
+        });
+    }
+
+    // the full per-frame coordinator step (select + mbbs), amortized
+    let dets = synth_dets(30, 7);
+    b.case("coordinator/full_frame_decision", || {
+        let m = mbbs(black_box(&dets), 1920.0, 1080.0);
+        black_box(policy.select_pure(m));
+    });
+
+    b.save_csv("policy.csv").ok();
+}

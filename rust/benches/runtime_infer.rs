@@ -1,0 +1,55 @@
+//! Bench: real CPU-PJRT inference latency per variant (the measured
+//! counterpart of Fig. 5) plus rasterization and decode. Skips cleanly
+//! when artifacts are absent.
+
+use std::path::PathBuf;
+
+use tod::bench::{black_box, Bench};
+use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::runtime::decode::decode;
+use tod::runtime::pool::EnginePool;
+use tod::runtime::raster::rasterize;
+use tod::DnnKind;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_infer: artifacts not built; skipping (run `make artifacts`)");
+        return;
+    }
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let seq = Sequence::generate(SequenceSpec {
+        name: "BENCH".into(),
+        width: 640,
+        height: 480,
+        fps: 30.0,
+        frames: 4,
+        density: 6,
+        ref_height: 220.0,
+        depth_range: (1.0, 2.2),
+        walk_speed: 1.5,
+        camera: CameraMotion::Static,
+        seed: 7,
+    });
+    let gt = seq.gt(1);
+
+    let mut b = Bench::slow();
+    for k in DnnKind::ALL {
+        let engine = pool.engine(k).unwrap();
+        let size = engine.spec().input_size;
+        let img = rasterize(gt, 640.0, 480.0, size, 1);
+        b.case(&format!("raster/{}", k.artifact_name()), || {
+            black_box(rasterize(black_box(gt), 640.0, 480.0, size, 1));
+        });
+        b.case(&format!("pjrt_infer/{}", k.artifact_name()), || {
+            black_box(engine.infer(black_box(&img)).unwrap());
+        });
+        let heads = engine.infer(&img).unwrap();
+        let spec = engine.spec().clone();
+        b.case(&format!("decode/{}", k.artifact_name()), || {
+            black_box(decode(black_box(&heads), &spec, 640.0, 480.0));
+        });
+    }
+    b.save_csv("runtime_infer.csv").ok();
+}

@@ -1,0 +1,45 @@
+//! Bench: end-to-end scheduled runs — the cost of regenerating each
+//! paper artifact (Table I cell = one of these per hyperparameter set).
+
+use tod::bench::{black_box, Bench};
+use tod::coordinator::policy::{FixedPolicy, MbbsPolicy};
+use tod::coordinator::scheduler::{run_offline, run_realtime, OracleBackend};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::sim::latency::LatencyModel;
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+fn main() {
+    let mut b = Bench::slow();
+    let seq = generate(SequenceId::Mot05);
+    let mk = || {
+        OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            seq.spec.width as f64,
+            seq.spec.height as f64,
+        ))
+    };
+
+    b.case("run_realtime/tod_mot05_837f", || {
+        let mut pol = MbbsPolicy::tod_default();
+        let mut lat = LatencyModel::deterministic();
+        black_box(run_realtime(&seq, &mut pol, &mut mk(), &mut lat, 14.0));
+    });
+
+    b.case("run_realtime/fixed_y416_mot05", || {
+        let mut pol = FixedPolicy(DnnKind::Y416);
+        let mut lat = LatencyModel::deterministic();
+        black_box(run_realtime(&seq, &mut pol, &mut mk(), &mut lat, 14.0));
+    });
+
+    b.case("run_offline/y416_mot05", || {
+        black_box(run_offline(&seq, DnnKind::Y416, &mut mk()));
+    });
+
+    // sequence generation itself (world simulation)
+    b.case("dataset/generate_mot05", || {
+        black_box(generate(SequenceId::Mot05));
+    });
+
+    b.save_csv("scheduler_e2e.csv").ok();
+}

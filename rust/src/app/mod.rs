@@ -1,0 +1,6 @@
+//! High-level drivers shared by the CLI, the examples and the figure
+//! harness.
+
+pub mod campaign;
+
+pub use campaign::Campaign;

@@ -1,0 +1,193 @@
+//! Warmup + timed-iteration benchmark runner with percentile reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile_sorted;
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:8.1} ns")
+        } else if ns < 1e6 {
+            format!("{:8.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:8.2} ms", ns / 1e6)
+        } else {
+            format!("{:8.2} s ", ns / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} mean {}  p50 {}  p95 {}  min {}  ({} iters)",
+            self.name,
+            Self::human(self.mean_ns),
+            Self::human(self.p50_ns),
+            Self::human(self.p95_ns),
+            Self::human(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// The bench runner: target time per case, automatic iteration count.
+pub struct Bench {
+    /// Minimum measurement time per case.
+    pub target: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            target: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for slow cases (e.g. whole-sequence scheduling).
+    pub fn slow() -> Self {
+        Bench {
+            target: Duration::from_secs(2),
+            warmup: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one case; `f` is invoked repeatedly and must do the work.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // measure in batches; record per-call samples
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.target {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean =
+            samples_ns.iter().sum::<f64>() / samples_ns.len().max(1) as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean,
+            p50_ns: percentile_sorted(&samples_ns, 50.0),
+            p95_ns: percentile_sorted(&samples_ns, 95.0),
+            min_ns: samples_ns.first().copied().unwrap_or(f64::NAN),
+        };
+        println!("{result}");
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV under `target/bench-results/<file>`.
+    pub fn save_csv(&self, file: &str) -> std::io::Result<()> {
+        let mut csv = crate::util::csv::CsvTable::new(vec![
+            "name", "iters", "mean_ns", "p50_ns", "p95_ns", "min_ns",
+        ]);
+        for r in &self.results {
+            csv.push(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                format!("{:.1}", r.mean_ns),
+                format!("{:.1}", r.p50_ns),
+                format!("{:.1}", r.p95_ns),
+                format!("{:.1}", r.min_ns),
+            ]);
+        }
+        csv.save(&std::path::Path::new("target/bench-results").join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench {
+            target: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b
+            .case("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.iters > 100);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.min_ns <= r.p50_ns);
+    }
+
+    #[test]
+    fn ordering_detects_slower_code() {
+        let mut b = Bench {
+            target: Duration::from_millis(40),
+            warmup: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let fast = b
+            .case("fast", || {
+                black_box((0..10u64).sum::<u64>());
+            })
+            .mean_ns;
+        let slow = b
+            .case("slow", || {
+                black_box((0..10_000u64).sum::<u64>());
+            })
+            .mean_ns;
+        assert!(slow > fast * 5.0, "slow {slow} fast {fast}");
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(BenchResult::human(500.0).contains("ns"));
+        assert!(BenchResult::human(5e4).contains("µs"));
+        assert!(BenchResult::human(5e7).contains("ms"));
+        assert!(BenchResult::human(5e9).contains("s"));
+    }
+}

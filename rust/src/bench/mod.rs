@@ -1,0 +1,7 @@
+//! Criterion-style micro-benchmark harness (offline stand-in; DESIGN.md
+//! §3). `cargo bench` drives the `rust/benches/*.rs` targets, each of
+//! which uses [`Bench`] for warmup, timed iterations and robust stats.
+
+pub mod harness;
+
+pub use harness::{black_box, Bench, BenchResult};

@@ -1,0 +1,119 @@
+//! Positional/flag argument parsing: `cmd [subcommand] --flag value
+//! --switch positional...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs. A flag followed by another flag (or nothing)
+    /// is stored with an empty value (boolean switch).
+    pub flags: BTreeMap<String, String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => String::new(),
+                };
+                out.flags.insert(name.to_string(), value);
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Get a flag's value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Boolean switch: present (with or without a value)?
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Typed flag with a default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(name) {
+            None | Some("") => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value for --{name}: {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("figures --id fig8 --out results");
+        assert_eq!(a.command.as_deref(), Some("figures"));
+        assert_eq!(a.get("id"), Some("fig8"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn boolean_switches() {
+        let a = parse("figures --all --verbose --id fig4");
+        assert!(a.has("all"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("all"), Some(""));
+        assert_eq!(a.get("id"), Some("fig4"));
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("run MOT17-04 MOT17-11 --fps 30");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["MOT17-04", "MOT17-11"]);
+        assert_eq!(a.get("fps"), Some("30"));
+    }
+
+    #[test]
+    fn typed_parse_and_default() {
+        let a = parse("x --fps 14.5");
+        assert_eq!(a.get_parse("fps", 30.0).unwrap(), 14.5);
+        assert_eq!(a.get_parse("missing", 7u32).unwrap(), 7);
+        assert!(a.get_parse::<f64>("fps", 0.0).is_ok());
+        let bad = parse("x --fps abc");
+        assert!(bad.get_parse::<f64>("fps", 0.0).is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert!(a.flags.is_empty());
+    }
+}

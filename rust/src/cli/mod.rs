@@ -1,0 +1,5 @@
+//! Tiny command-line argument parser (clap stand-in; DESIGN.md §3).
+
+pub mod args;
+
+pub use args::Args;

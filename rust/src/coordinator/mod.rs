@@ -1,0 +1,16 @@
+//! The paper's contribution: the TOD runtime scheduler.
+//!
+//! [`policy`] implements Algorithm 1 (the MBBS-thresholded DNN selector),
+//! [`scheduler`] runs a policy over a sequence under the Algorithm 2
+//! drop-frame accounting, [`search`] is the Table I hyperparameter grid
+//! search, and [`baselines`] provides the comparison points (fixed single
+//! DNN, and a Chameleon-style periodic re-profiler).
+
+pub mod baselines;
+pub mod policy;
+pub mod scheduler;
+pub mod search;
+
+pub use policy::{FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds};
+pub use scheduler::{run_offline, run_realtime, Detector, OracleBackend, RunResult};
+pub use search::{grid_search, GridSearchResult, SearchSpace};

@@ -1,0 +1,228 @@
+//! Algorithm 1: the MBBS-thresholded runtime DNN selector.
+//!
+//! With `n` DNNs ordered lightest → heaviest and `n-1` ascending
+//! thresholds `h_1 < ... < h_{n-1}` (object area as a fraction of the
+//! frame), the policy picks
+//!
+//! * the lightest DNN when `MBBS > h_{n-1}` (large objects — a light
+//!   net is enough, per Huang et al. [6]),
+//! * ...down to the heaviest DNN when `MBBS <= h_1` (small objects need
+//!   capacity). An empty previous frame (`MBBS = 0`) therefore selects
+//!   the heaviest DNN, matching the paper's `median(bboxes)_0 = 0`
+//!   initialisation and YOLOv4-416 default.
+//!
+//! The selection itself is O(n) compares on one f64 — the "negligible
+//! computational overhead" the paper claims; see the `policy` bench.
+
+use crate::DnnKind;
+
+/// Ascending MBBS thresholds (fractions of frame area).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Thresholds(Vec<f64>);
+
+impl Thresholds {
+    /// Build from ascending values; panics on violations (these are
+    /// configuration errors, not runtime conditions).
+    pub fn new(h: Vec<f64>) -> Self {
+        assert!(!h.is_empty(), "need at least one threshold");
+        assert!(
+            h.windows(2).all(|w| w[0] < w[1]),
+            "thresholds must be strictly ascending: {h:?}"
+        );
+        assert!(
+            h.iter().all(|v| (0.0..1.0).contains(v)),
+            "thresholds are area fractions in [0,1): {h:?}"
+        );
+        Thresholds(h)
+    }
+
+    /// The paper's optimum: `H_opt = {0.007, 0.03, 0.04}` (§III.B.4).
+    pub fn h_opt() -> Self {
+        Thresholds::new(vec![0.007, 0.03, 0.04])
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.0
+    }
+
+    /// Number of DNNs this threshold set selects among.
+    pub fn n_dnn(&self) -> usize {
+        self.0.len() + 1
+    }
+}
+
+/// A per-frame DNN selection policy.
+pub trait SelectionPolicy {
+    /// Select the DNN for the next frame given the previous frame's MBBS.
+    fn select(&mut self, mbbs_prev: f64) -> DnnKind;
+
+    /// Human-readable label for reports.
+    fn label(&self) -> String;
+}
+
+/// Algorithm 1 with the standard four-variant ladder.
+#[derive(Debug, Clone)]
+pub struct MbbsPolicy {
+    thresholds: Thresholds,
+    /// DNNs lightest → heaviest; `thresholds.n_dnn()` entries.
+    ladder: Vec<DnnKind>,
+}
+
+impl MbbsPolicy {
+    /// Policy over the full four-DNN ladder (requires 3 thresholds).
+    pub fn new(thresholds: Thresholds) -> Self {
+        Self::with_ladder(thresholds, DnnKind::ALL.to_vec())
+    }
+
+    /// Policy over a custom ladder (lightest first). The Discussion
+    /// section's RTX-2080-style deployments drop the tiny variants —
+    /// that's a 2- or 3-rung ladder here.
+    pub fn with_ladder(thresholds: Thresholds, ladder: Vec<DnnKind>) -> Self {
+        assert_eq!(
+            thresholds.n_dnn(),
+            ladder.len(),
+            "need |ladder| - 1 thresholds"
+        );
+        assert!(
+            ladder.windows(2).all(|w| w[0].index() < w[1].index()),
+            "ladder must be ordered lightest -> heaviest"
+        );
+        MbbsPolicy { thresholds, ladder }
+    }
+
+    /// The paper's TOD configuration.
+    pub fn tod_default() -> Self {
+        MbbsPolicy::new(Thresholds::h_opt())
+    }
+
+    pub fn thresholds(&self) -> &Thresholds {
+        &self.thresholds
+    }
+
+    /// Pure selection function (exposed for property tests and benches).
+    #[inline]
+    pub fn select_pure(&self, mbbs: f64) -> DnnKind {
+        // c = number of thresholds strictly below mbbs
+        // (paper: h_i < MBBS <= h_{i+1} picks rung n-1-i)
+        let c = self
+            .thresholds
+            .values()
+            .iter()
+            .filter(|&&h| mbbs > h)
+            .count();
+        self.ladder[self.ladder.len() - 1 - c]
+    }
+}
+
+impl SelectionPolicy for MbbsPolicy {
+    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
+        self.select_pure(mbbs_prev)
+    }
+
+    fn label(&self) -> String {
+        let h: Vec<String> = self
+            .thresholds
+            .values()
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect();
+        format!("TOD{{{}}}", h.join(","))
+    }
+}
+
+/// Always-the-same-DNN baseline (the four bars of Figs. 4/6/8).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedPolicy(pub DnnKind);
+
+impl SelectionPolicy for FixedPolicy {
+    fn select(&mut self, _mbbs_prev: f64) -> DnnKind {
+        self.0
+    }
+
+    fn label(&self) -> String {
+        self.0.artifact_name().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_regions() {
+        // §III.B.3's policy table with H_opt
+        let p = MbbsPolicy::tod_default();
+        assert_eq!(p.select_pure(0.0), DnnKind::Y416); // empty frame
+        assert_eq!(p.select_pure(0.004), DnnKind::Y416); // <= h1
+        assert_eq!(p.select_pure(0.007), DnnKind::Y416); // boundary: <= h1
+        assert_eq!(p.select_pure(0.0071), DnnKind::Y288);
+        assert_eq!(p.select_pure(0.03), DnnKind::Y288); // boundary: <= h2
+        assert_eq!(p.select_pure(0.035), DnnKind::TinyY416);
+        assert_eq!(p.select_pure(0.04), DnnKind::TinyY416); // <= h3
+        assert_eq!(p.select_pure(0.05), DnnKind::TinyY288); // > h3
+        assert_eq!(p.select_pure(0.9), DnnKind::TinyY288);
+    }
+
+    #[test]
+    fn monotone_larger_mbbs_never_heavier() {
+        let p = MbbsPolicy::tod_default();
+        let mut prev = 4usize;
+        for i in 0..2000 {
+            let m = i as f64 / 2000.0 * 0.2;
+            let idx = p.select_pure(m).index();
+            // lighter nets have smaller index; weight must not increase
+            assert!(
+                idx <= prev,
+                "mbbs {m} picked heavier net than a smaller mbbs"
+            );
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn thresholds_validation() {
+        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![])).is_err());
+        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![0.03, 0.01]))
+            .is_err());
+        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![0.01, 0.01]))
+            .is_err());
+        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![-0.1, 0.5]))
+            .is_err());
+        assert_eq!(Thresholds::h_opt().n_dnn(), 4);
+    }
+
+    #[test]
+    fn two_rung_ladder() {
+        // the Discussion's "RTX 2080 drops the tiny variants" shape
+        let p = MbbsPolicy::with_ladder(
+            Thresholds::new(vec![0.01]),
+            vec![DnnKind::Y288, DnnKind::Y416],
+        );
+        assert_eq!(p.select_pure(0.5), DnnKind::Y288);
+        assert_eq!(p.select_pure(0.005), DnnKind::Y416);
+    }
+
+    #[test]
+    #[should_panic(expected = "ladder must be ordered")]
+    fn unordered_ladder_rejected() {
+        MbbsPolicy::with_ladder(
+            Thresholds::new(vec![0.01]),
+            vec![DnnKind::Y416, DnnKind::Y288],
+        );
+    }
+
+    #[test]
+    fn fixed_policy_is_constant() {
+        let mut p = FixedPolicy(DnnKind::Y288);
+        for m in [0.0, 0.01, 0.5] {
+            assert_eq!(p.select(m), DnnKind::Y288);
+        }
+        assert_eq!(p.label(), "yolov4-288");
+    }
+
+    #[test]
+    fn labels_identify_config() {
+        let p = MbbsPolicy::tod_default();
+        assert_eq!(p.label(), "TOD{0.007,0.03,0.04}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Table I: the hyperparameter grid search for `{h1, h2, h3}`.
+//!
+//! The paper sweeps `h1 ∈ {0.0007, 0.007}`, `h2 ∈ {0.008, 0.03}`,
+//! `h3 ∈ {0.04, 0.1}` over the six MOT17Det training sequences at 30 FPS
+//! and picks the set with the best mean AP, tie-breaking towards the set
+//! that "can utilise the most lightweight DNN more often" (lower `h3`).
+
+use crate::coordinator::policy::{MbbsPolicy, Thresholds};
+use crate::coordinator::scheduler::{run_realtime, Detector, RunResult};
+use crate::dataset::synth::Sequence;
+use crate::sim::latency::LatencyModel;
+use crate::sim::oracle::OracleDetector;
+
+/// The candidate values per threshold.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub h1: Vec<f64>,
+    pub h2: Vec<f64>,
+    pub h3: Vec<f64>,
+}
+
+impl SearchSpace {
+    /// The paper's 2x2x2 grid (§III.B.4).
+    pub fn paper() -> Self {
+        SearchSpace {
+            h1: vec![0.0007, 0.007],
+            h2: vec![0.008, 0.03],
+            h3: vec![0.04, 0.1],
+        }
+    }
+
+    /// All valid (ascending) combinations.
+    pub fn combinations(&self) -> Vec<Thresholds> {
+        let mut out = Vec::new();
+        for &a in &self.h1 {
+            for &b in &self.h2 {
+                for &c in &self.h3 {
+                    if a < b && b < c {
+                        out.push(Thresholds::new(vec![a, b, c]));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid-search row (one hyperparameter set).
+#[derive(Debug, Clone)]
+pub struct GridRow {
+    pub thresholds: Thresholds,
+    /// AP per training sequence, in input order.
+    pub per_sequence_ap: Vec<f64>,
+    pub mean_ap: f64,
+}
+
+/// Full grid-search output.
+#[derive(Debug, Clone)]
+pub struct GridSearchResult {
+    pub rows: Vec<GridRow>,
+    /// Index of the selected row in `rows`.
+    pub best: usize,
+}
+
+impl GridSearchResult {
+    pub fn best_thresholds(&self) -> &Thresholds {
+        &self.rows[self.best].thresholds
+    }
+}
+
+/// AP ties within this margin (about the paper's print precision)
+/// break towards lighter DNN usage, mirroring the paper's choice of
+/// h3 = 0.04 over 0.1 at equal 0.537 mean AP.
+pub const TIE_EPS: f64 = 2.5e-3;
+
+/// Run the grid search over training sequences at their eval FPS.
+///
+/// `make_detector` builds a fresh backend per sequence (the oracle is
+/// per-sequence because frame sizes differ).
+pub fn grid_search(
+    space: &SearchSpace,
+    train: &[(&Sequence, f64)],
+    mut make_detector: impl FnMut(&Sequence) -> Box<dyn Detector>,
+) -> GridSearchResult {
+    let mut rows = Vec::new();
+    for th in space.combinations() {
+        let mut aps = Vec::with_capacity(train.len());
+        for &(seq, fps) in train {
+            let mut policy = MbbsPolicy::new(th.clone());
+            let mut det = make_detector(seq);
+            // paired comparisons: deterministic latency, per-seq oracle
+            let mut lat = LatencyModel::deterministic();
+            let r: RunResult =
+                run_realtime(seq, &mut policy, det.as_mut(), &mut lat, fps);
+            aps.push(r.ap);
+        }
+        let mean = aps.iter().sum::<f64>() / aps.len().max(1) as f64;
+        rows.push(GridRow {
+            thresholds: th,
+            per_sequence_ap: aps,
+            mean_ap: mean,
+        });
+    }
+    // best mean AP; ties (within 0.0005, the paper's print precision)
+    // break towards lighter usage: lower h3, then lower h2, then lower h1
+    let mut best = 0usize;
+    for i in 1..rows.len() {
+        let cur = &rows[i];
+        let b = &rows[best];
+        if cur.mean_ap > b.mean_ap + TIE_EPS {
+            best = i;
+        } else if (cur.mean_ap - b.mean_ap).abs() <= TIE_EPS {
+            let (c, bb) = (cur.thresholds.values(), b.thresholds.values());
+            if (c[2], c[1], c[0]) < (bb[2], bb[1], bb[0]) {
+                best = i;
+            }
+        }
+    }
+    GridSearchResult { rows, best }
+}
+
+/// Convenience: oracle-backed grid search.
+pub fn grid_search_oracle(
+    space: &SearchSpace,
+    train: &[(&Sequence, f64)],
+) -> GridSearchResult {
+    grid_search(space, train, |seq| {
+        Box::new(crate::coordinator::scheduler::OracleBackend(
+            OracleDetector::new(
+                seq.spec.seed,
+                seq.spec.width as f64,
+                seq.spec.height as f64,
+            ),
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::{CameraMotion, SequenceSpec};
+
+    fn seq(ref_height: f64, camera: CameraMotion, seed: u64) -> Sequence {
+        Sequence::generate(SequenceSpec {
+            name: format!("S{seed}"),
+            width: 960,
+            height: 540,
+            fps: 30.0,
+            frames: 90,
+            density: 8,
+            ref_height,
+            depth_range: (1.0, 2.0),
+            walk_speed: 1.5,
+            camera,
+            seed,
+        })
+    }
+
+    #[test]
+    fn paper_space_has_eight_sets() {
+        let space = SearchSpace::paper();
+        assert_eq!(space.combinations().len(), 8);
+    }
+
+    #[test]
+    fn invalid_orderings_filtered() {
+        let space = SearchSpace {
+            h1: vec![0.01, 0.05],
+            h2: vec![0.03],
+            h3: vec![0.04],
+        };
+        // (0.05, 0.03, 0.04) violates ascending order -> only 1 combo
+        assert_eq!(space.combinations().len(), 1);
+    }
+
+    #[test]
+    fn search_returns_rows_for_every_set() {
+        let s1 = seq(90.0, CameraMotion::Static, 1);
+        let s2 = seq(280.0, CameraMotion::Walking { pan_speed: 5.0 }, 2);
+        let train = vec![(&s1, 30.0), (&s2, 30.0)];
+        let res = grid_search_oracle(&SearchSpace::paper(), &train);
+        assert_eq!(res.rows.len(), 8);
+        for row in &res.rows {
+            assert_eq!(row.per_sequence_ap.len(), 2);
+            for ap in &row.per_sequence_ap {
+                assert!((0.0..=1.0).contains(ap));
+            }
+            let mean = row.per_sequence_ap.iter().sum::<f64>() / 2.0;
+            assert!((mean - row.mean_ap).abs() < 1e-12);
+        }
+        let best = &res.rows[res.best];
+        for row in &res.rows {
+            assert!(best.mean_ap >= row.mean_ap - 5e-4);
+        }
+    }
+
+    #[test]
+    fn tie_break_prefers_lighter_usage() {
+        // two identical sequences -> if two rows tie, lower h3 wins;
+        // simulate directly on the result structure
+        let rows = vec![
+            GridRow {
+                thresholds: Thresholds::new(vec![0.007, 0.03, 0.1]),
+                per_sequence_ap: vec![0.5],
+                mean_ap: 0.5,
+            },
+            GridRow {
+                thresholds: Thresholds::new(vec![0.007, 0.03, 0.04]),
+                per_sequence_ap: vec![0.5],
+                mean_ap: 0.5,
+            },
+        ];
+        // re-run the selection logic via grid_search on a stub space is
+        // awkward; instead assert the comparator ordering directly
+        let c = rows[1].thresholds.values();
+        let b = rows[0].thresholds.values();
+        assert!((c[2], c[1], c[0]) < (b[2], b[1], b[0]));
+    }
+
+    #[test]
+    fn deterministic_search() {
+        let s1 = seq(150.0, CameraMotion::Static, 3);
+        let train = vec![(&s1, 30.0)];
+        let a = grid_search_oracle(&SearchSpace::paper(), &train);
+        let b = grid_search_oracle(&SearchSpace::paper(), &train);
+        assert_eq!(a.best, b.best);
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.mean_ap, rb.mean_ap);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! The seven MOT17Det-like sequences used throughout the paper.
+//!
+//! Each spec mirrors the real sequence's resolution, length, frame rate,
+//! camera motion class, crowd density and — most importantly for TOD —
+//! the object-size and apparent-speed statistics (the knobs the paper's
+//! policy responds to). MOT17-02/-04/-10 come from static cameras,
+//! -05/-09/-11 from a camera at walking speed, and -13 from a car-mounted
+//! camera (§III.B.4 and §IV).
+
+use crate::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+
+/// Identifier for the seven sequences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SequenceId {
+    Mot02,
+    Mot04,
+    Mot05,
+    Mot09,
+    Mot10,
+    Mot11,
+    Mot13,
+}
+
+impl SequenceId {
+    /// The six training sequences of Table I, in the paper's order.
+    pub const TRAIN: [SequenceId; 6] = [
+        SequenceId::Mot02,
+        SequenceId::Mot04,
+        SequenceId::Mot09,
+        SequenceId::Mot10,
+        SequenceId::Mot11,
+        SequenceId::Mot13,
+    ];
+
+    /// All seven sequences (train + the MOT17-05 test sequence).
+    pub const ALL: [SequenceId; 7] = [
+        SequenceId::Mot02,
+        SequenceId::Mot04,
+        SequenceId::Mot05,
+        SequenceId::Mot09,
+        SequenceId::Mot10,
+        SequenceId::Mot11,
+        SequenceId::Mot13,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SequenceId::Mot02 => "MOT17-02",
+            SequenceId::Mot04 => "MOT17-04",
+            SequenceId::Mot05 => "MOT17-05",
+            SequenceId::Mot09 => "MOT17-09",
+            SequenceId::Mot10 => "MOT17-10",
+            SequenceId::Mot11 => "MOT17-11",
+            SequenceId::Mot13 => "MOT17-13",
+        }
+    }
+
+    /// The FPS constraint the paper evaluates under: 30 FPS everywhere
+    /// except MOT17-05, whose native rate is 14 FPS (§IV.B.2).
+    pub fn eval_fps(self) -> f64 {
+        match self {
+            SequenceId::Mot05 => 14.0,
+            _ => 30.0,
+        }
+    }
+}
+
+impl std::str::FromStr for SequenceId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let norm = s.to_uppercase();
+        for id in SequenceId::ALL {
+            if id.name() == norm
+                || norm == format!("{:02}", seq_number(id))
+                || norm == format!("MOT17-{:02}", seq_number(id))
+            {
+                return Ok(id);
+            }
+        }
+        Err(format!("unknown sequence: {s}"))
+    }
+}
+
+fn seq_number(id: SequenceId) -> u32 {
+    match id {
+        SequenceId::Mot02 => 2,
+        SequenceId::Mot04 => 4,
+        SequenceId::Mot05 => 5,
+        SequenceId::Mot09 => 9,
+        SequenceId::Mot10 => 10,
+        SequenceId::Mot11 => 11,
+        SequenceId::Mot13 => 13,
+    }
+}
+
+/// Build the spec for a sequence.
+///
+/// Size/speed calibration (nominal MBBS as fraction of the frame):
+/// * static group (02, 04, 10): small-to-medium boxes, MBBS ≲ 0.007 — the
+///   region where the paper's TOD "stays with YOLOv4-416";
+/// * walking group (09, 11): large boxes, MBBS around 0.03–0.05;
+///   MOT17-11 gets a wide depth range for the high variance of Fig. 9;
+/// * MOT17-05: close-range 640x480 footage, MBBS > 0.04 (TOD picks
+///   YOLOv4-tiny-288 84.5% of the time, Fig. 10/12);
+/// * MOT17-13: small fast boxes from a car — heavy nets are selected but
+///   drop frames, the regime where TOD concedes accuracy (§V).
+pub fn sequence_spec(id: SequenceId) -> SequenceSpec {
+    match id {
+        SequenceId::Mot02 => SequenceSpec {
+            name: "MOT17-02".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 600,
+            density: 26,
+            ref_height: 380.0,
+            depth_range: (1.4, 2.8),
+            walk_speed: 1.6,
+            camera: CameraMotion::Static,
+            seed: 0x1702,
+        },
+        SequenceId::Mot04 => SequenceSpec {
+            name: "MOT17-04".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 1050,
+            density: 42,
+            ref_height: 340.0,
+            depth_range: (2.2, 3.4),
+            walk_speed: 1.2,
+            camera: CameraMotion::Static,
+            seed: 0x1704,
+        },
+        SequenceId::Mot05 => SequenceSpec {
+            name: "MOT17-05".into(),
+            width: 640,
+            height: 480,
+            fps: 14.0,
+            frames: 837,
+            density: 7,
+            ref_height: 330.0,
+            depth_range: (1.1, 2.1),
+            walk_speed: 1.4,
+            camera: CameraMotion::Walking { pan_speed: 32.0 },
+            seed: 0x1705,
+        },
+        SequenceId::Mot09 => SequenceSpec {
+            name: "MOT17-09".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 525,
+            density: 9,
+            ref_height: 755.0,
+            depth_range: (1.0, 2.0),
+            walk_speed: 1.8,
+            camera: CameraMotion::Walking { pan_speed: 30.0 },
+            seed: 0x1709,
+        },
+        SequenceId::Mot10 => SequenceSpec {
+            name: "MOT17-10".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 654,
+            density: 20,
+            ref_height: 330.0,
+            depth_range: (1.3, 2.6),
+            walk_speed: 2.2,
+            camera: CameraMotion::Static,
+            seed: 0x170a,
+        },
+        SequenceId::Mot11 => SequenceSpec {
+            name: "MOT17-11".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 900,
+            density: 12,
+            ref_height: 900.0,
+            // wide depth range -> high MBBS variance (Fig. 9)
+            depth_range: (1.0, 3.2),
+            walk_speed: 2.0,
+            camera: CameraMotion::Walking { pan_speed: 22.0 },
+            seed: 0x170b,
+        },
+        SequenceId::Mot13 => SequenceSpec {
+            name: "MOT17-13".into(),
+            width: 1920,
+            height: 1080,
+            fps: 30.0,
+            frames: 750,
+            density: 16,
+            ref_height: 280.0,
+            depth_range: (1.6, 3.4),
+            walk_speed: 2.5,
+            camera: CameraMotion::Vehicle { flow_speed: 10.0 },
+            seed: 0x170d,
+        },
+    }
+}
+
+/// Generate all seven sequences (deterministic).
+pub fn mot17det_catalog() -> Vec<Sequence> {
+    SequenceId::ALL
+        .iter()
+        .map(|&id| Sequence::generate(sequence_spec(id)))
+        .collect()
+}
+
+/// Generate one sequence by id.
+pub fn generate(id: SequenceId) -> Sequence {
+    Sequence::generate(sequence_spec(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::median;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!("MOT17-04".parse::<SequenceId>().unwrap(), SequenceId::Mot04);
+        assert_eq!("mot17-13".parse::<SequenceId>().unwrap(), SequenceId::Mot13);
+        assert_eq!("05".parse::<SequenceId>().unwrap(), SequenceId::Mot05);
+        assert!("MOT17-99".parse::<SequenceId>().is_err());
+    }
+
+    #[test]
+    fn eval_fps_matches_paper() {
+        assert_eq!(SequenceId::Mot05.eval_fps(), 14.0);
+        assert_eq!(SequenceId::Mot04.eval_fps(), 30.0);
+    }
+
+    #[test]
+    fn camera_groups_match_paper() {
+        use CameraMotion::*;
+        assert!(matches!(sequence_spec(SequenceId::Mot02).camera, Static));
+        assert!(matches!(sequence_spec(SequenceId::Mot04).camera, Static));
+        assert!(matches!(sequence_spec(SequenceId::Mot10).camera, Static));
+        assert!(matches!(sequence_spec(SequenceId::Mot05).camera, Walking { .. }));
+        assert!(matches!(sequence_spec(SequenceId::Mot09).camera, Walking { .. }));
+        assert!(matches!(sequence_spec(SequenceId::Mot11).camera, Walking { .. }));
+        assert!(matches!(sequence_spec(SequenceId::Mot13).camera, Vehicle { .. }));
+    }
+
+    #[test]
+    fn size_regimes_span_the_policy_regions() {
+        // static group small, walking group large, MOT17-13 smallest —
+        // this is what makes the paper's thresholds meaningful
+        let frac = |id| {
+            let s = generate(id);
+            median(&s.mbbs_series())
+        };
+        let m04 = frac(SequenceId::Mot04);
+        let m09 = frac(SequenceId::Mot09);
+        let m05 = frac(SequenceId::Mot05);
+        let m13 = frac(SequenceId::Mot13);
+        assert!(m04 < 0.007, "MOT17-04 median {m04} should be <= h1");
+        assert!(m09 > 0.02, "MOT17-09 median {m09} should be walking-large");
+        assert!(m05 > 0.04, "MOT17-05 median {m05} should exceed h3");
+        assert!(m13 < 0.007, "MOT17-13 median {m13} should be small");
+    }
+
+    #[test]
+    fn mot11_variance_exceeds_mot04() {
+        // Fig. 9: MOT17-04 (static) has low MBBS variance, MOT17-11
+        // (moving camera) high variance
+        let var = |id| {
+            let series = generate(id).mbbs_series();
+            let m = series.iter().sum::<f64>() / series.len() as f64;
+            series.iter().map(|v| (v - m).powi(2)).sum::<f64>()
+                / series.len() as f64
+                / (m * m) // relative variance
+        };
+        assert!(var(SequenceId::Mot11) > var(SequenceId::Mot04));
+    }
+
+    #[test]
+    fn sequence_lengths_match_mot17() {
+        assert_eq!(sequence_spec(SequenceId::Mot02).frames, 600);
+        assert_eq!(sequence_spec(SequenceId::Mot04).frames, 1050);
+        assert_eq!(sequence_spec(SequenceId::Mot05).frames, 837);
+        assert_eq!(sequence_spec(SequenceId::Mot09).frames, 525);
+        assert_eq!(sequence_spec(SequenceId::Mot10).frames, 654);
+        assert_eq!(sequence_spec(SequenceId::Mot11).frames, 900);
+        assert_eq!(sequence_spec(SequenceId::Mot13).frames, 750);
+    }
+}

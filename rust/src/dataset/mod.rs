@@ -1,0 +1,12 @@
+//! Dataset substrate: MOT challenge file formats and the synthetic
+//! pedestrian-world generator that stands in for the MOT17Det videos
+//! (see DESIGN.md §3 for the substitution argument).
+
+pub mod catalog;
+pub mod ingest;
+pub mod mot;
+pub mod synth;
+
+pub use catalog::{mot17det_catalog, sequence_spec, SequenceId};
+pub use mot::{GtEntry, MotClass};
+pub use synth::{CameraMotion, Sequence, SequenceSpec};

@@ -1,0 +1,341 @@
+//! MOT challenge ground-truth / detection file formats.
+//!
+//! Ground truth (`gt.txt`) rows are
+//! `frame, id, bb_left, bb_top, bb_width, bb_height, conf, class, visibility`
+//! and detection files replace `id` with `-1` and carry the detector score
+//! in the `conf` column. The paper writes its TOD inferences in this format
+//! and pre-processes ground truth by zeroing the consideration flag for
+//! classes that are neither pedestrian (1) nor static person (7).
+//!
+//! Implemented verbatim so a real MOT17Det download drops into the same
+//! pipeline as our synthetic sequences.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::detection::Detection;
+use crate::geometry::BBox;
+
+/// MOT17 class labels (subset relevant to MOT17Det).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MotClass {
+    Pedestrian,
+    PersonOnVehicle,
+    Car,
+    Bicycle,
+    Motorbike,
+    NonMotorVehicle,
+    StaticPerson,
+    Distractor,
+    Occluder,
+    OccluderOnGround,
+    OccluderFull,
+    Reflection,
+    Other(u32),
+}
+
+impl MotClass {
+    pub fn from_id(id: u32) -> MotClass {
+        match id {
+            1 => MotClass::Pedestrian,
+            2 => MotClass::PersonOnVehicle,
+            3 => MotClass::Car,
+            4 => MotClass::Bicycle,
+            5 => MotClass::Motorbike,
+            6 => MotClass::NonMotorVehicle,
+            7 => MotClass::StaticPerson,
+            8 => MotClass::Distractor,
+            9 => MotClass::Occluder,
+            10 => MotClass::OccluderOnGround,
+            11 => MotClass::OccluderFull,
+            12 => MotClass::Reflection,
+            other => MotClass::Other(other),
+        }
+    }
+
+    pub fn id(self) -> u32 {
+        match self {
+            MotClass::Pedestrian => 1,
+            MotClass::PersonOnVehicle => 2,
+            MotClass::Car => 3,
+            MotClass::Bicycle => 4,
+            MotClass::Motorbike => 5,
+            MotClass::NonMotorVehicle => 6,
+            MotClass::StaticPerson => 7,
+            MotClass::Distractor => 8,
+            MotClass::Occluder => 9,
+            MotClass::OccluderOnGround => 10,
+            MotClass::OccluderFull => 11,
+            MotClass::Reflection => 12,
+            MotClass::Other(id) => id,
+        }
+    }
+
+    /// The paper's accuracy evaluation considers pedestrians and static
+    /// persons as positive ground truth; everything else is ignored.
+    pub fn is_person(self) -> bool {
+        matches!(self, MotClass::Pedestrian | MotClass::StaticPerson)
+    }
+}
+
+/// One ground-truth (or detection) row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GtEntry {
+    pub frame: u64,
+    /// Track id; -1 for detections.
+    pub id: i64,
+    pub bbox: BBox,
+    /// GT: consideration flag (0/1). Detections: confidence score.
+    pub conf: f64,
+    pub class: MotClass,
+    /// Visibility ratio in [0, 1]; -1 when meaningless (detections).
+    pub visibility: f64,
+}
+
+impl GtEntry {
+    /// Parse one CSV row. Accepts both 9-column gt rows and shorter
+    /// 7-column det rows (class/visibility defaulting).
+    pub fn parse(line: &str) -> Result<GtEntry, String> {
+        let fields: Vec<&str> = line.trim().split(',').collect();
+        if fields.len() < 7 {
+            return Err(format!("mot row needs >= 7 fields: {line:?}"));
+        }
+        let num = |i: usize| -> Result<f64, String> {
+            fields[i]
+                .trim()
+                .parse::<f64>()
+                .map_err(|e| format!("field {i} ({:?}): {e}", fields[i]))
+        };
+        let frame = num(0)? as u64;
+        let id = num(1)? as i64;
+        let bbox = BBox::new(num(2)?, num(3)?, num(4)?, num(5)?);
+        let conf = num(6)?;
+        let class = if fields.len() > 7 {
+            let cid = num(7)?;
+            if cid < 0.0 {
+                MotClass::Pedestrian
+            } else {
+                MotClass::from_id(cid as u32)
+            }
+        } else {
+            MotClass::Pedestrian
+        };
+        let visibility = if fields.len() > 8 { num(8)? } else { -1.0 };
+        Ok(GtEntry { frame, id, bbox, conf, class, visibility })
+    }
+
+    /// Serialize in MOT CSV form.
+    pub fn to_line(&self) -> String {
+        format!(
+            "{},{},{:.2},{:.2},{:.2},{:.2},{},{},{}",
+            self.frame,
+            self.id,
+            self.bbox.x,
+            self.bbox.y,
+            self.bbox.w,
+            self.bbox.h,
+            trim_f64(self.conf),
+            self.class.id(),
+            trim_f64(self.visibility),
+        )
+    }
+
+    /// The paper's MOT17Det gt preprocessing: zero the consideration flag
+    /// when the class is neither pedestrian nor static person.
+    pub fn preprocess_for_eval(mut self) -> GtEntry {
+        if !self.class.is_person() {
+            self.conf = 0.0;
+        }
+        self
+    }
+
+    /// Whether this gt row counts as a positive for AP evaluation.
+    pub fn is_considered(&self) -> bool {
+        self.conf > 0.0 && self.class.is_person()
+    }
+}
+
+fn trim_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e12 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+            .trim_end_matches('0')
+            .trim_end_matches('.')
+            .to_string()
+    }
+}
+
+/// Parse a whole gt/det file (one row per line, blank lines skipped).
+pub fn parse_file_text(text: &str) -> Result<Vec<GtEntry>, String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(GtEntry::parse)
+        .collect()
+}
+
+/// Read a gt/det file from disk.
+pub fn read_file(path: &Path) -> Result<Vec<GtEntry>, String> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| format!("open {path:?}: {e}"))?;
+    let mut out = Vec::new();
+    for line in BufReader::new(f).lines() {
+        let line = line.map_err(|e| format!("read {path:?}: {e}"))?;
+        let t = line.trim();
+        if !t.is_empty() {
+            out.push(GtEntry::parse(t)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Write entries to a gt/det file.
+pub fn write_file(path: &Path, entries: &[GtEntry]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for e in entries {
+        writeln!(f, "{}", e.to_line())?;
+    }
+    Ok(())
+}
+
+/// Convert per-frame detections into MOT det rows the way the paper does:
+/// id = -1 (detection), score in the conf column, visibility = -1.
+pub fn detections_to_entries(
+    frame: u64,
+    dets: &[Detection],
+) -> Vec<GtEntry> {
+    dets.iter()
+        .map(|d| GtEntry {
+            frame,
+            id: -1,
+            bbox: d.bbox,
+            conf: d.score as f64,
+            class: MotClass::Pedestrian,
+            visibility: -1.0,
+        })
+        .collect()
+}
+
+/// Group entries by frame id into a dense per-frame vector
+/// (frames are 1-based; missing frames yield empty vectors).
+pub fn group_by_frame(entries: &[GtEntry], n_frames: u64) -> Vec<Vec<GtEntry>> {
+    let mut frames: Vec<Vec<GtEntry>> = vec![Vec::new(); n_frames as usize];
+    for e in entries {
+        if e.frame >= 1 && e.frame <= n_frames {
+            frames[(e.frame - 1) as usize].push(e.clone());
+        }
+    }
+    frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_example_row() {
+        // the paper quotes: 1, -1, 794.2, 47.5, 71.2, 174.8, 1, classID, 0.8
+        let e = GtEntry::parse("1,-1,794.2,47.5,71.2,174.8,1,1,0.8").unwrap();
+        assert_eq!(e.frame, 1);
+        assert_eq!(e.id, -1);
+        assert!((e.bbox.x - 794.2).abs() < 1e-9);
+        assert!((e.bbox.h - 174.8).abs() < 1e-9);
+        assert_eq!(e.conf, 1.0);
+        assert_eq!(e.class, MotClass::Pedestrian);
+        assert!((e.visibility - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_line() {
+        let e = GtEntry::parse("17,3,100.5,50.25,30,60,1,7,0.25").unwrap();
+        let line = e.to_line();
+        let back = GtEntry::parse(&line).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn parse_rejects_bad_rows() {
+        assert!(GtEntry::parse("1,2,3").is_err());
+        assert!(GtEntry::parse("a,b,c,d,e,f,g").is_err());
+        assert!(GtEntry::parse("").is_err());
+    }
+
+    #[test]
+    fn short_det_row_defaults() {
+        let e = GtEntry::parse("3,-1,10,20,30,40,0.9").unwrap();
+        assert_eq!(e.class, MotClass::Pedestrian);
+        assert_eq!(e.visibility, -1.0);
+        assert!((e.conf - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preprocess_zeroes_non_person() {
+        let car = GtEntry::parse("1,1,0,0,10,10,1,3,1").unwrap();
+        let ped = GtEntry::parse("1,2,0,0,10,10,1,1,1").unwrap();
+        let stat = GtEntry::parse("1,3,0,0,10,10,1,7,1").unwrap();
+        assert!(!car.clone().preprocess_for_eval().is_considered());
+        assert!(ped.clone().preprocess_for_eval().is_considered());
+        assert!(stat.clone().preprocess_for_eval().is_considered());
+        // flag already 0 stays unconsidered even for pedestrians
+        let off = GtEntry::parse("1,4,0,0,10,10,0,1,1").unwrap();
+        assert!(!off.preprocess_for_eval().is_considered());
+    }
+
+    #[test]
+    fn class_table_roundtrip() {
+        for id in 1..=12 {
+            assert_eq!(MotClass::from_id(id).id(), id);
+        }
+        assert_eq!(MotClass::from_id(99), MotClass::Other(99));
+        assert!(MotClass::Pedestrian.is_person());
+        assert!(MotClass::StaticPerson.is_person());
+        assert!(!MotClass::Car.is_person());
+    }
+
+    #[test]
+    fn group_by_frame_dense() {
+        let entries = vec![
+            GtEntry::parse("2,1,0,0,10,10,1,1,1").unwrap(),
+            GtEntry::parse("2,2,0,0,10,10,1,1,1").unwrap(),
+            GtEntry::parse("4,3,0,0,10,10,1,1,1").unwrap(),
+            GtEntry::parse("9,9,0,0,10,10,1,1,1").unwrap(), // out of range
+        ];
+        let frames = group_by_frame(&entries, 5);
+        assert_eq!(frames.len(), 5);
+        assert_eq!(frames[0].len(), 0);
+        assert_eq!(frames[1].len(), 2);
+        assert_eq!(frames[3].len(), 1);
+    }
+
+    #[test]
+    fn detections_to_entries_matches_paper_format() {
+        let dets = vec![Detection::new(
+            BBox::new(794.2, 47.5, 71.2, 174.8),
+            0.8,
+            crate::detection::PERSON_CLASS,
+        )];
+        let rows = detections_to_entries(1, &dets);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].id, -1);
+        assert_eq!(rows[0].visibility, -1.0);
+        assert!(rows[0].to_line().starts_with("1,-1,794.2"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tod_mot_test");
+        let path = dir.join("gt.txt");
+        let entries = vec![
+            GtEntry::parse("1,1,10,20,30,40,1,1,0.9").unwrap(),
+            GtEntry::parse("2,1,12,22,30,40,1,1,0.8").unwrap(),
+        ];
+        write_file(&path, &entries).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(back, entries);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

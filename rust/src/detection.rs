@@ -1,0 +1,218 @@
+//! Detections, confidence filtering, NMS, and the MBBS statistic that
+//! drives the TOD policy.
+
+use crate::geometry::BBox;
+
+/// The class id we care about ('person'), matching the paper's filter.
+pub const PERSON_CLASS: u32 = 0;
+
+/// Confidence threshold the paper applies to YOLO outputs (§III.B.1).
+pub const SCORE_THRESHOLD: f32 = 0.35;
+
+/// One detected object in a frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub score: f32,
+    pub class_id: u32,
+}
+
+impl Detection {
+    pub fn new(bbox: BBox, score: f32, class_id: u32) -> Self {
+        Detection { bbox, score, class_id }
+    }
+}
+
+/// All detections for one frame, tagged with the frame id (1-based,
+/// MOT convention).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FrameDetections {
+    pub frame: u64,
+    pub detections: Vec<Detection>,
+}
+
+impl FrameDetections {
+    pub fn new(frame: u64) -> Self {
+        FrameDetections { frame, detections: Vec::new() }
+    }
+
+    /// Keep only 'person' detections above the paper's 0.35 threshold.
+    pub fn filtered(&self) -> FrameDetections {
+        FrameDetections {
+            frame: self.frame,
+            detections: self
+                .detections
+                .iter()
+                .copied()
+                .filter(|d| {
+                    d.class_id == PERSON_CLASS && d.score > SCORE_THRESHOLD
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Median of Bounding-Box Sizes as a fraction of the frame area — the
+/// paper's per-frame signal (§III.B.3). Returns 0.0 when there are no
+/// boxes, which routes Algorithm 1 to the heaviest DNN (its `else`
+/// branch), matching the paper's `median(bboxes)_0 = 0` initialisation.
+pub fn mbbs(dets: &[Detection], frame_w: f64, frame_h: f64) -> f64 {
+    if dets.is_empty() {
+        return 0.0;
+    }
+    let mut areas: Vec<f64> = dets
+        .iter()
+        .map(|d| d.bbox.area_frac(frame_w, frame_h))
+        .collect();
+    // In-place O(n) selection; no allocation beyond the areas scratch.
+    let mid = areas.len() / 2;
+    let (_, m, _) =
+        areas.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    let hi = *m;
+    if areas.len() % 2 == 1 {
+        hi
+    } else {
+        let lo = areas[..mid]
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max);
+        (lo + hi) / 2.0
+    }
+}
+
+/// Greedy non-maximum suppression: keep the highest-scoring box, drop
+/// everything overlapping it above `iou_thresh`, repeat. Detections with
+/// different class ids never suppress each other.
+pub fn nms(dets: &[Detection], iou_thresh: f64) -> Vec<Detection> {
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| {
+        dets[b].score.partial_cmp(&dets[a].score).unwrap()
+    });
+    let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
+    let mut suppressed = vec![false; dets.len()];
+    for (rank, &i) in order.iter().enumerate() {
+        if suppressed[i] {
+            continue;
+        }
+        keep.push(dets[i]);
+        for &j in &order[rank + 1..] {
+            if suppressed[j] || dets[j].class_id != dets[i].class_id {
+                continue;
+            }
+            if dets[i].bbox.iou(&dets[j].bbox) > iou_thresh {
+                suppressed[j] = true;
+            }
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(x: f64, y: f64, w: f64, h: f64, score: f32) -> Detection {
+        Detection::new(BBox::new(x, y, w, h), score, PERSON_CLASS)
+    }
+
+    #[test]
+    fn mbbs_empty_is_zero() {
+        assert_eq!(mbbs(&[], 1920.0, 1080.0), 0.0);
+    }
+
+    #[test]
+    fn mbbs_single_box() {
+        let d = det(0., 0., 192., 108., 0.9);
+        // 192*108 / (1920*1080) = 0.01
+        assert!((mbbs(&[d], 1920., 1080.) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mbbs_is_median_not_mean() {
+        // paper's motivation: a full-frame false positive must not move
+        // the statistic much
+        let mut dets = vec![
+            det(0., 0., 100., 100., 0.9),
+            det(0., 0., 110., 100., 0.9),
+            det(0., 0., 120., 100., 0.9),
+        ];
+        let m0 = mbbs(&dets, 1000., 1000.);
+        dets.push(det(0., 0., 1000., 1000., 0.9)); // frame-sized FP
+        let m1 = mbbs(&dets, 1000., 1000.);
+        assert!((m0 - 0.011).abs() < 1e-9);
+        assert!(m1 < 0.02, "median dragged too far: {m1}");
+    }
+
+    #[test]
+    fn mbbs_even_count_averages_middle_pair() {
+        let dets = vec![
+            det(0., 0., 10., 10., 0.9),   // 1e-4
+            det(0., 0., 20., 10., 0.9),   // 2e-4
+            det(0., 0., 30., 10., 0.9),   // 3e-4
+            det(0., 0., 40., 10., 0.9),   // 4e-4
+        ];
+        assert!((mbbs(&dets, 1000., 1000.) - 2.5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filter_drops_low_score_and_other_classes() {
+        let mut fd = FrameDetections::new(1);
+        fd.detections.push(det(0., 0., 10., 10., 0.9));
+        fd.detections.push(det(0., 0., 10., 10., 0.2)); // low score
+        fd.detections.push(Detection::new(
+            BBox::new(0., 0., 10., 10.),
+            0.9,
+            7, // not a person
+        ));
+        let f = fd.filtered();
+        assert_eq!(f.detections.len(), 1);
+        assert_eq!(f.frame, 1);
+    }
+
+    #[test]
+    fn filter_threshold_is_exclusive() {
+        let mut fd = FrameDetections::new(1);
+        fd.detections.push(det(0., 0., 10., 10., SCORE_THRESHOLD));
+        assert!(fd.filtered().detections.is_empty());
+    }
+
+    #[test]
+    fn nms_keeps_highest_and_drops_overlap() {
+        let dets = vec![
+            det(0., 0., 10., 10., 0.8),
+            det(1., 1., 10., 10., 0.9), // overlaps the first, higher score
+            det(50., 50., 10., 10., 0.7),
+        ];
+        let kept = nms(&dets, 0.5);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].score, 0.9);
+        assert_eq!(kept[1].score, 0.7);
+    }
+
+    #[test]
+    fn nms_respects_class_boundaries() {
+        let a = det(0., 0., 10., 10., 0.9);
+        let mut b = det(0., 0., 10., 10., 0.8);
+        b.class_id = 3;
+        let kept = nms(&[a, b], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn nms_is_idempotent() {
+        let dets = vec![
+            det(0., 0., 10., 10., 0.8),
+            det(2., 2., 10., 10., 0.9),
+            det(4., 0., 10., 10., 0.85),
+            det(100., 100., 10., 10., 0.5),
+        ];
+        let once = nms(&dets, 0.45);
+        let twice = nms(&once, 0.45);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn nms_empty_input() {
+        assert!(nms(&[], 0.5).is_empty());
+    }
+}

@@ -1,0 +1,234 @@
+//! Average precision over a sequence of matched frames.
+//!
+//! Detections from all frames are pooled, sorted by confidence, and the
+//! precision-recall curve is integrated. Two integration rules are
+//! provided: the continuous (VOC-2010 / MOT devkit) all-point rule used
+//! by default, and the classic 11-point rule for cross-checking.
+
+use crate::eval::matching::FrameMatch;
+
+/// AP integration rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApMethod {
+    /// Area under the monotone-envelope PR curve (all recall points).
+    AllPoint,
+    /// Mean of max precision at recall ∈ {0.0, 0.1, ..., 1.0}.
+    ElevenPoint,
+}
+
+/// Pooled evaluation state for one sequence (or one campaign).
+#[derive(Debug, Clone, Default)]
+pub struct SequenceEval {
+    scored: Vec<(f32, bool)>,
+    n_gt: usize,
+}
+
+impl SequenceEval {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one matched frame.
+    pub fn push(&mut self, m: &FrameMatch) {
+        self.scored.extend_from_slice(&m.scored);
+        self.n_gt += m.n_gt;
+    }
+
+    pub fn n_gt(&self) -> usize {
+        self.n_gt
+    }
+
+    pub fn n_scored(&self) -> usize {
+        self.scored.len()
+    }
+
+    /// Average precision under the given rule.
+    pub fn ap(&self, method: ApMethod) -> f64 {
+        average_precision(&self.scored, self.n_gt, method)
+    }
+
+    /// The (recall, precision) curve, sorted by ascending recall.
+    pub fn curve(&self) -> Vec<(f64, f64)> {
+        pr_curve(&self.scored, self.n_gt)
+    }
+}
+
+/// Precision-recall points from pooled (score, is_tp) pairs.
+pub fn pr_curve(scored: &[(f32, bool)], n_gt: usize) -> Vec<(f64, f64)> {
+    if n_gt == 0 || scored.is_empty() {
+        return Vec::new();
+    }
+    let mut s: Vec<(f32, bool)> = scored.to_vec();
+    s.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut curve = Vec::with_capacity(s.len());
+    for (_, is_tp) in s {
+        if is_tp {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        let recall = tp as f64 / n_gt as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        curve.push((recall, precision));
+    }
+    curve
+}
+
+/// Average precision from pooled (score, is_tp) pairs.
+///
+/// Edge cases: no ground truth and no detections → perfect (1.0) by
+/// convention; no ground truth but detections → 0.0; detections absent
+/// with ground truth present → 0.0.
+pub fn average_precision(
+    scored: &[(f32, bool)],
+    n_gt: usize,
+    method: ApMethod,
+) -> f64 {
+    if n_gt == 0 {
+        return if scored.is_empty() { 1.0 } else { 0.0 };
+    }
+    let curve = pr_curve(scored, n_gt);
+    if curve.is_empty() {
+        return 0.0;
+    }
+    match method {
+        ApMethod::AllPoint => {
+            // monotone envelope, integrate dr * p
+            let mut env: Vec<(f64, f64)> = curve.clone();
+            let mut best = 0.0f64;
+            for i in (0..env.len()).rev() {
+                best = best.max(env[i].1);
+                env[i].1 = best;
+            }
+            let mut ap = 0.0;
+            let mut prev_r = 0.0;
+            for (r, p) in env {
+                ap += (r - prev_r).max(0.0) * p;
+                prev_r = r;
+            }
+            ap
+        }
+        ApMethod::ElevenPoint => {
+            let mut total = 0.0;
+            for k in 0..=10 {
+                let r0 = k as f64 / 10.0;
+                let pmax = curve
+                    .iter()
+                    .filter(|(r, _)| *r >= r0 - 1e-12)
+                    .map(|(_, p)| *p)
+                    .fold(0.0f64, f64::max);
+                total += pmax;
+            }
+            total / 11.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_from(scored: Vec<(f32, bool)>, n_gt: usize) -> SequenceEval {
+        let mut e = SequenceEval::new();
+        e.push(&FrameMatch { scored, n_gt, n_ignored: 0 });
+        e
+    }
+
+    #[test]
+    fn perfect_detector_ap_is_one() {
+        let e = eval_from(vec![(0.9, true), (0.8, true)], 2);
+        assert!((e.ap(ApMethod::AllPoint) - 1.0).abs() < 1e-12);
+        assert!((e.ap(ApMethod::ElevenPoint) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_false_positives_ap_zero() {
+        let e = eval_from(vec![(0.9, false), (0.8, false)], 3);
+        assert_eq!(e.ap(ApMethod::AllPoint), 0.0);
+    }
+
+    #[test]
+    fn no_detections_with_gt_is_zero() {
+        let e = eval_from(vec![], 5);
+        assert_eq!(e.ap(ApMethod::AllPoint), 0.0);
+    }
+
+    #[test]
+    fn empty_everything_is_one() {
+        let e = eval_from(vec![], 0);
+        assert_eq!(e.ap(ApMethod::AllPoint), 1.0);
+    }
+
+    #[test]
+    fn hand_computed_ap() {
+        // 3 gt; dets sorted by score: TP, FP, TP
+        // points: r=1/3 p=1; r=1/3 p=1/2; r=2/3 p=2/3
+        // envelope: p(0..1/3]=1, p(1/3..2/3]=2/3
+        // AP = 1/3 * 1 + 1/3 * 2/3 = 0.5555...
+        let e = eval_from(vec![(0.9, true), (0.8, false), (0.7, true)], 3);
+        let ap = e.ap(ApMethod::AllPoint);
+        assert!((ap - (1.0 / 3.0 + 2.0 / 9.0)).abs() < 1e-12, "ap={ap}");
+    }
+
+    #[test]
+    fn score_order_invariance() {
+        // AP depends on score ranking, not on push order
+        let e1 = eval_from(vec![(0.9, true), (0.5, false), (0.7, true)], 2);
+        let e2 = eval_from(vec![(0.5, false), (0.7, true), (0.9, true)], 2);
+        assert_eq!(e1.ap(ApMethod::AllPoint), e2.ap(ApMethod::AllPoint));
+    }
+
+    #[test]
+    fn better_ranking_scores_higher() {
+        // same TP/FP multiset, but TPs ranked above FPs scores higher
+        let good = eval_from(
+            vec![(0.9, true), (0.8, true), (0.3, false), (0.2, false)],
+            2,
+        );
+        let bad = eval_from(
+            vec![(0.9, false), (0.8, false), (0.3, true), (0.2, true)],
+            2,
+        );
+        assert!(
+            good.ap(ApMethod::AllPoint) > bad.ap(ApMethod::AllPoint) + 0.3
+        );
+    }
+
+    #[test]
+    fn ap_bounded_zero_one() {
+        let e = eval_from(
+            vec![(0.9, true), (0.8, false), (0.7, true), (0.1, false)],
+            10,
+        );
+        for m in [ApMethod::AllPoint, ApMethod::ElevenPoint] {
+            let ap = e.ap(m);
+            assert!((0.0..=1.0).contains(&ap));
+        }
+    }
+
+    #[test]
+    fn eleven_point_close_to_allpoint_on_dense_curve() {
+        // a long, well-behaved detector run: both rules should agree
+        // within a few points
+        let mut scored = Vec::new();
+        for i in 0..200 {
+            scored.push((1.0 - i as f32 / 200.0, i % 3 != 0));
+        }
+        let e = eval_from(scored, 140);
+        let a = e.ap(ApMethod::AllPoint);
+        let b = e.ap(ApMethod::ElevenPoint);
+        assert!((a - b).abs() < 0.08, "all={a} eleven={b}");
+    }
+
+    #[test]
+    fn accumulates_across_frames() {
+        let mut e = SequenceEval::new();
+        e.push(&FrameMatch { scored: vec![(0.9, true)], n_gt: 1, n_ignored: 0 });
+        e.push(&FrameMatch { scored: vec![(0.8, true)], n_gt: 1, n_ignored: 0 });
+        assert_eq!(e.n_gt(), 2);
+        assert_eq!(e.n_scored(), 2);
+        assert!((e.ap(ApMethod::AllPoint) - 1.0).abs() < 1e-12);
+    }
+}

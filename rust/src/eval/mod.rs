@@ -1,0 +1,9 @@
+//! Accuracy evaluation: IoU matching and average precision, implemented
+//! from the MOT devkit's detection-evaluation definition (the paper's
+//! "Matlab interface MOT evaluation tool kit").
+
+pub mod ap;
+pub mod matching;
+
+pub use ap::{average_precision, pr_curve, ApMethod, SequenceEval};
+pub use matching::{match_frame, FrameMatch};

@@ -1,0 +1,244 @@
+//! Bounded MPMC channel with blocking send (backpressure) built on
+//! `Mutex` + `Condvar`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half; clones share the channel.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half; clones share the channel.
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Error returned when all receivers are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Create a bounded channel with the given capacity (> 0).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0, "channel capacity must be > 0");
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(State {
+            items: VecDeque::with_capacity(capacity),
+            senders: 1,
+            receivers: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; applies backpressure when the queue is full.
+    /// Fails only when every receiver has been dropped.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError(value));
+            }
+            if st.items.len() < self.shared.capacity {
+                st.items.push_back(value);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the value back when full/closed.
+    pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.queue.lock().unwrap();
+        if st.receivers == 0 || st.items.len() >= self.shared.capacity {
+            return Err(SendError(value));
+        }
+        st.items.push_back(value);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Number of queued items (racy; diagnostics only).
+    pub fn len(&self) -> usize {
+        self.shared.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // wake receivers so they can observe disconnection
+            drop(st);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once the channel is empty and all
+    /// senders are gone.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.shared.queue.lock().unwrap();
+        let v = st.items.pop_front();
+        if v.is_some() {
+            self.shared.not_full.notify_one();
+        }
+        v
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            drop(st);
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let got: Vec<i32> = (0..5).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recv_none_after_senders_drop() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_after_receivers_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(SendError(9)));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || {
+            // this send must block until the main thread receives
+            tx.send(1).unwrap();
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn try_send_respects_capacity() {
+        let (tx, _rx) = bounded(1);
+        assert!(tx.try_send(1).is_ok());
+        assert_eq!(tx.try_send(2), Err(SendError(2)));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(4);
+        let mut senders = Vec::new();
+        for s in 0..4u64 {
+            let tx = tx.clone();
+            senders.push(thread::spawn(move || {
+                for i in 0..100u64 {
+                    tx.send(s * 1000 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut receivers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            receivers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for s in senders {
+            s.join().unwrap();
+        }
+        let mut all: Vec<u64> = receivers
+            .into_iter()
+            .flat_map(|r| r.join().unwrap())
+            .collect();
+        all.sort();
+        assert_eq!(all.len(), 400);
+        all.dedup();
+        assert_eq!(all.len(), 400, "duplicate delivery");
+    }
+}

@@ -1,0 +1,12 @@
+//! Minimal threaded executor: a fixed worker pool and bounded channels
+//! with backpressure (the offline stand-in for tokio; DESIGN.md §3).
+//!
+//! The serving example uses this to decouple the frame producer from the
+//! PJRT inference worker while preserving the paper's single-inference-
+//! in-flight discipline.
+
+pub mod channel;
+pub mod pool;
+
+pub use channel::{bounded, Receiver, SendError, Sender};
+pub use pool::ThreadPool;

@@ -1,0 +1,123 @@
+//! Fixed-size worker thread pool over the bounded channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::exec::channel::{bounded, Sender};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing submitted closures.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers with a task queue of `queue_cap` (backpressure:
+    /// `submit` blocks when the queue is full).
+    pub fn new(n: usize, queue_cap: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = bounded::<Job>(queue_cap.max(1));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                let in_flight = in_flight.clone();
+                std::thread::Builder::new()
+                    .name(format!("tod-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                            in_flight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Submit a job; blocks when the queue is full.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .ok();
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2, 4);
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for queue drain
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4, 8);
+        let t0 = std::time::Instant::now();
+        for _ in 0..8 {
+            pool.submit(|| {
+                std::thread::sleep(std::time::Duration::from_millis(25))
+            });
+        }
+        pool.wait_idle();
+        let elapsed = t0.elapsed();
+        // serial would be 200 ms; 4 workers should finish in ~50 ms
+        assert!(elapsed.as_millis() < 150, "elapsed {elapsed:?}");
+    }
+}

@@ -1,0 +1,276 @@
+//! Ablations of TOD's design choices (DESIGN.md §8 calls these out):
+//!
+//! * **median vs mean** bounding-box statistic — the paper argues the
+//!   median resists full-frame false positives (§III.B.3);
+//! * **threshold sensitivity** — how mean AP moves as each `h_i` is
+//!   perturbed around H_opt (the robustness the grid search relies on);
+//! * **proactive vs periodic** — TOD against the Chameleon-lite
+//!   re-profiler at several window sizes (§II/§V comparison).
+
+use crate::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
+use crate::coordinator::policy::{
+    MbbsPolicy, SelectionPolicy, Thresholds,
+};
+use crate::coordinator::scheduler::{run_realtime, OracleBackend};
+use crate::dataset::catalog::{generate, SequenceId};
+use crate::detection::Detection;
+use crate::sim::latency::LatencyModel;
+use crate::sim::oracle::OracleDetector;
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+
+use super::ExperimentOutput;
+
+/// A policy variant that drives Algorithm 1 with the *mean* box size —
+/// the statistic the paper rejected.
+#[derive(Debug, Clone)]
+pub struct MeanBbsPolicy(pub MbbsPolicy);
+
+/// Mean box-size fraction (the rejected statistic).
+pub fn mean_bbs(dets: &[Detection], fw: f64, fh: f64) -> f64 {
+    if dets.is_empty() {
+        return 0.0;
+    }
+    dets.iter().map(|d| d.bbox.area_frac(fw, fh)).sum::<f64>()
+        / dets.len() as f64
+}
+
+impl SelectionPolicy for MeanBbsPolicy {
+    fn select(&mut self, mbbs_prev: f64) -> crate::DnnKind {
+        // the scheduler feeds the median; this wrapper is used via
+        // run_realtime_with_stat below, which feeds the mean instead
+        self.0.select_pure(mbbs_prev)
+    }
+
+    fn label(&self) -> String {
+        format!("mean-{}", self.0.label())
+    }
+}
+
+fn oracle_for(seq: &crate::dataset::synth::Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+/// Median-vs-mean ablation: rerun the campaign with the mean statistic
+/// by injecting synthetic full-frame false positives at a low rate —
+/// the scenario the paper cites ("sometimes, entire frames were detected
+/// as false positives").
+fn median_vs_mean() -> (AsciiTable, CsvTable) {
+    use crate::detection::{mbbs, FrameDetections, PERSON_CLASS};
+    use crate::eval::ap::{ApMethod, SequenceEval};
+    use crate::eval::matching::{match_frame, IOU_THRESHOLD};
+    use crate::geometry::BBox;
+    use crate::video::dropframe::{DropFrameAccounting, FrameOutcome};
+
+    let mut table = AsciiTable::new(
+        "Ablation A1 — median (paper) vs mean box statistic, with \
+         full-frame FP bursts",
+        vec!["sequence", "AP(median)", "AP(mean)"],
+    );
+    let mut csv =
+        CsvTable::new(vec!["sequence", "ap_median", "ap_mean"]);
+    for id in [SequenceId::Mot05, SequenceId::Mot09, SequenceId::Mot11] {
+        let seq = generate(id);
+        let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
+        let mut aps = Vec::new();
+        for use_median in [true, false] {
+            let mut det = oracle_for(&seq);
+            let mut policy = MbbsPolicy::tod_default();
+            let mut lat = LatencyModel::deterministic();
+            let mut acc = DropFrameAccounting::new(id.eval_fps());
+            let mut eval = SequenceEval::new();
+            let mut carried: Vec<Detection> = Vec::new();
+            let mut rng = crate::util::rng::Rng::new(77);
+            for f in 1..=seq.n_frames() {
+                let stat = if use_median {
+                    mbbs(&carried, fw, fh)
+                } else {
+                    mean_bbs(&carried, fw, fh)
+                };
+                let dnn = policy.select(stat);
+                let (outcome, _) = acc.on_frame(f, || lat.sample(dnn));
+                if outcome == FrameOutcome::Inferred {
+                    use crate::coordinator::scheduler::Detector;
+                    let mut raw = det.detect(f, seq.gt(f), dnn);
+                    // ~5% of frames: a full-frame false positive
+                    if rng.chance(0.05) {
+                        raw.push(Detection::new(
+                            BBox::new(0.0, 0.0, fw, fh),
+                            0.6,
+                            PERSON_CLASS,
+                        ));
+                    }
+                    carried = FrameDetections { frame: f, detections: raw }
+                        .filtered()
+                        .detections;
+                }
+                eval.push(&match_frame(&carried, seq.gt(f), IOU_THRESHOLD));
+            }
+            aps.push(eval.ap(ApMethod::AllPoint));
+        }
+        table.push(vec![
+            id.name().to_string(),
+            format!("{:.3}", aps[0]),
+            format!("{:.3}", aps[1]),
+        ]);
+        csv.push(vec![
+            id.name().to_string(),
+            format!("{:.4}", aps[0]),
+            format!("{:.4}", aps[1]),
+        ]);
+    }
+    (table, csv)
+}
+
+/// Threshold sensitivity: perturb each h_i by +-50% around H_opt.
+fn threshold_sensitivity() -> (AsciiTable, CsvTable) {
+    let mut table = AsciiTable::new(
+        "Ablation A2 — mean AP vs perturbed thresholds (train sequences)",
+        vec!["variant", "h1", "h2", "h3", "mean_AP"],
+    );
+    let mut csv = CsvTable::new(vec!["variant", "h1", "h2", "h3", "mean_ap"]);
+    let base = [0.007, 0.03, 0.04];
+    let mut variants: Vec<(String, [f64; 3])> =
+        vec![("H_opt".into(), base)];
+    for (i, name) in ["h1", "h2", "h3"].iter().enumerate() {
+        for (tag, f) in [("-50%", 0.5), ("+50%", 1.5)] {
+            let mut h = base;
+            h[i] *= f;
+            if h[0] < h[1] && h[1] < h[2] {
+                variants.push((format!("{name}{tag}"), h));
+            }
+        }
+    }
+    let seqs: Vec<_> =
+        SequenceId::TRAIN.iter().map(|&id| generate(id)).collect();
+    for (name, h) in variants {
+        let mut mean = 0.0;
+        for seq in &seqs {
+            let mut policy =
+                MbbsPolicy::new(Thresholds::new(h.to_vec()));
+            let mut det = oracle_for(seq);
+            let mut lat = LatencyModel::deterministic();
+            let r = run_realtime(seq, &mut policy, &mut det, &mut lat, 30.0);
+            mean += r.ap / seqs.len() as f64;
+        }
+        table.push(vec![
+            name.clone(),
+            format!("{}", h[0]),
+            format!("{}", h[1]),
+            format!("{}", h[2]),
+            format!("{mean:.3}"),
+        ]);
+        csv.push(vec![
+            name,
+            format!("{}", h[0]),
+            format!("{}", h[1]),
+            format!("{}", h[2]),
+            format!("{mean:.4}"),
+        ]);
+    }
+    (table, csv)
+}
+
+/// Proactive TOD vs Chameleon-lite at several re-profiling windows.
+fn proactive_vs_periodic() -> (AsciiTable, CsvTable) {
+    let mut table = AsciiTable::new(
+        "Ablation A3 — proactive TOD vs periodic re-profiling \
+         (chameleon-lite), MOT17-05/-09/-11 mean AP",
+        vec!["policy", "mean_AP", "mean_drop_rate_%"],
+    );
+    let mut csv = CsvTable::new(vec!["policy", "mean_ap", "drop_rate"]);
+    let ids = [SequenceId::Mot05, SequenceId::Mot09, SequenceId::Mot11];
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    // TOD
+    {
+        let mut ap = 0.0;
+        let mut dr = 0.0;
+        for id in ids {
+            let seq = generate(id);
+            let mut det = oracle_for(&seq);
+            let mut policy = MbbsPolicy::tod_default();
+            let mut lat = LatencyModel::deterministic();
+            let r = run_realtime(
+                &seq, &mut policy, &mut det, &mut lat, id.eval_fps(),
+            );
+            ap += r.ap / 3.0;
+            dr += r.drop_rate() * 100.0 / 3.0;
+        }
+        rows.push(("TOD (proactive)".into(), ap, dr));
+    }
+    for window in [60u64, 150, 300] {
+        let mut ap = 0.0;
+        let mut dr = 0.0;
+        for id in ids {
+            let seq = generate(id);
+            let mut det = oracle_for(&seq);
+            let mut lat = LatencyModel::deterministic();
+            let r = run_chameleon_lite(
+                &seq,
+                &mut det,
+                &mut lat,
+                id.eval_fps(),
+                &ChameleonConfig { window, f1_floor: 0.75 },
+            );
+            ap += r.ap / 3.0;
+            dr += r.drop_rate() * 100.0 / 3.0;
+        }
+        rows.push((format!("chameleon-lite w={window}"), ap, dr));
+    }
+    for (name, ap, dr) in rows {
+        table.push(vec![
+            name.clone(),
+            format!("{ap:.3}"),
+            format!("{dr:.1}"),
+        ]);
+        csv.push(vec![name, format!("{ap:.4}"), format!("{dr:.2}")]);
+    }
+    (table, csv)
+}
+
+pub fn run_all() -> ExperimentOutput {
+    let (t1, c1) = median_vs_mean();
+    let (t2, c2) = threshold_sensitivity();
+    let (t3, c3) = proactive_vs_periodic();
+    let text = format!("{}\n{}\n{}", t1.render(), t2.render(), t3.render());
+    ExperimentOutput {
+        id: "ablations",
+        title: "Ablations A1-A3".into(),
+        text,
+        csv: vec![
+            ("ablation_median_vs_mean.csv".into(), c1),
+            ("ablation_threshold_sensitivity.csv".into(), c2),
+            ("ablation_proactive_vs_periodic.csv".into(), c3),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::PERSON_CLASS;
+    use crate::geometry::BBox;
+
+    #[test]
+    fn mean_bbs_dragged_by_full_frame_fp() {
+        let mut dets = vec![Detection::new(
+            BBox::new(0.0, 0.0, 100.0, 100.0),
+            0.9,
+            PERSON_CLASS,
+        )];
+        let base = mean_bbs(&dets, 1000.0, 1000.0);
+        dets.push(Detection::new(
+            BBox::new(0.0, 0.0, 1000.0, 1000.0),
+            0.6,
+            PERSON_CLASS,
+        ));
+        let with_fp = mean_bbs(&dets, 1000.0, 1000.0);
+        // mean jumps by ~0.5; the median (see detection tests) barely moves
+        assert!(with_fp > base + 0.4);
+        assert_eq!(mean_bbs(&[], 10.0, 10.0), 0.0);
+    }
+}

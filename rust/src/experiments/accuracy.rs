@@ -1,0 +1,128 @@
+//! Figures 4, 6, 7, 8: the accuracy quartet.
+
+use crate::app::Campaign;
+use crate::dataset::catalog::SequenceId;
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+use crate::DnnKind;
+
+use super::ExperimentOutput;
+
+fn dnn_header() -> Vec<String> {
+    std::iter::once("sequence".to_string())
+        .chain(DnnKind::ALL.iter().map(|k| k.artifact_name().to_string()))
+        .collect()
+}
+
+/// Fig. 4: offline-mode AP per DNN per sequence.
+pub fn fig4_offline(c: &mut Campaign) -> ExperimentOutput {
+    let header = dnn_header();
+    let mut table = AsciiTable::new(
+        "Fig. 4 — Average Precision (Offline Mode)",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(header);
+    for id in SequenceId::ALL {
+        let mut row = vec![id.name().to_string()];
+        for k in DnnKind::ALL {
+            row.push(format!("{:.3}", c.offline(id, k).ap));
+        }
+        table.push(row.clone());
+        csv.push(row);
+    }
+    ExperimentOutput {
+        id: "fig4",
+        title: "Fig. 4: offline AP".into(),
+        text: table.render(),
+        csv: vec![("fig4_offline_ap.csv".into(), csv)],
+    }
+}
+
+/// Fig. 6: real-time-mode AP per DNN per sequence (30 FPS; -05 at 14).
+pub fn fig6_realtime(c: &mut Campaign) -> ExperimentOutput {
+    let header = dnn_header();
+    let mut table = AsciiTable::new(
+        "Fig. 6 — Average Precision (Real-Time Mode)",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(header);
+    for id in SequenceId::ALL {
+        let mut row = vec![format!("{} @{}fps", id.name(), id.eval_fps())];
+        for k in DnnKind::ALL {
+            row.push(format!("{:.3}", c.realtime_fixed(id, k).ap));
+        }
+        table.push(row.clone());
+        csv.push(row);
+    }
+    ExperimentOutput {
+        id: "fig6",
+        title: "Fig. 6: real-time AP".into(),
+        text: table.render(),
+        csv: vec![("fig6_realtime_ap.csv".into(), csv)],
+    }
+}
+
+/// Fig. 7: AP drop from offline to real-time.
+pub fn fig7_drop(c: &mut Campaign) -> ExperimentOutput {
+    let header = dnn_header();
+    let mut table = AsciiTable::new(
+        "Fig. 7 — AP Drop from Offline to Real-Time",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(header);
+    for id in SequenceId::ALL {
+        let mut row = vec![id.name().to_string()];
+        for k in DnnKind::ALL {
+            let drop = c.offline(id, k).ap - c.realtime_fixed(id, k).ap;
+            row.push(format!("{:.3}", drop));
+        }
+        table.push(row.clone());
+        csv.push(row);
+    }
+    ExperimentOutput {
+        id: "fig7",
+        title: "Fig. 7: offline→real-time AP drop".into(),
+        text: table.render(),
+        csv: vec![("fig7_ap_drop.csv".into(), csv)],
+    }
+}
+
+/// Fig. 8: TOD vs the four fixed DNNs (real-time), plus the headline
+/// mean improvements and the chameleon-lite baseline.
+pub fn fig8_tod(c: &mut Campaign) -> ExperimentOutput {
+    let mut header = dnn_header();
+    header.push("TOD".into());
+    header.push("chameleon-lite".into());
+    let mut table = AsciiTable::new(
+        "Fig. 8 — Average Precision Comparison (Real-Time)",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(header);
+    for id in SequenceId::ALL {
+        let mut row = vec![id.name().to_string()];
+        for k in DnnKind::ALL {
+            row.push(format!("{:.3}", c.realtime_fixed(id, k).ap));
+        }
+        row.push(format!("{:.3}", c.tod(id).ap));
+        row.push(format!("{:.3}", c.chameleon(id).ap));
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let imp = c.improvement_over_fixed();
+    let text = format!(
+        "{}\nTOD mean-AP improvement vs fixed DNNs: \
+         {:+.1}% (tiny-288), {:+.1}% (tiny-416), {:+.1}% (288), {:+.1}% (416)\n\
+         (paper: +34.7%, +7.0%, +3.9%, +2.0%)\n",
+        table.render(),
+        imp[0],
+        imp[1],
+        imp[2],
+        imp[3]
+    );
+    ExperimentOutput {
+        id: "fig8",
+        title: "Fig. 8: TOD vs fixed DNNs".into(),
+        text,
+        csv: vec![("fig8_comparison.csv".into(), csv)],
+    }
+}

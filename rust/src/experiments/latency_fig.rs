@@ -1,0 +1,46 @@
+//! Fig. 5: per-DNN inference latency (calibrated model + real PJRT when
+//! artifacts are present).
+
+use crate::sim::latency::LatencyModel;
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+use crate::DnnKind;
+
+use super::ExperimentOutput;
+
+pub fn fig5_latency() -> ExperimentOutput {
+    let model = LatencyModel::deterministic();
+    let mut table = AsciiTable::new(
+        "Fig. 5 — Inference Latency (Jetson-Nano-calibrated model)",
+        vec!["dnn", "latency_ms", "meets 30fps", "meets 14fps"],
+    );
+    let mut csv = CsvTable::new(vec![
+        "dnn",
+        "latency_ms",
+        "meets_30fps",
+        "meets_14fps",
+    ]);
+    for k in DnnKind::ALL {
+        let ms = model.mean(k) * 1e3;
+        let row = vec![
+            k.artifact_name().to_string(),
+            format!("{ms:.1}"),
+            format!("{}", model.meets_realtime(k, 30.0)),
+            format!("{}", model.meets_realtime(k, 14.0)),
+        ];
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let text = format!(
+        "{}\n30 FPS budget = 33.3 ms: only yolov4-tiny-288 fits (paper Fig. 5).\n\
+         Real CPU-PJRT latencies: run `cargo bench --bench runtime_infer`\n\
+         or `tod serve` (requires `make artifacts`).\n",
+        table.render()
+    );
+    ExperimentOutput {
+        id: "fig5",
+        title: "Fig. 5: inference latency".into(),
+        text,
+        csv: vec![("fig5_latency.csv".into(), csv)],
+    }
+}

@@ -1,0 +1,100 @@
+//! One module per paper artifact: the harness behind `tod figures`.
+//!
+//! Every table and figure in the paper's evaluation section has a
+//! generator here that prints the same rows/series the paper reports and
+//! writes a machine-readable CSV next to it. See DESIGN.md §5 for the
+//! experiment index and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod ablation;
+pub mod accuracy;
+pub mod latency_fig;
+pub mod policy_stats;
+pub mod table1;
+pub mod telemetry_figs;
+
+use std::path::Path;
+
+use crate::app::Campaign;
+use crate::util::csv::CsvTable;
+
+/// Output of one experiment generator.
+pub struct ExperimentOutput {
+    pub id: &'static str,
+    pub title: String,
+    /// Human-readable rendering (tables / sparklines).
+    pub text: String,
+    /// Machine-readable series, written to `<out>/<name>.csv`.
+    pub csv: Vec<(String, CsvTable)>,
+}
+
+impl ExperimentOutput {
+    /// Write all CSVs under `out_dir`.
+    pub fn save(&self, out_dir: &Path) -> std::io::Result<()> {
+        for (name, table) in &self.csv {
+            table.save(&out_dir.join(name))?;
+        }
+        Ok(())
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_IDS: [&str; 14] = [
+    "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "ablations",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, campaign: &mut Campaign) -> Option<ExperimentOutput> {
+    match id {
+        "table1" => Some(table1::run()),
+        "fig4" => Some(accuracy::fig4_offline(campaign)),
+        "fig5" => Some(latency_fig::fig5_latency()),
+        "fig6" => Some(accuracy::fig6_realtime(campaign)),
+        "fig7" => Some(accuracy::fig7_drop(campaign)),
+        "fig8" => Some(accuracy::fig8_tod(campaign)),
+        "fig9" => Some(policy_stats::fig9_mbbs(campaign)),
+        "fig10" => Some(policy_stats::fig10_deploy(campaign)),
+        "fig11" => Some(telemetry_figs::fig11_memory()),
+        "fig12" => Some(policy_stats::fig12_usage(campaign)),
+        "fig13" => Some(telemetry_figs::fig13_gpu(campaign)),
+        "fig14" => Some(telemetry_figs::fig14_power_single(campaign)),
+        "fig15" => Some(telemetry_figs::fig15_power_tod(campaign)),
+        "ablations" => Some(ablation::run_all()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_id() {
+        let mut c = Campaign::new();
+        // cheap ids run fully; expensive ids are covered by the
+        // integration suite and the figures CLI
+        for id in ["fig5", "fig11"] {
+            let out = run(id, &mut c).expect(id);
+            assert_eq!(out.id, id);
+            assert!(!out.text.is_empty());
+            assert!(!out.csv.is_empty());
+        }
+        assert!(run("fig99", &mut c).is_none());
+        assert!(ALL_IDS.contains(&"table1"));
+        assert!(ALL_IDS.contains(&"ablations"));
+    }
+
+    #[test]
+    fn output_save_writes_csvs() {
+        let mut c = Campaign::new();
+        let out = run("fig11", &mut c).unwrap();
+        let dir = std::env::temp_dir().join("tod_exp_save");
+        out.save(&dir).unwrap();
+        let written = std::fs::read_to_string(
+            dir.join("fig11_memory.csv"),
+        )
+        .unwrap();
+        assert!(written.starts_with("configuration,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

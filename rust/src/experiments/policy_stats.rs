@@ -1,0 +1,143 @@
+//! Figures 9, 10, 12: MBBS series, deployment frequency, usage timeline.
+
+use crate::app::Campaign;
+use crate::dataset::catalog::SequenceId;
+use crate::util::csv::CsvTable;
+use crate::util::stats::median;
+use crate::util::table::{sparkline, AsciiTable};
+use crate::DnnKind;
+
+use super::ExperimentOutput;
+
+/// Fig. 9: per-frame medians of bounding-box sizes, MOT17-04 vs -11.
+pub fn fig9_mbbs(c: &mut Campaign) -> ExperimentOutput {
+    let ids = [SequenceId::Mot04, SequenceId::Mot11];
+    let mut text = String::from(
+        "Fig. 9 — Medians of Bounding Box Sizes (fraction of frame area)\n",
+    );
+    let mut csv = CsvTable::new(vec!["sequence", "frame", "mbbs"]);
+    for id in ids {
+        let series = c.sequence(id).mbbs_series();
+        let med = median(&series);
+        let var = {
+            let m = series.iter().sum::<f64>() / series.len() as f64;
+            series.iter().map(|v| (v - m).powi(2)).sum::<f64>()
+                / series.len() as f64
+        };
+        // subsample the sparkline to 80 columns
+        let step = (series.len() / 80).max(1);
+        let sub: Vec<f64> =
+            series.iter().step_by(step).copied().collect();
+        text.push_str(&format!(
+            "{}: median={:.4} variance={:.2e}\n  {}\n",
+            id.name(),
+            med,
+            var,
+            sparkline(&sub)
+        ));
+        for (i, v) in series.iter().enumerate() {
+            csv.push(vec![
+                id.name().to_string(),
+                (i + 1).to_string(),
+                format!("{v:.6}"),
+            ]);
+        }
+    }
+    text.push_str(
+        "(paper: MOT17-04 low variance from a static camera; MOT17-11 high \
+         variance from a moving camera)\n",
+    );
+    ExperimentOutput {
+        id: "fig9",
+        title: "Fig. 9: MBBS series".into(),
+        text,
+        csv: vec![("fig9_mbbs.csv".into(), csv)],
+    }
+}
+
+/// Fig. 10: deployment frequency of each DNN under TOD.
+pub fn fig10_deploy(c: &mut Campaign) -> ExperimentOutput {
+    let mut header = vec!["sequence".to_string()];
+    header.extend(DnnKind::ALL.iter().map(|k| k.short_label().to_string()));
+    let mut table = AsciiTable::new(
+        "Fig. 10 — Deployment Frequency of Each Network by TOD (%)",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(header);
+    for id in SequenceId::ALL {
+        let freq = c.tod(id).deploy_freq();
+        let mut row = vec![id.name().to_string()];
+        for f in freq {
+            row.push(format!("{:.1}", f * 100.0));
+        }
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let text = format!(
+        "{}\n(paper: TOD stays with YOLOv4-416 on MOT17-04 and uses \
+         YOLOv4-tiny-288 84.5% on MOT17-05)\n",
+        table.render()
+    );
+    ExperimentOutput {
+        id: "fig10",
+        title: "Fig. 10: deployment frequency".into(),
+        text,
+        csv: vec![("fig10_deploy.csv".into(), csv)],
+    }
+}
+
+/// Fig. 12: which DNN TOD runs over time on MOT17-05.
+pub fn fig12_usage(c: &mut Campaign) -> ExperimentOutput {
+    let id = SequenceId::Mot05;
+    let r = c.tod(id).clone();
+    let fps = id.eval_fps();
+    let mut csv = CsvTable::new(vec!["t_s", "dnn"]);
+    // render as a timeline strip: one char per second of stream time,
+    // showing the heaviest DNN used in that second
+    let duration = r.n_frames as f64 / fps;
+    let mut strip = String::new();
+    for sec in 0..duration.ceil() as usize {
+        let f0 = (sec as f64 * fps) as usize;
+        let f1 = (((sec + 1) as f64) * fps) as usize;
+        let mut heaviest: Option<DnnKind> = None;
+        for f in f0..f1.min(r.dnn_series.len()) {
+            if let Some(d) = r.dnn_series[f] {
+                if heaviest.map(|h| d.index() > h.index()).unwrap_or(true) {
+                    heaviest = Some(d);
+                }
+            }
+        }
+        let ch = match heaviest {
+            Some(DnnKind::TinyY288) => '1',
+            Some(DnnKind::TinyY416) => '2',
+            Some(DnnKind::Y288) => '3',
+            Some(DnnKind::Y416) => '4',
+            None => '.',
+        };
+        strip.push(ch);
+        csv.push(vec![
+            sec.to_string(),
+            heaviest
+                .map(|d| d.short_label().to_string())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let freq = r.deploy_freq();
+    let text = format!(
+        "Fig. 12 — DNN Usage of TOD with MOT17-05 (per second; 1=YT-288, \
+         2=YT-416, 3=Y-288, 4=Y-416, .=no inference)\n{}\nusage: \
+         YT-288 {:.1}%  YT-416 {:.1}%  Y-288 {:.1}%  Y-416 {:.1}%  \
+         (paper: YT-288 dominant at 84.5%)\n",
+        strip,
+        freq[0] * 100.0,
+        freq[1] * 100.0,
+        freq[2] * 100.0,
+        freq[3] * 100.0
+    );
+    ExperimentOutput {
+        id: "fig12",
+        title: "Fig. 12: TOD DNN usage timeline".into(),
+        text,
+        csv: vec![("fig12_usage.csv".into(), csv)],
+    }
+}

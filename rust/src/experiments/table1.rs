@@ -1,0 +1,61 @@
+//! Table I: hyperparameter search over the 2x2x2 grid, six training
+//! sequences at 30 FPS.
+
+use crate::coordinator::search::{grid_search_oracle, SearchSpace};
+use crate::dataset::catalog::{generate, SequenceId};
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+
+use super::ExperimentOutput;
+
+pub fn run() -> ExperimentOutput {
+    let seqs: Vec<_> =
+        SequenceId::TRAIN.iter().map(|&id| generate(id)).collect();
+    // Table I evaluates the training sequences under a 30 FPS constraint
+    let train: Vec<(&_, f64)> = seqs.iter().map(|s| (s, 30.0)).collect();
+    let res = grid_search_oracle(&SearchSpace::paper(), &train);
+
+    let mut header = vec!["".to_string()];
+    for row in &res.rows {
+        let h = row.thresholds.values();
+        header.push(format!("{}/{}/{}", h[0], h[1], h[2]));
+    }
+    let mut table = AsciiTable::new(
+        "Table I — Hyperparameter Search (AP per training sequence)",
+        header.iter().map(String::as_str).collect(),
+    );
+    let mut csv = CsvTable::new(
+        std::iter::once("sequence".to_string())
+            .chain(header[1..].iter().cloned())
+            .collect::<Vec<_>>(),
+    );
+    for (si, id) in SequenceId::TRAIN.iter().enumerate() {
+        let mut row = vec![id.name().to_string()];
+        for r in &res.rows {
+            row.push(format!("{:.2}", r.per_sequence_ap[si]));
+        }
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let mut avg = vec!["AVG(AP)".to_string()];
+    for r in &res.rows {
+        avg.push(format!("{:.3}", r.mean_ap));
+    }
+    table.push(avg.clone());
+    csv.push(avg);
+
+    let best = res.best_thresholds().values().to_vec();
+    let text = format!(
+        "{}\nSelected H_opt = {{{}, {}, {}}} (paper: {{0.007, 0.03, 0.04}})\n",
+        table.render(),
+        best[0],
+        best[1],
+        best[2]
+    );
+    ExperimentOutput {
+        id: "table1",
+        title: "Table I: hyperparameter search".into(),
+        text,
+        csv: vec![("table1.csv".into(), csv)],
+    }
+}

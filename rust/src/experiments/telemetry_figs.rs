@@ -1,0 +1,141 @@
+//! Figures 11, 13, 14, 15: memory, GPU utilisation and power.
+
+use crate::app::Campaign;
+use crate::dataset::catalog::SequenceId;
+use crate::sim::profiles::mem_loaded_gb;
+use crate::telemetry::tegrastats::TegrastatsSim;
+use crate::util::csv::CsvTable;
+use crate::util::table::{sparkline, AsciiTable};
+use crate::DnnKind;
+
+use super::ExperimentOutput;
+
+/// Fig. 11: memory allocation per DNN configuration.
+pub fn fig11_memory() -> ExperimentOutput {
+    let mut table = AsciiTable::new(
+        "Fig. 11 — Memory Allocation on Jetson Nano (GB)",
+        vec!["configuration", "memory_gb", "paper_gb"],
+    );
+    let mut csv = CsvTable::new(vec!["configuration", "memory_gb", "paper_gb"]);
+    let paper = [2.21, 2.21, 2.22, 2.56];
+    for (k, p) in DnnKind::ALL.iter().zip(paper) {
+        let row = vec![
+            k.artifact_name().to_string(),
+            format!("{:.2}", mem_loaded_gb(&[*k])),
+            format!("{p:.2}"),
+        ];
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let row = vec![
+        "TOD (all four)".to_string(),
+        format!("{:.2}", mem_loaded_gb(&DnnKind::ALL)),
+        "2.85".to_string(),
+    ];
+    table.push(row.clone());
+    csv.push(row);
+    let text = format!(
+        "{}\n(1.5 GB allocated before loading any DNN; TOD ≈ +11% over \
+         single YOLOv4-416)\n",
+        table.render()
+    );
+    ExperimentOutput {
+        id: "fig11",
+        title: "Fig. 11: memory allocation".into(),
+        text,
+        csv: vec![("fig11_memory.csv".into(), csv)],
+    }
+}
+
+/// Fig. 13: GPU utilisation trace for TOD on MOT17-05.
+pub fn fig13_gpu(c: &mut Campaign) -> ExperimentOutput {
+    let r = c.tod(SequenceId::Mot05).clone();
+    let sim = TegrastatsSim::default();
+    let samples = sim.sample(&r.trace);
+    let series: Vec<f64> = samples.iter().map(|s| s.gpu_util_pct).collect();
+    let mean = series.iter().sum::<f64>() / series.len().max(1) as f64;
+    let mut csv = CsvTable::new(vec!["t_s", "gpu_util_pct"]);
+    for s in &samples {
+        csv.push(vec![format!("{:.0}", s.t), format!("{:.1}", s.gpu_util_pct)]);
+    }
+    // comparison: saturated single-DNN runs
+    let y416 = sim.mean_gpu(&c.realtime_fixed(SequenceId::Mot05, DnnKind::Y416).trace);
+    let text = format!(
+        "Fig. 13 — GPU Utilisation, TOD on MOT17-05 (1 Hz)\n  {}\n\
+         mean {:.1}% (paper: 41.1%); always-Y-416 uses {:.1}%; \
+         TOD/Y-416 ratio {:.1}% (paper: 45.1%)\n",
+        sparkline(&series),
+        mean,
+        y416,
+        mean / y416 * 100.0
+    );
+    ExperimentOutput {
+        id: "fig13",
+        title: "Fig. 13: GPU utilisation".into(),
+        text,
+        csv: vec![("fig13_gpu.csv".into(), csv)],
+    }
+}
+
+/// Fig. 14: power of each individual YOLO on MOT17-05.
+pub fn fig14_power_single(c: &mut Campaign) -> ExperimentOutput {
+    let sim = TegrastatsSim::default();
+    let mut table = AsciiTable::new(
+        "Fig. 14 — Mean Power, individual YOLOs on MOT17-05 (W)",
+        vec!["dnn", "mean_power_w", "paper_w (active)"],
+    );
+    let mut csv = CsvTable::new(vec!["dnn", "mean_power_w", "paper_w"]);
+    let paper = [3.8, 4.8, 7.2, 7.5];
+    for (k, p) in DnnKind::ALL.iter().zip(paper) {
+        let trace = c.realtime_fixed(SequenceId::Mot05, *k).trace.clone();
+        let w = sim.mean_power(&trace);
+        let row = vec![
+            k.artifact_name().to_string(),
+            format!("{w:.1}"),
+            format!("{p:.1}"),
+        ];
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let text = format!(
+        "{}\n(means include idle time between inferences; the paper plots \
+         active-phase power while the DNN is saturating the GPU)\n",
+        table.render()
+    );
+    ExperimentOutput {
+        id: "fig14",
+        title: "Fig. 14: single-DNN power".into(),
+        text,
+        csv: vec![("fig14_power_single.csv".into(), csv)],
+    }
+}
+
+/// Fig. 15: power trace for TOD on MOT17-05.
+pub fn fig15_power_tod(c: &mut Campaign) -> ExperimentOutput {
+    let r = c.tod(SequenceId::Mot05).clone();
+    let sim = TegrastatsSim::default();
+    let samples = sim.sample(&r.trace);
+    let series: Vec<f64> = samples.iter().map(|s| s.power_w).collect();
+    let mean = series.iter().sum::<f64>() / series.len().max(1) as f64;
+    let mut csv = CsvTable::new(vec!["t_s", "power_w"]);
+    for s in &samples {
+        csv.push(vec![format!("{:.0}", s.t), format!("{:.2}", s.power_w)]);
+    }
+    let y416 =
+        sim.mean_power(&c.realtime_fixed(SequenceId::Mot05, DnnKind::Y416).trace);
+    let text = format!(
+        "Fig. 15 — Power, TOD on MOT17-05 (1 Hz)\n  {}\n\
+         mean {:.1} W (paper: 4.7 W); always-Y-416 {:.1} W; \
+         TOD/Y-416 ratio {:.1}% (paper: 62.7%)\n",
+        sparkline(&series),
+        mean,
+        y416,
+        mean / y416 * 100.0
+    );
+    ExperimentOutput {
+        id: "fig15",
+        title: "Fig. 15: TOD power".into(),
+        text,
+        csv: vec![("fig15_power_tod.csv".into(), csv)],
+    }
+}

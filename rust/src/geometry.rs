@@ -1,0 +1,177 @@
+//! Axis-aligned boxes and the IoU machinery underlying matching, NMS and
+//! the MBBS statistic.
+
+/// Axis-aligned bounding box: top-left corner + size, in pixels.
+/// This matches the MOT ground-truth convention (`bb_left, bb_top,
+/// bb_width, bb_height`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub x: f64,
+    pub y: f64,
+    pub w: f64,
+    pub h: f64,
+}
+
+impl BBox {
+    pub fn new(x: f64, y: f64, w: f64, h: f64) -> Self {
+        BBox { x, y, w, h }
+    }
+
+    /// Construct from a center point + size.
+    pub fn from_center(cx: f64, cy: f64, w: f64, h: f64) -> Self {
+        BBox { x: cx - w / 2.0, y: cy - h / 2.0, w, h }
+    }
+
+    pub fn center(&self) -> (f64, f64) {
+        (self.x + self.w / 2.0, self.y + self.h / 2.0)
+    }
+
+    pub fn right(&self) -> f64 {
+        self.x + self.w
+    }
+
+    pub fn bottom(&self) -> f64 {
+        self.y + self.h
+    }
+
+    /// Area in square pixels; degenerate boxes have zero area.
+    pub fn area(&self) -> f64 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    /// Area as a fraction of a `fw x fh` frame — the unit of the paper's
+    /// MBBS hyperparameters (`h1%` of the image etc.).
+    pub fn area_frac(&self, fw: f64, fh: f64) -> f64 {
+        if fw <= 0.0 || fh <= 0.0 {
+            return 0.0;
+        }
+        self.area() / (fw * fh)
+    }
+
+    /// Intersection area with another box.
+    pub fn intersection(&self, other: &BBox) -> f64 {
+        let ix = (self.right().min(other.right()) - self.x.max(other.x))
+            .max(0.0);
+        let iy = (self.bottom().min(other.bottom()) - self.y.max(other.y))
+            .max(0.0);
+        ix * iy
+    }
+
+    /// Intersection-over-union in `[0, 1]`.
+    pub fn iou(&self, other: &BBox) -> f64 {
+        let inter = self.intersection(other);
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+
+    /// Clip to a `fw x fh` frame. Boxes fully outside collapse to zero
+    /// width/height at the frame edge.
+    pub fn clip(&self, fw: f64, fh: f64) -> BBox {
+        let x0 = self.x.clamp(0.0, fw);
+        let y0 = self.y.clamp(0.0, fh);
+        let x1 = self.right().clamp(0.0, fw);
+        let y1 = self.bottom().clamp(0.0, fh);
+        BBox { x: x0, y: y0, w: (x1 - x0).max(0.0), h: (y1 - y0).max(0.0) }
+    }
+
+    /// Translate by (dx, dy).
+    pub fn shifted(&self, dx: f64, dy: f64) -> BBox {
+        BBox { x: self.x + dx, y: self.y + dy, ..*self }
+    }
+
+    /// Scale around the box center.
+    pub fn scaled(&self, sx: f64, sy: f64) -> BBox {
+        let (cx, cy) = self.center();
+        BBox::from_center(cx, cy, self.w * sx, self.h * sy)
+    }
+
+    pub fn is_degenerate(&self) -> bool {
+        self.w <= 0.0 || self.h <= 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(x: f64, y: f64, w: f64, h: f64) -> BBox {
+        BBox::new(x, y, w, h)
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        let a = b(10.0, 20.0, 30.0, 40.0);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(b(0., 0., 10., 10.).iou(&b(20., 20., 5., 5.)), 0.0);
+        // touching edges count as zero intersection
+        assert_eq!(b(0., 0., 10., 10.).iou(&b(10., 0., 10., 10.)), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // two 10x10 boxes overlapping in a 5x10 strip: inter 50, union 150
+        let a = b(0., 0., 10., 10.);
+        let c = b(5., 0., 10., 10.);
+        assert!((a.iou(&c) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iou_is_symmetric() {
+        let a = b(0., 0., 12., 7.);
+        let c = b(3., 2., 9., 11.);
+        assert!((a.iou(&c) - c.iou(&a)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn degenerate_boxes() {
+        let z = b(5., 5., 0., 10.);
+        assert!(z.is_degenerate());
+        assert_eq!(z.area(), 0.0);
+        assert_eq!(z.iou(&b(0., 0., 10., 10.)), 0.0);
+    }
+
+    #[test]
+    fn area_frac() {
+        let a = b(0., 0., 96., 108.);
+        // 96*108 / (1920*1080) = 0.005
+        assert!((a.area_frac(1920., 1080.) - 0.005).abs() < 1e-12);
+        assert_eq!(a.area_frac(0., 100.), 0.0);
+    }
+
+    #[test]
+    fn clip_inside_partial_outside() {
+        let a = b(-10., -10., 30., 30.);
+        let c = a.clip(100., 100.);
+        assert_eq!((c.x, c.y, c.w, c.h), (0., 0., 20., 20.));
+        let far = b(500., 500., 10., 10.).clip(100., 100.);
+        assert!(far.is_degenerate());
+        let inside = b(10., 10., 5., 5.);
+        assert_eq!(inside.clip(100., 100.), inside);
+    }
+
+    #[test]
+    fn center_roundtrip() {
+        let a = BBox::from_center(50., 60., 20., 10.);
+        assert_eq!(a.center(), (50., 60.));
+        assert_eq!((a.x, a.y), (40., 55.));
+    }
+
+    #[test]
+    fn shift_and_scale() {
+        let a = b(10., 10., 10., 10.);
+        let s = a.shifted(5., -5.);
+        assert_eq!((s.x, s.y), (15., 5.));
+        let sc = a.scaled(2.0, 0.5);
+        assert_eq!(sc.center(), a.center());
+        assert!((sc.w - 20.0).abs() < 1e-12);
+        assert!((sc.h - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! # TOD: Transprecise Object Detection
+//!
+//! A reproduction of *"TOD: Transprecise Object Detection to Maximise
+//! Real-Time Accuracy on the Edge"* (Lee, Varghese, Woods, Vandierendonck —
+//! IEEE ICFEC 2021) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's contribution — a per-frame, proactive DNN selector driven by
+//! the Median of Bounding-Box Sizes (MBBS) under a real-time FPS budget —
+//! lives in [`coordinator`]. Everything it depends on is built here too:
+//! the MOT dataset substrate ([`dataset`]), the AP evaluator ([`eval`]),
+//! the Jetson-Nano behavioural models ([`sim`], [`telemetry`]), the fixed-
+//! FPS frame clock ([`video`]), and a PJRT-backed inference runtime
+//! ([`runtime`]) that serves the four AOT-compiled YOLO-style detector
+//! variants produced by `python/compile/aot.py`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod app;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod detection;
+pub mod eval;
+pub mod exec;
+pub mod experiments;
+pub mod geometry;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod testing;
+pub mod util;
+pub mod video;
+
+/// The four DNN operating points the paper serves, ordered from the
+/// lightest to the heaviest weight (the order Algorithm 1 indexes them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DnnKind {
+    /// YOLOv4-tiny at 288x288 input (lightest; `DNN_1` in Algorithm 1).
+    TinyY288,
+    /// YOLOv4-tiny at 416x416 input (`DNN_2`).
+    TinyY416,
+    /// Full YOLOv4 at 288x288 input (`DNN_3`).
+    Y288,
+    /// Full YOLOv4 at 416x416 input (heaviest; `DNN_4`, the default).
+    Y416,
+}
+
+impl DnnKind {
+    /// All four variants, lightest first.
+    pub const ALL: [DnnKind; 4] = [
+        DnnKind::TinyY288,
+        DnnKind::TinyY416,
+        DnnKind::Y288,
+        DnnKind::Y416,
+    ];
+
+    /// The artifact/manifest name used by `python/compile/aot.py`.
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            DnnKind::TinyY288 => "yolov4-tiny-288",
+            DnnKind::TinyY416 => "yolov4-tiny-416",
+            DnnKind::Y288 => "yolov4-288",
+            DnnKind::Y416 => "yolov4-416",
+        }
+    }
+
+    /// Short label used in the paper's Fig. 12 ("YT-288", ..., "Y-416").
+    pub fn short_label(self) -> &'static str {
+        match self {
+            DnnKind::TinyY288 => "YT-288",
+            DnnKind::TinyY416 => "YT-416",
+            DnnKind::Y288 => "Y-288",
+            DnnKind::Y416 => "Y-416",
+        }
+    }
+
+    /// Index in Algorithm 1's `DNN_1..DNN_4` numbering (0-based).
+    pub fn index(self) -> usize {
+        match self {
+            DnnKind::TinyY288 => 0,
+            DnnKind::TinyY416 => 1,
+            DnnKind::Y288 => 2,
+            DnnKind::Y416 => 3,
+        }
+    }
+
+    /// Inverse of [`DnnKind::index`].
+    pub fn from_index(i: usize) -> Option<DnnKind> {
+        DnnKind::ALL.get(i).copied()
+    }
+
+    /// Square input resolution of the variant.
+    pub fn input_size(self) -> usize {
+        match self {
+            DnnKind::TinyY288 | DnnKind::Y288 => 288,
+            DnnKind::TinyY416 | DnnKind::Y416 => 416,
+        }
+    }
+
+    /// Whether this is a tiny-topology variant.
+    pub fn is_tiny(self) -> bool {
+        matches!(self, DnnKind::TinyY288 | DnnKind::TinyY416)
+    }
+}
+
+impl std::fmt::Display for DnnKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.artifact_name())
+    }
+}
+
+impl std::str::FromStr for DnnKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "yolov4-tiny-288" | "tiny-288" | "YT-288" => Ok(DnnKind::TinyY288),
+            "yolov4-tiny-416" | "tiny-416" | "YT-416" => Ok(DnnKind::TinyY416),
+            "yolov4-288" | "288" | "Y-288" => Ok(DnnKind::Y288),
+            "yolov4-416" | "416" | "Y-416" => Ok(DnnKind::Y416),
+            other => Err(format!("unknown DNN variant: {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dnn_order_is_lightest_first() {
+        assert_eq!(DnnKind::ALL[0], DnnKind::TinyY288);
+        assert_eq!(DnnKind::ALL[3], DnnKind::Y416);
+        for (i, d) in DnnKind::ALL.iter().enumerate() {
+            assert_eq!(d.index(), i);
+            assert_eq!(DnnKind::from_index(i), Some(*d));
+        }
+        assert_eq!(DnnKind::from_index(4), None);
+    }
+
+    #[test]
+    fn dnn_roundtrip_names() {
+        for d in DnnKind::ALL {
+            let parsed: DnnKind = d.artifact_name().parse().unwrap();
+            assert_eq!(parsed, d);
+            let parsed: DnnKind = d.short_label().parse().unwrap();
+            assert_eq!(parsed, d);
+        }
+        assert!("yolo9000".parse::<DnnKind>().is_err());
+    }
+
+    #[test]
+    fn dnn_properties() {
+        assert!(DnnKind::TinyY288.is_tiny());
+        assert!(!DnnKind::Y416.is_tiny());
+        assert_eq!(DnnKind::Y416.input_size(), 416);
+        assert_eq!(DnnKind::TinyY288.input_size(), 288);
+    }
+}

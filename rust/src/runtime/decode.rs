@@ -1,0 +1,222 @@
+//! YOLO head decoding in Rust: raw (1, G, G, A*(5+C)) tensors from the
+//! PJRT engine -> pixel-space detections.
+//!
+//! Per cell (i, j) and anchor a the channels are [tx, ty, tw, th, obj,
+//! cls...]:
+//!
+//! ```text
+//! cx = (σ(tx) + j) * stride          w = anchor_w * exp(tw)
+//! cy = (σ(ty) + i) * stride          h = anchor_h * exp(th)
+//! score = σ(obj) * max_c σ(cls_c)
+//! ```
+//!
+//! followed by scaling from network-input pixels to frame pixels and
+//! class-aware NMS.
+
+use crate::detection::{nms, Detection, PERSON_CLASS};
+use crate::geometry::BBox;
+use crate::runtime::engine::HeadTensor;
+use crate::runtime::manifest::{HeadSpec, VariantSpec};
+
+/// NMS IoU threshold used by the YOLO reference implementations.
+pub const NMS_IOU: f64 = 0.45;
+
+/// Decode-time score floor. §Perf: raised from 0.05 to 0.25 — scores
+/// below the paper's 0.35 application threshold never survive anyway,
+/// and pre-filtering here cuts the NMS candidate set ~10x (decode went
+/// 2.0 ms -> well under 1 ms on the y-288 two-head variant).
+pub const DECODE_SCORE_FLOOR: f32 = 0.25;
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode one head tensor into detections in *frame* pixel space.
+pub fn decode_head(
+    tensor: &HeadTensor,
+    head: &HeadSpec,
+    input_size: usize,
+    frame_w: f64,
+    frame_h: f64,
+) -> Vec<Detection> {
+    let g = head.grid;
+    let na = head.anchors.len();
+    let per = head.channels / na; // 5 + C
+    debug_assert_eq!(tensor.data.len(), g * g * head.channels);
+    let sx = frame_w / input_size as f64;
+    let sy = frame_h / input_size as f64;
+    let mut out = Vec::new();
+    for i in 0..g {
+        for j in 0..g {
+            let base = (i * g + j) * head.channels;
+            for (a, &(aw, ah)) in head.anchors.iter().enumerate() {
+                let o = base + a * per;
+                let tx = tensor.data[o];
+                let ty = tensor.data[o + 1];
+                let tw = tensor.data[o + 2];
+                let th = tensor.data[o + 3];
+                let obj = sigmoid(tensor.data[o + 4]);
+                // best class prob (C = 1 for person-only models)
+                let mut best_cls = 0.0f32;
+                for c in 5..per {
+                    best_cls = best_cls.max(sigmoid(tensor.data[o + c]));
+                }
+                let score = obj * best_cls;
+                if score < DECODE_SCORE_FLOOR {
+                    continue;
+                }
+                let cx = (sigmoid(tx) as f64 + j as f64)
+                    * head.stride as f64;
+                let cy = (sigmoid(ty) as f64 + i as f64)
+                    * head.stride as f64;
+                let w = aw * (tw.clamp(-8.0, 8.0) as f64).exp();
+                let h = ah * (th.clamp(-8.0, 8.0) as f64).exp();
+                let bbox = BBox::from_center(cx * sx, cy * sy, w * sx, h * sy)
+                    .clip(frame_w, frame_h);
+                if bbox.is_degenerate() {
+                    continue;
+                }
+                out.push(Detection::new(bbox, score, PERSON_CLASS));
+            }
+        }
+    }
+    out
+}
+
+/// Decode all heads of a variant and apply NMS.
+pub fn decode(
+    tensors: &[HeadTensor],
+    spec: &VariantSpec,
+    frame_w: f64,
+    frame_h: f64,
+) -> Vec<Detection> {
+    let mut all = Vec::new();
+    for (t, h) in tensors.iter().zip(&spec.heads) {
+        all.extend(decode_head(t, h, spec.input_size, frame_w, frame_h));
+    }
+    nms(&all, NMS_IOU)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::DnnKind;
+
+    fn head_spec() -> HeadSpec {
+        HeadSpec {
+            stride: 32,
+            grid: 9,
+            channels: 18,
+            anchors: vec![(23.0, 56.0), (52.0, 128.0), (110.0, 245.0)],
+        }
+    }
+
+    fn empty_tensor(g: usize, ch: usize) -> HeadTensor {
+        // large negative obj logit -> score ~ 0 everywhere
+        HeadTensor { grid: g, channels: ch, data: vec![-20.0; g * g * ch] }
+    }
+
+    /// Place one activation in cell (i, j), anchor a.
+    fn set_cell(
+        t: &mut HeadTensor,
+        i: usize,
+        j: usize,
+        a: usize,
+        vals: [f32; 6],
+    ) {
+        let per = 6;
+        let o = (i * t.grid + j) * t.channels + a * per;
+        t.data[o..o + 6].copy_from_slice(&vals);
+    }
+
+    #[test]
+    fn empty_head_decodes_to_nothing() {
+        let spec = head_spec();
+        let t = empty_tensor(9, 18);
+        let dets = decode_head(&t, &spec, 288, 288.0, 288.0);
+        assert!(dets.is_empty());
+    }
+
+    #[test]
+    fn single_activation_lands_in_its_cell() {
+        let spec = head_spec();
+        let mut t = empty_tensor(9, 18);
+        // cell (2, 5), anchor 1 (52x128); tx=ty=0 -> center of cell +0.5
+        set_cell(&mut t, 2, 5, 1, [0.0, 0.0, 0.0, 0.0, 10.0, 10.0]);
+        let dets = decode_head(&t, &spec, 288, 288.0, 288.0);
+        assert_eq!(dets.len(), 1);
+        let d = dets[0];
+        let (cx, cy) = d.bbox.center();
+        assert!((cx - 5.5 * 32.0).abs() < 1e-3, "cx {cx}");
+        assert!((cy - 2.5 * 32.0).abs() < 1e-3, "cy {cy}");
+        assert!((d.bbox.w - 52.0).abs() < 1e-3);
+        assert!((d.bbox.h - 128.0).abs() < 1e-3);
+        assert!(d.score > 0.99);
+    }
+
+    #[test]
+    fn tw_th_scale_the_anchor() {
+        let spec = head_spec();
+        let mut t = empty_tensor(9, 18);
+        let ln2 = std::f32::consts::LN_2;
+        // middle cell so the clip to the frame doesn't trim the box
+        set_cell(&mut t, 4, 4, 0, [0.0, 0.0, ln2, -ln2, 10.0, 10.0]);
+        let dets = decode_head(&t, &spec, 288, 288.0, 288.0);
+        assert_eq!(dets.len(), 1);
+        assert!((dets[0].bbox.w - 46.0).abs() < 0.01); // 23 * 2
+        assert!((dets[0].bbox.h - 28.0).abs() < 0.01); // 56 / 2
+    }
+
+    #[test]
+    fn frame_scaling() {
+        let spec = head_spec();
+        let mut t = empty_tensor(9, 18);
+        set_cell(&mut t, 4, 4, 0, [0.0, 0.0, 0.0, 0.0, 10.0, 10.0]);
+        // 1920x1080 frame from a 288 net: sx = 6.67, sy = 3.75
+        let dets = decode_head(&t, &spec, 288, 1920.0, 1080.0);
+        let (cx, cy) = dets[0].bbox.center();
+        assert!((cx - 4.5 * 32.0 * (1920.0 / 288.0)).abs() < 1e-3);
+        assert!((cy - 4.5 * 32.0 * (1080.0 / 288.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn score_is_obj_times_class() {
+        let spec = head_spec();
+        let mut t = empty_tensor(9, 18);
+        set_cell(&mut t, 0, 0, 0, [0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let dets = decode_head(&t, &spec, 288, 288.0, 288.0);
+        assert_eq!(dets.len(), 1);
+        assert!((dets[0].score - 0.25).abs() < 1e-6); // 0.5 * 0.5
+    }
+
+    #[test]
+    fn nms_merges_duplicate_cells() {
+        let spec = VariantSpec {
+            kind: DnnKind::TinyY288,
+            artifact: "x".into(),
+            input_size: 288,
+            param_count: 0,
+            heads: vec![head_spec()],
+        };
+        let mut t = empty_tensor(9, 18);
+        // two anchors in the same cell firing on the same object
+        set_cell(&mut t, 3, 3, 0, [0.0, 0.0, 1.2, 0.5, 10.0, 10.0]);
+        set_cell(&mut t, 3, 3, 1, [0.0, 0.0, 0.0, 0.0, 5.0, 5.0]);
+        let dets = decode(&[t], &spec, 288.0, 288.0);
+        // 23*e^1.2 x 56*e^0.5 ≈ 76x92 overlaps 52x128 heavily -> one box
+        assert_eq!(dets.len(), 1);
+        assert!(dets[0].score > 0.99); // highest kept
+    }
+
+    #[test]
+    fn out_of_frame_boxes_clipped() {
+        let spec = head_spec();
+        let mut t = empty_tensor(9, 18);
+        // top-left cell with the huge anchor: box spills out of frame
+        set_cell(&mut t, 0, 0, 2, [-5.0, -5.0, 0.0, 0.0, 10.0, 10.0]);
+        let dets = decode_head(&t, &spec, 288, 288.0, 288.0);
+        assert_eq!(dets.len(), 1);
+        assert!(dets[0].bbox.x >= 0.0 && dets[0].bbox.y >= 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! One compiled PJRT executable: HLO text -> compile once -> execute on
+//! the request path (the `xla` crate over xla_extension's PJRT C API).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::VariantSpec;
+
+/// Raw output of one head: row-major (1, grid, grid, channels) floats.
+#[derive(Debug, Clone)]
+pub struct HeadTensor {
+    pub grid: usize,
+    pub channels: usize,
+    pub data: Vec<f32>,
+}
+
+/// A compiled detector variant bound to a PJRT client.
+pub struct Engine {
+    spec: VariantSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative executions (for the pool's stats).
+    n_runs: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Load `<dir>/<artifact>` and compile it on `client`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        spec: &VariantSpec,
+    ) -> Result<Engine> {
+        let path = dir.join(&spec.artifact);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.artifact))?;
+        tracing_log(&format!(
+            "compiled {} in {:.2?}",
+            spec.artifact,
+            t0.elapsed()
+        ));
+        Ok(Engine { spec: spec.clone(), exe, n_runs: 0.into() })
+    }
+
+    pub fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    pub fn n_runs(&self) -> u64 {
+        self.n_runs.get()
+    }
+
+    /// Execute on a rasterized image of shape (1, S, S, 3), values in
+    /// [0, 1], row-major. Returns one tensor per detection head.
+    pub fn infer(&self, image: &[f32]) -> Result<Vec<HeadTensor>> {
+        let s = self.spec.input_size;
+        if image.len() != s * s * 3 {
+            bail!(
+                "image length {} != {} ({}x{}x3)",
+                image.len(),
+                s * s * 3,
+                s,
+                s
+            );
+        }
+        let lit = xla::Literal::vec1(image)
+            .reshape(&[1, s as i64, s as i64, 3])?;
+        let mut result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.decompose_tuple()?;
+        if outs.len() != self.spec.heads.len() {
+            bail!(
+                "{}: expected {} heads, got {}",
+                self.spec.artifact,
+                self.spec.heads.len(),
+                outs.len()
+            );
+        }
+        let mut heads = Vec::with_capacity(outs.len());
+        for (out, hs) in outs.into_iter().zip(&self.spec.heads) {
+            let shape = out.array_shape()?;
+            let dims = shape.dims();
+            let expect: Vec<i64> = vec![
+                1,
+                hs.grid as i64,
+                hs.grid as i64,
+                hs.channels as i64,
+            ];
+            if dims != expect.as_slice() {
+                bail!(
+                    "{}: head shape {:?} != manifest {:?}",
+                    self.spec.artifact,
+                    dims,
+                    expect
+                );
+            }
+            heads.push(HeadTensor {
+                grid: hs.grid,
+                channels: hs.channels,
+                data: out.to_vec::<f32>()?,
+            });
+        }
+        self.n_runs.set(self.n_runs.get() + 1);
+        Ok(heads)
+    }
+}
+
+fn tracing_log(msg: &str) {
+    if std::env::var_os("TOD_QUIET").is_none() {
+        eprintln!("[runtime] {msg}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Loader for `artifacts/manifest.json`, the AOT handshake with
+//! `python/compile/aot.py`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::DnnKind;
+
+/// One detection head of a variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadSpec {
+    pub stride: usize,
+    pub grid: usize,
+    pub channels: usize,
+    /// (w, h) anchor sizes in input pixels.
+    pub anchors: Vec<(f64, f64)>,
+}
+
+/// One AOT-compiled detector variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantSpec {
+    pub kind: DnnKind,
+    /// HLO text file name relative to the manifest directory.
+    pub artifact: String,
+    pub input_size: usize,
+    pub param_count: usize,
+    pub heads: Vec<HeadSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: Vec<VariantSpec>,
+    pub pallas: bool,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format must be hlo-text");
+        }
+        let pallas =
+            root.get("pallas").and_then(Json::as_bool).unwrap_or(true);
+        let vs = root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing variants[]"))?;
+        let mut variants = Vec::new();
+        for v in vs {
+            variants.push(parse_variant(v)?);
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { variants, pallas })
+    }
+
+    /// Spec for one DNN kind.
+    pub fn variant(&self, kind: DnnKind) -> Option<&VariantSpec> {
+        self.variants.iter().find(|v| v.kind == kind)
+    }
+
+    /// True when all four paper variants are present.
+    pub fn is_complete(&self) -> bool {
+        DnnKind::ALL.iter().all(|&k| self.variant(k).is_some())
+    }
+}
+
+fn field_usize(v: &Json, name: &str) -> Result<usize> {
+    v.get(name)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("variant missing integer field {name}"))
+}
+
+fn parse_variant(v: &Json) -> Result<VariantSpec> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("variant missing name"))?;
+    let kind: DnnKind = name.parse().map_err(|e: String| anyhow!(e))?;
+    let artifact = v
+        .get("artifact")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("variant {name} missing artifact"))?
+        .to_string();
+    let input_size = field_usize(v, "input_size")?;
+    let param_count = field_usize(v, "param_count")?;
+    let heads_json = v
+        .get("heads")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("variant {name} missing heads[]"))?;
+    let mut heads = Vec::new();
+    for h in heads_json {
+        let stride = field_usize(h, "stride")?;
+        let grid = field_usize(h, "grid")?;
+        let channels = field_usize(h, "channels")?;
+        if grid * stride != input_size {
+            bail!(
+                "variant {name}: grid {grid} x stride {stride} != input \
+                 {input_size}"
+            );
+        }
+        let anchors_json = h
+            .get("anchors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("head missing anchors"))?;
+        let mut anchors = Vec::new();
+        for a in anchors_json {
+            let pair = a.as_arr().ok_or_else(|| anyhow!("bad anchor"))?;
+            if pair.len() != 2 {
+                bail!("anchor must be [w, h]");
+            }
+            anchors.push((
+                pair[0].as_f64().ok_or_else(|| anyhow!("bad anchor w"))?,
+                pair[1].as_f64().ok_or_else(|| anyhow!("bad anchor h"))?,
+            ));
+        }
+        if channels % (5 + 1) != 0 || anchors.len() * 6 != channels {
+            bail!(
+                "variant {name}: {channels} channels inconsistent with \
+                 {} anchors x (5 + 1 class)",
+                anchors.len()
+            );
+        }
+        heads.push(HeadSpec { stride, grid, channels, anchors });
+    }
+    Ok(VariantSpec { kind, artifact, input_size, param_count, heads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+      "format": "hlo-text",
+      "pallas": true,
+      "variants": [
+        {"name": "yolov4-tiny-288", "artifact": "yolov4-tiny-288.hlo.txt",
+         "input_size": 288, "param_count": 100,
+         "heads": [{"stride": 32, "grid": 9, "channels": 18,
+                    "anchors": [[23,56],[52,128],[110,245]]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant(DnnKind::TinyY288).unwrap();
+        assert_eq!(v.input_size, 288);
+        assert_eq!(v.heads[0].grid, 9);
+        assert_eq!(v.heads[0].anchors.len(), 3);
+        assert!(!m.is_complete());
+        assert!(m.pallas);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": "proto", "variants": []}"#)
+            .is_err());
+        assert!(Manifest::parse("{").is_err());
+        assert!(
+            Manifest::parse(r#"{"format": "hlo-text", "variants": []}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_inconsistent_grid() {
+        let bad = GOOD.replace("\"grid\": 9", "\"grid\": 10");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_channel_anchor_mismatch() {
+        let bad = GOOD.replace("\"channels\": 18", "\"channels\": 24");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.is_complete());
+        for v in &m.variants {
+            assert!(dir.join(&v.artifact).exists());
+            assert_eq!(v.kind.input_size(), v.input_size);
+        }
+    }
+}

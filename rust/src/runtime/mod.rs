@@ -1,0 +1,20 @@
+//! The PJRT inference runtime: Python-free request path.
+//!
+//! `python/compile/aot.py` lowers the four detector variants to HLO text
+//! once at build time; this module loads the text, compiles each variant
+//! on the PJRT CPU client ([`engine`]), keeps all four executables
+//! *preloaded* ([`pool`]) so a TOD switch is a pointer swap (§III.B.1),
+//! rasterizes frames ([`raster`]), and decodes raw YOLO heads into
+//! detections ([`decode`]) using the shapes/anchors recorded in
+//! `artifacts/manifest.json` ([`manifest`]).
+
+pub mod decode;
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+pub mod raster;
+pub mod serve;
+
+pub use engine::Engine;
+pub use manifest::{HeadSpec, Manifest, VariantSpec};
+pub use pool::EnginePool;

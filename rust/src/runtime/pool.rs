@@ -1,0 +1,62 @@
+//! The preloaded engine pool: all four variants compiled and resident,
+//! so Algorithm 1's switch is "just a pointer" (§III.B.1).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::Manifest;
+use crate::DnnKind;
+
+/// All compiled variants plus the shared PJRT client.
+pub struct EnginePool {
+    _client: xla::PjRtClient,
+    engines: Vec<Option<Engine>>,
+    manifest: Manifest,
+}
+
+impl EnginePool {
+    /// Load every variant present in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<EnginePool> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut engines: Vec<Option<Engine>> =
+            (0..4).map(|_| None).collect();
+        for spec in &manifest.variants {
+            engines[spec.kind.index()] =
+                Some(Engine::load(&client, dir, spec)?);
+        }
+        Ok(EnginePool { _client: client, engines, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The engine for a variant — an O(1) slot lookup, the paper's
+    /// pointer switch.
+    pub fn engine(&self, kind: DnnKind) -> Result<&Engine> {
+        self.engines[kind.index()]
+            .as_ref()
+            .ok_or_else(|| anyhow!("variant {kind} not loaded"))
+    }
+
+    /// Which variants are resident.
+    pub fn loaded(&self) -> Vec<DnnKind> {
+        DnnKind::ALL
+            .iter()
+            .copied()
+            .filter(|k| self.engines[k.index()].is_some())
+            .collect()
+    }
+
+    /// Total executions across all engines.
+    pub fn total_runs(&self) -> u64 {
+        self.engines
+            .iter()
+            .flatten()
+            .map(|e| e.n_runs())
+            .sum()
+    }
+}

@@ -1,0 +1,118 @@
+//! Virtual-clock inference latency model, calibrated to the paper's
+//! Fig. 5 Jetson Nano measurements.
+//!
+//! Algorithm 2's drop-frame behaviour depends only on the *ratio* of
+//! inference latency to the frame period; replaying the paper's measured
+//! latencies on a virtual clock reproduces its real-time regime exactly
+//! and deterministically, independent of this machine's CPU (DESIGN.md
+//! §3). Real CPU-PJRT latencies are measured separately by the
+//! `runtime_infer` bench and `tod figures --id fig5`.
+
+use crate::sim::profiles::DnnProfile;
+use crate::util::rng::Rng;
+use crate::DnnKind;
+
+/// Latency source for the scheduler's virtual clock.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    profiles: [DnnProfile; 4],
+    /// When false, jitter is disabled and `sample` returns the mean.
+    jitter: bool,
+    rng: Rng,
+}
+
+impl LatencyModel {
+    /// Jetson-Nano-calibrated model with multiplicative jitter.
+    pub fn jetson_nano(seed: u64) -> Self {
+        LatencyModel {
+            profiles: [
+                DnnProfile::of(DnnKind::TinyY288),
+                DnnProfile::of(DnnKind::TinyY416),
+                DnnProfile::of(DnnKind::Y288),
+                DnnProfile::of(DnnKind::Y416),
+            ],
+            jitter: true,
+            rng: Rng::new(seed ^ 0x1a7e_0c10),
+        }
+    }
+
+    /// Deterministic model (mean latency, no jitter) — used by tests and
+    /// by the paired policy comparisons of Table I.
+    pub fn deterministic() -> Self {
+        let mut m = Self::jetson_nano(0);
+        m.jitter = false;
+        m
+    }
+
+    /// Mean latency of a variant, seconds.
+    pub fn mean(&self, dnn: DnnKind) -> f64 {
+        self.profiles[dnn.index()].latency_mean_s
+    }
+
+    /// Sample one inference latency, seconds.
+    pub fn sample(&mut self, dnn: DnnKind) -> f64 {
+        let p = &self.profiles[dnn.index()];
+        if !self.jitter {
+            return p.latency_mean_s;
+        }
+        // lognormal-ish multiplicative jitter, clamped to ±4σ
+        let f = (1.0
+            + self
+                .rng
+                .normal(0.0, p.latency_jitter)
+                .clamp(-4.0 * p.latency_jitter, 4.0 * p.latency_jitter))
+        .max(0.5);
+        p.latency_mean_s * f
+    }
+
+    /// Does the variant meet a frame budget of `1/fps` on average?
+    pub fn meets_realtime(&self, dnn: DnnKind, fps: f64) -> bool {
+        self.mean(dnn) <= 1.0 / fps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_returns_mean() {
+        let mut m = LatencyModel::deterministic();
+        for d in DnnKind::ALL {
+            assert_eq!(m.sample(d), m.mean(d));
+        }
+    }
+
+    #[test]
+    fn jitter_centres_on_mean() {
+        let mut m = LatencyModel::jetson_nano(42);
+        let n = 5000;
+        let mean_sample: f64 =
+            (0..n).map(|_| m.sample(DnnKind::Y416)).sum::<f64>() / n as f64;
+        let mean = m.mean(DnnKind::Y416);
+        assert!((mean_sample / mean - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn samples_are_positive_and_bounded() {
+        let mut m = LatencyModel::jetson_nano(7);
+        for _ in 0..2000 {
+            let v = m.sample(DnnKind::TinyY288);
+            assert!(v > 0.0);
+            assert!(v < m.mean(DnnKind::TinyY288) * 2.0);
+        }
+    }
+
+    #[test]
+    fn realtime_budget_matches_paper() {
+        let m = LatencyModel::deterministic();
+        // 30 FPS: only tiny-288 (Fig. 5)
+        assert!(m.meets_realtime(DnnKind::TinyY288, 30.0));
+        assert!(!m.meets_realtime(DnnKind::TinyY416, 30.0));
+        assert!(!m.meets_realtime(DnnKind::Y288, 30.0));
+        assert!(!m.meets_realtime(DnnKind::Y416, 30.0));
+        // 14 FPS (MOT17-05): both tiny variants fit
+        assert!(m.meets_realtime(DnnKind::TinyY416, 14.0));
+        assert!(!m.meets_realtime(DnnKind::Y288, 14.0));
+    }
+}

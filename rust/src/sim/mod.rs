@@ -1,0 +1,11 @@
+//! Behavioural models of the paper's testbed: DNN capacity profiles, the
+//! oracle detector that stands in for trained COCO weights, and the
+//! Jetson-Nano latency model (see DESIGN.md §3).
+
+pub mod latency;
+pub mod oracle;
+pub mod profiles;
+
+pub use latency::LatencyModel;
+pub use oracle::OracleDetector;
+pub use profiles::DnnProfile;

@@ -1,0 +1,280 @@
+//! Oracle detector: the trained-COCO-weights stand-in.
+//!
+//! Given a frame's ground truth and a DNN profile, the oracle emits
+//! detections whose statistics follow the profile's capacity model:
+//! size-dependent recall, visibility-attenuated detectability,
+//! capacity-dependent localisation noise and confidence, plus a false-
+//! positive process. Detections for (sequence, frame, dnn) are a pure
+//! function of the seed — the schedule taken by a policy cannot perturb
+//! what a DNN "would have seen" on a frame, which keeps policy
+//! comparisons paired and noise-free.
+
+use crate::dataset::mot::GtEntry;
+use crate::detection::{Detection, PERSON_CLASS};
+use crate::geometry::BBox;
+use crate::sim::profiles::DnnProfile;
+use crate::util::rng::Rng;
+use crate::DnnKind;
+
+/// Visibility exponent: heavily occluded objects are harder for every
+/// detector (p *= visibility^GAMMA).
+const VIS_GAMMA: f64 = 1.4;
+
+/// A deterministic detector simulator for one sequence.
+#[derive(Debug, Clone)]
+pub struct OracleDetector {
+    seed: u64,
+    frame_w: f64,
+    frame_h: f64,
+    profiles: [DnnProfile; 4],
+}
+
+impl OracleDetector {
+    pub fn new(seed: u64, frame_w: f64, frame_h: f64) -> Self {
+        OracleDetector {
+            seed,
+            frame_w,
+            frame_h,
+            profiles: [
+                DnnProfile::of(DnnKind::TinyY288),
+                DnnProfile::of(DnnKind::TinyY416),
+                DnnProfile::of(DnnKind::Y288),
+                DnnProfile::of(DnnKind::Y416),
+            ],
+        }
+    }
+
+    pub fn profile(&self, dnn: DnnKind) -> &DnnProfile {
+        &self.profiles[dnn.index()]
+    }
+
+    /// Simulate running `dnn` on the frame with the given ground truth.
+    /// Deterministic in (seed, frame, dnn).
+    pub fn detect(
+        &self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+    ) -> Vec<Detection> {
+        let p = self.profile(dnn);
+        // Independent stream per (frame, dnn): mix both into the seed.
+        let mut rng = Rng::new(
+            self.seed
+                ^ frame.wrapping_mul(0x9e3779b97f4a7c15)
+                ^ ((dnn.index() as u64 + 1) << 56),
+        );
+        let mut out = Vec::with_capacity(gt.len() + 2);
+        for g in gt {
+            // The detector sees persons only (the paper filters classes).
+            if !g.class.is_person() {
+                continue;
+            }
+            let area = g.bbox.area_frac(self.frame_w, self.frame_h);
+            let vis = if g.visibility < 0.0 { 1.0 } else { g.visibility };
+            let p_det = p.detect_prob(area) * vis.powf(VIS_GAMMA);
+            if !rng.chance(p_det) {
+                continue;
+            }
+            // localisation noise scales with box size and inverse capacity
+            let nx = rng.normal(0.0, p.loc_noise * g.bbox.w);
+            let ny = rng.normal(0.0, p.loc_noise * g.bbox.h);
+            let sw = (1.0 + rng.normal(0.0, p.loc_noise)).clamp(0.6, 1.6);
+            let sh = (1.0 + rng.normal(0.0, p.loc_noise)).clamp(0.6, 1.6);
+            let (cx, cy) = g.bbox.center();
+            let bbox = BBox::from_center(
+                cx + nx,
+                cy + ny,
+                g.bbox.w * sw,
+                g.bbox.h * sh,
+            )
+            .clip(self.frame_w, self.frame_h);
+            if bbox.is_degenerate() {
+                continue;
+            }
+            // confidence: capacity base + detectability margin + noise
+            let score = (p.score_mean
+                + 0.25 * (p_det - 0.5)
+                + rng.normal(0.0, 0.10))
+            .clamp(0.05, 0.999) as f32;
+            out.push(Detection::new(bbox, score, PERSON_CLASS));
+        }
+        // false positives: Poisson count, random geometry, low-ish scores
+        let n_fp = rng.poisson(p.fp_rate);
+        for _ in 0..n_fp {
+            let h = rng.uniform(0.03, 0.25) * self.frame_h;
+            let w = h * rng.uniform(0.3, 0.6);
+            let x = rng.uniform(0.0, (self.frame_w - w).max(1.0));
+            let y = rng.uniform(0.0, (self.frame_h - h).max(1.0));
+            let score =
+                (0.30 + rng.normal(0.0, 0.07)).clamp(0.05, 0.70) as f32;
+            out.push(Detection::new(
+                BBox::new(x, y, w, h),
+                score,
+                PERSON_CLASS,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::mot::MotClass;
+
+    fn gt_box(x: f64, y: f64, w: f64, h: f64, vis: f64) -> GtEntry {
+        GtEntry {
+            frame: 1,
+            id: 1,
+            bbox: BBox::new(x, y, w, h),
+            conf: 1.0,
+            class: MotClass::Pedestrian,
+            visibility: vis,
+        }
+    }
+
+    fn large_gt(n: usize) -> Vec<GtEntry> {
+        (0..n)
+            .map(|i| {
+                let mut g =
+                    gt_box(50.0 + 60.0 * i as f64, 100.0, 160.0, 380.0, 1.0);
+                g.id = i as i64 + 1;
+                g
+            })
+            .collect()
+    }
+
+    fn small_gt(n: usize) -> Vec<GtEntry> {
+        (0..n)
+            .map(|i| {
+                let mut g =
+                    gt_box(50.0 + 40.0 * i as f64, 100.0, 18.0, 42.0, 1.0);
+                g.id = i as i64 + 1;
+                g
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_per_frame_and_dnn() {
+        let o = OracleDetector::new(1, 1920.0, 1080.0);
+        let gt = large_gt(5);
+        let a = o.detect(10, &gt, DnnKind::Y416);
+        let b = o.detect(10, &gt, DnnKind::Y416);
+        assert_eq!(a, b);
+        let c = o.detect(11, &gt, DnnKind::Y416);
+        let d = o.detect(10, &gt, DnnKind::Y288);
+        assert!(a != c || a != d); // different streams
+    }
+
+    #[test]
+    fn recall_gap_small_objects() {
+        // heavyweight recall >> lightweight recall on small objects
+        let o = OracleDetector::new(2, 1920.0, 1080.0);
+        let gt = small_gt(10);
+        let count = |dnn: DnnKind| -> usize {
+            (0..300).map(|f| {
+                o.detect(f, &gt, dnn)
+                    .iter()
+                    .filter(|d| d.score > 0.35)
+                    .count()
+            })
+            .sum()
+        };
+        let tiny = count(DnnKind::TinyY288);
+        let heavy = count(DnnKind::Y416);
+        assert!(
+            heavy as f64 > tiny as f64 * 1.5,
+            "heavy {heavy} vs tiny {tiny}"
+        );
+    }
+
+    #[test]
+    fn recall_parity_large_objects() {
+        let o = OracleDetector::new(3, 1920.0, 1080.0);
+        let gt = large_gt(10);
+        let count = |dnn: DnnKind| -> usize {
+            (0..300).map(|f| o.detect(f, &gt, dnn).len()).sum()
+        };
+        let tiny = count(DnnKind::TinyY288) as f64;
+        let heavy = count(DnnKind::Y416) as f64;
+        assert!(
+            (heavy / tiny) < 1.25,
+            "large objects should equalise: heavy {heavy} tiny {tiny}"
+        );
+    }
+
+    #[test]
+    fn occlusion_reduces_recall() {
+        let o = OracleDetector::new(4, 1920.0, 1080.0);
+        let visible = large_gt(8);
+        let occluded: Vec<GtEntry> = visible
+            .iter()
+            .cloned()
+            .map(|mut g| {
+                g.visibility = 0.15;
+                g
+            })
+            .collect();
+        let count = |gt: &[GtEntry]| -> usize {
+            (0..200).map(|f| o.detect(f, gt, DnnKind::Y416).len()).sum()
+        };
+        assert!(count(&occluded) * 2 < count(&visible));
+    }
+
+    #[test]
+    fn localisation_noise_ordering() {
+        // tiny-288 boxes are sloppier than Y-416 boxes (mean IoU to gt)
+        let o = OracleDetector::new(5, 1920.0, 1080.0);
+        let gt = large_gt(6);
+        let mean_iou = |dnn: DnnKind| -> f64 {
+            let mut total = 0.0;
+            let mut n = 0usize;
+            for f in 0..200 {
+                for d in o.detect(f, &gt, dnn) {
+                    if d.score < 0.35 {
+                        continue;
+                    }
+                    let best = gt
+                        .iter()
+                        .map(|g| g.bbox.iou(&d.bbox))
+                        .fold(0.0f64, f64::max);
+                    if best > 0.1 {
+                        total += best;
+                        n += 1;
+                    }
+                }
+            }
+            total / n as f64
+        };
+        let tiny = mean_iou(DnnKind::TinyY288);
+        let heavy = mean_iou(DnnKind::Y416);
+        assert!(heavy > tiny + 0.02, "heavy {heavy} vs tiny {tiny}");
+    }
+
+    #[test]
+    fn non_person_gt_never_detected_as_tp_source() {
+        let o = OracleDetector::new(6, 1920.0, 1080.0);
+        let mut g = gt_box(100.0, 100.0, 300.0, 300.0, 1.0);
+        g.class = MotClass::Car;
+        // only false positives may appear
+        let dets = o.detect(1, &[g], DnnKind::Y416);
+        for d in &dets {
+            // FP geometry is random; none should precisely track the car
+            assert!(d.bbox.iou(&BBox::new(100.0, 100.0, 300.0, 300.0)) < 0.5);
+        }
+    }
+
+    #[test]
+    fn detections_stay_in_frame() {
+        let o = OracleDetector::new(7, 640.0, 480.0);
+        let gt = vec![gt_box(600.0, 440.0, 80.0, 80.0, 1.0)];
+        for f in 0..100 {
+            for d in o.detect(f, &gt, DnnKind::TinyY288) {
+                assert!(d.bbox.x >= 0.0 && d.bbox.y >= 0.0);
+                assert!(d.bbox.right() <= 640.0 + 1e-9);
+                assert!(d.bbox.bottom() <= 480.0 + 1e-9);
+            }
+        }
+    }
+}

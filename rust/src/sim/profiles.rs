@@ -1,0 +1,271 @@
+//! Capacity/latency/telemetry profiles for the four DNN operating points.
+//!
+//! Calibration sources (all from the paper's §IV on a Jetson Nano in MAX
+//! power mode, TensorRT FP16):
+//! * latency: Fig. 5 — only YOLOv4-tiny-288 meets the 33 ms 30-FPS budget;
+//! * accuracy vs object size: Fig. 4 ordering (Y-416 best everywhere,
+//!   tiny-288 worst) plus the speed/accuracy findings of Huang et al. [6]
+//!   that lightweight detectors match heavyweight ones on *large* objects;
+//! * power: Fig. 14 — 3.8 / 4.8 / 7.2 / 7.5 W;
+//! * GPU utilisation: §IV.D — 84% (Y-288) and 91% (Y-416) while running;
+//! * memory: Fig. 11 — 2.21 / 2.21 / 2.22 / 2.56 GB single-model,
+//!   2.85 GB with all four loaded, 1.5 GB baseline.
+
+use crate::DnnKind;
+
+/// Behavioural profile of one DNN variant on the simulated Jetson Nano.
+#[derive(Debug, Clone)]
+pub struct DnnProfile {
+    pub kind: DnnKind,
+    /// Mean inference latency, seconds (Fig. 5 calibration).
+    pub latency_mean_s: f64,
+    /// Latency jitter (lognormal-ish std as a fraction of the mean).
+    pub latency_jitter: f64,
+    /// Object area fraction at which detection probability is 50%.
+    /// Smaller = better small-object detection.
+    pub s50_area_frac: f64,
+    /// Logistic width of the detectability curve (in log10 area units).
+    pub det_width: f64,
+    /// Detection probability ceiling for large, fully visible objects.
+    pub p_max: f64,
+    /// Localisation noise: box center/size std as a fraction of box size.
+    pub loc_noise: f64,
+    /// Expected false positives per frame.
+    pub fp_rate: f64,
+    /// Mean confidence score for true detections (capacity-dependent).
+    pub score_mean: f64,
+    /// Board power while this DNN is executing, watts (Fig. 14).
+    pub power_active_w: f64,
+    /// GPU utilisation while executing, percent (§IV.D).
+    pub gpu_util_pct: f64,
+    /// Resident weight/engine memory, GB (Fig. 11 decomposition).
+    pub mem_weights_gb: f64,
+    /// Peak activation workspace while executing, GB.
+    pub mem_workspace_gb: f64,
+}
+
+/// Idle board power (screen/SoC baseline between inferences), watts.
+pub const POWER_IDLE_W: f64 = 2.6;
+
+/// GPU utilisation when no inference is in flight, percent.
+pub const GPU_IDLE_PCT: f64 = 4.0;
+
+/// Memory allocated before any DNN is loaded (paper: "1.5 GB initially").
+pub const MEM_BASE_GB: f64 = 1.5;
+
+impl DnnProfile {
+    /// The calibrated profile for a variant.
+    pub fn of(kind: DnnKind) -> DnnProfile {
+        match kind {
+            DnnKind::TinyY288 => DnnProfile {
+                kind,
+                latency_mean_s: 0.0270,
+                latency_jitter: 0.04,
+                s50_area_frac: 0.0035,
+                det_width: 0.35,
+                p_max: 0.95,
+                loc_noise: 0.060,
+                fp_rate: 0.9,
+                score_mean: 0.62,
+                power_active_w: 3.8,
+                gpu_util_pct: 38.0,
+                mem_weights_gb: 0.05,
+                mem_workspace_gb: 0.66,
+            },
+            DnnKind::TinyY416 => DnnProfile {
+                kind,
+                latency_mean_s: 0.0510,
+                latency_jitter: 0.04,
+                s50_area_frac: 0.0015,
+                det_width: 0.35,
+                p_max: 0.96,
+                loc_noise: 0.050,
+                fp_rate: 0.7,
+                score_mean: 0.66,
+                power_active_w: 4.8,
+                gpu_util_pct: 55.0,
+                mem_weights_gb: 0.07,
+                mem_workspace_gb: 0.64,
+            },
+            DnnKind::Y288 => DnnProfile {
+                kind,
+                latency_mean_s: 0.0920,
+                latency_jitter: 0.05,
+                s50_area_frac: 0.0009,
+                det_width: 0.40,
+                p_max: 0.97,
+                loc_noise: 0.038,
+                fp_rate: 0.5,
+                score_mean: 0.70,
+                power_active_w: 7.2,
+                gpu_util_pct: 84.0,
+                mem_weights_gb: 0.12,
+                mem_workspace_gb: 0.60,
+            },
+            DnnKind::Y416 => DnnProfile {
+                kind,
+                latency_mean_s: 0.1530,
+                latency_jitter: 0.05,
+                s50_area_frac: 0.0004,
+                det_width: 0.40,
+                p_max: 0.98,
+                loc_noise: 0.030,
+                fp_rate: 0.4,
+                score_mean: 0.72,
+                power_active_w: 7.5,
+                gpu_util_pct: 91.0,
+                mem_weights_gb: 0.21,
+                mem_workspace_gb: 0.85,
+            },
+        }
+    }
+
+    /// All four profiles, lightest first.
+    pub fn all() -> Vec<DnnProfile> {
+        DnnKind::ALL.iter().map(|&k| DnnProfile::of(k)).collect()
+    }
+
+    /// Probability of detecting a fully visible object whose box covers
+    /// `area_frac` of the frame: a logistic in log10(area) centred on
+    /// `s50_area_frac`. Large objects saturate at `p_max` for every
+    /// variant — the Huang et al. [6] observation TOD exploits.
+    pub fn detect_prob(&self, area_frac: f64) -> f64 {
+        if area_frac <= 0.0 {
+            return 0.0;
+        }
+        let z = (area_frac.log10() - self.s50_area_frac.log10())
+            / self.det_width;
+        self.p_max / (1.0 + (-z).exp())
+    }
+
+    /// Single-model resident memory, GB (paper Fig. 11).
+    pub fn mem_single_gb(&self) -> f64 {
+        MEM_BASE_GB + self.mem_weights_gb + self.mem_workspace_gb
+    }
+}
+
+/// Memory with a set of DNNs preloaded: weights are resident per model,
+/// the activation workspace is shared (sized by the largest) — this is
+/// what makes TOD's "load all four" only ~11% more than Y-416 alone.
+pub fn mem_loaded_gb(kinds: &[DnnKind]) -> f64 {
+    let mut weights = 0.0;
+    let mut ws: f64 = 0.0;
+    for &k in kinds {
+        let p = DnnProfile::of(k);
+        weights += p.mem_weights_gb;
+        ws = ws.max(p.mem_workspace_gb);
+    }
+    MEM_BASE_GB + weights + ws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_ordering_matches_fig5() {
+        let p: Vec<f64> = DnnProfile::all()
+            .iter()
+            .map(|p| p.latency_mean_s)
+            .collect();
+        assert!(p.windows(2).all(|w| w[0] < w[1]), "latency must increase");
+        // only tiny-288 meets the 30-FPS budget (Fig. 5 finding)
+        assert!(p[0] < 1.0 / 30.0);
+        for v in &p[1..] {
+            assert!(*v > 1.0 / 30.0);
+        }
+        // tiny-288 and tiny-416 both meet MOT17-05's 14 FPS budget
+        assert!(p[1] < 1.0 / 14.0);
+        assert!(p[2] > 1.0 / 14.0);
+    }
+
+    #[test]
+    fn detectability_ordering_heavier_is_better_on_small() {
+        let small = 0.001;
+        let probs: Vec<f64> = DnnProfile::all()
+            .iter()
+            .map(|p| p.detect_prob(small))
+            .collect();
+        assert!(
+            probs.windows(2).all(|w| w[0] < w[1]),
+            "heavier nets must see small objects better: {probs:?}"
+        );
+    }
+
+    #[test]
+    fn large_objects_equalise_capacity() {
+        // Huang et al. [6]: on large objects light ≈ heavy
+        let large = 0.08;
+        let probs: Vec<f64> = DnnProfile::all()
+            .iter()
+            .map(|p| p.detect_prob(large))
+            .collect();
+        let spread = probs.iter().cloned().fold(0.0f64, f64::max)
+            - probs.iter().cloned().fold(1.0f64, f64::min);
+        assert!(spread < 0.12, "large-object spread {spread}: {probs:?}");
+        for p in probs {
+            assert!(p > 0.85);
+        }
+        // contrast: the small-object gap is far larger than this spread
+        let small_gap = DnnProfile::of(DnnKind::Y416).detect_prob(0.001)
+            - DnnProfile::of(DnnKind::TinyY288).detect_prob(0.001);
+        assert!(small_gap > 2.0 * spread);
+    }
+
+    #[test]
+    fn detect_prob_is_monotone_in_size() {
+        for p in DnnProfile::all() {
+            let mut prev = 0.0;
+            for e in -40..-4 {
+                let a = 10f64.powf(e as f64 / 10.0);
+                let v = p.detect_prob(a);
+                assert!(v >= prev);
+                prev = v;
+            }
+            assert_eq!(p.detect_prob(0.0), 0.0);
+            assert_eq!(p.detect_prob(-1.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn s50_is_the_halfway_point() {
+        for p in DnnProfile::all() {
+            let v = p.detect_prob(p.s50_area_frac);
+            assert!((v - p.p_max / 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn power_matches_fig14() {
+        let p = DnnProfile::all();
+        assert_eq!(p[0].power_active_w, 3.8);
+        assert_eq!(p[1].power_active_w, 4.8);
+        assert_eq!(p[2].power_active_w, 7.2);
+        assert_eq!(p[3].power_active_w, 7.5);
+        assert!(POWER_IDLE_W < p[0].power_active_w);
+    }
+
+    #[test]
+    fn memory_matches_fig11() {
+        // singles: 2.21, 2.21, 2.22, 2.56 GB (±0.03); all four ≈ 2.85 GB
+        let singles: Vec<f64> = DnnProfile::all()
+            .iter()
+            .map(|p| p.mem_single_gb())
+            .collect();
+        let expect = [2.21, 2.21, 2.22, 2.56];
+        for (got, want) in singles.iter().zip(expect) {
+            assert!((got - want).abs() < 0.03, "{got} vs {want}");
+        }
+        let all = mem_loaded_gb(&DnnKind::ALL);
+        assert!((all - 2.85).abs() < 0.08, "all-loaded {all}");
+        // paper: TOD needs ~11% more than single Y-416
+        let ratio = all / singles[3];
+        assert!(ratio > 1.05 && ratio < 1.20, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gpu_util_matches_paper() {
+        assert_eq!(DnnProfile::of(DnnKind::Y288).gpu_util_pct, 84.0);
+        assert_eq!(DnnProfile::of(DnnKind::Y416).gpu_util_pct, 91.0);
+    }
+}

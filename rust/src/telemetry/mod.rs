@@ -1,0 +1,11 @@
+//! Telemetry simulator: the tegrastats stand-in (DESIGN.md §3).
+//!
+//! Figures 11–15 of the paper are functions of *which DNN runs when and
+//! for how long* — exactly what the scheduler decides. This module maps a
+//! schedule's busy intervals to 1 Hz power / GPU-utilisation traces using
+//! the per-DNN steady-state calibration in [`crate::sim::profiles`], and
+//! models memory as base + resident weights + shared workspace.
+
+pub mod tegrastats;
+
+pub use tegrastats::{ScheduleTrace, TegrastatsSim, TelemetrySample};

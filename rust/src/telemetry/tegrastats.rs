@@ -1,0 +1,221 @@
+//! 1 Hz sampling of power and GPU utilisation from a schedule's busy
+//! intervals (the NVidia tegrastats default resolution the paper uses).
+
+use crate::sim::profiles::{DnnProfile, GPU_IDLE_PCT, POWER_IDLE_W};
+use crate::DnnKind;
+
+/// The DNN-busy intervals produced by one scheduled run.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleTrace {
+    /// (start, end, dnn) in stream seconds; non-overlapping, ordered.
+    pub busy: Vec<(f64, f64, DnnKind)>,
+    /// Total stream duration, seconds.
+    pub duration: f64,
+}
+
+impl ScheduleTrace {
+    pub fn push(&mut self, start: f64, end: f64, dnn: DnnKind) {
+        debug_assert!(end >= start);
+        self.busy.push((start, end, dnn));
+        self.duration = self.duration.max(end);
+    }
+
+    /// Busy fraction per DNN over the whole run.
+    pub fn duty_cycle(&self) -> [f64; 4] {
+        let mut out = [0.0; 4];
+        if self.duration <= 0.0 {
+            return out;
+        }
+        for &(s, e, d) in &self.busy {
+            out[d.index()] += (e - s) / self.duration;
+        }
+        out
+    }
+}
+
+/// One tegrastats sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetrySample {
+    /// Window start, seconds.
+    pub t: f64,
+    /// Mean board power over the window, watts.
+    pub power_w: f64,
+    /// Mean GPU utilisation over the window, percent.
+    pub gpu_util_pct: f64,
+}
+
+/// The sampler.
+#[derive(Debug, Clone)]
+pub struct TegrastatsSim {
+    profiles: [DnnProfile; 4],
+    /// Sampling resolution, seconds (tegrastats default: 1.0).
+    pub resolution: f64,
+}
+
+impl Default for TegrastatsSim {
+    fn default() -> Self {
+        TegrastatsSim {
+            profiles: [
+                DnnProfile::of(DnnKind::TinyY288),
+                DnnProfile::of(DnnKind::TinyY416),
+                DnnProfile::of(DnnKind::Y288),
+                DnnProfile::of(DnnKind::Y416),
+            ],
+            resolution: 1.0,
+        }
+    }
+}
+
+impl TegrastatsSim {
+    /// Sample a schedule trace at the configured resolution.
+    pub fn sample(&self, trace: &ScheduleTrace) -> Vec<TelemetrySample> {
+        let n = (trace.duration / self.resolution).ceil() as usize;
+        let mut samples = Vec::with_capacity(n);
+        for i in 0..n {
+            let w0 = i as f64 * self.resolution;
+            let w1 = w0 + self.resolution;
+            let mut busy_frac = [0.0f64; 4];
+            for &(s, e, d) in &trace.busy {
+                let overlap = (e.min(w1) - s.max(w0)).max(0.0);
+                busy_frac[d.index()] += overlap / self.resolution;
+            }
+            let mut power = POWER_IDLE_W;
+            let mut gpu = GPU_IDLE_PCT;
+            for (k, frac) in busy_frac.iter().enumerate() {
+                let p = &self.profiles[k];
+                power += frac * (p.power_active_w - POWER_IDLE_W);
+                gpu += frac * (p.gpu_util_pct - GPU_IDLE_PCT);
+            }
+            samples.push(TelemetrySample {
+                t: w0,
+                power_w: power,
+                gpu_util_pct: gpu.min(100.0),
+            });
+        }
+        samples
+    }
+
+    /// Mean power over a trace, watts.
+    pub fn mean_power(&self, trace: &ScheduleTrace) -> f64 {
+        let s = self.sample(trace);
+        if s.is_empty() {
+            return POWER_IDLE_W;
+        }
+        s.iter().map(|x| x.power_w).sum::<f64>() / s.len() as f64
+    }
+
+    /// Mean GPU utilisation over a trace, percent.
+    pub fn mean_gpu(&self, trace: &ScheduleTrace) -> f64 {
+        let s = self.sample(trace);
+        if s.is_empty() {
+            return GPU_IDLE_PCT;
+        }
+        s.iter().map(|x| x.gpu_util_pct).sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profiles::mem_loaded_gb;
+
+    fn saturated_trace(dnn: DnnKind, secs: f64) -> ScheduleTrace {
+        let mut t = ScheduleTrace::default();
+        // back-to-back inferences with no idle gaps
+        let lat = DnnProfile::of(dnn).latency_mean_s;
+        let mut now = 0.0;
+        while now < secs {
+            t.push(now, (now + lat).min(secs), dnn);
+            now += lat;
+        }
+        t.duration = secs;
+        t
+    }
+
+    #[test]
+    fn saturated_y416_hits_active_power() {
+        let sim = TegrastatsSim::default();
+        let t = saturated_trace(DnnKind::Y416, 30.0);
+        let p = sim.mean_power(&t);
+        assert!((p - 7.5).abs() < 0.05, "power {p}");
+        let g = sim.mean_gpu(&t);
+        assert!((g - 91.0).abs() < 0.5, "gpu {g}");
+    }
+
+    #[test]
+    fn idle_trace_is_idle() {
+        let sim = TegrastatsSim::default();
+        let t = ScheduleTrace { busy: vec![], duration: 10.0 };
+        assert!((sim.mean_power(&t) - POWER_IDLE_W).abs() < 1e-9);
+        assert!((sim.mean_gpu(&t) - GPU_IDLE_PCT).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duty_cycle_scales_power() {
+        // tiny-288 at 30 FPS: busy 27/33.3 ms = 81% of the time
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        let mut now = 0.0f64;
+        for _ in 0..300 {
+            t.push(now, now + 0.027, DnnKind::TinyY288);
+            now += 1.0 / 30.0;
+        }
+        t.duration = now;
+        let duty = t.duty_cycle()[0];
+        assert!((duty - 0.81).abs() < 0.01, "duty {duty}");
+        let p = sim.mean_power(&t);
+        let expect = POWER_IDLE_W + duty * (3.8 - POWER_IDLE_W);
+        assert!((p - expect).abs() < 0.05, "power {p} vs {expect}");
+    }
+
+    #[test]
+    fn samples_cover_duration_at_1hz() {
+        let sim = TegrastatsSim::default();
+        let t = saturated_trace(DnnKind::Y288, 12.5);
+        let s = sim.sample(&t);
+        assert_eq!(s.len(), 13);
+        assert_eq!(s[0].t, 0.0);
+        assert_eq!(s[12].t, 12.0);
+    }
+
+    #[test]
+    fn mixed_schedule_power_between_extremes() {
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        // half the time tiny-288, half Y-416, saturated
+        let mut now = 0.0;
+        while now < 10.0 {
+            t.push(now, now + 0.027, DnnKind::TinyY288);
+            now += 0.027;
+        }
+        while now < 20.0 {
+            t.push(now, now + 0.153, DnnKind::Y416);
+            now += 0.153;
+        }
+        t.duration = 20.0;
+        let p = sim.mean_power(&t);
+        assert!(p > 3.8 && p < 7.5, "power {p}");
+    }
+
+    #[test]
+    fn gpu_never_exceeds_100() {
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        // pathological overlapping intervals
+        t.push(0.0, 1.0, DnnKind::Y416);
+        t.push(0.0, 1.0, DnnKind::Y288);
+        t.duration = 1.0;
+        for s in sim.sample(&t) {
+            assert!(s.gpu_util_pct <= 100.0);
+        }
+    }
+
+    #[test]
+    fn memory_model_fig11_consistency() {
+        // singles below all-loaded; TOD (all four) comparable to Y-416
+        let all = mem_loaded_gb(&DnnKind::ALL);
+        for k in DnnKind::ALL {
+            assert!(mem_loaded_gb(&[k]) < all);
+        }
+    }
+}

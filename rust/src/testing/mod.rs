@@ -1,0 +1,5 @@
+//! Property-testing mini-harness (proptest stand-in; DESIGN.md §3).
+
+pub mod prop;
+
+pub use prop::{Gen, PropConfig};

@@ -1,0 +1,151 @@
+//! Seeded generator-based property testing: run a property over many
+//! random inputs, report the seed of the first failure so it replays.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use tod::testing::prop::{Gen, PropConfig};
+//! PropConfig::default().run("mbbs in [0,1]", |g| {
+//!     let n = g.usize_in(0, 50);
+//!     let v: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1.0)).collect();
+//!     v.iter().all(|x| (0.0..=1.0).contains(x))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Input generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn values (printed on failure for reproduction).
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new() }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.log.push(format!("f64_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.log.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len());
+        self.log.push(format!("choice[{i}]"));
+        &xs[i]
+    }
+
+    /// Normal draw (for noise-like inputs).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let v = self.rng.normal(mean, std);
+        self.log.push(format!("normal({mean},{std})={v}"));
+        v
+    }
+}
+
+/// Property-run configuration.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // TOD_PROP_SEED replays a failing case; TOD_PROP_CASES scales CI
+        let seed = std::env::var("TOD_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xdecaf);
+        let cases = std::env::var("TOD_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        PropConfig { cases, seed }
+    }
+}
+
+impl PropConfig {
+    pub fn with_cases(cases: usize) -> Self {
+        PropConfig { cases, ..Default::default() }
+    }
+
+    /// Run `property` over `cases` random inputs; panics (with the seed
+    /// and the drawn-value log) on the first failure.
+    pub fn run<F: FnMut(&mut Gen) -> bool>(&self, name: &str, mut property: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_add((case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            let mut g = Gen::new(case_seed);
+            let ok = property(&mut g);
+            if !ok {
+                panic!(
+                    "property {name:?} failed on case {case} \
+                     (TOD_PROP_SEED={case_seed});\n  draws: {}",
+                    g.log.join(", ")
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        PropConfig::with_cases(50).run("tautology", |g| {
+            n += 1;
+            let v = g.f64_in(0.0, 1.0);
+            (0.0..1.0).contains(&v)
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"falsum\" failed")]
+    fn failing_property_panics_with_seed() {
+        PropConfig::with_cases(10).run("falsum", |g| g.f64_in(0.0, 1.0) < -1.0);
+    }
+
+    #[test]
+    fn generator_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+        }
+        let xs = [1, 2, 3];
+        for _ in 0..10 {
+            assert!(xs.contains(g.choice(&xs)));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.f64_in(0.0, 1.0), b.f64_in(0.0, 1.0));
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Tiny CSV writer/reader for experiment outputs (`results/*.csv`).
+//!
+//! Quoting rules follow RFC 4180 for the subset we emit: fields containing
+//! a comma, quote or newline are quoted, quotes doubled.
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        CsvTable {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row; must match the header width.
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for r in &self.rows {
+            write_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    /// Parse CSV text (header + rows).
+    pub fn parse(text: &str) -> Result<CsvTable, String> {
+        let mut records = parse_records(text)?;
+        if records.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = records.remove(0);
+        for (i, r) in records.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!(
+                    "row {} width {} != header width {}",
+                    i + 1,
+                    r.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(CsvTable { header, rows: records })
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, field) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(field) {
+            out.push('"');
+            out.push_str(&field.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(field);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_records(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut records = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' if field.is_empty() => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        records.push(row);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push(vec!["1", "2"]);
+        t.push(vec!["x", "y"]);
+        let s = t.to_string();
+        let back = CsvTable::parse(&s).unwrap();
+        assert_eq!(back.header, t.header);
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let mut t = CsvTable::new(vec!["name", "note"]);
+        t.push(vec!["a,b", "say \"hi\""]);
+        t.push(vec!["line\nbreak", "plain"]);
+        let back = CsvTable::parse(&t.to_string()).unwrap();
+        assert_eq!(back.rows, t.rows);
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push(vec!["only-one"]);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(CsvTable::parse("a,b\n1\n").is_err());
+        assert!(CsvTable::parse("").is_err());
+        assert!(CsvTable::parse("a,\"b\n").is_err());
+    }
+
+    #[test]
+    fn col_index() {
+        let t = CsvTable::parse("x,y,z\n1,2,3\n").unwrap();
+        assert_eq!(t.col_index("y"), Some(1));
+        assert_eq!(t.col_index("w"), None);
+    }
+}

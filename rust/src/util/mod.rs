@@ -1,0 +1,12 @@
+//! Small self-contained utilities the rest of the system builds on.
+//!
+//! This crate builds fully offline against the vendored `xla` dependency
+//! closure, so the usual ecosystem crates (rand, serde, serde_json, csv,
+//! prettytable) are reimplemented here at the scale this project needs —
+//! see DESIGN.md §3 "Offline-environment substitutions".
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

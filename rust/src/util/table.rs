@@ -1,0 +1,144 @@
+//! ASCII table renderer for the figure/table reproduction harness —
+//! `tod figures` prints the same rows/series the paper reports.
+
+/// A simple left/right-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct AsciiTable {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl AsciiTable {
+    pub fn new(title: &str, header: Vec<&str>) -> Self {
+        AsciiTable {
+            title: title.to_string(),
+            header: header.into_iter().map(String::from).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&render_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        let _ = ncol;
+        out
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::from("|");
+    for (cell, w) in cells.iter().zip(widths) {
+        let pad = w - cell.chars().count();
+        // numbers right-aligned, text left-aligned
+        let numeric = cell
+            .chars()
+            .all(|c| c.is_ascii_digit() || ".-+%enaNA".contains(c))
+            && !cell.is_empty();
+        if numeric {
+            s.push(' ');
+            s.push_str(&" ".repeat(pad));
+            s.push_str(cell);
+            s.push(' ');
+        } else {
+            s.push(' ');
+            s.push_str(cell);
+            s.push_str(&" ".repeat(pad));
+            s.push(' ');
+        }
+        s.push('|');
+    }
+    s
+}
+
+/// Render a unicode sparkline for a series (telemetry trace figures).
+pub fn sparkline(values: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = if (hi - lo).abs() < 1e-12 { 1.0 } else { hi - lo };
+    values
+        .iter()
+        .map(|v| {
+            let t = ((v - lo) / span * 7.0).round().clamp(0.0, 7.0) as usize;
+            TICKS[t]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_alignment() {
+        let mut t = AsciiTable::new("Demo", vec!["name", "ap"]);
+        t.push(vec!["tiny-288", "0.42"]);
+        t.push(vec!["a-very-long-name", "0.5"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| tiny-288"));
+        // all lines between separators share a width
+        let widths: Vec<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn row_width_checked() {
+        let mut t = AsciiTable::new("", vec!["a", "b"]);
+        t.push(vec!["1"]);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        assert_eq!(sparkline(&[]), "");
+        // flat series doesn't divide by zero
+        assert_eq!(sparkline(&[2.0, 2.0]).chars().count(), 2);
+    }
+}

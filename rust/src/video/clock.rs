@@ -1,0 +1,66 @@
+//! Virtual frame clock for a fixed-FPS stream.
+
+/// Maps 1-based frame ids to arrival timestamps for a fixed frame rate.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameClock {
+    fps: f64,
+}
+
+impl FrameClock {
+    pub fn new(fps: f64) -> Self {
+        assert!(fps > 0.0, "fps must be positive");
+        FrameClock { fps }
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.fps
+    }
+
+    /// Seconds between consecutive frames.
+    pub fn period(&self) -> f64 {
+        1.0 / self.fps
+    }
+
+    /// Arrival time of a 1-based frame id. The paper's Algorithm 2 uses
+    /// `Frame#/FPS`, i.e. frame 1 arrives at 1/FPS.
+    pub fn arrival(&self, frame: u64) -> f64 {
+        frame as f64 / self.fps
+    }
+
+    /// The latest frame that has arrived by time `t` (0 if none).
+    pub fn frame_at(&self, t: f64) -> u64 {
+        if t < 0.0 {
+            return 0;
+        }
+        (t * self.fps).floor() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_and_arrival() {
+        let c = FrameClock::new(30.0);
+        assert!((c.period() - 1.0 / 30.0).abs() < 1e-12);
+        assert!((c.arrival(30) - 1.0).abs() < 1e-12);
+        assert!((c.arrival(1) - 1.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frame_at_inverts_arrival() {
+        let c = FrameClock::new(14.0);
+        for f in 1..100u64 {
+            assert_eq!(c.frame_at(c.arrival(f) + 1e-9), f);
+        }
+        assert_eq!(c.frame_at(-1.0), 0);
+        assert_eq!(c.frame_at(0.0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fps must be positive")]
+    fn zero_fps_rejected() {
+        FrameClock::new(0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixed-FPS video plumbing: the virtual frame clock and the Algorithm 2
+//! drop-frame accounting (the GStreamer appsink `drop=true` analog the
+//! paper uses, §III.B.2).
+
+pub mod clock;
+pub mod dropframe;
+pub mod source;
+
+pub use clock::FrameClock;
+pub use dropframe::{DropFrameAccounting, FrameOutcome};
+pub use source::FrameSource;

