@@ -1,0 +1,73 @@
+//! Bench: multi-stream scheduling cost and aggregate throughput as the
+//! stream count grows 1 → 8 on one shared virtual accelerator.
+//!
+//! Two numbers matter here: the host-side cost of scheduling N streams
+//! (the timed cases) and the *virtual* aggregate throughput the
+//! schedule achieves (printed after each case — the accelerator-bound
+//! figure an operator packs streams against).
+
+use tod::bench::{black_box, Bench};
+use tod::coordinator::multistream::{
+    DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
+};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::coordinator::scheduler::OracleBackend;
+use tod::coordinator::session::StreamSession;
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::dataset::synth::Sequence;
+use tod::sim::latency::{ContentionModel, LatencyModel};
+use tod::sim::oracle::OracleDetector;
+
+fn run_once(
+    seqs: &[(SequenceId, Sequence)],
+    n: usize,
+    dispatch: DispatchPolicy,
+) -> MultiStreamResult {
+    let mut sched = MultiStreamScheduler::new(
+        dispatch,
+        ContentionModel::jetson_nano(),
+        LatencyModel::deterministic(),
+    );
+    for i in 0..n {
+        let (id, seq) = &seqs[i % seqs.len()];
+        let det = OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            seq.spec.width as f64,
+            seq.spec.height as f64,
+        ));
+        sched.add_stream(
+            StreamSession::new(seq, MbbsPolicy::tod_default(), id.eval_fps()),
+            Box::new(det),
+        );
+    }
+    sched.run()
+}
+
+fn main() {
+    let mut b = Bench::slow();
+    let seqs: Vec<(SequenceId, Sequence)> = SequenceId::ALL
+        .iter()
+        .map(|&id| (id, generate(id)))
+        .collect();
+
+    for n in [1usize, 2, 4, 8] {
+        b.case(&format!("multistream/rr_{n}stream"), || {
+            black_box(run_once(&seqs, n, DispatchPolicy::RoundRobin));
+        });
+        let r = run_once(&seqs, n, DispatchPolicy::RoundRobin);
+        println!(
+            "    -> virtual aggregate: {:.1} inf/s, util {:.1}%, \
+             mean AP {:.3}, drop {:.1}%",
+            r.utilisation.throughput_ips(),
+            r.utilisation.utilisation() * 100.0,
+            r.mean_ap(),
+            r.drop_rate() * 100.0
+        );
+    }
+
+    b.case("multistream/edf_8stream", || {
+        black_box(run_once(&seqs, 8, DispatchPolicy::EarliestDeadlineFirst));
+    });
+
+    b.save_csv("multistream.csv").ok();
+}

@@ -4,15 +4,37 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
+use crate::coordinator::multistream::{
+    DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
+};
 use crate::coordinator::policy::{FixedPolicy, MbbsPolicy, Thresholds};
 use crate::coordinator::scheduler::{
     run_offline, run_realtime, OracleBackend, RunResult,
 };
+use crate::coordinator::session::StreamSession;
 use crate::dataset::catalog::{generate, SequenceId};
 use crate::dataset::synth::Sequence;
-use crate::sim::latency::LatencyModel;
+use crate::sim::latency::{ContentionModel, LatencyModel};
 use crate::sim::oracle::OracleDetector;
 use crate::DnnKind;
+
+/// Stream counts the multi-stream scaling study sweeps (1 → 8 streams
+/// packed onto one accelerator).
+pub const MULTISTREAM_SCALE: [usize; 4] = [1, 2, 4, 8];
+
+/// One row of the multi-stream scaling study.
+#[derive(Debug, Clone)]
+pub struct MultiStreamScalingRow {
+    pub n_streams: usize,
+    /// Mean AP across the concurrent streams.
+    pub mean_ap: f64,
+    /// Aggregate drop rate over all streams' frames.
+    pub drop_rate: f64,
+    /// Accelerator busy fraction over the makespan.
+    pub utilisation: f64,
+    /// Aggregate inferences per virtual second.
+    pub throughput_ips: f64,
+}
 
 /// Memoized campaign over the seven catalog sequences.
 pub struct Campaign {
@@ -21,6 +43,7 @@ pub struct Campaign {
     realtime: BTreeMap<(SequenceId, DnnKind), RunResult>,
     tod: BTreeMap<SequenceId, RunResult>,
     chameleon: BTreeMap<SequenceId, RunResult>,
+    multistream: BTreeMap<(usize, DispatchPolicy), MultiStreamResult>,
     thresholds: Thresholds,
 }
 
@@ -41,6 +64,7 @@ impl Campaign {
             realtime: BTreeMap::new(),
             tod: BTreeMap::new(),
             chameleon: BTreeMap::new(),
+            multistream: BTreeMap::new(),
             thresholds,
         }
     }
@@ -129,6 +153,66 @@ impl Campaign {
         &self.chameleon[&id]
     }
 
+    /// `n` concurrent TOD streams (stream `i` replays catalog sequence
+    /// `ALL[i % 7]` at its eval FPS) packed onto one shared accelerator
+    /// with the Jetson contention default.
+    pub fn multistream(
+        &mut self,
+        n: usize,
+        dispatch: DispatchPolicy,
+    ) -> &MultiStreamResult {
+        if !self.multistream.contains_key(&(n, dispatch)) {
+            let ids: Vec<SequenceId> = (0..n)
+                .map(|i| SequenceId::ALL[i % SequenceId::ALL.len()])
+                .collect();
+            let mut sched = MultiStreamScheduler::new(
+                dispatch,
+                ContentionModel::jetson_nano(),
+                LatencyModel::deterministic(),
+            );
+            for &id in &ids {
+                let seq = &self.sequences[&id];
+                let det = OracleBackend(OracleDetector::new(
+                    seq.spec.seed,
+                    seq.spec.width as f64,
+                    seq.spec.height as f64,
+                ));
+                sched.add_stream(
+                    StreamSession::new(
+                        seq,
+                        MbbsPolicy::new(self.thresholds.clone()),
+                        id.eval_fps(),
+                    ),
+                    Box::new(det),
+                );
+            }
+            let r = sched.run();
+            self.multistream.insert((n, dispatch), r);
+        }
+        &self.multistream[&(n, dispatch)]
+    }
+
+    /// The multi-stream scaling study: aggregate AP / drop-rate /
+    /// utilisation as stream count grows over [`MULTISTREAM_SCALE`].
+    pub fn multistream_scaling(
+        &mut self,
+        dispatch: DispatchPolicy,
+    ) -> Vec<MultiStreamScalingRow> {
+        MULTISTREAM_SCALE
+            .iter()
+            .map(|&n| {
+                let r = self.multistream(n, dispatch);
+                MultiStreamScalingRow {
+                    n_streams: n,
+                    mean_ap: r.mean_ap(),
+                    drop_rate: r.drop_rate(),
+                    utilisation: r.utilisation.utilisation(),
+                    throughput_ips: r.utilisation.throughput_ips(),
+                }
+            })
+            .collect()
+    }
+
     /// Best fixed-DNN real-time AP on a sequence (the paper's
     /// "best accuracy out of individual DNNs").
     pub fn best_fixed_realtime(&mut self, id: SequenceId) -> (DnnKind, f64) {
@@ -182,6 +266,32 @@ mod tests {
         let t1 = c.tod(SequenceId::Mot09).ap;
         let t2 = c.tod(SequenceId::Mot09).ap;
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn one_stream_multistream_matches_single_stream_tod() {
+        // stream 0 replays SequenceId::ALL[0] with the campaign
+        // thresholds, so a 1-stream scheduler must reproduce tod()
+        let mut c = Campaign::new();
+        let single = c.tod(SequenceId::ALL[0]).ap;
+        let multi =
+            c.multistream(1, DispatchPolicy::RoundRobin).per_stream[0].ap;
+        assert_eq!(single, multi);
+    }
+
+    #[test]
+    fn multistream_memoized_and_scaling_shapes() {
+        let mut c = Campaign::new();
+        let a = c.multistream(2, DispatchPolicy::RoundRobin).mean_ap();
+        let b = c.multistream(2, DispatchPolicy::RoundRobin).mean_ap();
+        assert_eq!(a, b);
+        let rows = c.multistream_scaling(DispatchPolicy::RoundRobin);
+        assert_eq!(rows.len(), MULTISTREAM_SCALE.len());
+        assert_eq!(rows[0].n_streams, 1);
+        assert_eq!(rows.last().unwrap().n_streams, 8);
+        // packing more streams onto one accelerator must not lower the
+        // aggregate drop rate
+        assert!(rows.last().unwrap().drop_rate >= rows[0].drop_rate);
     }
 
     #[test]

@@ -3,4 +3,6 @@
 
 pub mod campaign;
 
-pub use campaign::Campaign;
+pub use campaign::{
+    Campaign, MultiStreamScalingRow, MULTISTREAM_SCALE,
+};

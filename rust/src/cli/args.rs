@@ -64,6 +64,32 @@ impl Args {
                 .map_err(|_| format!("invalid value for --{name}: {v:?}")),
         }
     }
+
+    /// Typed comma-separated list flag with a default (e.g.
+    /// `--scale 1,2,4,8`). Empty segments are rejected.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None | Some("") => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim().parse().map_err(|_| {
+                        format!(
+                            "invalid value for --{name}: {tok:?} \
+                             (in {v:?})"
+                        )
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +134,17 @@ mod tests {
         assert!(a.get_parse::<f64>("fps", 0.0).is_ok());
         let bad = parse("x --fps abc");
         assert!(bad.get_parse::<f64>("fps", 0.0).is_err());
+    }
+
+    #[test]
+    fn list_parse_and_default() {
+        let a = parse("multistream --scale 1,2,4");
+        assert_eq!(a.get_list("scale", &[8usize]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list("missing", &[8usize]).unwrap(), vec![8]);
+        let spaced = parse("x --scale 1,2");
+        assert_eq!(spaced.get_list("scale", &[0u32]).unwrap(), vec![1, 2]);
+        let bad = parse("x --scale 1,zap");
+        assert!(bad.get_list("scale", &[0u32]).is_err());
     }
 
     #[test]

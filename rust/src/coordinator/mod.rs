@@ -1,16 +1,26 @@
 //! The paper's contribution: the TOD runtime scheduler.
 //!
 //! [`policy`] implements Algorithm 1 (the MBBS-thresholded DNN selector),
-//! [`scheduler`] runs a policy over a sequence under the Algorithm 2
-//! drop-frame accounting, [`search`] is the Table I hyperparameter grid
-//! search, and [`baselines`] provides the comparison points (fixed single
-//! DNN, and a Chameleon-style periodic re-profiler).
+//! [`session`] holds the resumable per-stream state machine
+//! ([`StreamSession`]) that owns one stream's policy, drop-frame
+//! accounting, carried detections and eval state, [`scheduler`] drives a
+//! session over a sequence under the Algorithm 2 drop-frame accounting,
+//! [`multistream`] interleaves many sessions over one shared accelerator
+//! with contention-aware latency, [`search`] is the Table I
+//! hyperparameter grid search, and [`baselines`] provides the comparison
+//! points (fixed single DNN, and a Chameleon-style periodic re-profiler).
 
 pub mod baselines;
+pub mod multistream;
 pub mod policy;
 pub mod scheduler;
 pub mod search;
+pub mod session;
 
+pub use multistream::{
+    DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
+};
 pub use policy::{FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds};
 pub use scheduler::{run_offline, run_realtime, Detector, OracleBackend, RunResult};
 pub use search::{grid_search, GridSearchResult, SearchSpace};
+pub use session::{SessionEvent, StreamSession};

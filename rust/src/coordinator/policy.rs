@@ -60,6 +60,31 @@ pub trait SelectionPolicy {
     fn label(&self) -> String;
 }
 
+/// Mutable references forward the policy, so callers can hand a
+/// `&mut dyn SelectionPolicy` to an owning consumer (e.g.
+/// [`crate::coordinator::session::StreamSession`]).
+impl<P: SelectionPolicy + ?Sized> SelectionPolicy for &mut P {
+    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
+        (**self).select(mbbs_prev)
+    }
+
+    fn label(&self) -> String {
+        (**self).label()
+    }
+}
+
+/// Boxed policies forward too (CLI policy parsing produces
+/// `Box<dyn SelectionPolicy>`).
+impl<P: SelectionPolicy + ?Sized> SelectionPolicy for Box<P> {
+    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
+        (**self).select(mbbs_prev)
+    }
+
+    fn label(&self) -> String {
+        (**self).label()
+    }
+}
+
 /// Algorithm 1 with the standard four-variant ladder.
 #[derive(Debug, Clone)]
 pub struct MbbsPolicy {

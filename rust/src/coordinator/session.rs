@@ -1,0 +1,399 @@
+//! Resumable per-stream scheduling: the [`StreamSession`] state machine.
+//!
+//! The original `run_realtime` loop owned everything for exactly one
+//! stream — policy, Algorithm 2 drop accounting, carried detections,
+//! MBBS/DNN series and evaluation state — and ran it to completion in
+//! one call. That shape can never serve two cameras from one
+//! accelerator. `StreamSession` is the same loop body turned inside
+//! out: all per-stream state lives in the session, and one frame is
+//! advanced per [`StreamSession::step`] call, returning a
+//! [`SessionEvent`] that tells the caller what the stream just did.
+//!
+//! Single-stream drivers ([`super::scheduler::run_realtime`]) simply
+//! step a session to completion and produce the identical
+//! [`RunResult`] the monolithic loop produced. Multi-stream drivers
+//! ([`super::multistream::MultiStreamScheduler`]) interleave many
+//! sessions in virtual time, passing each step the timestamp at which
+//! the shared accelerator becomes free plus a contention-dependent
+//! latency inflation factor.
+
+use crate::dataset::synth::Sequence;
+use crate::detection::{mbbs, Detection, FrameDetections};
+use crate::eval::ap::{ApMethod, SequenceEval};
+use crate::eval::matching::{match_frame, IOU_THRESHOLD};
+use crate::sim::latency::LatencyModel;
+use crate::telemetry::tegrastats::ScheduleTrace;
+use crate::video::clock::FrameClock;
+use crate::video::dropframe::{DropFrameAccounting, FrameOutcome};
+use crate::DnnKind;
+
+use super::policy::SelectionPolicy;
+use super::scheduler::{Detector, RunResult};
+
+/// What one [`StreamSession::step`] did with the stream's next frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionEvent {
+    /// The DNN ran on this frame; `interval` is the accelerator-busy
+    /// window in stream seconds.
+    Inferred { frame: u64, dnn: DnnKind, interval: (f64, f64) },
+    /// The accelerator was still busy; the previous detections carry
+    /// forward (Algorithm 2).
+    Dropped { frame: u64 },
+    /// Every frame of the sequence has been presented.
+    Finished,
+}
+
+/// Resumable state machine for scheduling one stream.
+///
+/// Owns the stream's selection policy, Algorithm 2 accounting, carried
+/// detections (the paper's `pre-boxes`), MBBS/DNN series, busy-interval
+/// trace and pooled evaluation state. Frames advance one at a time via
+/// [`step`](StreamSession::step); [`finish`](StreamSession::finish)
+/// closes the stream and yields the [`RunResult`].
+pub struct StreamSession<'a> {
+    seq: &'a Sequence,
+    policy: Box<dyn SelectionPolicy + 'a>,
+    eval_fps: f64,
+    clock: FrameClock,
+    acc: DropFrameAccounting,
+    eval: SequenceEval,
+    trace: ScheduleTrace,
+    deploy: [u64; 4],
+    switches: u64,
+    last_dnn: Option<DnnKind>,
+    mbbs_series: Vec<f64>,
+    dnn_series: Vec<Option<DnnKind>>,
+    carried: Vec<Detection>,
+    /// 1-based id of the next frame to present.
+    next_frame: u64,
+    frame_w: f64,
+    frame_h: f64,
+}
+
+impl<'a> StreamSession<'a> {
+    /// Open a session over `seq` evaluated at `eval_fps`.
+    pub fn new<P>(seq: &'a Sequence, policy: P, eval_fps: f64) -> Self
+    where
+        P: SelectionPolicy + 'a,
+    {
+        let n = seq.n_frames() as usize;
+        StreamSession {
+            seq,
+            policy: Box::new(policy),
+            eval_fps,
+            clock: FrameClock::new(eval_fps),
+            acc: DropFrameAccounting::new(eval_fps),
+            eval: SequenceEval::new(),
+            trace: ScheduleTrace::default(),
+            deploy: [0; 4],
+            switches: 0,
+            last_dnn: None,
+            mbbs_series: Vec::with_capacity(n),
+            dnn_series: Vec::with_capacity(n),
+            carried: Vec::new(),
+            next_frame: 1,
+            frame_w: seq.spec.width as f64,
+            frame_h: seq.spec.height as f64,
+        }
+    }
+
+    /// The stream's label (sequence name).
+    pub fn sequence_name(&self) -> &str {
+        &self.seq.spec.name
+    }
+
+    /// Evaluation FPS this session runs under.
+    pub fn eval_fps(&self) -> f64 {
+        self.eval_fps
+    }
+
+    /// True once every frame has been presented.
+    pub fn is_finished(&self) -> bool {
+        self.next_frame > self.seq.n_frames()
+    }
+
+    /// Frames not yet presented.
+    pub fn frames_remaining(&self) -> u64 {
+        self.seq.n_frames().saturating_sub(self.next_frame - 1)
+    }
+
+    /// The next frame that would actually be *inferred* (not dropped),
+    /// or `None` when every remaining frame is already destined to drop
+    /// (or the stream is finished).
+    pub fn next_infer_frame(&self) -> Option<u64> {
+        let f = self.next_frame.max(self.acc.next_eligible());
+        if f > self.seq.n_frames() {
+            None
+        } else {
+            Some(f)
+        }
+    }
+
+    /// Earliest stream time at which the next inference could start
+    /// (the capture start of [`next_infer_frame`](Self::next_infer_frame)).
+    pub fn next_infer_ready(&self) -> Option<f64> {
+        self.next_infer_frame()
+            .map(|f| self.clock.arrival(f) - self.clock.period())
+    }
+
+    /// Deadline of the next inferable frame: the moment it is superseded
+    /// by its successor's arrival (used by EDF dispatch).
+    pub fn next_infer_deadline(&self) -> Option<f64> {
+        self.next_infer_frame()
+            .map(|f| self.clock.arrival(f) + self.clock.period())
+    }
+
+    /// Busy intervals recorded so far.
+    pub fn trace(&self) -> &ScheduleTrace {
+        &self.trace
+    }
+
+    /// Inferences performed so far.
+    pub fn n_inferred(&self) -> u64 {
+        self.acc.n_inferred()
+    }
+
+    /// Advance the stream by one frame on a dedicated accelerator.
+    ///
+    /// Equivalent to one iteration of the legacy `run_realtime` loop:
+    /// stepping a fresh session to completion reproduces the monolithic
+    /// loop's `RunResult` bit for bit.
+    pub fn step(
+        &mut self,
+        detector: &mut dyn Detector,
+        latency: &mut LatencyModel,
+    ) -> SessionEvent {
+        self.step_shared(detector, latency, 0.0, 1.0)
+    }
+
+    /// Advance the stream by one frame on a *shared* accelerator that
+    /// becomes free at `resource_free` (stream seconds), with sampled
+    /// inference latency multiplied by `inflation` (the multi-stream
+    /// contention factor; 1.0 = uncontended).
+    ///
+    /// With `resource_free <= now` and `inflation == 1.0` this is
+    /// exactly [`step`](Self::step).
+    pub fn step_shared(
+        &mut self,
+        detector: &mut dyn Detector,
+        latency: &mut LatencyModel,
+        resource_free: f64,
+        inflation: f64,
+    ) -> SessionEvent {
+        if self.is_finished() {
+            return SessionEvent::Finished;
+        }
+        let frame = self.next_frame;
+        self.next_frame += 1;
+        let gt = self.seq.gt(frame);
+
+        // Algorithm 1: select from the *previous* frame's detections
+        let m = mbbs(&self.carried, self.frame_w, self.frame_h);
+        self.mbbs_series.push(m);
+        let dnn = self.policy.select(m);
+
+        let (outcome, interval) =
+            self.acc.on_frame_shared(frame, resource_free, || {
+                let base = latency.sample(dnn);
+                if inflation == 1.0 {
+                    base
+                } else {
+                    base * inflation
+                }
+            });
+        let event = match outcome {
+            FrameOutcome::Inferred => {
+                let raw = detector.detect(frame, gt, dnn);
+                let fd = FrameDetections { frame, detections: raw };
+                self.carried = fd.filtered().detections;
+                self.deploy[dnn.index()] += 1;
+                let interval =
+                    interval.expect("inferred frame has a busy interval");
+                let (s, e) = interval;
+                self.trace.push(s, e, dnn);
+                if let Some(prev) = self.last_dnn {
+                    if prev != dnn {
+                        self.switches += 1;
+                    }
+                }
+                self.last_dnn = Some(dnn);
+                self.dnn_series.push(Some(dnn));
+                SessionEvent::Inferred { frame, dnn, interval }
+            }
+            FrameOutcome::Dropped => {
+                self.dnn_series.push(None);
+                SessionEvent::Dropped { frame }
+            }
+        };
+        // evaluate whatever detections the application would see at this
+        // frame (fresh or carried) against this frame's ground truth
+        self.eval.push(&match_frame(&self.carried, gt, IOU_THRESHOLD));
+        event
+    }
+
+    /// Close the stream and produce the run summary.
+    ///
+    /// Panics if frames remain unpresented — drive the session to
+    /// [`SessionEvent::Finished`] first.
+    pub fn finish(mut self) -> RunResult {
+        assert!(
+            self.is_finished(),
+            "finish() called with {} frames unpresented",
+            self.frames_remaining()
+        );
+        // stream runs to the last frame's arrival even if the DNN idles
+        self.trace.duration = self
+            .trace
+            .duration
+            .max(self.seq.n_frames() as f64 / self.eval_fps);
+        RunResult {
+            policy: self.policy.label(),
+            sequence: self.seq.spec.name.clone(),
+            fps: self.eval_fps,
+            ap: self.eval.ap(ApMethod::AllPoint),
+            n_frames: self.seq.n_frames(),
+            n_inferred: self.acc.n_inferred(),
+            n_dropped: self.acc.n_dropped(),
+            deploy_counts: self.deploy,
+            switches: self.switches,
+            trace: self.trace,
+            mbbs_series: self.mbbs_series,
+            dnn_series: self.dnn_series,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{FixedPolicy, MbbsPolicy};
+    use crate::coordinator::scheduler::OracleBackend;
+    use crate::dataset::synth::{CameraMotion, SequenceSpec};
+    use crate::sim::oracle::OracleDetector;
+
+    fn small_seq(frames: u64) -> Sequence {
+        Sequence::generate(SequenceSpec {
+            name: "SESS".into(),
+            width: 960,
+            height: 540,
+            fps: 30.0,
+            frames,
+            density: 6,
+            ref_height: 200.0,
+            depth_range: (1.0, 2.0),
+            walk_speed: 1.5,
+            camera: CameraMotion::Static,
+            seed: 77,
+        })
+    }
+
+    fn oracle_for(seq: &Sequence) -> OracleBackend {
+        OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            seq.spec.width as f64,
+            seq.spec.height as f64,
+        ))
+    }
+
+    #[test]
+    fn steps_every_frame_then_finishes() {
+        let seq = small_seq(60);
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let mut s =
+            StreamSession::new(&seq, FixedPolicy(DnnKind::TinyY288), 30.0);
+        let mut frames_seen = 0u64;
+        loop {
+            match s.step(&mut det, &mut lat) {
+                SessionEvent::Finished => break,
+                SessionEvent::Inferred { frame, .. }
+                | SessionEvent::Dropped { frame } => {
+                    frames_seen += 1;
+                    assert_eq!(frame, frames_seen);
+                }
+            }
+        }
+        assert!(s.is_finished());
+        assert_eq!(frames_seen, 60);
+        let r = s.finish();
+        assert_eq!(r.n_frames, 60);
+        assert_eq!(r.n_inferred + r.n_dropped, 60);
+    }
+
+    #[test]
+    fn finished_session_keeps_returning_finished() {
+        let seq = small_seq(5);
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let mut s = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
+        while s.step(&mut det, &mut lat) != SessionEvent::Finished {}
+        assert_eq!(s.step(&mut det, &mut lat), SessionEvent::Finished);
+        assert_eq!(s.frames_remaining(), 0);
+        assert!(s.next_infer_frame().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "frames unpresented")]
+    fn finish_requires_completion() {
+        let seq = small_seq(10);
+        let s = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
+        let _ = s.finish();
+    }
+
+    #[test]
+    fn next_infer_frame_skips_doomed_frames() {
+        // Y-416 at 30 FPS: after inferring frame 1 (153 ms), frames
+        // 2..=4 are already destined to drop
+        let seq = small_seq(30);
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let mut s =
+            StreamSession::new(&seq, FixedPolicy(DnnKind::Y416), 30.0);
+        assert_eq!(s.next_infer_frame(), Some(1));
+        let ev = s.step(&mut det, &mut lat);
+        assert!(matches!(ev, SessionEvent::Inferred { frame: 1, .. }));
+        assert_eq!(s.next_infer_frame(), Some(5));
+        let ready = s.next_infer_ready().unwrap();
+        assert!((ready - 4.0 / 30.0).abs() < 1e-12);
+        let deadline = s.next_infer_deadline().unwrap();
+        assert!((deadline - 6.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_floor_delays_start_and_causes_drops() {
+        let seq = small_seq(30);
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let mut s =
+            StreamSession::new(&seq, FixedPolicy(DnnKind::TinyY288), 30.0);
+        // accelerator busy with another stream until t = 0.5 s
+        let ev = s.step_shared(&mut det, &mut lat, 0.5, 1.0);
+        match ev {
+            SessionEvent::Inferred { frame, interval: (start, _), .. } => {
+                assert_eq!(frame, 1);
+                assert!((start - 0.5).abs() < 1e-12);
+            }
+            other => panic!("expected inference, got {other:?}"),
+        }
+        // frames that arrived while the accelerator was foreign-busy drop
+        let ev = s.step_shared(&mut det, &mut lat, 0.5, 1.0);
+        assert!(matches!(ev, SessionEvent::Dropped { frame: 2 }));
+    }
+
+    #[test]
+    fn inflation_stretches_busy_interval() {
+        let seq = small_seq(10);
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let base = lat.mean(DnnKind::TinyY288);
+        let mut s =
+            StreamSession::new(&seq, FixedPolicy(DnnKind::TinyY288), 30.0);
+        let ev = s.step_shared(&mut det, &mut lat, 0.0, 2.0);
+        match ev {
+            SessionEvent::Inferred { interval: (start, end), .. } => {
+                assert!((end - start - 2.0 * base).abs() < 1e-12);
+            }
+            other => panic!("expected inference, got {other:?}"),
+        }
+    }
+}

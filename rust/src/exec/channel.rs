@@ -205,6 +205,81 @@ mod tests {
     }
 
     #[test]
+    fn send_fails_after_all_receiver_clones_drop() {
+        // the receiver count, not the original handle, gates send
+        let (tx, rx) = bounded::<u32>(2);
+        let rx2 = rx.clone();
+        drop(rx);
+        assert!(tx.send(1).is_ok(), "a live clone must keep sends alive");
+        drop(rx2);
+        assert_eq!(tx.send(2), Err(SendError(2)));
+        assert_eq!(tx.try_send(3), Err(SendError(3)));
+        // the error hands the undelivered value back to the caller
+        assert_eq!(tx.send(4).unwrap_err().0, 4);
+    }
+
+    #[test]
+    fn recv_drains_all_queued_items_after_senders_drop() {
+        let (tx, rx) = bounded(8);
+        let tx2 = tx.clone();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        tx2.send(3).unwrap();
+        drop(tx);
+        drop(tx2);
+        // disconnection must not eat buffered items
+        for i in 0..4 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.recv(), None, "None must be sticky");
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn blocked_send_errors_when_receiver_drops_mid_wait() {
+        // a sender parked on a full queue must wake and fail, not hang,
+        // when the last receiver disappears
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || tx.send(1));
+        thread::sleep(Duration::from_millis(30)); // let the send park
+        drop(rx);
+        assert_eq!(t.join().unwrap(), Err(SendError(1)));
+    }
+
+    #[test]
+    fn backpressure_blocks_exactly_at_capacity() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let (tx, rx) = bounded(2);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = sent.clone();
+        let t = thread::spawn(move || {
+            for i in 0..5u32 {
+                tx.send(i).unwrap();
+                sent2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        thread::sleep(Duration::from_millis(40));
+        // with nothing received, only `capacity` sends may complete
+        assert_eq!(sent.load(Ordering::SeqCst), 2);
+        let got: Vec<u32> = (0..5).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_none_on_empty_but_connected_channel() {
+        let (tx, rx) = bounded::<u32>(1);
+        assert_eq!(rx.try_recv(), None);
+        tx.send(9).unwrap();
+        assert_eq!(rx.try_recv(), Some(9));
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
     fn mpmc_all_items_delivered_once() {
         let (tx, rx) = bounded(4);
         let mut senders = Vec::new();

@@ -9,4 +9,4 @@ pub mod channel;
 pub mod pool;
 
 pub use channel::{bounded, Receiver, SendError, Sender};
-pub use pool::ThreadPool;
+pub use pool::{SubmitError, ThreadPool};

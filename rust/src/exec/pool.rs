@@ -7,6 +7,19 @@ use crate::exec::channel::{bounded, Sender};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Error returned by [`ThreadPool::submit`] when the job queue is closed
+/// (every worker has exited, e.g. after panicking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitError;
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("thread pool queue closed: all workers have exited")
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// A fixed pool of worker threads executing submitted closures.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
@@ -29,8 +42,17 @@ impl ThreadPool {
                     .name(format!("tod-worker-{i}"))
                     .spawn(move || {
                         while let Some(job) = rx.recv() {
+                            // decrement on drop so a panicking job still
+                            // releases its in-flight slot (wait_idle must
+                            // not hang on poisoned work)
+                            struct Slot<'a>(&'a AtomicUsize);
+                            impl Drop for Slot<'_> {
+                                fn drop(&mut self) {
+                                    self.0.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            }
+                            let _slot = Slot(&in_flight);
                             job();
-                            in_flight.fetch_sub(1, Ordering::SeqCst);
                         }
                     })
                     .expect("spawn worker")
@@ -39,14 +61,27 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers, in_flight }
     }
 
-    /// Submit a job; blocks when the queue is full.
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Submit a job; blocks when the queue is full. Fails when every
+    /// worker has exited (the queue has no receivers left), in which
+    /// case the in-flight count is rolled back so `wait_idle` callers
+    /// don't hang on a job that never ran.
+    pub fn submit<F: FnOnce() + Send + 'static>(
+        &self,
+        f: F,
+    ) -> Result<(), SubmitError> {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx
+        match self
+            .tx
             .as_ref()
             .expect("pool shut down")
             .send(Box::new(f))
-            .ok();
+        {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError)
+            }
+        }
     }
 
     /// Jobs submitted but not yet finished.
@@ -54,9 +89,14 @@ impl ThreadPool {
         self.in_flight.load(Ordering::SeqCst)
     }
 
-    /// Busy-wait (with yield) until all submitted jobs finished.
+    /// Busy-wait (with yield) until all submitted jobs finished. Returns
+    /// early if every worker has died (panicked jobs): work still queued
+    /// at that point will never run, so waiting on it would spin forever.
     pub fn wait_idle(&self) {
         while self.in_flight() > 0 {
+            if self.workers.iter().all(|w| w.is_finished()) {
+                return;
+            }
             std::thread::yield_now();
         }
     }
@@ -84,7 +124,8 @@ mod tests {
             let c = counter.clone();
             pool.submit(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -100,7 +141,8 @@ mod tests {
                 pool.submit(move || {
                     std::thread::sleep(std::time::Duration::from_millis(1));
                     c.fetch_add(1, Ordering::SeqCst);
-                });
+                })
+                .unwrap();
             }
         } // drop waits for queue drain
         assert_eq!(counter.load(Ordering::SeqCst), 10);
@@ -113,11 +155,47 @@ mod tests {
         for _ in 0..8 {
             pool.submit(|| {
                 std::thread::sleep(std::time::Duration::from_millis(25))
-            });
+            })
+            .unwrap();
         }
         pool.wait_idle();
         let elapsed = t0.elapsed();
         // serial would be 200 ms; 4 workers should finish in ~50 ms
         assert!(elapsed.as_millis() < 150, "elapsed {elapsed:?}");
+    }
+
+    #[test]
+    fn failed_send_rolls_back_in_flight() {
+        use std::time::{Duration, Instant};
+        // a panicking job kills the sole worker; its receiver handle
+        // drops, so later sends must fail instead of queueing forever
+        let pool = ThreadPool::new(1, 4);
+        pool.submit(|| panic!("worker down (expected in this test)"))
+            .unwrap();
+        // poll until the dead worker's receiver is gone; sends that race
+        // the shutdown may still be accepted (and will never run)
+        let t0 = Instant::now();
+        let mut raced = 0usize;
+        loop {
+            match pool.submit(|| {}) {
+                Err(SubmitError) => break,
+                Ok(()) => {
+                    raced += 1;
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(5),
+                        "submit kept succeeding after worker death"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+        // the panicked job released its slot (guard) and every *failed*
+        // submit rolled back its increment: only raced sends remain
+        assert_eq!(pool.in_flight(), raced);
+        assert_eq!(pool.submit(|| {}), Err(SubmitError));
+        assert_eq!(pool.in_flight(), raced);
+        // raced jobs will never run, but wait_idle must not hang on
+        // them: it detects the dead pool and returns
+        pool.wait_idle();
     }
 }

@@ -8,6 +8,7 @@
 pub mod ablation;
 pub mod accuracy;
 pub mod latency_fig;
+pub mod multistream_fig;
 pub mod policy_stats;
 pub mod table1;
 pub mod telemetry_figs;
@@ -37,10 +38,12 @@ impl ExperimentOutput {
     }
 }
 
-/// All experiment ids, in paper order.
-pub const ALL_IDS: [&str; 14] = [
+/// All experiment ids: the paper's artifacts in paper order, then the
+/// beyond-the-paper studies.
+pub const ALL_IDS: [&str; 15] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "ablations",
+    "multistream",
 ];
 
 /// Run one experiment by id.
@@ -60,6 +63,9 @@ pub fn run(id: &str, campaign: &mut Campaign) -> Option<ExperimentOutput> {
         "fig14" => Some(telemetry_figs::fig14_power_single(campaign)),
         "fig15" => Some(telemetry_figs::fig15_power_tod(campaign)),
         "ablations" => Some(ablation::run_all()),
+        "multistream" => {
+            Some(multistream_fig::multistream_scaling(campaign))
+        }
         _ => None,
     }
 }

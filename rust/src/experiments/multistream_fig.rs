@@ -1,0 +1,60 @@
+//! Multi-stream scaling study: aggregate accuracy and drop rate as
+//! stream count grows on one shared accelerator (beyond the paper —
+//! the ROMA-style many-cameras-one-GPU regime).
+
+use crate::app::{Campaign, MULTISTREAM_SCALE};
+use crate::coordinator::multistream::DispatchPolicy;
+use crate::util::csv::CsvTable;
+
+use super::ExperimentOutput;
+
+/// `tod figures --id multistream`: the 1→8 stream sweep under both
+/// dispatch orders.
+pub fn multistream_scaling(campaign: &mut Campaign) -> ExperimentOutput {
+    let mut csv = CsvTable::new(vec![
+        "dispatch",
+        "n_streams",
+        "mean_ap",
+        "drop_rate",
+        "utilisation",
+        "throughput_ips",
+    ]);
+    let mut text = String::from(
+        "Multi-stream scaling (TOD policy per stream, shared accelerator,\n\
+         Jetson contention model):\n\
+         dispatch      streams  mean AP  drop%   util%   inf/s\n",
+    );
+    for dispatch in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::EarliestDeadlineFirst,
+    ] {
+        for row in campaign.multistream_scaling(dispatch) {
+            text.push_str(&format!(
+                "{:<13} {:>7}  {:>7.3}  {:>5.1}  {:>6.1}  {:>6.1}\n",
+                dispatch.label(),
+                row.n_streams,
+                row.mean_ap,
+                row.drop_rate * 100.0,
+                row.utilisation * 100.0,
+                row.throughput_ips,
+            ));
+            csv.push(vec![
+                dispatch.label().to_string(),
+                row.n_streams.to_string(),
+                format!("{:.4}", row.mean_ap),
+                format!("{:.4}", row.drop_rate),
+                format!("{:.4}", row.utilisation),
+                format!("{:.2}", row.throughput_ips),
+            ]);
+        }
+    }
+    ExperimentOutput {
+        id: "multistream",
+        title: format!(
+            "Multi-stream scaling over {:?} streams",
+            MULTISTREAM_SCALE
+        ),
+        text,
+        csv: vec![("multistream_scaling.csv".to_string(), csv)],
+    }
+}

@@ -13,8 +13,26 @@
 //! ([`runtime`]) that serves the four AOT-compiled YOLO-style detector
 //! variants produced by `python/compile/aot.py`.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## Single stream vs many
+//!
+//! The paper's loop serves one camera per accelerator. This crate splits
+//! that loop into a resumable per-stream state machine —
+//! [`coordinator::session::StreamSession`], advanced one frame at a time
+//! via `step()` — so the classic single-stream drivers
+//! ([`coordinator::scheduler::run_realtime`]) and the production-shaped
+//! multi-stream scheduler
+//! ([`coordinator::multistream::MultiStreamScheduler`]) share one
+//! implementation of Algorithm 1 + 2. The multi-stream scheduler
+//! interleaves N sessions over a single virtual accelerator in round-robin
+//! or earliest-deadline-first order, inflates inference latency under
+//! contention ([`sim::latency::ContentionModel`]), and reports aggregate
+//! utilisation through [`telemetry::utilisation::UtilisationSummary`].
+//! A 1-stream schedule reproduces the paper's single-stream results bit
+//! for bit.
+//!
+//! See `DESIGN.md` for the system inventory, the per-experiment index and
+//! the multi-stream architecture (§8), and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
 
 pub mod app;
 pub mod bench;

@@ -17,10 +17,12 @@ use std::path::PathBuf;
 use tod::app::Campaign;
 use tod::cli::Args;
 use tod::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
+use tod::coordinator::multistream::{DispatchPolicy, MultiStreamScheduler};
 use tod::coordinator::policy::{FixedPolicy, MbbsPolicy, SelectionPolicy};
 use tod::coordinator::scheduler::{run_realtime, OracleBackend, RunResult};
+use tod::coordinator::session::StreamSession;
 use tod::dataset::catalog::{generate, SequenceId};
-use tod::sim::latency::LatencyModel;
+use tod::sim::latency::{ContentionModel, LatencyModel};
 use tod::sim::oracle::OracleDetector;
 use tod::telemetry::tegrastats::TegrastatsSim;
 
@@ -30,6 +32,7 @@ fn main() {
         Some("figures") => cmd_figures(&args),
         Some("search") => cmd_search(),
         Some("run") => cmd_run(&args),
+        Some("multistream") => cmd_multistream(&args),
         Some("dataset") => cmd_dataset(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-report") => cmd_bench_report(),
@@ -49,11 +52,14 @@ fn main() {
 fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
-         usage: tod <figures|search|run|dataset|serve|bench-report> [flags]\n\
+         usage: tod <figures|search|run|multistream|dataset|serve|bench-report> \
+         [flags]\n\
          \n\
-         figures --all | --id <table1|fig4..fig15> [--out results]\n\
+         figures --all | --id <table1|fig4..fig15|multistream> [--out results]\n\
          search\n\
          run --seq MOT17-05 [--policy tod|fixed:yolov4-416|chameleon] [--fps 14]\n\
+         multistream [--streams 4] [--dispatch rr|edf] [--alpha 0.12]\n\
+         multistream --scaling [--scale 1,2,4,8] [--dispatch rr|edf]\n\
          dataset --out <dir>\n\
          serve [--frames 60] [--artifacts artifacts] [--policy tod]\n\
          bench-report"
@@ -170,6 +176,116 @@ fn cmd_run(args: &Args) -> i32 {
         run_realtime(&seq, policy.as_mut(), &mut det, &mut lat, fps)
     };
     print_run(&r);
+    0
+}
+
+fn cmd_multistream(args: &Args) -> i32 {
+    let dispatch = match args.get_parse("dispatch", DispatchPolicy::RoundRobin)
+    {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.has("scaling") {
+        // the scaling sweep is campaign-memoized under the fixed Jetson
+        // contention default; refuse flags it would silently ignore
+        if args.has("alpha") || args.has("streams") {
+            eprintln!(
+                "--scaling ignores --alpha/--streams (it sweeps --scale \
+                 under the Jetson contention default); drop them or run \
+                 without --scaling"
+            );
+            return 2;
+        }
+        let scale = match args.get_list("scale", &tod::app::MULTISTREAM_SCALE)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let mut campaign = Campaign::new();
+        println!(
+            "multi-stream scaling ({dispatch} dispatch, Jetson contention):\n\
+             streams  mean AP  drop%   util%   inf/s"
+        );
+        for n in scale {
+            let r = campaign.multistream(n, dispatch);
+            println!(
+                "{n:>7}  {:>7.3}  {:>5.1}  {:>6.1}  {:>6.1}",
+                r.mean_ap(),
+                r.drop_rate() * 100.0,
+                r.utilisation.utilisation() * 100.0,
+                r.utilisation.throughput_ips(),
+            );
+        }
+        return 0;
+    }
+
+    let n = match args.get_parse("streams", 4usize) {
+        Ok(v) => v.max(1),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let alpha = match args.get_parse("alpha", ContentionModel::default().alpha)
+    {
+        Ok(v) if v >= 0.0 => v,
+        Ok(v) => {
+            eprintln!("--alpha must be non-negative, got {v}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ids: Vec<SequenceId> = (0..n)
+        .map(|i| SequenceId::ALL[i % SequenceId::ALL.len()])
+        .collect();
+    let seqs: Vec<_> = ids.iter().map(|&id| generate(id)).collect();
+    let mut sched = MultiStreamScheduler::new(
+        dispatch,
+        ContentionModel::new(alpha),
+        LatencyModel::deterministic(),
+    );
+    for (id, seq) in ids.iter().zip(&seqs) {
+        let det = OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            seq.spec.width as f64,
+            seq.spec.height as f64,
+        ));
+        sched.add_stream(
+            StreamSession::new(seq, MbbsPolicy::tod_default(), id.eval_fps()),
+            Box::new(det),
+        );
+    }
+    let result = sched.run();
+    println!(
+        "{n} streams over one accelerator ({dispatch} dispatch, \
+         contention alpha {alpha}):"
+    );
+    for (i, r) in result.per_stream.iter().enumerate() {
+        println!(
+            "  stream {i}: {} AP {:.3} | inferred {} dropped {} ({:.1}%)",
+            r.sequence,
+            r.ap,
+            r.n_inferred,
+            r.n_dropped,
+            r.drop_rate() * 100.0
+        );
+    }
+    println!("  aggregate: {}", result.utilisation.report());
+    let sim = TegrastatsSim::default();
+    println!(
+        "  telemetry: mean power {:.1} W, mean GPU {:.1}%",
+        sim.mean_power(&result.utilisation.merged),
+        sim.mean_gpu(&result.utilisation.merged)
+    );
     0
 }
 

@@ -71,6 +71,56 @@ impl LatencyModel {
     }
 }
 
+/// Contention-aware latency inflation for a shared accelerator.
+///
+/// The multi-stream scheduler serialises inferences on the virtual GPU,
+/// but co-resident streams still slow each other down: engine/weight
+/// cache evictions between different models, shared memory bandwidth,
+/// and host-side pre/post-processing overlap (the regime studied by
+/// ROMA and the parallel-detection edge work in PAPERS.md). This model
+/// inflates each inference latency linearly in the number of streams
+/// *waiting* for the accelerator at dispatch time:
+///
+/// `effective = base * (1 + alpha * (occupancy - 1))`
+///
+/// so a single stream (`occupancy == 1`) is exactly uninflated and the
+/// single-stream reproduction stays bit-identical.
+#[derive(Debug, Clone)]
+pub struct ContentionModel {
+    /// Fractional latency inflation per additional contending stream.
+    pub alpha: f64,
+}
+
+impl ContentionModel {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha >= 0.0, "contention alpha must be non-negative");
+        ContentionModel { alpha }
+    }
+
+    /// No contention effect (pure serialisation).
+    pub fn none() -> Self {
+        ContentionModel { alpha: 0.0 }
+    }
+
+    /// Jetson-Nano-flavoured default: ~12% per co-resident stream,
+    /// dominated by engine swaps between per-stream model selections.
+    pub fn jetson_nano() -> Self {
+        ContentionModel { alpha: 0.12 }
+    }
+
+    /// Multiplicative latency factor for `occupancy` streams contending
+    /// (the dispatched one included). Always 1.0 for `occupancy <= 1`.
+    pub fn factor(&self, occupancy: usize) -> f64 {
+        1.0 + self.alpha * occupancy.saturating_sub(1) as f64
+    }
+}
+
+impl Default for ContentionModel {
+    fn default() -> Self {
+        ContentionModel::jetson_nano()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +151,33 @@ mod tests {
             assert!(v > 0.0);
             assert!(v < m.mean(DnnKind::TinyY288) * 2.0);
         }
+    }
+
+    #[test]
+    fn contention_factor_is_identity_for_one_stream() {
+        for m in [
+            ContentionModel::none(),
+            ContentionModel::jetson_nano(),
+            ContentionModel::new(0.5),
+        ] {
+            assert_eq!(m.factor(0), 1.0);
+            assert_eq!(m.factor(1), 1.0);
+        }
+    }
+
+    #[test]
+    fn contention_factor_grows_linearly() {
+        let m = ContentionModel::new(0.1);
+        assert!((m.factor(2) - 1.1).abs() < 1e-12);
+        assert!((m.factor(5) - 1.4).abs() < 1e-12);
+        let none = ContentionModel::none();
+        assert_eq!(none.factor(8), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_alpha_rejected() {
+        ContentionModel::new(-0.1);
     }
 
     #[test]

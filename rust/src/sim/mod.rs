@@ -6,6 +6,6 @@ pub mod latency;
 pub mod oracle;
 pub mod profiles;
 
-pub use latency::LatencyModel;
+pub use latency::{ContentionModel, LatencyModel};
 pub use oracle::OracleDetector;
 pub use profiles::DnnProfile;

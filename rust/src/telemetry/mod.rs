@@ -7,5 +7,7 @@
 //! models memory as base + resident weights + shared workspace.
 
 pub mod tegrastats;
+pub mod utilisation;
 
 pub use tegrastats::{ScheduleTrace, TegrastatsSim, TelemetrySample};
+pub use utilisation::UtilisationSummary;

@@ -1,0 +1,178 @@
+//! Aggregate accelerator-utilisation summary over many stream traces.
+//!
+//! The multi-stream scheduler produces one [`ScheduleTrace`] per stream,
+//! all sharing a single virtual accelerator. This module merges them
+//! into one timeline for the tegrastats sampler and reports the figures
+//! an operator watches when packing streams onto one edge board: busy
+//! seconds (total and per DNN), makespan, utilisation and inference
+//! throughput. [`UtilisationSummary::overlap_seconds`] doubles as the
+//! correctness probe that the scheduler really serialised the device —
+//! it must be ~0 on any valid schedule.
+
+use crate::telemetry::tegrastats::ScheduleTrace;
+use crate::DnnKind;
+
+/// Aggregate view of N per-stream schedules sharing one accelerator.
+#[derive(Debug, Clone)]
+pub struct UtilisationSummary {
+    /// Number of stream traces merged.
+    pub n_streams: usize,
+    /// End of the latest stream (max trace duration), seconds.
+    pub makespan: f64,
+    /// Total accelerator-busy seconds across all streams.
+    pub busy: f64,
+    /// Busy seconds split by DNN variant.
+    pub busy_per_dnn: [f64; 4],
+    /// Total inferences across all streams.
+    pub inferences: u64,
+    /// All busy intervals on one timeline, sorted by start — feed this
+    /// to [`crate::telemetry::TegrastatsSim`] for multi-stream power /
+    /// GPU figures.
+    pub merged: ScheduleTrace,
+}
+
+impl UtilisationSummary {
+    /// Merge per-stream traces into the aggregate summary.
+    pub fn from_traces(traces: &[&ScheduleTrace]) -> Self {
+        let mut merged = ScheduleTrace::default();
+        let mut busy = 0.0;
+        let mut busy_per_dnn = [0.0f64; 4];
+        let mut inferences = 0u64;
+        let mut makespan = 0.0f64;
+        for t in traces {
+            makespan = makespan.max(t.duration);
+            for &(s, e, d) in &t.busy {
+                merged.busy.push((s, e, d));
+                busy += e - s;
+                busy_per_dnn[d.index()] += e - s;
+                inferences += 1;
+            }
+        }
+        merged
+            .busy
+            .sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        merged.duration = makespan;
+        UtilisationSummary {
+            n_streams: traces.len(),
+            makespan,
+            busy,
+            busy_per_dnn,
+            inferences,
+            merged,
+        }
+    }
+
+    /// Busy fraction of the accelerator over the makespan.
+    pub fn utilisation(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.busy / self.makespan
+        }
+    }
+
+    /// Inferences per virtual second (aggregate throughput).
+    pub fn throughput_ips(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.inferences as f64 / self.makespan
+        }
+    }
+
+    /// Total seconds during which two merged busy intervals overlap.
+    /// A scheduler that serialises the shared accelerator yields ~0.0;
+    /// anything materially positive means double-booked hardware.
+    pub fn overlap_seconds(&self) -> f64 {
+        let mut overlap = 0.0;
+        let mut busiest_end = f64::NEG_INFINITY;
+        for &(s, e, _) in &self.merged.busy {
+            if s < busiest_end {
+                overlap += busiest_end.min(e) - s;
+            }
+            busiest_end = busiest_end.max(e);
+        }
+        overlap
+    }
+
+    /// One-paragraph human-readable report.
+    pub fn report(&self) -> String {
+        let per: Vec<String> = DnnKind::ALL
+            .iter()
+            .map(|d| {
+                format!(
+                    "{} {:.1}s",
+                    d.short_label(),
+                    self.busy_per_dnn[d.index()]
+                )
+            })
+            .collect();
+        format!(
+            "{} streams | makespan {:.1}s | busy {:.1}s ({:.1}% util) | \
+             {} inferences ({:.1}/s) | per-DNN: {}",
+            self.n_streams,
+            self.makespan,
+            self.busy,
+            self.utilisation() * 100.0,
+            self.inferences,
+            self.throughput_ips(),
+            per.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(intervals: &[(f64, f64, DnnKind)], duration: f64) -> ScheduleTrace {
+        let mut t = ScheduleTrace::default();
+        for &(s, e, d) in intervals {
+            t.push(s, e, d);
+        }
+        t.duration = t.duration.max(duration);
+        t
+    }
+
+    #[test]
+    fn merges_and_sorts_intervals() {
+        let a = trace(&[(0.0, 0.1, DnnKind::Y416)], 2.0);
+        let b = trace(&[(0.1, 0.15, DnnKind::TinyY288)], 3.0);
+        let s = UtilisationSummary::from_traces(&[&a, &b]);
+        assert_eq!(s.n_streams, 2);
+        assert_eq!(s.inferences, 2);
+        assert!((s.makespan - 3.0).abs() < 1e-12);
+        assert!((s.busy - 0.15).abs() < 1e-12);
+        assert!((s.busy_per_dnn[DnnKind::Y416.index()] - 0.1).abs() < 1e-12);
+        assert!(s.merged.busy.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(s.overlap_seconds() < 1e-12);
+        assert!((s.utilisation() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let a = trace(&[(0.0, 1.0, DnnKind::Y416)], 1.0);
+        let b = trace(&[(0.5, 1.5, DnnKind::Y288)], 1.5);
+        let s = UtilisationSummary::from_traces(&[&a, &b]);
+        assert!((s.overlap_seconds() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_handles_contained_intervals() {
+        // one long interval fully containing a short one
+        let a = trace(&[(0.0, 2.0, DnnKind::Y416)], 2.0);
+        let b = trace(&[(0.5, 1.0, DnnKind::Y288)], 2.0);
+        let s = UtilisationSummary::from_traces(&[&a, &b]);
+        assert!((s.overlap_seconds() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_traces_are_benign() {
+        let s = UtilisationSummary::from_traces(&[]);
+        assert_eq!(s.n_streams, 0);
+        assert_eq!(s.utilisation(), 0.0);
+        assert_eq!(s.throughput_ips(), 0.0);
+        assert_eq!(s.overlap_seconds(), 0.0);
+        assert!(!s.report().is_empty());
+    }
+}

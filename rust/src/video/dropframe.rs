@@ -61,6 +61,30 @@ impl DropFrameAccounting {
     pub fn on_frame(
         &mut self,
         frame: u64,
+        dnn_time: impl FnMut() -> f64,
+    ) -> (FrameOutcome, Option<(f64, f64)>) {
+        // a dedicated accelerator is the shared case with no foreign
+        // busy time (for in-order presentation the inference start then
+        // equals acc_inf_time, the paper's plain `acc_inf_time += t`)
+        self.on_frame_shared(frame, 0.0, dnn_time)
+    }
+
+    /// Algorithm 2 on a *shared* accelerator: like
+    /// [`on_frame`](Self::on_frame), but the inference additionally may
+    /// not start before `resource_free` — the virtual timestamp at which
+    /// the accelerator finishes other streams' work (multi-stream
+    /// scheduling). Frames arriving while the accelerator is
+    /// foreign-busy are dropped on subsequent calls, exactly as frames
+    /// arriving during our own inference are.
+    ///
+    /// With frames presented in order and `resource_free <= now()`,
+    /// this is bit-identical to `on_frame`: the inference start then
+    /// equals `acc_inf_time`, so `acc_inf_time` advances by exactly the
+    /// sampled latency.
+    pub fn on_frame_shared(
+        &mut self,
+        frame: u64,
+        resource_free: f64,
         mut dnn_time: impl FnMut() -> f64,
     ) -> (FrameOutcome, Option<(f64, f64)>) {
         if self.frame_id > frame {
@@ -69,11 +93,13 @@ impl DropFrameAccounting {
         }
         let t = dnn_time();
         assert!(t >= 0.0, "negative inference latency");
-        let start = self.acc_inf_time.max(
+        let start = self
+            .acc_inf_time
             // inference cannot start before the frame exists
-            self.clock.arrival(frame) - self.clock.period(),
-        );
-        self.acc_inf_time += t;
+            .max(self.clock.arrival(frame) - self.clock.period())
+            // ...nor before the shared accelerator is free
+            .max(resource_free);
+        self.acc_inf_time = start + t;
         self.frame_id =
             (self.acc_inf_time * self.clock.fps()) as u64 + 1;
         // DNN faster than the stream: wait for the next frame arrival
@@ -83,6 +109,12 @@ impl DropFrameAccounting {
         self.n_inferred += 1;
         self.busy_time += t;
         (FrameOutcome::Inferred, Some((start, start + t)))
+    }
+
+    /// The next frame eligible for inference (`FrameID` in the paper);
+    /// every earlier frame presented from now on will be dropped.
+    pub fn next_eligible(&self) -> u64 {
+        self.frame_id
     }
 
     pub fn n_inferred(&self) -> u64 {
@@ -202,6 +234,50 @@ mod tests {
                 prev_end = e;
             }
         }
+    }
+
+    #[test]
+    fn accounting_matches_paper_recurrence_bit_for_bit() {
+        // on_frame (now the shared form with a 0.0 floor) must reproduce
+        // the paper's literal Algorithm 2 recurrence `acc_inf_time += t`
+        // exactly for in-order presentation: the inference start equals
+        // the running acc_inf_time, so `start + t` and `acc += t` agree
+        let lats = [0.153, 0.027, 0.09, 0.005, 0.2, 0.051, 0.027, 0.027];
+        let fps = 30.0;
+        let mut acc = DropFrameAccounting::new(fps);
+        let mut acc_paper = 0.0f64;
+        let mut frame_id = 1u64;
+        for f in 1..=200u64 {
+            let lat = lats[(f % lats.len() as u64) as usize];
+            let (o, iv) = acc.on_frame(f, || lat);
+            if frame_id > f {
+                assert_eq!(o, FrameOutcome::Dropped, "frame {f}");
+            } else {
+                assert_eq!(o, FrameOutcome::Inferred, "frame {f}");
+                let (start, end) = iv.unwrap();
+                assert_eq!(start, acc_paper, "start at frame {f}");
+                assert_eq!(end, acc_paper + lat, "end at frame {f}");
+                acc_paper += lat;
+                frame_id = (acc_paper * fps) as u64 + 1;
+                if acc_paper < f as f64 / fps {
+                    acc_paper = f as f64 / fps;
+                }
+                assert_eq!(acc.now(), acc_paper, "acc at frame {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_floor_defers_start() {
+        let mut acc = DropFrameAccounting::new(30.0);
+        let (o, iv) = acc.on_frame_shared(1, 0.4, || 0.05);
+        assert_eq!(o, FrameOutcome::Inferred);
+        let (s, e) = iv.unwrap();
+        assert!((s - 0.4).abs() < 1e-12);
+        assert!((e - 0.45).abs() < 1e-12);
+        // frames captured while the accelerator was foreign-busy drop
+        assert_eq!(acc.on_frame_shared(2, 0.0, || 0.05).0, FrameOutcome::Dropped);
+        assert_eq!(acc.next_eligible(), 14); // floor(0.45*30)+1
     }
 
     #[test]
