@@ -1,0 +1,102 @@
+//! Bench: per-frame cost of feature extraction + DNN selection, for the
+//! MBBS threshold ladder vs the projected-accuracy policy.
+//!
+//! This pins the paper's "negligible computational overhead" claim for
+//! the widened selection path: the full per-frame decision (extract the
+//! stream features from the carried detections, then select) must stay
+//! under 50 µs — 3+ orders of magnitude below the 27–153 ms inference
+//! latencies. The `*_frame_decision` cases are the per-frame numbers to
+//! read; `extractor/on_detections` is the extra cost paid only on
+//! inferred frames (snapshot matching + EWMA update).
+
+use tod::bench::{black_box, Bench};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::coordinator::projected::ProjectedAccuracyPolicy;
+use tod::detection::{Detection, PERSON_CLASS};
+use tod::features::{FeatureExtractor, FrameFeatures};
+use tod::geometry::BBox;
+use tod::predictor::{calibrate, CalibrationConfig};
+use tod::sim::latency::LatencyModel;
+use tod::util::rng::Rng;
+
+fn synth_dets(n: usize, seed: u64) -> Vec<Detection> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            Detection::new(
+                BBox::new(
+                    rng.uniform(0.0, 1800.0),
+                    rng.uniform(0.0, 1000.0),
+                    rng.uniform(10.0, 120.0),
+                    rng.uniform(20.0, 280.0),
+                ),
+                rng.uniform(0.4, 1.0) as f32,
+                PERSON_CLASS,
+            )
+        })
+        .collect()
+}
+
+/// Shift a detection set by (dx, dy) — the "next frame" snapshot.
+fn shifted(dets: &[Detection], dx: f64, dy: f64) -> Vec<Detection> {
+    dets.iter()
+        .map(|d| Detection::new(d.bbox.shifted(dx, dy), d.score, d.class_id))
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mbbs_policy = MbbsPolicy::tod_default();
+    let table = calibrate(&CalibrationConfig::quick(30.0));
+    let projected = ProjectedAccuracyPolicy::new(
+        table,
+        &LatencyModel::deterministic(),
+    );
+
+    // per-frame decision: features from the carried set, then select.
+    // MOT17 densities run 7..42; bench the mid and the max.
+    for n in [10usize, 42] {
+        let dets = synth_dets(n, n as u64);
+        let fx = FeatureExtractor::new(1920.0, 1080.0);
+
+        b.case(&format!("mbbs/frame_decision/n={n}"), || {
+            let f = fx.features(black_box(&dets));
+            black_box(mbbs_policy.select_pure(f.mbbs));
+        });
+
+        b.case(&format!("projected/frame_decision/n={n}"), || {
+            let f = fx.features(black_box(&dets));
+            black_box(projected.select_pure(&f));
+        });
+    }
+
+    // the snapshot-matching update paid once per *inferred* frame:
+    // O(|prev| * |cur|) greedy IoU/centroid matching + EWMA
+    for n in [10usize, 42] {
+        let a = synth_dets(n, n as u64);
+        let bset = shifted(&a, 6.0, 1.0);
+        let mut fx = FeatureExtractor::new(1920.0, 1080.0);
+        let mut frame = 0u64;
+        b.case(&format!("extractor/on_detections/n={n}"), || {
+            frame += 1;
+            let snap = if frame % 2 == 0 { &a } else { &bset };
+            fx.on_detections(frame, black_box(snap));
+        });
+    }
+
+    // selection alone (table lookup vs threshold compare)
+    b.case("projected/select_only", || {
+        let f = FrameFeatures {
+            mbbs: 0.012,
+            count: 20,
+            density: 0.2,
+            speed: 0.008,
+        };
+        black_box(projected.select_pure(black_box(&f)));
+    });
+    b.case("mbbs/select_only", || {
+        black_box(mbbs_policy.select_pure(black_box(0.012)));
+    });
+
+    b.save_csv("selection.csv").ok();
+}

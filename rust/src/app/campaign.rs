@@ -8,12 +8,14 @@ use crate::coordinator::multistream::{
     DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
 };
 use crate::coordinator::policy::{FixedPolicy, MbbsPolicy, Thresholds};
+use crate::coordinator::projected::ProjectedAccuracyPolicy;
 use crate::coordinator::scheduler::{
     run_offline, run_realtime, OracleBackend, RunResult,
 };
 use crate::coordinator::session::StreamSession;
 use crate::dataset::catalog::{generate, SequenceId};
 use crate::dataset::synth::Sequence;
+use crate::predictor::{calibrate, CalibrationConfig, CalibrationTable};
 use crate::sim::latency::{ContentionModel, LatencyModel};
 use crate::sim::oracle::OracleDetector;
 use crate::DnnKind;
@@ -43,6 +45,9 @@ pub struct Campaign {
     realtime: BTreeMap<(SequenceId, DnnKind), RunResult>,
     tod: BTreeMap<SequenceId, RunResult>,
     chameleon: BTreeMap<SequenceId, RunResult>,
+    projected: BTreeMap<SequenceId, RunResult>,
+    /// Calibration tables keyed by eval-FPS bits (drop cost is per-FPS).
+    calibrations: BTreeMap<u64, CalibrationTable>,
     multistream: BTreeMap<(usize, DispatchPolicy), MultiStreamResult>,
     thresholds: Thresholds,
 }
@@ -64,6 +69,8 @@ impl Campaign {
             realtime: BTreeMap::new(),
             tod: BTreeMap::new(),
             chameleon: BTreeMap::new(),
+            projected: BTreeMap::new(),
+            calibrations: BTreeMap::new(),
             multistream: BTreeMap::new(),
             thresholds,
         }
@@ -134,6 +141,39 @@ impl Campaign {
             self.tod.insert(id, r);
         }
         &self.tod[&id]
+    }
+
+    /// The default calibration table for an eval FPS (computed once,
+    /// memoized — the calibration campaign is the expensive part of the
+    /// predictor experiments).
+    pub fn calibration(&mut self, fps: f64) -> &CalibrationTable {
+        self.calibrations
+            .entry(fps.to_bits())
+            .or_insert_with(|| calibrate(&CalibrationConfig::default_for_fps(fps)))
+    }
+
+    /// Projected-accuracy policy run (the `predictor` experiment): the
+    /// calibrated size×speed table at the sequence's eval FPS, no
+    /// latency budget (demand is priced by the table itself).
+    pub fn projected(&mut self, id: SequenceId) -> &RunResult {
+        if !self.projected.contains_key(&id) {
+            let table = self.calibration(id.eval_fps()).clone();
+            let mut det = self.oracle_for(id);
+            let mut pol = ProjectedAccuracyPolicy::new(
+                table,
+                &LatencyModel::deterministic(),
+            );
+            let mut lat = LatencyModel::deterministic();
+            let r = run_realtime(
+                &self.sequences[&id],
+                &mut pol,
+                &mut det,
+                &mut lat,
+                id.eval_fps(),
+            );
+            self.projected.insert(id, r);
+        }
+        &self.projected[&id]
     }
 
     /// Chameleon-lite baseline run (related-work comparison).

@@ -1,7 +1,9 @@
 //! The paper's contribution: the TOD runtime scheduler.
 //!
 //! [`policy`] implements Algorithm 1 (the MBBS-thresholded DNN selector),
-//! [`session`] holds the resumable per-stream state machine
+//! [`projected`] the feature/predictor-driven selector that supersedes
+//! it (projected accuracy from a calibrated size×speed table under a
+//! latency budget), [`session`] holds the resumable per-stream state machine
 //! ([`StreamSession`]) that owns one stream's policy, drop-frame
 //! accounting, carried detections and eval state, [`scheduler`] drives a
 //! session over a sequence under the Algorithm 2 drop-frame accounting,
@@ -13,6 +15,7 @@
 pub mod baselines;
 pub mod multistream;
 pub mod policy;
+pub mod projected;
 pub mod scheduler;
 pub mod search;
 pub mod session;
@@ -20,7 +23,10 @@ pub mod session;
 pub use multistream::{
     DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
 };
-pub use policy::{FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds};
+pub use policy::{
+    FixedPolicy, MbbsPolicy, SelectionPolicy, ThresholdError, Thresholds,
+};
+pub use projected::ProjectedAccuracyPolicy;
 pub use scheduler::{run_offline, run_realtime, Detector, OracleBackend, RunResult};
 pub use search::{grid_search, GridSearchResult, SearchSpace};
 pub use session::{SessionEvent, StreamSession};

@@ -14,31 +14,62 @@
 //! The selection itself is O(n) compares on one f64 — the "negligible
 //! computational overhead" the paper claims; see the `policy` bench.
 
+use crate::features::FrameFeatures;
 use crate::DnnKind;
+
+/// Why a threshold set was rejected. Threshold values arrive from the
+/// CLI and config files (user input), so construction reports errors
+/// instead of panicking.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ThresholdError {
+    /// No thresholds supplied (Algorithm 1 needs at least one rung).
+    Empty,
+    /// Values are not strictly ascending.
+    NotAscending(Vec<f64>),
+    /// A value falls outside the [0, 1) area-fraction range.
+    OutOfRange(Vec<f64>),
+}
+
+impl std::fmt::Display for ThresholdError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ThresholdError::Empty => {
+                write!(f, "need at least one threshold")
+            }
+            ThresholdError::NotAscending(h) => {
+                write!(f, "thresholds must be strictly ascending: {h:?}")
+            }
+            ThresholdError::OutOfRange(h) => {
+                write!(f, "thresholds are area fractions in [0,1): {h:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ThresholdError {}
 
 /// Ascending MBBS thresholds (fractions of frame area).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Thresholds(Vec<f64>);
 
 impl Thresholds {
-    /// Build from ascending values; panics on violations (these are
-    /// configuration errors, not runtime conditions).
-    pub fn new(h: Vec<f64>) -> Self {
-        assert!(!h.is_empty(), "need at least one threshold");
-        assert!(
-            h.windows(2).all(|w| w[0] < w[1]),
-            "thresholds must be strictly ascending: {h:?}"
-        );
-        assert!(
-            h.iter().all(|v| (0.0..1.0).contains(v)),
-            "thresholds are area fractions in [0,1): {h:?}"
-        );
-        Thresholds(h)
+    /// Build from ascending values in [0, 1).
+    pub fn new(h: Vec<f64>) -> Result<Self, ThresholdError> {
+        if h.is_empty() {
+            return Err(ThresholdError::Empty);
+        }
+        if !h.windows(2).all(|w| w[0] < w[1]) {
+            return Err(ThresholdError::NotAscending(h));
+        }
+        if !h.iter().all(|v| (0.0..1.0).contains(v)) {
+            return Err(ThresholdError::OutOfRange(h));
+        }
+        Ok(Thresholds(h))
     }
 
     /// The paper's optimum: `H_opt = {0.007, 0.03, 0.04}` (§III.B.4).
     pub fn h_opt() -> Self {
-        Thresholds::new(vec![0.007, 0.03, 0.04])
+        Thresholds::new(vec![0.007, 0.03, 0.04]).expect("H_opt is valid")
     }
 
     pub fn values(&self) -> &[f64] {
@@ -52,9 +83,17 @@ impl Thresholds {
 }
 
 /// A per-frame DNN selection policy.
+///
+/// Policies consume the full per-frame [`FrameFeatures`] vector
+/// (computed by the scheduler from the *previous* frame's detections).
+/// Threshold policies read only the size channel; the
+/// projected-accuracy policy ([`super::projected`]) also reads the
+/// speed channel. Callers without an extractor can feed the degenerate
+/// [`FrameFeatures::mbbs_only`] view.
 pub trait SelectionPolicy {
-    /// Select the DNN for the next frame given the previous frame's MBBS.
-    fn select(&mut self, mbbs_prev: f64) -> DnnKind;
+    /// Select the DNN for the next frame given the previous frame's
+    /// stream features.
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind;
 
     /// Human-readable label for reports.
     fn label(&self) -> String;
@@ -64,8 +103,8 @@ pub trait SelectionPolicy {
 /// `&mut dyn SelectionPolicy` to an owning consumer (e.g.
 /// [`crate::coordinator::session::StreamSession`]).
 impl<P: SelectionPolicy + ?Sized> SelectionPolicy for &mut P {
-    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
-        (**self).select(mbbs_prev)
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind {
+        (**self).select(features)
     }
 
     fn label(&self) -> String {
@@ -76,8 +115,8 @@ impl<P: SelectionPolicy + ?Sized> SelectionPolicy for &mut P {
 /// Boxed policies forward too (CLI policy parsing produces
 /// `Box<dyn SelectionPolicy>`).
 impl<P: SelectionPolicy + ?Sized> SelectionPolicy for Box<P> {
-    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
-        (**self).select(mbbs_prev)
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind {
+        (**self).select(features)
     }
 
     fn label(&self) -> String {
@@ -140,8 +179,8 @@ impl MbbsPolicy {
 }
 
 impl SelectionPolicy for MbbsPolicy {
-    fn select(&mut self, mbbs_prev: f64) -> DnnKind {
-        self.select_pure(mbbs_prev)
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind {
+        self.select_pure(features.mbbs)
     }
 
     fn label(&self) -> String {
@@ -160,7 +199,7 @@ impl SelectionPolicy for MbbsPolicy {
 pub struct FixedPolicy(pub DnnKind);
 
 impl SelectionPolicy for FixedPolicy {
-    fn select(&mut self, _mbbs_prev: f64) -> DnnKind {
+    fn select(&mut self, _features: &FrameFeatures) -> DnnKind {
         self.0
     }
 
@@ -206,21 +245,42 @@ mod tests {
 
     #[test]
     fn thresholds_validation() {
-        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![])).is_err());
-        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![0.03, 0.01]))
-            .is_err());
-        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![0.01, 0.01]))
-            .is_err());
-        assert!(std::panic::catch_unwind(|| Thresholds::new(vec![-0.1, 0.5]))
-            .is_err());
+        assert_eq!(Thresholds::new(vec![]), Err(ThresholdError::Empty));
+        assert_eq!(
+            Thresholds::new(vec![0.03, 0.01]),
+            Err(ThresholdError::NotAscending(vec![0.03, 0.01]))
+        );
+        assert_eq!(
+            Thresholds::new(vec![0.01, 0.01]),
+            Err(ThresholdError::NotAscending(vec![0.01, 0.01]))
+        );
+        assert_eq!(
+            Thresholds::new(vec![-0.1, 0.5]),
+            Err(ThresholdError::OutOfRange(vec![-0.1, 0.5]))
+        );
+        assert_eq!(
+            Thresholds::new(vec![0.5, 1.0]),
+            Err(ThresholdError::OutOfRange(vec![0.5, 1.0]))
+        );
+        assert!(Thresholds::new(vec![0.007, 0.03, 0.04]).is_ok());
         assert_eq!(Thresholds::h_opt().n_dnn(), 4);
+    }
+
+    #[test]
+    fn threshold_errors_explain_themselves() {
+        // CLI-facing errors must name the offending values
+        let e = Thresholds::new(vec![0.03, 0.01]).unwrap_err();
+        assert!(e.to_string().contains("ascending"));
+        assert!(e.to_string().contains("0.03"));
+        let e = Thresholds::new(vec![2.0]).unwrap_err();
+        assert!(e.to_string().contains("[0,1)"));
     }
 
     #[test]
     fn two_rung_ladder() {
         // the Discussion's "RTX 2080 drops the tiny variants" shape
         let p = MbbsPolicy::with_ladder(
-            Thresholds::new(vec![0.01]),
+            Thresholds::new(vec![0.01]).unwrap(),
             vec![DnnKind::Y288, DnnKind::Y416],
         );
         assert_eq!(p.select_pure(0.5), DnnKind::Y288);
@@ -231,7 +291,7 @@ mod tests {
     #[should_panic(expected = "ladder must be ordered")]
     fn unordered_ladder_rejected() {
         MbbsPolicy::with_ladder(
-            Thresholds::new(vec![0.01]),
+            Thresholds::new(vec![0.01]).unwrap(),
             vec![DnnKind::Y416, DnnKind::Y288],
         );
     }
@@ -240,9 +300,26 @@ mod tests {
     fn fixed_policy_is_constant() {
         let mut p = FixedPolicy(DnnKind::Y288);
         for m in [0.0, 0.01, 0.5] {
-            assert_eq!(p.select(m), DnnKind::Y288);
+            assert_eq!(
+                p.select(&FrameFeatures::mbbs_only(m)),
+                DnnKind::Y288
+            );
         }
         assert_eq!(p.label(), "yolov4-288");
+    }
+
+    #[test]
+    fn mbbs_policy_ignores_non_size_channels() {
+        // the trait widening must keep threshold policies bit-identical:
+        // only the size channel may influence the choice
+        let mut p = MbbsPolicy::tod_default();
+        let busy = FrameFeatures {
+            mbbs: 0.004,
+            count: 40,
+            density: 0.5,
+            speed: 0.02,
+        };
+        assert_eq!(p.select(&busy), p.select_pure(0.004));
     }
 
     #[test]

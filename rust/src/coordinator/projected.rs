@@ -1,0 +1,233 @@
+//! Feature-driven DNN selection: pick the network with the highest
+//! *projected* accuracy, subject to a per-frame latency budget.
+//!
+//! This is the runtime counterpart of the paper's second claim — "TOD
+//! leverages characteristics of the video stream such as object size
+//! and speed of movement [and] selects the best-performing network
+//! based on projected accuracy and computational demand". Where
+//! [`super::policy::MbbsPolicy`] hard-codes the size→DNN mapping as
+//! three thresholds, [`ProjectedAccuracyPolicy`] reads it from a
+//! calibrated [`CalibrationTable`] (see [`crate::predictor`]) indexed
+//! by the full [`FrameFeatures`] vector, so speed-sensitive regimes
+//! (vehicle cameras, fast pans) route to lighter networks even when
+//! object sizes alone would demand a heavy one.
+//!
+//! Selection is O(|DNNs|) table lookups per frame — the same
+//! "negligible computational overhead" envelope as Algorithm 1 (see
+//! `benches/selection.rs`).
+
+use crate::features::FrameFeatures;
+use crate::predictor::CalibrationTable;
+use crate::sim::latency::LatencyModel;
+use crate::DnnKind;
+
+use super::policy::SelectionPolicy;
+
+/// Selects the feasible DNN maximising projected AP.
+///
+/// Feasibility is a mean-latency budget per frame (seconds), taken from
+/// the [`LatencyModel`] at construction: networks whose mean inference
+/// latency exceeds the budget are excluded before the argmax. With
+/// [`UNBOUNDED`](Self::UNBOUNDED) (the default), the budget is
+/// inactive and computational demand is priced only through the
+/// calibration table itself (cells are measured under real-time drop
+/// accounting, so a slow network already scores poorly wherever its
+/// drops hurt). Ties break towards the lighter network, mirroring the
+/// paper's grid-search tie-break.
+#[derive(Debug, Clone)]
+pub struct ProjectedAccuracyPolicy {
+    table: CalibrationTable,
+    /// Mean latency per DNN, seconds (from the latency model).
+    latency_means: [f64; 4],
+    budget_s: f64,
+}
+
+impl ProjectedAccuracyPolicy {
+    /// "No latency budget" sentinel.
+    pub const UNBOUNDED: f64 = f64::INFINITY;
+
+    /// Policy over a calibrated table with no latency budget.
+    pub fn new(table: CalibrationTable, latency: &LatencyModel) -> Self {
+        Self::with_budget(table, latency, Self::UNBOUNDED)
+    }
+
+    /// Policy with a hard per-frame latency budget (seconds). If no
+    /// network fits the budget, the lightest one is used — degrading
+    /// accuracy is recoverable, blowing the deadline is not.
+    pub fn with_budget(
+        table: CalibrationTable,
+        latency: &LatencyModel,
+        budget_s: f64,
+    ) -> Self {
+        assert!(budget_s > 0.0, "latency budget must be positive");
+        ProjectedAccuracyPolicy {
+            table,
+            latency_means: latency.means(),
+            budget_s,
+        }
+    }
+
+    /// The table this policy projects from.
+    pub fn table(&self) -> &CalibrationTable {
+        &self.table
+    }
+
+    /// The active latency budget, seconds.
+    pub fn budget_s(&self) -> f64 {
+        self.budget_s
+    }
+
+    /// Pure selection function (exposed for tests and benches).
+    #[inline]
+    pub fn select_pure(&self, features: &FrameFeatures) -> DnnKind {
+        let mut best: Option<(DnnKind, f64)> = None;
+        for k in DnnKind::ALL {
+            if self.latency_means[k.index()] > self.budget_s {
+                continue;
+            }
+            let projected = self.table.project_features(k, features);
+            // strictly-greater keeps the lighter DNN on exact ties
+            // (ALL iterates lightest -> heaviest)
+            if best.map(|(_, b)| projected > b).unwrap_or(true) {
+                best = Some((k, projected));
+            }
+        }
+        best.map(|(k, _)| k).unwrap_or(DnnKind::TinyY288)
+    }
+}
+
+impl SelectionPolicy for ProjectedAccuracyPolicy {
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind {
+        self.select_pure(features)
+    }
+
+    fn label(&self) -> String {
+        if self.budget_s.is_finite() {
+            format!(
+                "projected{{fps={},budget={:.0}ms}}",
+                self.table.fps,
+                self.budget_s * 1e3
+            )
+        } else {
+            format!("projected{{fps={}}}", self.table.fps)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Thresholds;
+
+    fn flat_table(values: [f64; 4]) -> CalibrationTable {
+        let ap = values.iter().map(|&v| vec![vec![v; 2]; 2]).collect();
+        CalibrationTable::new(30.0, vec![0.01, 0.05], vec![0.0, 0.01], ap)
+    }
+
+    #[test]
+    fn picks_global_argmax_without_budget() {
+        let p = ProjectedAccuracyPolicy::new(
+            flat_table([0.2, 0.9, 0.4, 0.3]),
+            &LatencyModel::deterministic(),
+        );
+        assert_eq!(
+            p.select_pure(&FrameFeatures::mbbs_only(0.02)),
+            DnnKind::TinyY416
+        );
+    }
+
+    #[test]
+    fn budget_excludes_slow_networks() {
+        // 60 ms budget: Y-288 (92 ms) and Y-416 (153 ms) are out even
+        // though Y-416 projects best
+        let lat = LatencyModel::deterministic();
+        let p = ProjectedAccuracyPolicy::with_budget(
+            flat_table([0.2, 0.5, 0.8, 0.9]),
+            &lat,
+            0.060,
+        );
+        assert_eq!(
+            p.select_pure(&FrameFeatures::mbbs_only(0.02)),
+            DnnKind::TinyY416
+        );
+    }
+
+    #[test]
+    fn impossible_budget_falls_back_to_lightest() {
+        let lat = LatencyModel::deterministic();
+        let p = ProjectedAccuracyPolicy::with_budget(
+            flat_table([0.1, 0.5, 0.8, 0.9]),
+            &lat,
+            0.001,
+        );
+        assert_eq!(
+            p.select_pure(&FrameFeatures::mbbs_only(0.02)),
+            DnnKind::TinyY288
+        );
+    }
+
+    #[test]
+    fn ties_break_towards_lighter() {
+        let p = ProjectedAccuracyPolicy::new(
+            flat_table([0.5, 0.5, 0.5, 0.5]),
+            &LatencyModel::deterministic(),
+        );
+        assert_eq!(
+            p.select_pure(&FrameFeatures::mbbs_only(0.02)),
+            DnnKind::TinyY288
+        );
+    }
+
+    #[test]
+    fn speed_channel_can_flip_the_choice() {
+        // heavy net best at low speed, tiny best at high speed, same size
+        let mut ap = vec![vec![vec![0.5; 2]; 1]; 4];
+        ap[DnnKind::Y416.index()] = vec![vec![0.9, 0.2]];
+        ap[DnnKind::TinyY288.index()] = vec![vec![0.3, 0.6]];
+        let t = CalibrationTable::new(30.0, vec![0.01], vec![0.0, 0.02], ap);
+        let p = ProjectedAccuracyPolicy::new(
+            t,
+            &LatencyModel::deterministic(),
+        );
+        let slow = FrameFeatures { speed: 0.0, ..FrameFeatures::mbbs_only(0.01) };
+        let fast = FrameFeatures { speed: 0.02, ..FrameFeatures::mbbs_only(0.01) };
+        assert_eq!(p.select_pure(&slow), DnnKind::Y416);
+        assert_eq!(p.select_pure(&fast), DnnKind::TinyY288);
+    }
+
+    #[test]
+    fn ladder_table_reproduces_mbbs_policy_pointwise() {
+        use crate::coordinator::policy::MbbsPolicy;
+        let th = Thresholds::h_opt();
+        let mbbs_pol = MbbsPolicy::new(th.clone());
+        let proj = ProjectedAccuracyPolicy::new(
+            CalibrationTable::from_ladder(&th, &DnnKind::ALL),
+            &LatencyModel::deterministic(),
+        );
+        // half-step offset keeps samples off the exact threshold values,
+        // where the paper's `<=` boundary and the table's vanishing
+        // interpolation band legitimately differ
+        for i in 0..5000 {
+            let m = (i as f64 + 0.5) * 0.1 / 5000.0;
+            let f = FrameFeatures::mbbs_only(m);
+            assert_eq!(
+                proj.select_pure(&f),
+                mbbs_pol.select_pure(m),
+                "diverged at mbbs={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn label_identifies_config() {
+        let lat = LatencyModel::deterministic();
+        let p = ProjectedAccuracyPolicy::new(flat_table([0.1; 4]), &lat);
+        assert_eq!(p.label(), "projected{fps=30}");
+        let b = ProjectedAccuracyPolicy::with_budget(
+            flat_table([0.1; 4]),
+            &lat,
+            0.060,
+        );
+        assert_eq!(b.label(), "projected{fps=30,budget=60ms}");
+    }
+}

@@ -5,7 +5,7 @@
 //! and picks the set with the best mean AP, tie-breaking towards the set
 //! that "can utilise the most lightweight DNN more often" (lower `h3`).
 
-use crate::coordinator::policy::{MbbsPolicy, Thresholds};
+use crate::coordinator::policy::{MbbsPolicy, ThresholdError, Thresholds};
 use crate::coordinator::scheduler::{run_realtime, Detector, RunResult};
 use crate::dataset::synth::Sequence;
 use crate::sim::latency::LatencyModel;
@@ -29,14 +29,19 @@ impl SearchSpace {
         }
     }
 
-    /// All valid (ascending) combinations.
+    /// All valid (ascending) combinations. Non-ascending orderings in
+    /// the grid are skipped, as in the paper's Table I; out-of-range
+    /// values are a misconfigured space and panic loudly rather than
+    /// silently shrinking the search.
     pub fn combinations(&self) -> Vec<Thresholds> {
         let mut out = Vec::new();
         for &a in &self.h1 {
             for &b in &self.h2 {
                 for &c in &self.h3 {
-                    if a < b && b < c {
-                        out.push(Thresholds::new(vec![a, b, c]));
+                    match Thresholds::new(vec![a, b, c]) {
+                        Ok(t) => out.push(t),
+                        Err(ThresholdError::NotAscending(_)) => {}
+                        Err(e) => panic!("invalid search space: {e}"),
                     }
                 }
             }
@@ -200,12 +205,12 @@ mod tests {
         // simulate directly on the result structure
         let rows = vec![
             GridRow {
-                thresholds: Thresholds::new(vec![0.007, 0.03, 0.1]),
+                thresholds: Thresholds::new(vec![0.007, 0.03, 0.1]).unwrap(),
                 per_sequence_ap: vec![0.5],
                 mean_ap: 0.5,
             },
             GridRow {
-                thresholds: Thresholds::new(vec![0.007, 0.03, 0.04]),
+                thresholds: Thresholds::new(vec![0.007, 0.03, 0.04]).unwrap(),
                 per_sequence_ap: vec![0.5],
                 mean_ap: 0.5,
             },

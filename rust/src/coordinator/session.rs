@@ -18,9 +18,10 @@
 //! latency inflation factor.
 
 use crate::dataset::synth::Sequence;
-use crate::detection::{mbbs, Detection, FrameDetections};
+use crate::detection::{Detection, FrameDetections};
 use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{match_frame, IOU_THRESHOLD};
+use crate::features::FeatureExtractor;
 use crate::sim::latency::LatencyModel;
 use crate::telemetry::tegrastats::ScheduleTrace;
 use crate::video::clock::FrameClock;
@@ -64,10 +65,10 @@ pub struct StreamSession<'a> {
     mbbs_series: Vec<f64>,
     dnn_series: Vec<Option<DnnKind>>,
     carried: Vec<Detection>,
+    /// Incremental stream-feature state (MBBS + speed estimation).
+    features: FeatureExtractor,
     /// 1-based id of the next frame to present.
     next_frame: u64,
-    frame_w: f64,
-    frame_h: f64,
 }
 
 impl<'a> StreamSession<'a> {
@@ -91,9 +92,11 @@ impl<'a> StreamSession<'a> {
             mbbs_series: Vec::with_capacity(n),
             dnn_series: Vec::with_capacity(n),
             carried: Vec::new(),
+            features: FeatureExtractor::new(
+                seq.spec.width as f64,
+                seq.spec.height as f64,
+            ),
             next_frame: 1,
-            frame_w: seq.spec.width as f64,
-            frame_h: seq.spec.height as f64,
         }
     }
 
@@ -153,6 +156,12 @@ impl<'a> StreamSession<'a> {
         self.acc.n_inferred()
     }
 
+    /// Stream-feature view of the currently carried detections (what
+    /// the policy will see at the next step).
+    pub fn stream_features(&self) -> crate::features::FrameFeatures {
+        self.features.features(&self.carried)
+    }
+
     /// Advance the stream by one frame on a dedicated accelerator.
     ///
     /// Equivalent to one iteration of the legacy `run_realtime` loop:
@@ -187,10 +196,13 @@ impl<'a> StreamSession<'a> {
         self.next_frame += 1;
         let gt = self.seq.gt(frame);
 
-        // Algorithm 1: select from the *previous* frame's detections
-        let m = mbbs(&self.carried, self.frame_w, self.frame_h);
-        self.mbbs_series.push(m);
-        let dnn = self.policy.select(m);
+        // Select from the *previous* frame's detections: the extractor
+        // turns the carried set into the stream-feature vector (its
+        // `mbbs` channel is bit-identical to the legacy statistic, so
+        // Algorithm 1 policies are unaffected by the widening)
+        let feats = self.features.features(&self.carried);
+        self.mbbs_series.push(feats.mbbs);
+        let dnn = self.policy.select(&feats);
 
         let (outcome, interval) =
             self.acc.on_frame_shared(frame, resource_free, || {
@@ -206,6 +218,9 @@ impl<'a> StreamSession<'a> {
                 let raw = detector.detect(frame, gt, dnn);
                 let fd = FrameDetections { frame, detections: raw };
                 self.carried = fd.filtered().detections;
+                // speed advances only on fresh snapshots: a carried set
+                // matched against itself would read as zero motion
+                self.features.on_detections(frame, &self.carried);
                 self.deploy[dnn.index()] += 1;
                 let interval =
                     interval.expect("inferred frame has a busy interval");
@@ -378,6 +393,51 @@ mod tests {
         // frames that arrived while the accelerator was foreign-busy drop
         let ev = s.step_shared(&mut det, &mut lat, 0.5, 1.0);
         assert!(matches!(ev, SessionEvent::Dropped { frame: 2 }));
+    }
+
+    #[test]
+    fn moving_stream_develops_a_speed_estimate() {
+        let seq = Sequence::generate(SequenceSpec {
+            name: "SPEED".into(),
+            width: 960,
+            height: 540,
+            fps: 30.0,
+            frames: 60,
+            density: 6,
+            ref_height: 220.0,
+            depth_range: (1.0, 2.0),
+            walk_speed: 1.5,
+            camera: CameraMotion::Vehicle { flow_speed: 18.0 },
+            seed: 77,
+        });
+        let mut det = oracle_for(&seq);
+        let mut lat = LatencyModel::deterministic();
+        let mut s =
+            StreamSession::new(&seq, FixedPolicy(DnnKind::TinyY288), 30.0);
+        while s.step(&mut det, &mut lat) != SessionEvent::Finished {}
+        let f = s.stream_features();
+        // vehicle flow 18 px/frame at mid depth 1.5 over a 1101 px
+        // diagonal ≈ 0.011 frame diagonals per frame
+        assert!(
+            f.speed > 0.004,
+            "vehicle stream should read as fast: {f:?}"
+        );
+        assert!(f.count > 0);
+
+        // a static camera at the same geometry reads much slower
+        let static_seq = small_seq(60);
+        let mut det2 = oracle_for(&static_seq);
+        let mut s2 = StreamSession::new(
+            &static_seq,
+            FixedPolicy(DnnKind::TinyY288),
+            30.0,
+        );
+        while s2.step(&mut det2, &mut lat) != SessionEvent::Finished {}
+        let f2 = s2.stream_features();
+        assert!(
+            f2.speed < f.speed / 2.0,
+            "static {f2:?} vs vehicle {f:?}"
+        );
     }
 
     #[test]

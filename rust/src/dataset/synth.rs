@@ -38,10 +38,8 @@ impl CameraMotion {
         match self {
             CameraMotion::Static => (0.0, 0.0),
             CameraMotion::Walking { pan_speed } => {
-                // gentle sinusoidal pan: walking gait sways the camera
-                (pan_speed * (0.2 * t).sin().signum() * pan_speed.abs().min(1.0) * 0.0
-                    + *pan_speed,
-                 0.15 * pan_speed * (0.9 * t).sin())
+                // constant pan plus a gentle vertical sway (walking gait)
+                (*pan_speed, 0.15 * pan_speed * (0.9 * t).sin())
             }
             CameraMotion::Vehicle { flow_speed } => (*flow_speed, 0.0),
         }
@@ -369,6 +367,31 @@ mod tests {
         }
         let mean = steps.iter().sum::<f64>() / steps.len().max(1) as f64;
         assert!(mean > 5.0, "vehicle-cam mean step {mean}");
+    }
+
+    #[test]
+    fn apparent_speed_pinned_for_all_motion_models() {
+        // walk 2.0 at mid depth 2.0 contributes 1.0 px/frame everywhere
+        let mut s = spec(); // Static
+        assert!((s.apparent_speed() - 1.0).abs() < 1e-12);
+        s.camera = CameraMotion::Walking { pan_speed: 6.0 };
+        assert!((s.apparent_speed() - (1.0 + 3.0)).abs() < 1e-12);
+        s.camera = CameraMotion::Walking { pan_speed: -6.0 };
+        assert!((s.apparent_speed() - (1.0 + 3.0)).abs() < 1e-12);
+        s.camera = CameraMotion::Vehicle { flow_speed: 25.0 };
+        assert!((s.apparent_speed() - (1.0 + 12.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn walking_flow_is_constant_pan_plus_sway() {
+        let cam = CameraMotion::Walking { pan_speed: 8.0 };
+        for t in [0.0, 1.0, 7.5, 42.0] {
+            let (vx, vy) = cam.flow(t);
+            assert_eq!(vx, 8.0, "pan must be the constant pan_speed");
+            let sway = 0.15 * 8.0 * (0.9 * t).sin();
+            assert!((vy - sway).abs() < 1e-12);
+            assert!(vy.abs() <= 0.15 * 8.0 + 1e-12);
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::coordinator::policy::{
 use crate::coordinator::scheduler::{run_realtime, OracleBackend};
 use crate::dataset::catalog::{generate, SequenceId};
 use crate::detection::Detection;
+use crate::features::FrameFeatures;
 use crate::sim::latency::LatencyModel;
 use crate::sim::oracle::OracleDetector;
 use crate::util::csv::CsvTable;
@@ -36,10 +37,10 @@ pub fn mean_bbs(dets: &[Detection], fw: f64, fh: f64) -> f64 {
 }
 
 impl SelectionPolicy for MeanBbsPolicy {
-    fn select(&mut self, mbbs_prev: f64) -> crate::DnnKind {
-        // the scheduler feeds the median; this wrapper is used via
-        // run_realtime_with_stat below, which feeds the mean instead
-        self.0.select_pure(mbbs_prev)
+    fn select(&mut self, features: &FrameFeatures) -> crate::DnnKind {
+        // the ablation loop below builds the feature vector with the
+        // *mean* statistic in the size channel instead of the median
+        self.0.select_pure(features.mbbs)
     }
 
     fn label(&self) -> String {
@@ -91,7 +92,7 @@ fn median_vs_mean() -> (AsciiTable, CsvTable) {
                 } else {
                     mean_bbs(&carried, fw, fh)
                 };
-                let dnn = policy.select(stat);
+                let dnn = policy.select(&FrameFeatures::mbbs_only(stat));
                 let (outcome, _) = acc.on_frame(f, || lat.sample(dnn));
                 if outcome == FrameOutcome::Inferred {
                     use crate::coordinator::scheduler::Detector;
@@ -150,8 +151,10 @@ fn threshold_sensitivity() -> (AsciiTable, CsvTable) {
     for (name, h) in variants {
         let mut mean = 0.0;
         for seq in &seqs {
-            let mut policy =
-                MbbsPolicy::new(Thresholds::new(h.to_vec()));
+            let mut policy = MbbsPolicy::new(
+                Thresholds::new(h.to_vec())
+                    .expect("perturbed H_opt stays valid"),
+            );
             let mut det = oracle_for(seq);
             let mut lat = LatencyModel::deterministic();
             let r = run_realtime(seq, &mut policy, &mut det, &mut lat, 30.0);

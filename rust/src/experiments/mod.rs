@@ -10,6 +10,7 @@ pub mod accuracy;
 pub mod latency_fig;
 pub mod multistream_fig;
 pub mod policy_stats;
+pub mod predictor_fig;
 pub mod table1;
 pub mod telemetry_figs;
 
@@ -40,10 +41,10 @@ impl ExperimentOutput {
 
 /// All experiment ids: the paper's artifacts in paper order, then the
 /// beyond-the-paper studies.
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "ablations",
-    "multistream",
+    "multistream", "predictor",
 ];
 
 /// Run one experiment by id.
@@ -66,6 +67,7 @@ pub fn run(id: &str, campaign: &mut Campaign) -> Option<ExperimentOutput> {
         "multistream" => {
             Some(multistream_fig::multistream_scaling(campaign))
         }
+        "predictor" => Some(predictor_fig::predictor_compare(campaign)),
         _ => None,
     }
 }

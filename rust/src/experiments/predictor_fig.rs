@@ -1,0 +1,101 @@
+//! The `predictor` experiment: feature-driven projected-accuracy
+//! selection vs the paper's threshold ladder and the fixed baselines.
+//!
+//! This is the beyond-the-paper study backing the second headline claim
+//! (size *and speed* driven selection): per sequence, compare the
+//! calibrated [`crate::coordinator::projected::ProjectedAccuracyPolicy`]
+//! against TOD with `H_opt` and the best fixed single DNN, plus the
+//! selection-behaviour summary (deployment mix and switches).
+
+use crate::app::Campaign;
+use crate::dataset::catalog::SequenceId;
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+use crate::DnnKind;
+
+use super::ExperimentOutput;
+
+pub fn predictor_compare(c: &mut Campaign) -> ExperimentOutput {
+    let mut table = AsciiTable::new(
+        "Predictor — projected-accuracy selection vs TOD(H_opt) vs fixed \
+         DNNs (real-time AP at eval FPS)",
+        vec![
+            "sequence",
+            "best fixed",
+            "AP(fixed)",
+            "AP(tod)",
+            "AP(projected)",
+            "proj tiny%",
+        ],
+    );
+    let mut csv = CsvTable::new(vec![
+        "sequence",
+        "best_fixed_dnn",
+        "ap_best_fixed",
+        "ap_tod",
+        "ap_projected",
+        "projected_tiny_share",
+    ]);
+    let (mut mean_fixed, mut mean_tod, mut mean_proj) = (0.0, 0.0, 0.0);
+    // the best *single* fixed DNN across the whole catalog (one network
+    // deployed everywhere — the deployment the paper's Fig. 8 beats)
+    let mut fixed_catalog_mean = [0.0f64; 4];
+    let n = SequenceId::ALL.len() as f64;
+    for id in SequenceId::ALL {
+        for k in DnnKind::ALL {
+            fixed_catalog_mean[k.index()] +=
+                c.realtime_fixed(id, k).ap / n;
+        }
+    }
+    for id in SequenceId::ALL {
+        let (best_kind, best_ap) = c.best_fixed_realtime(id);
+        let tod_ap = c.tod(id).ap;
+        let proj = c.projected(id).clone();
+        let freq = proj.deploy_freq();
+        let tiny = (freq[0] + freq[1]) * 100.0;
+        table.push(vec![
+            id.name().to_string(),
+            best_kind.short_label().to_string(),
+            format!("{best_ap:.3}"),
+            format!("{tod_ap:.3}"),
+            format!("{:.3}", proj.ap),
+            format!("{tiny:.1}"),
+        ]);
+        csv.push(vec![
+            id.name().to_string(),
+            best_kind.artifact_name().to_string(),
+            format!("{best_ap:.4}"),
+            format!("{tod_ap:.4}"),
+            format!("{:.4}", proj.ap),
+            format!("{:.4}", tiny / 100.0),
+        ]);
+        mean_fixed += best_ap / n;
+        mean_tod += tod_ap / n;
+        mean_proj += proj.ap / n;
+    }
+    let best_single = DnnKind::ALL
+        .iter()
+        .copied()
+        .max_by(|a, b| {
+            fixed_catalog_mean[a.index()]
+                .partial_cmp(&fixed_catalog_mean[b.index()])
+                .unwrap()
+        })
+        .unwrap();
+    let text = format!(
+        "{}\nmeans: per-seq best fixed {mean_fixed:.3} | TOD(H_opt) \
+         {mean_tod:.3} | projected {mean_proj:.3}\nbest single fixed DNN \
+         over the catalog: {} at {:.3} mean AP\n(projected selection uses \
+         the size x speed calibration table; `tod calibrate` persists it, \
+         `tod run --policy projected` loads it)\n",
+        table.render(),
+        best_single.short_label(),
+        fixed_catalog_mean[best_single.index()],
+    );
+    ExperimentOutput {
+        id: "predictor",
+        title: "Predictor: projected-accuracy selection".into(),
+        text,
+        csv: vec![("predictor_compare.csv".into(), csv)],
+    }
+}

@@ -1,0 +1,111 @@
+//! Exponentially-weighted moving average for stream-feature smoothing.
+//!
+//! Per-frame speed samples are noisy: the oracle's localisation jitter
+//! moves detection centroids by a few pixels even in a static scene, and
+//! drop-frame schedules space samples unevenly. The selection policy
+//! should respond to the *regime* (walking camera vs static camera), not
+//! to single-frame noise, so the extractor smooths with an EWMA whose
+//! alpha is configurable per deployment.
+
+/// EWMA accumulator: `v <- alpha * x + (1 - alpha) * v`.
+///
+/// The first observation seeds the average directly (no bias towards an
+/// arbitrary zero start), matching the common "EWMA with warm start"
+/// formulation.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: 1.0 = no smoothing (track the latest sample).
+    pub fn new(alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
+        Ewma { alpha, value: None }
+    }
+
+    /// Fold one sample in and return the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average; 0.0 before the first sample (the same neutral
+    /// start as MBBS on an empty frame).
+    pub fn value(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    /// True once at least one sample has been folded in.
+    pub fn is_warm(&self) -> bool {
+        self.value.is_some()
+    }
+
+    /// Forget all history (stream restart).
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_seeds_directly() {
+        let mut e = Ewma::new(0.1);
+        assert_eq!(e.value(), 0.0);
+        assert!(!e.is_warm());
+        assert_eq!(e.update(5.0), 5.0);
+        assert!(e.is_warm());
+    }
+
+    #[test]
+    fn converges_to_constant_input() {
+        let mut e = Ewma::new(0.3);
+        e.update(0.0);
+        for _ in 0..100 {
+            e.update(8.0);
+        }
+        assert!((e.value() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_one_tracks_latest() {
+        let mut e = Ewma::new(1.0);
+        e.update(3.0);
+        assert_eq!(e.update(7.0), 7.0);
+    }
+
+    #[test]
+    fn smoothing_damps_spikes() {
+        let mut e = Ewma::new(0.2);
+        e.update(1.0);
+        let after_spike = e.update(100.0);
+        // one spike moves the average only alpha of the way
+        assert!((after_spike - (0.2 * 100.0 + 0.8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_forgets() {
+        let mut e = Ewma::new(0.5);
+        e.update(4.0);
+        e.reset();
+        assert_eq!(e.value(), 0.0);
+        assert_eq!(e.update(2.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be in")]
+    fn zero_alpha_rejected() {
+        Ewma::new(0.0);
+    }
+}

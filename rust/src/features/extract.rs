@@ -1,0 +1,425 @@
+//! Online per-frame stream-feature extraction.
+//!
+//! The paper's second contribution claims selection should react to
+//! "characteristics of the video stream such as object size and speed of
+//! movement". [`FrameFeatures`] is that characteristic vector, computed
+//! incrementally from the detections the application already has (the
+//! previous frame's carried boxes) — no extra inference, no pixel access:
+//!
+//! * `mbbs` — the paper's Median of Bounding-Box Sizes (area fraction);
+//! * `count` / `density` — how many objects and how much of the frame
+//!   they cover;
+//! * `speed` — apparent object speed, estimated by greedy IoU/centroid
+//!   matching of consecutive detection snapshots and smoothed by a
+//!   configurable EWMA ([`super::ewma::Ewma`]).
+//!
+//! Speed is the magnitude of the *median* matched displacement vector
+//! (median over dx and dy separately). The median of signed components
+//! makes the estimate a coherent-flow statistic: per-box localisation
+//! jitter and opposing pedestrian motion cancel, while camera pan/flow —
+//! the dominant regime signal the paper's camera groups differ by —
+//! passes through undamped. It is reported in *frame diagonals per
+//! frame* so it is comparable across resolutions (a 20 px/frame pan
+//! means something very different at 640x480 than at 1920x1080).
+//! Matching is O(|prev| · |cur|) per update — microseconds at MOT
+//! densities, comfortably inside the paper's "negligible overhead"
+//! envelope (see `benches/selection.rs`).
+
+use crate::detection::{mbbs, Detection};
+use crate::util::stats::median;
+
+use super::ewma::Ewma;
+
+/// The per-frame feature vector handed to
+/// [`crate::coordinator::policy::SelectionPolicy::select`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameFeatures {
+    /// Median bounding-box size, fraction of frame area (the paper's
+    /// Algorithm 1 signal). 0.0 when there are no detections.
+    pub mbbs: f64,
+    /// Number of carried detections.
+    pub count: usize,
+    /// Total box area as a fraction of the frame (scene coverage).
+    pub density: f64,
+    /// EWMA-smoothed apparent object speed, frame diagonals per frame.
+    /// 0.0 until two distinct detection snapshots have been observed.
+    pub speed: f64,
+}
+
+impl FrameFeatures {
+    /// A size-only feature vector (count/density/speed zero) — the
+    /// degenerate view legacy MBBS-threshold policies consume, used by
+    /// tests and callers that have no extractor state.
+    pub fn mbbs_only(mbbs: f64) -> Self {
+        FrameFeatures { mbbs, count: 0, density: 0.0, speed: 0.0 }
+    }
+}
+
+/// Tunables for the extractor.
+#[derive(Debug, Clone)]
+pub struct FeatureConfig {
+    /// EWMA smoothing factor for the speed estimate, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Minimum IoU for an IoU-based match between snapshots.
+    pub iou_gate: f64,
+    /// Fallback centroid-distance gate, in multiples of the mean box
+    /// diagonal of the candidate pair.
+    pub centroid_gate: f64,
+}
+
+impl Default for FeatureConfig {
+    fn default() -> Self {
+        FeatureConfig { ewma_alpha: 0.25, iou_gate: 0.05, centroid_gate: 2.0 }
+    }
+}
+
+/// Incremental feature extractor for one stream.
+///
+/// Call [`features`](Self::features) with the detections visible at the
+/// current frame (typically the carried set) to read the feature vector,
+/// and [`on_detections`](Self::on_detections) whenever an inference
+/// produces a *fresh* snapshot, so the speed estimate advances. Dropped
+/// frames (carried boxes unchanged) must not call `on_detections` — a
+/// carried set matched against itself would report zero motion and drag
+/// the speed estimate down during exactly the heavy-DNN schedules where
+/// motion matters most.
+#[derive(Debug, Clone)]
+pub struct FeatureExtractor {
+    cfg: FeatureConfig,
+    frame_w: f64,
+    frame_h: f64,
+    /// Frame diagonal, px — the speed normaliser.
+    diag: f64,
+    speed: Ewma,
+    /// Last distinct detection snapshot and the frame it came from.
+    prev: Vec<Detection>,
+    prev_frame: Option<u64>,
+}
+
+impl FeatureExtractor {
+    pub fn new(frame_w: f64, frame_h: f64) -> Self {
+        FeatureExtractor::with_config(FeatureConfig::default(), frame_w, frame_h)
+    }
+
+    pub fn with_config(cfg: FeatureConfig, frame_w: f64, frame_h: f64) -> Self {
+        assert!(frame_w > 0.0 && frame_h > 0.0, "frame must be non-empty");
+        let alpha = cfg.ewma_alpha;
+        FeatureExtractor {
+            cfg,
+            frame_w,
+            frame_h,
+            diag: (frame_w * frame_w + frame_h * frame_h).sqrt(),
+            speed: Ewma::new(alpha),
+            prev: Vec::new(),
+            prev_frame: None,
+        }
+    }
+
+    /// Feature vector for a frame whose visible detections are `dets`.
+    /// `mbbs` is bit-identical to [`crate::detection::mbbs`] on the same
+    /// set, so MBBS-threshold policies behave exactly as before.
+    pub fn features(&self, dets: &[Detection]) -> FrameFeatures {
+        let density = dets
+            .iter()
+            .map(|d| d.bbox.area_frac(self.frame_w, self.frame_h))
+            .sum();
+        FrameFeatures {
+            mbbs: mbbs(dets, self.frame_w, self.frame_h),
+            count: dets.len(),
+            density,
+            speed: self.speed.value(),
+        }
+    }
+
+    /// Current smoothed speed estimate (frame diagonals per frame).
+    pub fn speed(&self) -> f64 {
+        self.speed.value()
+    }
+
+    /// Fold a fresh detection snapshot (from an inference at `frame`)
+    /// into the speed estimate. Displacements are divided by the frame
+    /// gap since the previous snapshot, so sparse heavy-DNN schedules
+    /// and dense light-DNN schedules estimate the same physical speed.
+    pub fn on_detections(&mut self, frame: u64, dets: &[Detection]) {
+        if let Some(prev_frame) = self.prev_frame {
+            let gap = frame.saturating_sub(prev_frame);
+            if gap > 0 {
+                let disp = match_displacements(
+                    &self.prev,
+                    dets,
+                    self.cfg.iou_gate,
+                    self.cfg.centroid_gate,
+                );
+                if !disp.is_empty() {
+                    let dxs: Vec<f64> =
+                        disp.iter().map(|&(dx, _)| dx).collect();
+                    let dys: Vec<f64> =
+                        disp.iter().map(|&(_, dy)| dy).collect();
+                    let (mx, my) = (median(&dxs), median(&dys));
+                    let px_per_frame =
+                        (mx * mx + my * my).sqrt() / gap as f64;
+                    self.speed.update(px_per_frame / self.diag);
+                }
+            }
+        }
+        self.prev.clear();
+        self.prev.extend_from_slice(dets);
+        self.prev_frame = Some(frame);
+    }
+
+    /// Forget all history (stream restart).
+    pub fn reset(&mut self) {
+        self.speed.reset();
+        self.prev.clear();
+        self.prev_frame = None;
+    }
+}
+
+/// Greedy two-stage matching of consecutive detection snapshots,
+/// returning the signed centroid displacement `(dx, dy)` in px
+/// (current minus previous) of each matched pair.
+///
+/// Stage 1 pairs by descending IoU (above `iou_gate`); stage 2 pairs the
+/// leftovers by ascending centroid distance, gated at `centroid_gate`
+/// mean box diagonals (fast objects can fully leave their old box
+/// between sparse inferences, where IoU is zero but the track is
+/// unambiguous). O(|prev| · |cur|) candidate pairs.
+fn match_displacements(
+    prev: &[Detection],
+    cur: &[Detection],
+    iou_gate: f64,
+    centroid_gate: f64,
+) -> Vec<(f64, f64)> {
+    if prev.is_empty() || cur.is_empty() {
+        return Vec::new();
+    }
+    let mut prev_used = vec![false; prev.len()];
+    let mut cur_used = vec![false; cur.len()];
+    let mut out = Vec::new();
+
+    // stage 1: IoU pairs, best overlap first
+    let mut iou_pairs: Vec<(f64, usize, usize)> = Vec::new();
+    for (i, p) in prev.iter().enumerate() {
+        for (j, c) in cur.iter().enumerate() {
+            let iou = p.bbox.iou(&c.bbox);
+            if iou >= iou_gate {
+                iou_pairs.push((iou, i, j));
+            }
+        }
+    }
+    iou_pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for &(_, i, j) in &iou_pairs {
+        if prev_used[i] || cur_used[j] {
+            continue;
+        }
+        prev_used[i] = true;
+        cur_used[j] = true;
+        out.push(displacement(&prev[i], &cur[j]));
+    }
+
+    // stage 2: nearest-centroid pairs among the unmatched
+    let mut dist_pairs: Vec<(f64, usize, usize)> = Vec::new();
+    for (i, p) in prev.iter().enumerate() {
+        if prev_used[i] {
+            continue;
+        }
+        for (j, c) in cur.iter().enumerate() {
+            if cur_used[j] {
+                continue;
+            }
+            let (dx, dy) = displacement(p, c);
+            let dist = (dx * dx + dy * dy).sqrt();
+            let gate = centroid_gate * 0.5 * (diagonal(p) + diagonal(c));
+            if dist <= gate {
+                dist_pairs.push((dist, i, j));
+            }
+        }
+    }
+    dist_pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for &(_, i, j) in &dist_pairs {
+        if prev_used[i] || cur_used[j] {
+            continue;
+        }
+        prev_used[i] = true;
+        cur_used[j] = true;
+        out.push(displacement(&prev[i], &cur[j]));
+    }
+    out
+}
+
+/// Signed centroid displacement `cur - prev`, px.
+fn displacement(prev: &Detection, cur: &Detection) -> (f64, f64) {
+    let (px, py) = prev.bbox.center();
+    let (cx, cy) = cur.bbox.center();
+    (cx - px, cy - py)
+}
+
+fn diagonal(d: &Detection) -> f64 {
+    (d.bbox.w * d.bbox.w + d.bbox.h * d.bbox.h).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::PERSON_CLASS;
+    use crate::geometry::BBox;
+
+    fn det(x: f64, y: f64, w: f64, h: f64) -> Detection {
+        Detection::new(BBox::new(x, y, w, h), 0.9, PERSON_CLASS)
+    }
+
+    #[test]
+    fn mbbs_only_is_neutral_elsewhere() {
+        let f = FrameFeatures::mbbs_only(0.03);
+        assert_eq!(f.mbbs, 0.03);
+        assert_eq!(f.count, 0);
+        assert_eq!(f.density, 0.0);
+        assert_eq!(f.speed, 0.0);
+    }
+
+    #[test]
+    fn features_match_detection_mbbs() {
+        let fx = FeatureExtractor::new(960.0, 540.0);
+        let dets =
+            vec![det(10.0, 10.0, 40.0, 90.0), det(200.0, 50.0, 60.0, 120.0)];
+        let f = fx.features(&dets);
+        assert_eq!(f.mbbs, mbbs(&dets, 960.0, 540.0));
+        assert_eq!(f.count, 2);
+        let cover = (40.0 * 90.0 + 60.0 * 120.0) / (960.0 * 540.0);
+        assert!((f.density - cover).abs() < 1e-12);
+        assert_eq!(f.speed, 0.0);
+    }
+
+    #[test]
+    fn constant_translation_recovers_speed() {
+        let mut fx = FeatureExtractor::with_config(
+            FeatureConfig { ewma_alpha: 1.0, ..FeatureConfig::default() },
+            1000.0,
+            1000.0,
+        );
+        let diag = (2.0f64).sqrt() * 1000.0;
+        // three objects all moving +5 px/frame in x
+        for f in 1..=20u64 {
+            let x0 = 5.0 * f as f64;
+            let dets = vec![
+                det(x0, 100.0, 50.0, 100.0),
+                det(x0 + 200.0, 300.0, 50.0, 100.0),
+                det(x0 + 400.0, 500.0, 50.0, 100.0),
+            ];
+            fx.on_detections(f, &dets);
+        }
+        assert!((fx.speed() * diag - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frame_gap_normalises_sparse_schedules() {
+        // snapshots every 4 frames, objects at +5 px/frame -> 20 px per
+        // snapshot, but the per-frame estimate must still be 5
+        let mut fx = FeatureExtractor::with_config(
+            FeatureConfig { ewma_alpha: 1.0, ..FeatureConfig::default() },
+            1000.0,
+            1000.0,
+        );
+        let diag = (2.0f64).sqrt() * 1000.0;
+        for k in 0..6u64 {
+            let f = 1 + 4 * k;
+            let x0 = 5.0 * f as f64;
+            fx.on_detections(f, &[det(x0, 100.0, 60.0, 120.0)]);
+        }
+        assert!((fx.speed() * diag - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_scene_speed_is_zero() {
+        let mut fx = FeatureExtractor::new(1000.0, 1000.0);
+        for f in 1..=10u64 {
+            fx.on_detections(
+                f,
+                &[det(100.0, 100.0, 50.0, 100.0), det(400.0, 200.0, 50.0, 100.0)],
+            );
+        }
+        assert_eq!(fx.speed(), 0.0);
+    }
+
+    #[test]
+    fn centroid_fallback_catches_fast_objects() {
+        // 80 px jump with a 50x100 box: IoU is 0, centroid matching
+        // (gate 2 diagonals ≈ 224 px) must still pair them
+        let d = match_displacements(
+            &[det(0.0, 0.0, 50.0, 100.0)],
+            &[det(80.0, 0.0, 50.0, 100.0)],
+            0.05,
+            2.0,
+        );
+        assert_eq!(d.len(), 1);
+        assert!((d[0].0 - 80.0).abs() < 1e-9);
+        assert!(d[0].1.abs() < 1e-9);
+    }
+
+    #[test]
+    fn far_objects_stay_unmatched() {
+        let d = match_displacements(
+            &[det(0.0, 0.0, 20.0, 40.0)],
+            &[det(900.0, 900.0, 20.0, 40.0)],
+            0.05,
+            2.0,
+        );
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn greedy_iou_prefers_best_overlap() {
+        // one prev box, two cur candidates: the higher-IoU one wins and
+        // the other goes unmatched (too far for the centroid gate too)
+        let prev = vec![det(0.0, 0.0, 100.0, 100.0)];
+        let cur = vec![
+            det(5.0, 0.0, 100.0, 100.0),   // near-perfect overlap
+            det(70.0, 0.0, 100.0, 100.0),  // partial overlap
+        ];
+        let d = match_displacements(&prev, &cur, 0.05, 0.1);
+        assert_eq!(d.len(), 1);
+        assert!((d[0].0 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opposing_motion_cancels_in_median_flow() {
+        // two pedestrians walking towards each other: coherent flow is
+        // zero, so the speed estimate stays near zero even though each
+        // box moved 6 px (the regime signal is camera flow, not gait)
+        let mut fx = FeatureExtractor::with_config(
+            FeatureConfig { ewma_alpha: 1.0, ..FeatureConfig::default() },
+            1000.0,
+            1000.0,
+        );
+        for f in 1..=10u64 {
+            let t = f as f64;
+            let dets = vec![
+                det(100.0 + 6.0 * t, 100.0, 50.0, 100.0),
+                det(700.0 - 6.0 * t, 100.0, 50.0, 100.0),
+            ];
+            fx.on_detections(f, &dets);
+        }
+        // median of {+6, -6} per axis is the midpoint 0
+        assert!(fx.speed() < 1e-9, "speed {}", fx.speed());
+    }
+
+    #[test]
+    fn empty_snapshots_do_not_update() {
+        let mut fx = FeatureExtractor::new(1000.0, 1000.0);
+        fx.on_detections(1, &[det(0.0, 0.0, 50.0, 100.0)]);
+        fx.on_detections(2, &[]); // objects lost
+        fx.on_detections(3, &[det(10.0, 0.0, 50.0, 100.0)]);
+        // no pairs were ever matched -> speed stays at its neutral 0
+        assert_eq!(fx.speed(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut fx = FeatureExtractor::new(1000.0, 1000.0);
+        fx.on_detections(1, &[det(0.0, 0.0, 50.0, 100.0)]);
+        fx.on_detections(2, &[det(30.0, 0.0, 50.0, 100.0)]);
+        assert!(fx.speed() > 0.0);
+        fx.reset();
+        assert_eq!(fx.speed(), 0.0);
+    }
+}

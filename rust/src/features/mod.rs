@@ -1,0 +1,18 @@
+//! Online stream-feature extraction: the runtime counterpart of the
+//! paper's "characteristics of the video stream such as object size and
+//! speed of movement".
+//!
+//! [`extract`] computes a per-frame [`FrameFeatures`] vector (MBBS,
+//! object count, density, apparent speed) incrementally from the
+//! detections the scheduler already carries; [`ewma`] provides the
+//! smoothing primitive. The feature vector is what every
+//! [`crate::coordinator::policy::SelectionPolicy`] now consumes —
+//! MBBS-threshold policies read only the size channel, the
+//! projected-accuracy policy ([`crate::coordinator::projected`]) reads
+//! size and speed against a calibrated [`crate::predictor`] table.
+
+pub mod ewma;
+pub mod extract;
+
+pub use ewma::Ewma;
+pub use extract::{FeatureConfig, FeatureExtractor, FrameFeatures};

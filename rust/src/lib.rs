@@ -13,6 +13,20 @@
 //! ([`runtime`]) that serves the four AOT-compiled YOLO-style detector
 //! variants produced by `python/compile/aot.py`.
 //!
+//! ## Feature-driven selection
+//!
+//! The paper's Algorithm 1 reads one number (MBBS) against hand-tuned
+//! thresholds. This crate generalises the decision input to a per-frame
+//! stream-feature vector ([`features::FrameFeatures`]: size, count,
+//! density, and EWMA-smoothed apparent speed from greedy IoU/centroid
+//! matching of consecutive detection sets) and adds a calibrated
+//! projected-accuracy selector
+//! ([`coordinator::projected::ProjectedAccuracyPolicy`] over a
+//! [`predictor::CalibrationTable`] fitted by `tod calibrate`), which
+//! picks the network maximising projected AP under a per-frame latency
+//! budget. MBBS-threshold policies consume the size channel only and
+//! stay bit-identical.
+//!
 //! ## Single stream vs many
 //!
 //! The paper's loop serves one camera per accelerator. This crate splits
@@ -43,7 +57,9 @@ pub mod detection;
 pub mod eval;
 pub mod exec;
 pub mod experiments;
+pub mod features;
 pub mod geometry;
+pub mod predictor;
 pub mod runtime;
 pub mod sim;
 pub mod telemetry;

@@ -18,13 +18,18 @@ use tod::app::Campaign;
 use tod::cli::Args;
 use tod::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
 use tod::coordinator::multistream::{DispatchPolicy, MultiStreamScheduler};
-use tod::coordinator::policy::{FixedPolicy, MbbsPolicy, SelectionPolicy};
+use tod::coordinator::policy::{
+    FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds,
+};
+use tod::coordinator::projected::ProjectedAccuracyPolicy;
 use tod::coordinator::scheduler::{run_realtime, OracleBackend, RunResult};
 use tod::coordinator::session::StreamSession;
 use tod::dataset::catalog::{generate, SequenceId};
+use tod::predictor::{calibrate, store, CalibrationConfig, CalibrationTable};
 use tod::sim::latency::{ContentionModel, LatencyModel};
 use tod::sim::oracle::OracleDetector;
 use tod::telemetry::tegrastats::TegrastatsSim;
+use tod::DnnKind;
 
 fn main() {
     let args = Args::from_env();
@@ -32,6 +37,7 @@ fn main() {
         Some("figures") => cmd_figures(&args),
         Some("search") => cmd_search(),
         Some("run") => cmd_run(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("multistream") => cmd_multistream(&args),
         Some("dataset") => cmd_dataset(&args),
         Some("serve") => cmd_serve(&args),
@@ -52,12 +58,26 @@ fn main() {
 fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
-         usage: tod <figures|search|run|multistream|dataset|serve|bench-report> \
-         [flags]\n\
+         usage: tod <figures|search|run|calibrate|multistream|dataset|\
+         serve|bench-report> [flags]\n\
          \n\
-         figures --all | --id <table1|fig4..fig15|multistream> [--out results]\n\
+         figures --all | --id <table1|fig4..fig15|multistream|predictor> \
+         [--out results]\n\
          search\n\
-         run --seq MOT17-05 [--policy tod|fixed:yolov4-416|chameleon] [--fps 14]\n\
+         run --seq MOT17-05 [--policy <spec>] [--fps 14]\n  \
+         policy specs: tod (Algorithm 1 with H_opt), tod:<h1,h2,h3> \
+         (custom\n  \
+         ascending thresholds), fixed:<dnn> (e.g. fixed:yolov4-416), \
+         chameleon\n  \
+         (periodic re-profiling), projected (projected-accuracy \
+         selection from a\n  \
+         calibration table; [--table calibration.json] [--budget-ms N])\n\
+         calibrate [--out calibration.json] [--fps 30] [--frames 180] \
+         [--quick]\n  \
+         fits the per-DNN size x speed projected-accuracy table on \
+         synthetic\n  \
+         operating points (oracle ground truth) and writes it as \
+         versioned JSON\n\
          multistream [--streams 4] [--dispatch rr|edf] [--alpha 0.12]\n\
          multistream --scaling [--scale 1,2,4,8] [--dispatch rr|edf]\n\
          dataset --out <dir>\n\
@@ -102,10 +122,69 @@ fn parse_policy(spec: &str) -> Result<Box<dyn SelectionPolicy>, String> {
     if spec == "tod" {
         return Ok(Box::new(MbbsPolicy::tod_default()));
     }
+    if let Some(h) = spec.strip_prefix("tod:") {
+        // user-supplied thresholds: validation errors come back as
+        // messages, not panics
+        let vals: Vec<f64> = h
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("invalid threshold: {t:?}"))
+            })
+            .collect::<Result<_, String>>()?;
+        let th = Thresholds::new(vals).map_err(|e| e.to_string())?;
+        if th.n_dnn() != DnnKind::ALL.len() {
+            return Err(format!(
+                "need {} thresholds for the {}-DNN ladder, got {}",
+                DnnKind::ALL.len() - 1,
+                DnnKind::ALL.len(),
+                th.values().len()
+            ));
+        }
+        return Ok(Box::new(MbbsPolicy::new(th)));
+    }
     if let Some(d) = spec.strip_prefix("fixed:") {
         return Ok(Box::new(FixedPolicy(d.parse()?)));
     }
-    Err(format!("unknown policy: {spec} (want tod|fixed:<dnn>|chameleon)"))
+    Err(format!(
+        "unknown policy: {spec} \
+         (want tod|tod:<h1,h2,h3>|fixed:<dnn>|chameleon|projected)"
+    ))
+}
+
+/// Load (or, with a note, fit in-memory) the calibration table for
+/// `--policy projected`. The in-memory fallback applies only to the
+/// implicit default path — an explicitly passed `--table` that does not
+/// exist is an error (a typo must not silently swap the table).
+fn projected_table(args: &Args, fps: f64) -> Result<CalibrationTable, String> {
+    let explicit = args.get("table").filter(|v| !v.is_empty());
+    let path = PathBuf::from(explicit.unwrap_or("calibration.json"));
+    let table = if path.exists() {
+        store::load(&path)?
+    } else if explicit.is_some() {
+        return Err(format!(
+            "--table {}: no such file (run `tod calibrate --out {0}` \
+             first)",
+            path.display()
+        ));
+    } else {
+        eprintln!(
+            "note: {} not found; calibrating in-memory at {fps} FPS \
+             (run `tod calibrate` once to persist the table)",
+            path.display()
+        );
+        calibrate(&CalibrationConfig::default_for_fps(fps))
+    };
+    if (table.fps - fps).abs() > 1e-9 {
+        eprintln!(
+            "note: table calibrated at {} FPS but the stream runs at \
+             {fps} FPS; projected APs will be approximate (re-run \
+             `tod calibrate --fps {fps}` for an exact match)",
+            table.fps
+        );
+    }
+    Ok(table)
 }
 
 fn print_run(r: &RunResult) {
@@ -165,6 +244,28 @@ fn cmd_run(args: &Args) -> i32 {
     let r = if policy_spec == "chameleon" {
         run_chameleon_lite(&seq, &mut det, &mut lat, fps,
                            &ChameleonConfig::default())
+    } else if policy_spec == "projected" {
+        let table = match projected_table(args, fps) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let budget_s = match args.get_parse("budget-ms", f64::INFINITY) {
+            Ok(ms) if ms > 0.0 => ms / 1e3,
+            Ok(ms) => {
+                eprintln!("--budget-ms must be positive, got {ms}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let mut policy =
+            ProjectedAccuracyPolicy::with_budget(table, &lat, budget_s);
+        run_realtime(&seq, &mut policy, &mut det, &mut lat, fps)
     } else {
         let mut policy = match parse_policy(policy_spec) {
             Ok(p) => p,
@@ -177,6 +278,87 @@ fn cmd_run(args: &Args) -> i32 {
     };
     print_run(&r);
     0
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let out = PathBuf::from(args.get("out").unwrap_or("calibration.json"));
+    let fps = match args.get_parse("fps", 30.0) {
+        Ok(v) if v > 0.0 => v,
+        Ok(v) => {
+            eprintln!("--fps must be positive, got {v}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut cfg = if args.has("quick") {
+        CalibrationConfig::quick(fps)
+    } else {
+        CalibrationConfig::default_for_fps(fps)
+    };
+    cfg.frames = match args.get_parse("frames", cfg.frames) {
+        Ok(v) if v > 0 => v,
+        Ok(v) => {
+            eprintln!("--frames must be positive, got {v}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "calibrating {}x{} (size x speed) cells, {} frames each, 4 DNNs, \
+         at {fps} FPS...",
+        cfg.size_targets.len(),
+        cfg.speed_targets.len(),
+        cfg.frames
+    );
+    let table = calibrate(&cfg);
+    // the selection map: which DNN wins each cell (rows = size, cols =
+    // speed) — the calibrated replacement for the paper's Table I
+    println!("selection map (rows: MBBS; cols: speed in frame-diag/frame):");
+    print!("{:>9}", "");
+    for v in &table.speed_axis {
+        print!(" {v:>8.4}");
+    }
+    println!();
+    for (si, s) in table.size_axis.iter().enumerate() {
+        print!("{s:>9.4}");
+        for vi in 0..table.speed_axis.len() {
+            // same tie-break as ProjectedAccuracyPolicy::select_pure:
+            // strictly-greater over lightest -> heaviest keeps the
+            // lighter net, so the map shows what would actually deploy
+            let mut best = DnnKind::TinyY288;
+            let mut best_v = f64::NEG_INFINITY;
+            for k in DnnKind::ALL {
+                let v = table.ap[k.index()][si][vi];
+                if v > best_v {
+                    best_v = v;
+                    best = k;
+                }
+            }
+            print!(" {:>8}", best.short_label());
+        }
+        println!();
+    }
+    match store::save(&table, &out) {
+        Ok(()) => {
+            println!(
+                "calibration table ({} cells, version {}) -> {}",
+                table.n_cells(),
+                tod::predictor::TABLE_VERSION,
+                out.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing {}: {e}", out.display());
+            1
+        }
+    }
 }
 
 fn cmd_multistream(args: &Args) -> i32 {

@@ -1,0 +1,19 @@
+//! Projected-accuracy prediction: the calibrated model behind
+//! feature-driven DNN selection.
+//!
+//! The paper's Algorithm 1 encodes "which DNN wins at which object
+//! size" as three hand-tuned thresholds. This module replaces the
+//! hand-tuning with measurement: [`calibrate`] runs an offline campaign
+//! over synthetic operating points (object size × apparent speed) with
+//! the oracle detector as ground truth, [`model::CalibrationTable`]
+//! stores the per-DNN real-time AP surface, and [`store`] persists it
+//! as a versioned JSON document. At runtime
+//! [`crate::coordinator::projected::ProjectedAccuracyPolicy`] picks the
+//! feasible DNN with the highest projected AP — a lookup, not a search.
+
+pub mod calibrate;
+pub mod model;
+pub mod store;
+
+pub use calibrate::{calibrate, CalibrationConfig};
+pub use model::{CalibrationTable, TABLE_VERSION};

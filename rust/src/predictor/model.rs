@@ -1,0 +1,311 @@
+//! The per-DNN projected-accuracy model: a binned size×speed lookup
+//! table with bilinear interpolation.
+//!
+//! Each cell holds the AP a DNN achieved on a calibration sequence whose
+//! objects match the cell's (size, speed) operating point *under the
+//! real-time drop-frame accounting* — so a cell value already prices in
+//! the DNN's computational demand (a heavy net that drops four of every
+//! five frames and carries stale boxes scores poorly at high speed even
+//! though its per-frame accuracy is the best). Projecting accuracy is
+//! then a pure table lookup, which is what keeps runtime selection in
+//! the paper's "negligible overhead" envelope.
+
+use crate::coordinator::policy::Thresholds;
+use crate::features::FrameFeatures;
+use crate::DnnKind;
+
+/// Current schema version of the persisted table (see `store.rs`).
+pub const TABLE_VERSION: u32 = 1;
+
+/// Relative half-width of the boundary blend band used by
+/// [`CalibrationTable::from_ladder`]: interpolation between regions is
+/// confined to `h * (1 ± LADDER_EPS)` around each threshold.
+const LADDER_EPS: f64 = 1e-9;
+
+/// Binned size×speed projected-accuracy table for the four DNNs.
+///
+/// Axes hold ascending *cell-center* coordinates: `size_axis` in MBBS
+/// units (box area as a fraction of the frame), `speed_axis` in frame
+/// diagonals per frame (the [`crate::features`] speed unit). Lookups
+/// interpolate bilinearly between neighbouring centers and clamp at the
+/// edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationTable {
+    /// Evaluation FPS the table was calibrated under (drop-frame cost
+    /// depends on the frame budget, so tables are per-FPS).
+    pub fps: f64,
+    /// Ascending MBBS cell centers.
+    pub size_axis: Vec<f64>,
+    /// Ascending speed cell centers, frame diagonals per frame.
+    pub speed_axis: Vec<f64>,
+    /// `ap[dnn.index()][size_idx][speed_idx]`, each in [0, 1].
+    pub ap: Vec<Vec<Vec<f64>>>,
+}
+
+impl CalibrationTable {
+    /// Build and validate a table. Panics on malformed shapes — tables
+    /// from untrusted input go through `store::from_json`, which
+    /// validates first and reports errors instead.
+    pub fn new(
+        fps: f64,
+        size_axis: Vec<f64>,
+        speed_axis: Vec<f64>,
+        ap: Vec<Vec<Vec<f64>>>,
+    ) -> Self {
+        let t = CalibrationTable { fps, size_axis, speed_axis, ap };
+        if let Err(e) = t.validate() {
+            panic!("invalid calibration table: {e}");
+        }
+        t
+    }
+
+    /// Structural validation shared by the constructor and the store.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.fps > 0.0) {
+            return Err(format!("fps must be positive, got {}", self.fps));
+        }
+        for (name, axis) in
+            [("size_axis", &self.size_axis), ("speed_axis", &self.speed_axis)]
+        {
+            if axis.is_empty() {
+                return Err(format!("{name} must be non-empty"));
+            }
+            if !axis.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("{name} must be strictly ascending"));
+            }
+            if !axis.iter().all(|v| v.is_finite() && *v >= 0.0) {
+                return Err(format!("{name} must be finite and >= 0"));
+            }
+        }
+        if self.ap.len() != DnnKind::ALL.len() {
+            return Err(format!(
+                "need {} DNN grids, got {}",
+                DnnKind::ALL.len(),
+                self.ap.len()
+            ));
+        }
+        for (d, grid) in self.ap.iter().enumerate() {
+            if grid.len() != self.size_axis.len() {
+                return Err(format!(
+                    "dnn {d}: {} size rows, axis has {}",
+                    grid.len(),
+                    self.size_axis.len()
+                ));
+            }
+            for row in grid {
+                if row.len() != self.speed_axis.len() {
+                    return Err(format!(
+                        "dnn {d}: {} speed cells, axis has {}",
+                        row.len(),
+                        self.speed_axis.len()
+                    ));
+                }
+                if !row.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v))
+                {
+                    return Err(format!("dnn {d}: AP cells must be in [0,1]"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Projected AP of `dnn` at an operating point, by bilinear
+    /// interpolation over the cell centers (clamped at the axis edges).
+    pub fn project(&self, dnn: DnnKind, size: f64, speed: f64) -> f64 {
+        let (i0, i1, t) = bracket(&self.size_axis, size);
+        let (j0, j1, u) = bracket(&self.speed_axis, speed);
+        let g = &self.ap[dnn.index()];
+        (1.0 - t) * (1.0 - u) * g[i0][j0]
+            + t * (1.0 - u) * g[i1][j0]
+            + (1.0 - t) * u * g[i0][j1]
+            + t * u * g[i1][j1]
+    }
+
+    /// Projected AP for a feature vector (size = MBBS, speed channel).
+    pub fn project_features(&self, dnn: DnnKind, f: &FrameFeatures) -> f64 {
+        self.project(dnn, f.mbbs, f.speed)
+    }
+
+    /// Total number of (dnn × size × speed) cells.
+    pub fn n_cells(&self) -> usize {
+        DnnKind::ALL.len() * self.size_axis.len() * self.speed_axis.len()
+    }
+
+    /// A degenerate, size-only table that reproduces an MBBS threshold
+    /// ladder: one speed bin, and size cells arranged so that the
+    /// argmax-projected DNN in each threshold region is exactly the rung
+    /// Algorithm 1 would pick. Used by the golden equivalence test and
+    /// as a calibration-free fallback.
+    ///
+    /// Cell centers sit just inside each region boundary
+    /// (`h * (1 ± 1e-9)`), so interpolation only blends regions within a
+    /// vanishing band around the thresholds themselves.
+    pub fn from_ladder(thresholds: &Thresholds, ladder: &[DnnKind]) -> Self {
+        let h = thresholds.values();
+        assert_eq!(
+            h.len() + 1,
+            ladder.len(),
+            "need |ladder| - 1 thresholds"
+        );
+        // region r (ascending size) selects ladder[len - 1 - r]
+        let n_regions = ladder.len();
+        let mut size_axis = Vec::new();
+        let mut regions: Vec<usize> = Vec::new(); // region of each center
+        for (r, &hv) in h.iter().enumerate() {
+            size_axis.push(hv * (1.0 - LADDER_EPS));
+            regions.push(r);
+            size_axis.push(hv * (1.0 + LADDER_EPS));
+            regions.push(r + 1);
+        }
+        let mut ap =
+            vec![
+                vec![vec![0.0; 1]; size_axis.len()];
+                DnnKind::ALL.len()
+            ];
+        for (ci, &r) in regions.iter().enumerate() {
+            let intended = n_regions - 1 - r; // ladder position
+            for (pos, &dnn) in ladder.iter().enumerate() {
+                let dist = (pos as i64 - intended as i64).unsigned_abs();
+                ap[dnn.index()][ci][0] = 1.0 - 0.2 * dist as f64;
+            }
+        }
+        CalibrationTable::new(30.0, size_axis, vec![0.0], ap)
+    }
+}
+
+/// Find the bracketing indices and interpolation weight of `x` on an
+/// ascending axis: returns `(i0, i1, t)` with `t` in [0, 1]; clamps
+/// outside the axis range.
+fn bracket(axis: &[f64], x: f64) -> (usize, usize, f64) {
+    let n = axis.len();
+    if n == 1 || x <= axis[0] {
+        return (0, 0, 0.0);
+    }
+    if x >= axis[n - 1] {
+        return (n - 1, n - 1, 0.0);
+    }
+    // linear scan: axes are tiny (≤ ~10 cells), branch-predictable
+    let mut i = 0;
+    while axis[i + 1] < x {
+        i += 1;
+    }
+    let t = (x - axis[i]) / (axis[i + 1] - axis[i]);
+    (i, i + 1, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_table(values: [f64; 4]) -> CalibrationTable {
+        let ap = values
+            .iter()
+            .map(|&v| vec![vec![v; 2]; 2])
+            .collect();
+        CalibrationTable::new(
+            30.0,
+            vec![0.01, 0.05],
+            vec![0.0, 0.01],
+            ap,
+        )
+    }
+
+    #[test]
+    fn bracket_clamps_and_interpolates() {
+        let axis = [1.0, 2.0, 4.0];
+        assert_eq!(bracket(&axis, 0.5), (0, 0, 0.0));
+        assert_eq!(bracket(&axis, 9.0), (2, 2, 0.0));
+        let (i0, i1, t) = bracket(&axis, 3.0);
+        assert_eq!((i0, i1), (1, 2));
+        assert!((t - 0.5).abs() < 1e-12);
+        assert_eq!(bracket(&[5.0], 100.0), (0, 0, 0.0));
+    }
+
+    #[test]
+    fn flat_table_projects_constant() {
+        let t = flat_table([0.1, 0.2, 0.3, 0.4]);
+        for (i, k) in DnnKind::ALL.iter().enumerate() {
+            for (s, v) in [(0.0, 0.0), (0.03, 0.005), (1.0, 1.0)] {
+                let p = t.project(*k, s, v);
+                assert!((p - 0.1 * (i + 1) as f64).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_midpoint() {
+        // one dnn grid with distinct corners; query the center
+        let mut ap = vec![vec![vec![0.0; 2]; 2]; 4];
+        ap[0] = vec![vec![0.0, 1.0], vec![1.0, 1.0]];
+        let t = CalibrationTable::new(
+            30.0,
+            vec![0.0, 0.1],
+            vec![0.0, 0.02],
+            ap,
+        );
+        let mid = t.project(DnnKind::TinyY288, 0.05, 0.01);
+        assert!((mid - 0.75).abs() < 1e-12);
+        // corner values are reproduced exactly
+        assert_eq!(t.project(DnnKind::TinyY288, 0.0, 0.0), 0.0);
+        assert_eq!(t.project(DnnKind::TinyY288, 0.1, 0.02), 1.0);
+    }
+
+    #[test]
+    fn ladder_table_argmax_matches_regions() {
+        let th = Thresholds::h_opt();
+        let t = CalibrationTable::from_ladder(&th, &DnnKind::ALL);
+        let argmax = |size: f64| {
+            let mut best = DnnKind::TinyY288;
+            let mut best_v = f64::NEG_INFINITY;
+            for k in DnnKind::ALL {
+                let v = t.project(k, size, 0.0);
+                if v > best_v {
+                    best_v = v;
+                    best = k;
+                }
+            }
+            best
+        };
+        assert_eq!(argmax(0.0), DnnKind::Y416);
+        assert_eq!(argmax(0.004), DnnKind::Y416);
+        assert_eq!(argmax(0.0071), DnnKind::Y288);
+        assert_eq!(argmax(0.02), DnnKind::Y288);
+        assert_eq!(argmax(0.035), DnnKind::TinyY416);
+        assert_eq!(argmax(0.05), DnnKind::TinyY288);
+        assert_eq!(argmax(0.9), DnnKind::TinyY288);
+    }
+
+    #[test]
+    fn ladder_table_supports_short_ladders() {
+        let th = Thresholds::new(vec![0.01]).unwrap();
+        let t = CalibrationTable::from_ladder(
+            &th,
+            &[DnnKind::Y288, DnnKind::Y416],
+        );
+        // DNNs outside the ladder project to 0 and can never win
+        assert_eq!(t.project(DnnKind::TinyY288, 0.5, 0.0), 0.0);
+        assert!(t.project(DnnKind::Y288, 0.5, 0.0) > 0.9);
+        assert!(t.project(DnnKind::Y416, 0.005, 0.0) > 0.9);
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let good = flat_table([0.1, 0.2, 0.3, 0.4]);
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.size_axis = vec![0.05, 0.01]; // descending
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.ap[2][1] = vec![0.5]; // ragged speed row
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.ap[0][0][0] = 1.5; // out of [0,1]
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.ap.pop(); // missing a dnn grid
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.fps = 0.0;
+        assert!(bad.validate().is_err());
+    }
+}

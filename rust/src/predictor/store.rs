@@ -1,0 +1,221 @@
+//! Versioned JSON persistence for [`CalibrationTable`].
+//!
+//! The calibration campaign is minutes of compute; runtime selection is
+//! microseconds. The table is therefore persisted once (`tod calibrate`)
+//! and loaded at startup (`tod run --policy projected`). The schema is
+//! deliberately explicit (a `schema` tag plus a `version` integer) so a
+//! binary never silently misreads a table produced by a different
+//! calibration generation — see DESIGN.md §9 for the full schema.
+//!
+//! ```json
+//! {
+//!   "schema": "tod-calibration-table",
+//!   "version": 1,
+//!   "fps": 30,
+//!   "size_axis": [0.002, 0.005, ...],
+//!   "speed_axis": [0.0, 0.002, ...],
+//!   "projected_ap": {
+//!     "yolov4-tiny-288": [[...speed cells...], ...one row per size...],
+//!     "yolov4-tiny-416": [[...]], "yolov4-288": [[...]], "yolov4-416": [[...]]
+//!   }
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::DnnKind;
+
+use super::model::{CalibrationTable, TABLE_VERSION};
+
+/// The `schema` tag identifying a calibration-table document.
+pub const SCHEMA_TAG: &str = "tod-calibration-table";
+
+/// Serialize a table to the versioned JSON document.
+pub fn to_json(table: &CalibrationTable) -> Json {
+    let axis = |a: &[f64]| Json::arr(a.iter().map(|&v| Json::num(v)));
+    let mut dnns = Vec::new();
+    for k in DnnKind::ALL {
+        let grid = &table.ap[k.index()];
+        let rows = grid
+            .iter()
+            .map(|row| Json::arr(row.iter().map(|&v| Json::num(v))));
+        dnns.push((k.artifact_name(), Json::arr(rows)));
+    }
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA_TAG)),
+        ("version", Json::num(TABLE_VERSION as f64)),
+        ("fps", Json::num(table.fps)),
+        ("size_axis", axis(&table.size_axis)),
+        ("speed_axis", axis(&table.speed_axis)),
+        ("projected_ap", Json::obj(dnns)),
+    ])
+}
+
+/// Parse and validate a table from its JSON document.
+pub fn from_json(doc: &Json) -> Result<CalibrationTable, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing 'schema' tag")?;
+    if schema != SCHEMA_TAG {
+        return Err(format!(
+            "wrong schema: {schema:?} (want {SCHEMA_TAG:?})"
+        ));
+    }
+    let version = doc
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or("missing 'version'")?;
+    if version != TABLE_VERSION as usize {
+        return Err(format!(
+            "calibration table version {version} unsupported (this build \
+             reads version {TABLE_VERSION}; re-run `tod calibrate`)"
+        ));
+    }
+    let fps = doc
+        .get("fps")
+        .and_then(Json::as_f64)
+        .ok_or("missing 'fps'")?;
+    let axis = |key: &str| -> Result<Vec<f64>, String> {
+        doc.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("missing '{key}'"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| format!("non-numeric value in {key}"))
+            })
+            .collect()
+    };
+    let size_axis = axis("size_axis")?;
+    let speed_axis = axis("speed_axis")?;
+    let grids = doc
+        .get("projected_ap")
+        .ok_or("missing 'projected_ap'")?;
+    let mut ap = Vec::with_capacity(DnnKind::ALL.len());
+    for k in DnnKind::ALL {
+        let name = k.artifact_name();
+        let grid = grids
+            .get(name)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("missing grid for {name}"))?;
+        let mut rows = Vec::with_capacity(grid.len());
+        for row in grid {
+            let cells = row
+                .as_arr()
+                .ok_or_else(|| format!("{name}: grid row is not an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| format!("{name}: non-numeric AP cell"))
+                })
+                .collect::<Result<Vec<f64>, String>>()?;
+            rows.push(cells);
+        }
+        ap.push(rows);
+    }
+    let table = CalibrationTable { fps, size_axis, speed_axis, ap };
+    table.validate()?;
+    Ok(table)
+}
+
+/// Write a table to `path` as pretty JSON (parent dirs created).
+pub fn save(table: &CalibrationTable, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(table).to_pretty())
+}
+
+/// Load and validate a table from `path`.
+pub fn load(path: &Path) -> Result<CalibrationTable, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_table() -> CalibrationTable {
+        let ap = (0..4)
+            .map(|d| {
+                (0..3)
+                    .map(|s| {
+                        (0..2)
+                            .map(|v| {
+                                (0.1 * (d + 1) as f64
+                                    + 0.01 * s as f64
+                                    + 0.001 * v as f64)
+                                    .min(1.0)
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        CalibrationTable::new(
+            30.0,
+            vec![0.002, 0.01, 0.05],
+            vec![0.001, 0.01],
+            ap,
+        )
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let t = sample_table();
+        let doc = to_json(&t);
+        let back = from_json(&doc).unwrap();
+        assert_eq!(back, t);
+        // and through actual text serialization
+        let reparsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(from_json(&reparsed).unwrap(), t);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample_table();
+        let dir = std::env::temp_dir().join("tod_calib_store_test");
+        let path = dir.join("calibration.json");
+        save(&t, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_schema_and_version_rejected() {
+        let t = sample_table();
+        let doc = to_json(&t);
+        let mut wrong_schema = doc.clone();
+        if let Json::Obj(m) = &mut wrong_schema {
+            m.insert("schema".into(), Json::str("not-a-table"));
+        }
+        assert!(from_json(&wrong_schema).unwrap_err().contains("schema"));
+        let mut wrong_version = doc;
+        if let Json::Obj(m) = &mut wrong_version {
+            m.insert("version".into(), Json::num(99.0));
+        }
+        assert!(from_json(&wrong_version)
+            .unwrap_err()
+            .contains("version 99"));
+    }
+
+    #[test]
+    fn structural_errors_reported() {
+        let t = sample_table();
+        let mut doc = to_json(&t);
+        if let Json::Obj(m) = &mut doc {
+            m.remove("projected_ap");
+        }
+        assert!(from_json(&doc).unwrap_err().contains("projected_ap"));
+        assert!(load(Path::new("/nonexistent/calibration.json")).is_err());
+    }
+}

@@ -12,7 +12,8 @@ use crate::coordinator::policy::{MbbsPolicy, SelectionPolicy};
 use crate::coordinator::scheduler::Detector;
 use crate::dataset::mot::GtEntry;
 use crate::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
-use crate::detection::{mbbs, Detection, FrameDetections};
+use crate::detection::{Detection, FrameDetections};
+use crate::features::FeatureExtractor;
 use crate::runtime::decode::decode;
 use crate::runtime::pool::EnginePool;
 use crate::runtime::raster::rasterize;
@@ -123,18 +124,20 @@ pub fn serve_sequence(
 ) -> Result<ServeReport> {
     let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
     let mut backend = PjrtBackend::new(pool, fw, fh);
+    let mut features = FeatureExtractor::new(fw, fh);
     let mut carried: Vec<Detection> = Vec::new();
     let mut deploy = [0u64; 4];
     let mut switches = 0u64;
     let mut last: Option<DnnKind> = None;
     let t0 = Instant::now();
     for f in 1..=seq.n_frames() {
-        let m = mbbs(&carried, fw, fh);
-        let dnn = policy.select(m);
+        let feats = features.features(&carried);
+        let dnn = policy.select(&feats);
         let raw = backend.detect(f, seq.gt(f), dnn);
         carried = FrameDetections { frame: f, detections: raw }
             .filtered()
             .detections;
+        features.on_detections(f, &carried);
         deploy[dnn.index()] += 1;
         if let Some(prev) = last {
             if prev != dnn {

@@ -49,6 +49,12 @@ impl LatencyModel {
         self.profiles[dnn.index()].latency_mean_s
     }
 
+    /// Mean latencies of all four variants, lightest first — the
+    /// feasibility vector budget-constrained policies check per frame.
+    pub fn means(&self) -> [f64; 4] {
+        DnnKind::ALL.map(|d| self.mean(d))
+    }
+
     /// Sample one inference latency, seconds.
     pub fn sample(&mut self, dnn: DnnKind) -> f64 {
         let p = &self.profiles[dnn.index()];
@@ -130,6 +136,10 @@ mod tests {
         let mut m = LatencyModel::deterministic();
         for d in DnnKind::ALL {
             assert_eq!(m.sample(d), m.mean(d));
+        }
+        let means = m.means();
+        for d in DnnKind::ALL {
+            assert_eq!(means[d.index()], m.mean(d));
         }
     }
 

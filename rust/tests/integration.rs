@@ -182,8 +182,8 @@ fn custom_thresholds_change_deployment() {
         run_realtime(&seq, &mut pol, &mut mk(), &mut lat, 14.0)
             .deploy_freq()
     };
-    let low = run(Thresholds::new(vec![0.007, 0.03, 0.04]));
-    let high = run(Thresholds::new(vec![0.007, 0.03, 0.4]));
+    let low = run(Thresholds::new(vec![0.007, 0.03, 0.04]).unwrap());
+    let high = run(Thresholds::new(vec![0.007, 0.03, 0.4]).unwrap());
     assert!(low[0] > high[0] + 0.3, "low h3 {low:?} vs high h3 {high:?}");
 }
 

@@ -1,0 +1,157 @@
+//! Predictor-subsystem integration tests: golden equivalence with
+//! Algorithm 1, the calibrate → persist → load → select round-trip, and
+//! the headline acceptance run on the mixed-motion synth catalog.
+
+use tod::app::Campaign;
+use tod::coordinator::policy::{MbbsPolicy, Thresholds};
+use tod::coordinator::projected::ProjectedAccuracyPolicy;
+use tod::coordinator::scheduler::{run_realtime, OracleBackend};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::dataset::synth::Sequence;
+use tod::features::FrameFeatures;
+use tod::predictor::store;
+use tod::predictor::{calibrate, CalibrationConfig, CalibrationTable};
+use tod::sim::latency::LatencyModel;
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+fn oracle_for(seq: &Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+/// Golden equivalence: `ProjectedAccuracyPolicy` degenerated to
+/// size-only selection (one speed bin, ladder-shaped AP surface) must
+/// reproduce `MbbsPolicy` frame for frame on the full synth catalog —
+/// same per-frame DNN choices, same schedule, same AP. This pins the
+/// trait widening: the feature path cannot perturb Algorithm 1.
+#[test]
+fn golden_ladder_equivalence_on_full_catalog() {
+    let th = Thresholds::h_opt();
+    for id in SequenceId::ALL {
+        let seq = generate(id);
+        let mut mbbs_pol = MbbsPolicy::new(th.clone());
+        let mut proj = ProjectedAccuracyPolicy::new(
+            CalibrationTable::from_ladder(&th, &DnnKind::ALL),
+            &LatencyModel::deterministic(),
+        );
+        let mut lat_a = LatencyModel::deterministic();
+        let mut lat_b = LatencyModel::deterministic();
+        let a = run_realtime(
+            &seq,
+            &mut mbbs_pol,
+            &mut oracle_for(&seq),
+            &mut lat_a,
+            id.eval_fps(),
+        );
+        let b = run_realtime(
+            &seq,
+            &mut proj,
+            &mut oracle_for(&seq),
+            &mut lat_b,
+            id.eval_fps(),
+        );
+        assert_eq!(
+            a.dnn_series,
+            b.dnn_series,
+            "{}: per-frame selections diverged",
+            id.name()
+        );
+        assert_eq!(a.deploy_counts, b.deploy_counts, "{}", id.name());
+        assert_eq!(a.n_dropped, b.n_dropped, "{}", id.name());
+        assert_eq!(a.ap, b.ap, "{}", id.name());
+        assert_eq!(a.mbbs_series, b.mbbs_series, "{}", id.name());
+    }
+}
+
+/// The CI smoke test: calibrate a small table, persist it, load it
+/// back, and select through both copies identically.
+#[test]
+fn calibrate_roundtrip_smoke() {
+    let table = calibrate(&CalibrationConfig::quick(30.0));
+    let dir = std::env::temp_dir().join("tod_predictor_roundtrip");
+    let path = dir.join("calibration.json");
+    store::save(&table, &path).unwrap();
+    let loaded = store::load(&path).unwrap();
+    assert_eq!(loaded, table);
+
+    let lat = LatencyModel::deterministic();
+    let from_mem = ProjectedAccuracyPolicy::new(table, &lat);
+    let from_disk = ProjectedAccuracyPolicy::new(loaded, &lat);
+    for &size in &[0.0, 0.003, 0.01, 0.04, 0.2] {
+        for &speed in &[0.0, 0.003, 0.01, 0.03] {
+            let f = FrameFeatures {
+                mbbs: size,
+                count: 8,
+                density: size * 8.0,
+                speed,
+            };
+            assert_eq!(
+                from_mem.select_pure(&f),
+                from_disk.select_pure(&f),
+                "diverged at size={size} speed={speed}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance run (ISSUE 2): on the mixed-motion synth catalog the
+/// calibrated projected-accuracy policy must achieve mean AP at least
+/// that of `MbbsPolicy` with `H_opt`, and strictly above the best fixed
+/// single-DNN deployment.
+#[test]
+fn projected_mean_ap_beats_ladder_and_best_fixed() {
+    let mut c = Campaign::new();
+    let n = SequenceId::ALL.len() as f64;
+    let mut mean_tod = 0.0;
+    let mut mean_proj = 0.0;
+    let mut fixed_mean = [0.0f64; 4];
+    for id in SequenceId::ALL {
+        mean_tod += c.tod(id).ap / n;
+        mean_proj += c.projected(id).ap / n;
+        for k in DnnKind::ALL {
+            fixed_mean[k.index()] += c.realtime_fixed(id, k).ap / n;
+        }
+    }
+    let best_fixed =
+        fixed_mean.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        mean_proj >= mean_tod,
+        "projected mean AP {mean_proj:.4} must not lose to TOD(H_opt) \
+         {mean_tod:.4}"
+    );
+    assert!(
+        mean_proj > best_fixed,
+        "projected mean AP {mean_proj:.4} must beat the best single \
+         fixed DNN {best_fixed:.4} ({fixed_mean:?})"
+    );
+}
+
+/// The speed channel is the point of the subsystem: on a fast-moving
+/// large-object stream the projected policy must deploy lighter
+/// networks than the size-only ladder would on the same sizes.
+#[test]
+fn projected_responds_to_speed_not_just_size() {
+    let mut c = Campaign::new();
+    // MOT17-09: large boxes under a 30 px/frame pan — the regime where
+    // carried heavy-DNN boxes go stale fastest
+    let proj = c.projected(SequenceId::Mot09).clone();
+    let freq = proj.deploy_freq();
+    assert!(
+        freq[DnnKind::TinyY288.index()] + freq[DnnKind::TinyY416.index()]
+            > 0.5,
+        "MOT17-09 under projected selection should be tiny-dominant: \
+         {freq:?}"
+    );
+    // and the static far-field MOT17-04 must stay with the heavy nets
+    let proj04 = c.projected(SequenceId::Mot04).clone();
+    let freq04 = proj04.deploy_freq();
+    assert!(
+        freq04[DnnKind::Y288.index()] + freq04[DnnKind::Y416.index()] > 0.9,
+        "MOT17-04 under projected selection should stay heavy: {freq04:?}"
+    );
+}

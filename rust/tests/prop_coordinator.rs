@@ -17,7 +17,7 @@ fn random_thresholds(g: &mut Gen) -> Thresholds {
     let h1 = g.f64_in(1e-4, 0.01);
     let h2 = h1 + g.f64_in(1e-4, 0.05);
     let h3 = h2 + g.f64_in(1e-4, 0.1);
-    Thresholds::new(vec![h1, h2, h3])
+    Thresholds::new(vec![h1, h2, h3]).expect("generated ascending")
 }
 
 #[test]
