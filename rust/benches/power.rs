@@ -1,0 +1,108 @@
+//! Bench: per-frame cost of energy metering and budget governance.
+//!
+//! The governor sits on the same per-frame decision path as selection,
+//! so metering + feasibility + budgeted select must stay inside the
+//! sub-50 µs envelope `benches/selection.rs` pins for the unbudgeted
+//! path (3+ orders of magnitude below the 27–153 ms inferences). The
+//! governor's window scan is O(window / lightest-latency) ≈ 40
+//! intervals worst case — read `budget/feasible_loaded` for that cost.
+
+use tod::bench::{black_box, Bench};
+use tod::coordinator::policy::{MbbsPolicy, SelectionPolicy};
+use tod::detection::{Detection, PERSON_CLASS};
+use tod::features::FeatureExtractor;
+use tod::geometry::BBox;
+use tod::power::{BudgetedPolicy, EnergyMeter, PowerBudget};
+use tod::sim::latency::LatencyModel;
+use tod::util::rng::Rng;
+use tod::DnnKind;
+
+fn synth_dets(n: usize, seed: u64) -> Vec<Detection> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            Detection::new(
+                BBox::new(
+                    rng.uniform(0.0, 1800.0),
+                    rng.uniform(0.0, 1000.0),
+                    rng.uniform(10.0, 120.0),
+                    rng.uniform(20.0, 280.0),
+                ),
+                rng.uniform(0.4, 1.0) as f32,
+                PERSON_CLASS,
+            )
+        })
+        .collect()
+}
+
+/// A governor whose 1 s window is saturated with back-to-back tiny-288
+/// inferences — the worst-case number of retained intervals.
+fn loaded_budget() -> PowerBudget {
+    let mut b = PowerBudget::watts(6.5, &LatencyModel::deterministic());
+    let lat = 0.027;
+    let mut t = 0.0;
+    while t < 2.0 {
+        b.record(t, t + lat, DnnKind::TinyY288);
+        t += lat;
+    }
+    b
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // per-inference metering: one interval fold + horizon advance
+    {
+        let mut meter = EnergyMeter::new();
+        let mut t = 0.0f64;
+        b.case("meter/on_interval", || {
+            meter.on_interval(t, t + 0.027, DnnKind::TinyY288);
+            t += 1.0 / 30.0;
+            meter.advance_to(black_box(t));
+        });
+        b.case("meter/summary", || {
+            black_box(meter.summary());
+        });
+    }
+
+    // feasibility projection against a saturated window
+    {
+        let budget = loaded_budget();
+        let now = budget.now();
+        b.case("budget/feasible_loaded", || {
+            black_box(budget.feasible(black_box(now)));
+        });
+    }
+
+    // interval recording incl. eviction
+    {
+        let mut budget = loaded_budget();
+        let mut t = budget.now();
+        b.case("budget/record", || {
+            budget.record(t, t + 0.027, DnnKind::TinyY288);
+            t += 0.027;
+        });
+    }
+
+    // the full budgeted per-frame decision: features from the carried
+    // set, governor mask, masked selection (MOT17 max density)
+    for n in [10usize, 42] {
+        let dets = synth_dets(n, n as u64);
+        let fx = FeatureExtractor::new(1920.0, 1080.0);
+        let mut policy = BudgetedPolicy::masking(
+            Box::new(MbbsPolicy::tod_default()),
+            loaded_budget(),
+        );
+        let mut t = 2.0f64;
+        b.case(&format!("budgeted/frame_decision/n={n}"), || {
+            t += 1.0 / 30.0;
+            policy.on_frame(black_box(t));
+            let f = fx.features(black_box(&dets));
+            let d = black_box(policy.select(&f));
+            // keep the governor's window realistically loaded
+            policy.on_inferred(t, t + 0.027, d);
+        });
+    }
+
+    b.save_csv("power.csv").ok();
+}

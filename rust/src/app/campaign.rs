@@ -15,6 +15,7 @@ use crate::coordinator::scheduler::{
 use crate::coordinator::session::StreamSession;
 use crate::dataset::catalog::{generate, SequenceId};
 use crate::dataset::synth::Sequence;
+use crate::power::{BudgetedPolicy, PowerBudget};
 use crate::predictor::{calibrate, CalibrationConfig, CalibrationTable};
 use crate::sim::latency::{ContentionModel, LatencyModel};
 use crate::sim::oracle::OracleDetector;
@@ -23,6 +24,12 @@ use crate::DnnKind;
 /// Stream counts the multi-stream scaling study sweeps (1 → 8 streams
 /// packed onto one accelerator).
 pub const MULTISTREAM_SCALE: [usize; 4] = [1, 2, 4, 8];
+
+/// Default watts budget for the `power` experiment: below the active
+/// power of both full-YOLO variants (7.2 / 7.5 W, Fig. 14), so a
+/// saturated heavy-DNN deployment is infeasible, while both tiny
+/// variants stay admissible.
+pub const DEFAULT_WATTS_BUDGET: f64 = 6.5;
 
 /// One row of the multi-stream scaling study.
 #[derive(Debug, Clone)]
@@ -46,6 +53,8 @@ pub struct Campaign {
     tod: BTreeMap<SequenceId, RunResult>,
     chameleon: BTreeMap<SequenceId, RunResult>,
     projected: BTreeMap<SequenceId, RunResult>,
+    /// Budgeted TOD runs keyed by (sequence, watts-cap bits).
+    power_budgeted: BTreeMap<(SequenceId, u64), RunResult>,
     /// Calibration tables keyed by eval-FPS bits (drop cost is per-FPS).
     calibrations: BTreeMap<u64, CalibrationTable>,
     multistream: BTreeMap<(usize, DispatchPolicy), MultiStreamResult>,
@@ -70,6 +79,7 @@ impl Campaign {
             tod: BTreeMap::new(),
             chameleon: BTreeMap::new(),
             projected: BTreeMap::new(),
+            power_budgeted: BTreeMap::new(),
             calibrations: BTreeMap::new(),
             multistream: BTreeMap::new(),
             thresholds,
@@ -176,6 +186,35 @@ impl Campaign {
         &self.projected[&id]
     }
 
+    /// Budgeted TOD run (the `power` experiment): the campaign's MBBS
+    /// ladder wrapped in a [`PowerBudget`] watts governor (1 s sliding
+    /// window), at the sequence's eval FPS. `RunResult::power` carries
+    /// the online-metered joules / watts / GPU-busy figures.
+    pub fn power_budgeted(
+        &mut self,
+        id: SequenceId,
+        watts_cap: f64,
+    ) -> &RunResult {
+        let key = (id, watts_cap.to_bits());
+        if !self.power_budgeted.contains_key(&key) {
+            let mut det = self.oracle_for(id);
+            let mut lat = LatencyModel::deterministic();
+            let mut pol = BudgetedPolicy::masking(
+                Box::new(MbbsPolicy::new(self.thresholds.clone())),
+                PowerBudget::watts(watts_cap, &lat),
+            );
+            let r = run_realtime(
+                &self.sequences[&id],
+                &mut pol,
+                &mut det,
+                &mut lat,
+                id.eval_fps(),
+            );
+            self.power_budgeted.insert(key, r);
+        }
+        &self.power_budgeted[&key]
+    }
+
     /// Chameleon-lite baseline run (related-work comparison).
     pub fn chameleon(&mut self, id: SequenceId) -> &RunResult {
         if !self.chameleon.contains_key(&id) {
@@ -268,8 +307,8 @@ impl Campaign {
 
     /// Mean TOD improvement over each fixed DNN across all sequences,
     /// in percent (the paper's headline 34.7 / 7.0 / 3.9 / 2.0 numbers).
-    pub fn improvement_over_fixed(&mut self) -> [f64; 4] {
-        let mut out = [0.0; 4];
+    pub fn improvement_over_fixed(&mut self) -> [f64; DnnKind::COUNT] {
+        let mut out = [0.0; DnnKind::COUNT];
         for (i, k) in DnnKind::ALL.iter().enumerate() {
             let mut tod_mean = 0.0;
             let mut fixed_mean = 0.0;
@@ -332,6 +371,19 @@ mod tests {
         // packing more streams onto one accelerator must not lower the
         // aggregate drop rate
         assert!(rows.last().unwrap().drop_rate >= rows[0].drop_rate);
+    }
+
+    #[test]
+    fn power_budgeted_memoized_and_labelled() {
+        let mut c = Campaign::new();
+        let a = c.power_budgeted(SequenceId::Mot09, DEFAULT_WATTS_BUDGET);
+        let label = a.policy.clone();
+        let ap = a.ap;
+        assert!(label.starts_with("budgeted{"), "{label}");
+        let b = c.power_budgeted(SequenceId::Mot09, DEFAULT_WATTS_BUDGET);
+        assert_eq!(ap, b.ap);
+        // metered power respects the cap (the governor's whole point)
+        assert!(b.power.avg_power_w <= DEFAULT_WATTS_BUDGET + 0.25);
     }
 
     #[test]

@@ -4,5 +4,6 @@
 pub mod campaign;
 
 pub use campaign::{
-    Campaign, MultiStreamScalingRow, MULTISTREAM_SCALE,
+    Campaign, MultiStreamScalingRow, DEFAULT_WATTS_BUDGET,
+    MULTISTREAM_SCALE,
 };

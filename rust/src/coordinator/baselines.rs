@@ -85,7 +85,7 @@ pub fn run_chameleon_lite(
     let mut acc = DropFrameAccounting::new(eval_fps);
     let mut eval = SequenceEval::new();
     let mut trace = ScheduleTrace::default();
-    let mut deploy = [0u64; 4];
+    let mut deploy = [0u64; DnnKind::COUNT];
     let mut switches = 0u64;
     let mut last_dnn: Option<DnnKind> = None;
     let mut carried: Vec<Detection> = Vec::new();
@@ -174,6 +174,7 @@ pub fn run_chameleon_lite(
         n_dropped: acc.n_dropped(),
         deploy_counts: deploy,
         switches,
+        power: crate::power::EnergyMeter::from_trace(&trace).summary(),
         trace,
         mbbs_series,
         dnn_series,

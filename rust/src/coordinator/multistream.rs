@@ -22,6 +22,7 @@
 //! `run_realtime` exactly: no waiting peers means no inflation and no
 //! foreign busy time, so every step is bit-identical.
 
+use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::{ContentionModel, LatencyModel};
 use crate::telemetry::utilisation::UtilisationSummary;
 
@@ -81,6 +82,9 @@ pub struct MultiStreamResult {
     pub dispatch: DispatchPolicy,
     /// Aggregate accelerator utilisation over the merged timeline.
     pub utilisation: UtilisationSummary,
+    /// Board-level energy/power summary over the merged timeline
+    /// (what a shared [`crate::power::PowerBudget`] governs).
+    pub power: PowerSummary,
 }
 
 impl MultiStreamResult {
@@ -240,7 +244,8 @@ impl<'a> MultiStreamScheduler<'a> {
         let traces: Vec<&crate::telemetry::tegrastats::ScheduleTrace> =
             per_stream.iter().map(|r| &r.trace).collect();
         let utilisation = UtilisationSummary::from_traces(&traces);
-        MultiStreamResult { per_stream, dispatch, utilisation }
+        let power = EnergyMeter::from_trace(&utilisation.merged).summary();
+        MultiStreamResult { per_stream, dispatch, utilisation, power }
     }
 }
 

@@ -97,6 +97,21 @@ pub trait SelectionPolicy {
 
     /// Human-readable label for reports.
     fn label(&self) -> String;
+
+    /// Stream-time notification: a frame is being presented at stream
+    /// time `t_s` (its capture start, seconds). Stateless policies
+    /// ignore this; governors (e.g. [`crate::power::BudgetedPolicy`])
+    /// use it as the decision clock for sliding-window budgets. The
+    /// default is a no-op, so existing policies are unaffected.
+    fn on_frame(&mut self, t_s: f64) {
+        let _ = t_s;
+    }
+
+    /// Completion notification: the accelerator ran `dnn` over
+    /// `[start_s, end_s]` for this stream. Default no-op.
+    fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
+        let _ = (start_s, end_s, dnn);
+    }
 }
 
 /// Mutable references forward the policy, so callers can hand a
@@ -110,6 +125,14 @@ impl<P: SelectionPolicy + ?Sized> SelectionPolicy for &mut P {
     fn label(&self) -> String {
         (**self).label()
     }
+
+    fn on_frame(&mut self, t_s: f64) {
+        (**self).on_frame(t_s)
+    }
+
+    fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
+        (**self).on_inferred(start_s, end_s, dnn)
+    }
 }
 
 /// Boxed policies forward too (CLI policy parsing produces
@@ -121,6 +144,14 @@ impl<P: SelectionPolicy + ?Sized> SelectionPolicy for Box<P> {
 
     fn label(&self) -> String {
         (**self).label()
+    }
+
+    fn on_frame(&mut self, t_s: f64) {
+        (**self).on_frame(t_s)
+    }
+
+    fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
+        (**self).on_inferred(start_s, end_s, dnn)
     }
 }
 

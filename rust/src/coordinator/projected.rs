@@ -38,7 +38,7 @@ use super::policy::SelectionPolicy;
 pub struct ProjectedAccuracyPolicy {
     table: CalibrationTable,
     /// Mean latency per DNN, seconds (from the latency model).
-    latency_means: [f64; 4],
+    latency_means: [f64; DnnKind::COUNT],
     budget_s: f64,
 }
 

@@ -17,6 +17,7 @@ use crate::dataset::synth::Sequence;
 use crate::detection::{mbbs, Detection, FrameDetections};
 use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{match_frame, IOU_THRESHOLD};
+use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::LatencyModel;
 use crate::sim::oracle::OracleDetector;
 use crate::telemetry::tegrastats::ScheduleTrace;
@@ -65,9 +66,12 @@ pub struct RunResult {
     pub n_inferred: u64,
     pub n_dropped: u64,
     /// Inference count per DNN (Fig. 10's deployment frequency).
-    pub deploy_counts: [u64; 4],
+    pub deploy_counts: [u64; DnnKind::COUNT],
     /// Number of DNN switches between consecutive inferences.
     pub switches: u64,
+    /// Metered energy/power/GPU summary (online accounting for
+    /// scheduled runs; derived from the trace for offline/baselines).
+    pub power: PowerSummary,
     /// Busy intervals for the telemetry simulator (Figs. 13–15).
     pub trace: ScheduleTrace,
     /// Per-frame MBBS seen by the policy (Fig. 9).
@@ -78,11 +82,11 @@ pub struct RunResult {
 
 impl RunResult {
     /// Deployment frequency as fractions of inferred frames (Fig. 10).
-    pub fn deploy_freq(&self) -> [f64; 4] {
+    pub fn deploy_freq(&self) -> [f64; DnnKind::COUNT] {
         let total: u64 = self.deploy_counts.iter().sum();
-        let mut out = [0.0; 4];
+        let mut out = [0.0; DnnKind::COUNT];
         if total > 0 {
-            for i in 0..4 {
+            for i in 0..DnnKind::COUNT {
                 out[i] = self.deploy_counts[i] as f64 / total as f64;
             }
         }
@@ -153,11 +157,12 @@ pub fn run_offline(
         n_inferred: seq.n_frames(),
         n_dropped: 0,
         deploy_counts: {
-            let mut d = [0u64; 4];
+            let mut d = [0u64; DnnKind::COUNT];
             d[dnn.index()] = seq.n_frames();
             d
         },
         switches: 0,
+        power: EnergyMeter::from_trace(&trace).summary(),
         trace,
         mbbs_series,
         dnn_series,

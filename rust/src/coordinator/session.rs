@@ -22,6 +22,7 @@ use crate::detection::{Detection, FrameDetections};
 use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{match_frame, IOU_THRESHOLD};
 use crate::features::FeatureExtractor;
+use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::LatencyModel;
 use crate::telemetry::tegrastats::ScheduleTrace;
 use crate::video::clock::FrameClock;
@@ -59,7 +60,7 @@ pub struct StreamSession<'a> {
     acc: DropFrameAccounting,
     eval: SequenceEval,
     trace: ScheduleTrace,
-    deploy: [u64; 4],
+    deploy: [u64; DnnKind::COUNT],
     switches: u64,
     last_dnn: Option<DnnKind>,
     mbbs_series: Vec<f64>,
@@ -67,6 +68,9 @@ pub struct StreamSession<'a> {
     carried: Vec<Detection>,
     /// Incremental stream-feature state (MBBS + speed estimation).
     features: FeatureExtractor,
+    /// Online energy/utilisation accounting (folded per step, not
+    /// post-hoc — see [`crate::power::EnergyMeter`]).
+    meter: EnergyMeter,
     /// 1-based id of the next frame to present.
     next_frame: u64,
 }
@@ -86,7 +90,7 @@ impl<'a> StreamSession<'a> {
             acc: DropFrameAccounting::new(eval_fps),
             eval: SequenceEval::new(),
             trace: ScheduleTrace::default(),
-            deploy: [0; 4],
+            deploy: [0; DnnKind::COUNT],
             switches: 0,
             last_dnn: None,
             mbbs_series: Vec::with_capacity(n),
@@ -96,6 +100,7 @@ impl<'a> StreamSession<'a> {
                 seq.spec.width as f64,
                 seq.spec.height as f64,
             ),
+            meter: EnergyMeter::new(),
             next_frame: 1,
         }
     }
@@ -162,6 +167,12 @@ impl<'a> StreamSession<'a> {
         self.features.features(&self.carried)
     }
 
+    /// Online power/energy view of the stream so far — joules, average
+    /// watts and GPU-busy fraction metered incrementally per step.
+    pub fn power(&self) -> PowerSummary {
+        self.meter.summary()
+    }
+
     /// Advance the stream by one frame on a dedicated accelerator.
     ///
     /// Equivalent to one iteration of the legacy `run_realtime` loop:
@@ -196,6 +207,12 @@ impl<'a> StreamSession<'a> {
         self.next_frame += 1;
         let gt = self.seq.gt(frame);
 
+        // The frame's capture start doubles as the decision clock for
+        // budget governors and as the energy meter's idle horizon.
+        let t_capture = self.clock.arrival(frame) - self.clock.period();
+        self.meter.advance_to(t_capture);
+        self.policy.on_frame(t_capture);
+
         // Select from the *previous* frame's detections: the extractor
         // turns the carried set into the stream-feature vector (its
         // `mbbs` channel is bit-identical to the legacy statistic, so
@@ -226,6 +243,8 @@ impl<'a> StreamSession<'a> {
                     interval.expect("inferred frame has a busy interval");
                 let (s, e) = interval;
                 self.trace.push(s, e, dnn);
+                self.meter.on_interval(s, e, dnn);
+                self.policy.on_inferred(s, e, dnn);
                 if let Some(prev) = self.last_dnn {
                     if prev != dnn {
                         self.switches += 1;
@@ -261,6 +280,7 @@ impl<'a> StreamSession<'a> {
             .trace
             .duration
             .max(self.seq.n_frames() as f64 / self.eval_fps);
+        self.meter.advance_to(self.trace.duration);
         RunResult {
             policy: self.policy.label(),
             sequence: self.seq.spec.name.clone(),
@@ -271,6 +291,7 @@ impl<'a> StreamSession<'a> {
             n_dropped: self.acc.n_dropped(),
             deploy_counts: self.deploy,
             switches: self.switches,
+            power: self.meter.summary(),
             trace: self.trace,
             mbbs_series: self.mbbs_series,
             dnn_series: self.dnn_series,

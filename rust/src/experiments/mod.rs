@@ -10,6 +10,7 @@ pub mod accuracy;
 pub mod latency_fig;
 pub mod multistream_fig;
 pub mod policy_stats;
+pub mod power_fig;
 pub mod predictor_fig;
 pub mod table1;
 pub mod telemetry_figs;
@@ -41,10 +42,10 @@ impl ExperimentOutput {
 
 /// All experiment ids: the paper's artifacts in paper order, then the
 /// beyond-the-paper studies.
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "ablations",
-    "multistream", "predictor",
+    "multistream", "predictor", "power",
 ];
 
 /// Run one experiment by id.
@@ -68,6 +69,7 @@ pub fn run(id: &str, campaign: &mut Campaign) -> Option<ExperimentOutput> {
             Some(multistream_fig::multistream_scaling(campaign))
         }
         "predictor" => Some(predictor_fig::predictor_compare(campaign)),
+        "power" => Some(power_fig::power_table(campaign)),
         _ => None,
     }
 }

@@ -39,7 +39,7 @@ pub fn predictor_compare(c: &mut Campaign) -> ExperimentOutput {
     let (mut mean_fixed, mut mean_tod, mut mean_proj) = (0.0, 0.0, 0.0);
     // the best *single* fixed DNN across the whole catalog (one network
     // deployed everywhere — the deployment the paper's Fig. 8 beats)
-    let mut fixed_catalog_mean = [0.0f64; 4];
+    let mut fixed_catalog_mean = [0.0f64; DnnKind::COUNT];
     let n = SequenceId::ALL.len() as f64;
     for id in SequenceId::ALL {
         for k in DnnKind::ALL {

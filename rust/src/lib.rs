@@ -44,9 +44,25 @@
 //! A 1-stream schedule reproduces the paper's single-stream results bit
 //! for bit.
 //!
-//! See `DESIGN.md` for the system inventory, the per-experiment index and
-//! the multi-stream architecture (§8), and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! ## Energy and utilisation governance
+//!
+//! The paper's resource headline — TOD matches YOLOv4-416 accuracy on
+//! MOT17-05 at 45.1% of the GPU and 62.7% of board power — is owned by
+//! the [`power`] module: an online [`power::EnergyMeter`] folds each
+//! busy interval into joules / average watts / GPU-busy fraction as the
+//! session steps (not post-hoc), a [`power::PowerBudget`] governor
+//! enforces watts and/or GPU-% caps over a sliding window by masking
+//! the feasible DNN set (with an optional DVFS-style
+//! [`power::RateCap`]), and [`power::BudgetedPolicy`] composes the mask
+//! with any [`coordinator::policy::SelectionPolicy`] — demoting a
+//! threshold ladder's choice, or running an energy-aware argmax over a
+//! calibrated table (highest projected AP in budget, ties to the
+//! lowest energy per frame). With no caps configured every policy is
+//! bit-identical to its unwrapped self.
+//!
+//! See `DESIGN.md` for the system inventory, the per-experiment index,
+//! the multi-stream architecture (§8) and the power subsystem (§10),
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod app;
 pub mod bench;
@@ -59,6 +75,7 @@ pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod geometry;
+pub mod power;
 pub mod predictor;
 pub mod runtime;
 pub mod sim;
@@ -82,8 +99,13 @@ pub enum DnnKind {
 }
 
 impl DnnKind {
+    /// Number of DNN operating points (the length of [`DnnKind::ALL`]).
+    /// Use this instead of a literal `4` when sizing per-DNN arrays so
+    /// ladder changes surface as type errors, not silent truncation.
+    pub const COUNT: usize = 4;
+
     /// All four variants, lightest first.
-    pub const ALL: [DnnKind; 4] = [
+    pub const ALL: [DnnKind; Self::COUNT] = [
         DnnKind::TinyY288,
         DnnKind::TinyY416,
         DnnKind::Y288,

@@ -1,0 +1,557 @@
+//! The power/utilisation budget governor: watts and GPU-% caps over a
+//! sliding window, enforced by masking the feasible DNN set.
+//!
+//! The governor answers one question per frame: *which DNNs could run
+//! right now without pushing the windowed board power (or GPU
+//! utilisation) over the cap?* It keeps the recent busy intervals that
+//! intersect the sliding window (everything older is evicted, so state
+//! is O(window / lightest-latency)) and, for each candidate DNN,
+//! projects the tegrastats-style windowed mean over the window that
+//! would end when that DNN's inference completes. Feasibility is a
+//! conservative projection — intervals still in flight when a doomed
+//! frame is presented are double-counted against the candidate — which
+//! errs toward staying under the cap.
+//!
+//! The optional [`RateCap`] models DVFS-style frequency capping (the
+//! deployment-space axis AyE-Edge searches): capping the accelerator at
+//! `scale` of nominal frequency stretches every latency mean by
+//! `1/scale` and cuts the active-above-idle power by `scale²`
+//! (dynamic power ≈ C·V²·f with voltage tracking frequency).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::sim::latency::LatencyModel;
+use crate::sim::profiles::{DnnProfile, GPU_IDLE_PCT, POWER_IDLE_W};
+use crate::DnnKind;
+
+/// Per-DNN feasibility mask, indexed by [`DnnKind::index`].
+pub type DnnMask = [bool; DnnKind::COUNT];
+
+/// A governor shared between policies (e.g. the per-stream policies of
+/// one board in [`crate::coordinator::multistream`]): every wrapped
+/// policy records into, and masks against, the same window.
+pub type SharedBudget = Rc<RefCell<PowerBudget>>;
+
+/// DVFS-style frequency cap: the accelerator runs at `scale` of its
+/// nominal clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateCap {
+    scale: f64,
+}
+
+impl RateCap {
+    /// `scale` in (0, 1]: 1.0 = nominal clocks, 0.5 = half frequency.
+    pub fn new(scale: f64) -> Self {
+        assert!(
+            scale > 0.0 && scale <= 1.0,
+            "rate-cap scale must be in (0, 1], got {scale}"
+        );
+        RateCap { scale }
+    }
+
+    pub fn scale(self) -> f64 {
+        self.scale
+    }
+
+    /// Multiplier on inference latency means (`1/scale`).
+    pub fn latency_factor(self) -> f64 {
+        1.0 / self.scale
+    }
+
+    /// Multiplier on active-above-idle power (`scale²`; dynamic power
+    /// scales ≈ V²f with V tracking f on the Nano's DVFS ladder).
+    pub fn power_factor(self) -> f64 {
+        self.scale * self.scale
+    }
+
+    /// A copy of `latency` with every mean stretched by
+    /// [`latency_factor`](Self::latency_factor) — the execution-side
+    /// half of the cap (the governor models the same stretch).
+    pub fn stretch(self, latency: &LatencyModel) -> LatencyModel {
+        latency.clone().stretched(self.latency_factor())
+    }
+}
+
+/// Budget configuration: caps are optional and independent.
+#[derive(Debug, Clone)]
+pub struct BudgetConfig {
+    /// Cap on windowed mean board power, watts.
+    pub watts_cap: Option<f64>,
+    /// Cap on windowed mean GPU utilisation, percent.
+    pub gpu_cap_pct: Option<f64>,
+    /// Sliding-window length, seconds (default 1.0 — the tegrastats
+    /// resolution the paper samples at).
+    pub window_s: f64,
+    /// Optional DVFS frequency cap folded into the governor's model.
+    pub rate_cap: Option<RateCap>,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        BudgetConfig {
+            watts_cap: None,
+            gpu_cap_pct: None,
+            window_s: 1.0,
+            rate_cap: None,
+        }
+    }
+}
+
+/// Sliding-window power/utilisation governor.
+pub struct PowerBudget {
+    cfg: BudgetConfig,
+    /// Effective latency means, seconds (rate-cap stretched).
+    lat: [f64; DnnKind::COUNT],
+    /// Effective active board power, watts (rate-cap scaled).
+    active_w: [f64; DnnKind::COUNT],
+    /// GPU utilisation while executing, percent.
+    gpu_pct: [f64; DnnKind::COUNT],
+    /// Busy intervals intersecting the window, oldest first.
+    recent: VecDeque<(f64, f64, DnnKind)>,
+    /// Latest stream time seen.
+    now: f64,
+}
+
+impl PowerBudget {
+    /// Build a governor from a config and the latency model whose means
+    /// drive the projections. Panics on an invalid config — CLI-facing
+    /// callers go through [`PowerBudget::try_new`] instead.
+    pub fn new(cfg: BudgetConfig, latency: &LatencyModel) -> Self {
+        match Self::try_new(cfg, latency) {
+            Ok(b) => b,
+            Err(e) => panic!("invalid power budget: {e}"),
+        }
+    }
+
+    /// Fallible constructor: rejects non-positive/non-finite windows
+    /// and caps, and caps at or below the idle floors ([`POWER_IDLE_W`]
+    /// / [`GPU_IDLE_PCT`]), which no selection could ever satisfy. Caps
+    /// between the idle floor and the lightest DNN's sustained draw are
+    /// accepted but best-effort: the governor throttles *which* DNN
+    /// runs, never whether the stream is served, so the lightest DNN
+    /// still executes when nothing is feasible.
+    pub fn try_new(
+        cfg: BudgetConfig,
+        latency: &LatencyModel,
+    ) -> Result<Self, String> {
+        if !(cfg.window_s > 0.0 && cfg.window_s.is_finite()) {
+            return Err(format!(
+                "budget window must be positive and finite, got {}",
+                cfg.window_s
+            ));
+        }
+        for cap in [cfg.watts_cap, cfg.gpu_cap_pct].into_iter().flatten() {
+            if !(cap > 0.0 && cap.is_finite()) {
+                return Err(format!(
+                    "budget caps must be positive and finite, got {cap}"
+                ));
+            }
+        }
+        if let Some(w) = cfg.watts_cap {
+            if w <= POWER_IDLE_W {
+                return Err(format!(
+                    "watts cap {w} is at or below the {POWER_IDLE_W} W \
+                     idle floor — no schedule can satisfy it"
+                ));
+            }
+        }
+        if let Some(g) = cfg.gpu_cap_pct {
+            if g <= GPU_IDLE_PCT {
+                return Err(format!(
+                    "GPU cap {g}% is at or below the {GPU_IDLE_PCT}% \
+                     idle floor — no schedule can satisfy it"
+                ));
+            }
+        }
+        Ok(Self::build(cfg, latency))
+    }
+
+    fn build(cfg: BudgetConfig, latency: &LatencyModel) -> Self {
+        let mut lat = latency.means();
+        let mut active_w =
+            DnnKind::ALL.map(|k| DnnProfile::of(k).power_active_w);
+        let gpu_pct = DnnKind::ALL.map(|k| DnnProfile::of(k).gpu_util_pct);
+        if let Some(rc) = cfg.rate_cap {
+            for l in lat.iter_mut() {
+                *l *= rc.latency_factor();
+            }
+            for a in active_w.iter_mut() {
+                *a = POWER_IDLE_W + (*a - POWER_IDLE_W) * rc.power_factor();
+            }
+        }
+        PowerBudget {
+            cfg,
+            lat,
+            active_w,
+            gpu_pct,
+            recent: VecDeque::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Watts-only cap with the default 1 s window.
+    pub fn watts(cap: f64, latency: &LatencyModel) -> Self {
+        PowerBudget::new(
+            BudgetConfig { watts_cap: Some(cap), ..BudgetConfig::default() },
+            latency,
+        )
+    }
+
+    /// GPU-%-only cap with the default 1 s window.
+    pub fn gpu(cap_pct: f64, latency: &LatencyModel) -> Self {
+        PowerBudget::new(
+            BudgetConfig {
+                gpu_cap_pct: Some(cap_pct),
+                ..BudgetConfig::default()
+            },
+            latency,
+        )
+    }
+
+    /// A governor with no caps: every DNN is always feasible.
+    pub fn unbounded() -> Self {
+        PowerBudget::new(
+            BudgetConfig::default(),
+            &LatencyModel::deterministic(),
+        )
+    }
+
+    /// True when no cap is configured.
+    pub fn is_unbounded(&self) -> bool {
+        self.cfg.watts_cap.is_none() && self.cfg.gpu_cap_pct.is_none()
+    }
+
+    /// Wrap in the shared handle used by per-board governors.
+    pub fn shared(self) -> SharedBudget {
+        Rc::new(RefCell::new(self))
+    }
+
+    /// The configuration the governor runs under.
+    pub fn config(&self) -> &BudgetConfig {
+        &self.cfg
+    }
+
+    /// Latest stream time the governor has seen.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Intervals currently retained (bounded by the window).
+    pub fn n_retained(&self) -> usize {
+        self.recent.len()
+    }
+
+    /// Expected board energy of one inference, joules (effective
+    /// latency × effective active power) — the tie-breaker of
+    /// [`super::BudgetedPolicy`]'s energy-aware argmax.
+    pub fn energy_per_frame_j(&self, dnn: DnnKind) -> f64 {
+        self.lat[dnn.index()] * self.active_w[dnn.index()]
+    }
+
+    /// Effective (rate-cap stretched) latency mean, seconds.
+    pub fn effective_latency_s(&self, dnn: DnnKind) -> f64 {
+        self.lat[dnn.index()]
+    }
+
+    /// Advance the governor clock (monotone; evicts expired intervals).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+            self.evict();
+        }
+    }
+
+    /// Record a completed busy interval (stream seconds, in completion
+    /// order — both the per-stream and the serialized shared-board case
+    /// deliver them monotonically).
+    pub fn record(&mut self, start: f64, end: f64, dnn: DnnKind) {
+        debug_assert!(end >= start, "interval ends before it starts");
+        self.recent.push_back((start, end, dnn));
+        self.now = self.now.max(end);
+        self.evict();
+    }
+
+    fn evict(&mut self) {
+        let cutoff = self.now - self.cfg.window_s;
+        while let Some(&(_, e, _)) = self.recent.front() {
+            if e <= cutoff {
+                self.recent.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Projected windowed (mean power W, mean GPU %) if `dnn` started
+    /// an inference at `now`, over the window ending at its completion.
+    /// Windows that would start before the stream (t < 0) are clipped,
+    /// so a cold start is judged over the elapsed time only.
+    pub fn projected(&self, now: f64, dnn: DnnKind) -> (f64, f64) {
+        let now = now.max(self.now);
+        let lat = self.lat[dnn.index()];
+        let end = now + lat;
+        let win_start = (end - self.cfg.window_s).max(0.0);
+        let len = end - win_start;
+        if len <= 0.0 {
+            return (POWER_IDLE_W, GPU_IDLE_PCT);
+        }
+        let mut above_w = lat.min(len)
+            * (self.active_w[dnn.index()] - POWER_IDLE_W);
+        let mut above_g =
+            lat.min(len) * (self.gpu_pct[dnn.index()] - GPU_IDLE_PCT);
+        for &(s, e, d) in &self.recent {
+            let ov = (e.min(end) - s.max(win_start)).max(0.0);
+            if ov > 0.0 {
+                above_w += ov * (self.active_w[d.index()] - POWER_IDLE_W);
+                above_g += ov * (self.gpu_pct[d.index()] - GPU_IDLE_PCT);
+            }
+        }
+        (POWER_IDLE_W + above_w / len, GPU_IDLE_PCT + above_g / len)
+    }
+
+    /// Which DNNs could start an inference at `now` without breaching a
+    /// cap. All-true when unbounded (and O(1) — no window scan).
+    pub fn feasible(&self, now: f64) -> DnnMask {
+        let mut mask = [true; DnnKind::COUNT];
+        if self.is_unbounded() {
+            return mask;
+        }
+        for k in DnnKind::ALL {
+            let (w, g) = self.projected(now, k);
+            let ok_w = self
+                .cfg
+                .watts_cap
+                .map(|c| w <= c + 1e-9)
+                .unwrap_or(true);
+            let ok_g = self
+                .cfg
+                .gpu_cap_pct
+                .map(|c| g <= c + 1e-9)
+                .unwrap_or(true);
+            mask[k.index()] = ok_w && ok_g;
+        }
+        mask
+    }
+
+    /// Short human-readable descriptor for policy labels.
+    pub fn descriptor(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(w) = self.cfg.watts_cap {
+            parts.push(format!("W<={w}"));
+        }
+        if let Some(g) = self.cfg.gpu_cap_pct {
+            parts.push(format!("gpu<={g}%"));
+        }
+        if let Some(rc) = self.cfg.rate_cap {
+            parts.push(format!("rate={:.2}", rc.scale()));
+        }
+        if parts.is_empty() {
+            return "unbounded".into();
+        }
+        parts.push(format!("win={}s", self.cfg.window_s));
+        parts.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det() -> LatencyModel {
+        LatencyModel::deterministic()
+    }
+
+    #[test]
+    fn unbounded_is_always_feasible() {
+        let b = PowerBudget::unbounded();
+        assert!(b.is_unbounded());
+        assert_eq!(b.feasible(0.0), [true; DnnKind::COUNT]);
+        assert_eq!(b.feasible(123.0), [true; DnnKind::COUNT]);
+        assert_eq!(b.descriptor(), "unbounded");
+    }
+
+    #[test]
+    fn cold_start_masks_heavy_nets() {
+        // 6.5 W cap: a window fully busy with Y-288 (7.2 W) or Y-416
+        // (7.5 W) breaches; both tiny variants fit
+        let b = PowerBudget::watts(6.5, &det());
+        let m = b.feasible(0.0);
+        assert!(m[DnnKind::TinyY288.index()]);
+        assert!(m[DnnKind::TinyY416.index()]);
+        assert!(!m[DnnKind::Y288.index()]);
+        assert!(!m[DnnKind::Y416.index()]);
+    }
+
+    #[test]
+    fn idle_history_readmits_heavy_nets() {
+        // after 1 s of idle window, one 153 ms Y-416 inference projects
+        // 2.6 + 0.153*4.9/1.0 ≈ 3.35 W — well under the cap
+        let mut b = PowerBudget::watts(6.5, &det());
+        b.advance_to(1.0);
+        let m = b.feasible(1.0);
+        assert_eq!(m, [true; DnnKind::COUNT]);
+        let (w, _) = b.projected(1.0, DnnKind::Y416);
+        assert!(w < 4.0, "projected {w}");
+    }
+
+    #[test]
+    fn saturated_history_masks_everything() {
+        // a window saturated with Y-416 leaves no headroom even for a
+        // tiny inference
+        let mut b = PowerBudget::watts(6.5, &det());
+        b.record(0.0, 2.0, DnnKind::Y416);
+        let m = b.feasible(2.0);
+        assert_eq!(m, [false; DnnKind::COUNT]);
+    }
+
+    #[test]
+    fn window_slides_past_old_load() {
+        let mut b = PowerBudget::watts(6.5, &det());
+        b.record(0.0, 1.0, DnnKind::Y416);
+        // two windows later the load has left the window entirely
+        b.advance_to(3.0);
+        assert_eq!(b.feasible(3.0), [true; DnnKind::COUNT]);
+        // and the expired interval was evicted
+        assert_eq!(b.n_retained(), 0);
+    }
+
+    #[test]
+    fn gpu_cap_masks_independently() {
+        // 60% GPU cap: sustained Y-288 (84%) and Y-416 (91%) breach at
+        // cold start; tiny-288 (38%) and tiny-416 (55%) fit
+        let b = PowerBudget::gpu(60.0, &det());
+        let m = b.feasible(0.0);
+        assert!(m[DnnKind::TinyY288.index()]);
+        assert!(m[DnnKind::TinyY416.index()]);
+        assert!(!m[DnnKind::Y288.index()]);
+        assert!(!m[DnnKind::Y416.index()]);
+    }
+
+    #[test]
+    fn retained_state_is_bounded_by_window() {
+        let mut b = PowerBudget::watts(5.0, &det());
+        let lat = 0.027;
+        let mut t = 0.0;
+        for _ in 0..10_000 {
+            b.record(t, t + lat, DnnKind::TinyY288);
+            t += lat;
+        }
+        // ~window/lat intervals can overlap a 1 s window
+        assert!(
+            b.n_retained() <= (1.0 / lat) as usize + 2,
+            "retained {}",
+            b.n_retained()
+        );
+    }
+
+    #[test]
+    fn projection_matches_hand_computation() {
+        let mut b = PowerBudget::watts(6.0, &det());
+        // half the window busy with tiny-416 (4.8 W active)
+        b.record(0.0, 0.5, DnnKind::TinyY416);
+        b.advance_to(1.0);
+        // candidate tiny-288 at t=1.0: window [0.153.., 1.027]... use
+        // exact terms: lat 0.027, end 1.027, start 0.027, len 1.0;
+        // history overlap = 0.5 - 0.027 = 0.473
+        let (w, _) = b.projected(1.0, DnnKind::TinyY288);
+        let expect = POWER_IDLE_W
+            + (0.027 * (3.8 - POWER_IDLE_W)
+                + 0.473 * (4.8 - POWER_IDLE_W))
+                / 1.0;
+        assert!((w - expect).abs() < 1e-9, "{w} vs {expect}");
+    }
+
+    #[test]
+    fn rate_cap_stretches_latency_and_cuts_power() {
+        let rc = RateCap::new(0.5);
+        assert_eq!(rc.latency_factor(), 2.0);
+        assert_eq!(rc.power_factor(), 0.25);
+        let capped = PowerBudget::new(
+            BudgetConfig {
+                watts_cap: Some(6.0),
+                rate_cap: Some(rc),
+                ..BudgetConfig::default()
+            },
+            &det(),
+        );
+        let nominal = PowerBudget::watts(6.0, &det());
+        assert_eq!(
+            capped.effective_latency_s(DnnKind::Y416),
+            2.0 * nominal.effective_latency_s(DnnKind::Y416)
+        );
+        // energy per frame: 2x time, 1/4 dynamic power => cheaper frame
+        assert!(
+            capped.energy_per_frame_j(DnnKind::Y416)
+                < nominal.energy_per_frame_j(DnnKind::Y416)
+        );
+        // and the stretched latency model matches the governor's view
+        let lat = rc.stretch(&det());
+        assert_eq!(
+            lat.mean(DnnKind::Y416),
+            capped.effective_latency_s(DnnKind::Y416)
+        );
+    }
+
+    #[test]
+    fn energy_per_frame_is_monotone_in_weight() {
+        let b = PowerBudget::unbounded();
+        let e: Vec<f64> = DnnKind::ALL
+            .iter()
+            .map(|&k| b.energy_per_frame_j(k))
+            .collect();
+        assert!(e.windows(2).all(|w| w[0] < w[1]), "{e:?}");
+    }
+
+    #[test]
+    fn descriptor_names_the_caps() {
+        let b = PowerBudget::watts(6.5, &det());
+        assert_eq!(b.descriptor(), "W<=6.5,win=1s");
+        let g = PowerBudget::gpu(50.0, &det());
+        assert!(g.descriptor().contains("gpu<=50%"));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_cap_rejected() {
+        PowerBudget::watts(0.0, &det());
+    }
+
+    #[test]
+    fn idle_floor_caps_rejected() {
+        // 2.0 W < the 2.6 W idle floor: nothing could ever satisfy it
+        let e = PowerBudget::try_new(
+            BudgetConfig {
+                watts_cap: Some(2.0),
+                ..BudgetConfig::default()
+            },
+            &det(),
+        );
+        assert!(e.err().expect("must reject").contains("idle floor"));
+        assert!(PowerBudget::try_new(
+            BudgetConfig {
+                gpu_cap_pct: Some(3.0),
+                ..BudgetConfig::default()
+            },
+            &det(),
+        )
+        .is_err());
+        // above the floor — even below the lightest DNN's sustained
+        // draw — is accepted as a best-effort cap
+        assert!(PowerBudget::try_new(
+            BudgetConfig {
+                watts_cap: Some(3.0),
+                ..BudgetConfig::default()
+            },
+            &det(),
+        )
+        .is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "rate-cap scale")]
+    fn rate_cap_rejects_overclock() {
+        RateCap::new(1.5);
+    }
+}

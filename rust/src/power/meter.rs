@@ -1,0 +1,341 @@
+//! Online energy metering: busy intervals → joules, watts, GPU busy.
+//!
+//! [`EnergyMeter`] is the incremental counterpart of sampling a
+//! finished [`ScheduleTrace`] with
+//! [`crate::telemetry::tegrastats::TegrastatsSim`]: each inference's
+//! busy interval is folded into per-DNN busy seconds as it completes
+//! (one `on_interval` call per [`crate::coordinator::session::
+//! StreamSession::step`] that infers), and the idle floor is integrated
+//! by advancing the meter's clock as frames are presented. Folding a
+//! whole trace with [`EnergyMeter::from_trace`] yields exactly the same
+//! summary, which is pinned by the power integration tests — online
+//! metering is the post-hoc telemetry, paid in O(1) per inference.
+
+use crate::sim::profiles::{DnnProfile, GPU_IDLE_PCT, POWER_IDLE_W};
+use crate::telemetry::tegrastats::ScheduleTrace;
+use crate::DnnKind;
+
+/// Snapshot of everything an [`EnergyMeter`] has accounted so far.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerSummary {
+    /// Metered stream time, seconds.
+    pub duration_s: f64,
+    /// Total board energy over the metered time, joules (idle floor
+    /// included).
+    pub energy_j: f64,
+    /// Mean board power, watts (`energy_j / duration_s`; the idle
+    /// power for a zero-length meter).
+    pub avg_power_w: f64,
+    /// Fraction of the metered time the accelerator was busy — the
+    /// paper's "GPU resource" axis (45.1% is the MOT17-05 headline).
+    pub gpu_busy_frac: f64,
+    /// Mean tegrastats-style GPU utilisation, percent.
+    pub avg_gpu_pct: f64,
+    /// Inferences metered.
+    pub inferences: u64,
+    /// Busy seconds per DNN variant.
+    pub busy_per_dnn_s: [f64; DnnKind::COUNT],
+    /// Board energy attributed to each DNN (board power while that DNN
+    /// was executing × its busy time), joules.
+    pub energy_per_dnn_j: [f64; DnnKind::COUNT],
+}
+
+impl PowerSummary {
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:.1}s metered | {:.1} J | avg {:.2} W | GPU busy {:.1}% \
+             (util {:.1}%) | {} inferences",
+            self.duration_s,
+            self.energy_j,
+            self.avg_power_w,
+            self.gpu_busy_frac * 100.0,
+            self.avg_gpu_pct,
+            self.inferences
+        )
+    }
+}
+
+/// Incremental per-stream (or per-board) energy/utilisation accountant.
+///
+/// The power model matches the telemetry simulator: the board draws
+/// [`POWER_IDLE_W`] whenever no inference is in flight and each DNN's
+/// calibrated `power_active_w` while it executes, so
+///
+/// `energy = idle · duration + Σ_dnn busy_dnn · (active_dnn − idle) · s`
+///
+/// where `s` is the optional DVFS active-power scale (see
+/// [`EnergyMeter::with_active_scale`]; 1.0 = nominal clocks).
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    busy_s: [f64; DnnKind::COUNT],
+    inferences: u64,
+    /// Latest stream time seen (idle integrates up to here).
+    now: f64,
+    /// DVFS scale on the active-above-idle power term.
+    active_scale: f64,
+}
+
+impl Default for EnergyMeter {
+    fn default() -> Self {
+        EnergyMeter::new()
+    }
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        EnergyMeter {
+            busy_s: [0.0; DnnKind::COUNT],
+            inferences: 0,
+            now: 0.0,
+            active_scale: 1.0,
+        }
+    }
+
+    /// Meter under a DVFS-style rate cap: the active-above-idle power
+    /// of every inference is multiplied by `scale` (see
+    /// [`super::RateCap::power_factor`]).
+    pub fn with_active_scale(scale: f64) -> Self {
+        assert!(
+            scale > 0.0 && scale.is_finite(),
+            "active-power scale must be positive and finite"
+        );
+        EnergyMeter { active_scale: scale, ..EnergyMeter::new() }
+    }
+
+    /// Fold one completed busy interval (stream seconds).
+    pub fn on_interval(&mut self, start: f64, end: f64, dnn: DnnKind) {
+        debug_assert!(end >= start, "interval ends before it starts");
+        self.busy_s[dnn.index()] += (end - start).max(0.0);
+        self.inferences += 1;
+        self.now = self.now.max(end);
+    }
+
+    /// Advance the idle-integration horizon to stream time `t`
+    /// (monotone: earlier times are no-ops).
+    pub fn advance_to(&mut self, t: f64) {
+        self.now = self.now.max(t);
+    }
+
+    /// Meter a finished trace in one pass — the post-hoc equivalent of
+    /// per-step metering (pinned equal by the power tests).
+    pub fn from_trace(trace: &ScheduleTrace) -> Self {
+        let mut m = EnergyMeter::new();
+        m.fold_trace(trace);
+        m
+    }
+
+    /// Fold every interval of `trace` and advance to its duration.
+    /// Goes through [`ScheduleTrace::normalised_busy`], so an
+    /// out-of-order or double-booked trace meters its *union* busy
+    /// time — the same repair the tegrastats sampler applies, keeping
+    /// the two readouts equal on any input.
+    pub fn fold_trace(&mut self, trace: &ScheduleTrace) {
+        for &(s, e, d) in trace.normalised_busy().iter() {
+            self.on_interval(s, e, d);
+        }
+        self.advance_to(trace.duration);
+    }
+
+    /// Metered stream time, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.now
+    }
+
+    /// Busy seconds per DNN.
+    pub fn busy_per_dnn_s(&self) -> [f64; DnnKind::COUNT] {
+        self.busy_s
+    }
+
+    /// Total accelerator-busy seconds.
+    pub fn busy_total_s(&self) -> f64 {
+        self.busy_s.iter().sum()
+    }
+
+    /// Fraction of the metered time the accelerator was busy.
+    pub fn gpu_busy_frac(&self) -> f64 {
+        if self.now <= 0.0 {
+            0.0
+        } else {
+            self.busy_total_s() / self.now
+        }
+    }
+
+    /// Total board energy, joules (idle floor included).
+    pub fn energy_j(&self) -> f64 {
+        let mut e = POWER_IDLE_W * self.now;
+        for k in DnnKind::ALL {
+            let p = DnnProfile::of(k);
+            e += self.busy_s[k.index()]
+                * (p.power_active_w - POWER_IDLE_W)
+                * self.active_scale;
+        }
+        e
+    }
+
+    /// Board energy attributed to each DNN: board power while that DNN
+    /// executes × its busy seconds.
+    pub fn energy_per_dnn_j(&self) -> [f64; DnnKind::COUNT] {
+        let mut out = [0.0; DnnKind::COUNT];
+        for k in DnnKind::ALL {
+            let p = DnnProfile::of(k);
+            let active = POWER_IDLE_W
+                + (p.power_active_w - POWER_IDLE_W) * self.active_scale;
+            out[k.index()] = self.busy_s[k.index()] * active;
+        }
+        out
+    }
+
+    /// Mean board power, watts. The idle floor for an empty meter.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.now <= 0.0 {
+            POWER_IDLE_W
+        } else {
+            self.energy_j() / self.now
+        }
+    }
+
+    /// Mean tegrastats-style GPU utilisation, percent.
+    pub fn avg_gpu_pct(&self) -> f64 {
+        if self.now <= 0.0 {
+            return GPU_IDLE_PCT;
+        }
+        let mut g = GPU_IDLE_PCT;
+        for k in DnnKind::ALL {
+            let p = DnnProfile::of(k);
+            g += self.busy_s[k.index()] / self.now
+                * (p.gpu_util_pct - GPU_IDLE_PCT);
+        }
+        g.min(100.0)
+    }
+
+    /// Inferences metered so far.
+    pub fn inferences(&self) -> u64 {
+        self.inferences
+    }
+
+    /// Snapshot everything.
+    pub fn summary(&self) -> PowerSummary {
+        PowerSummary {
+            duration_s: self.duration_s(),
+            energy_j: self.energy_j(),
+            avg_power_w: self.avg_power_w(),
+            gpu_busy_frac: self.gpu_busy_frac(),
+            avg_gpu_pct: self.avg_gpu_pct(),
+            inferences: self.inferences,
+            busy_per_dnn_s: self.busy_s,
+            energy_per_dnn_j: self.energy_per_dnn_j(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_meter_reads_idle() {
+        let m = EnergyMeter::new();
+        assert_eq!(m.duration_s(), 0.0);
+        assert_eq!(m.energy_j(), 0.0);
+        assert_eq!(m.avg_power_w(), POWER_IDLE_W);
+        assert_eq!(m.avg_gpu_pct(), GPU_IDLE_PCT);
+        assert_eq!(m.gpu_busy_frac(), 0.0);
+        assert_eq!(m.inferences(), 0);
+    }
+
+    #[test]
+    fn single_interval_math_is_exact() {
+        let mut m = EnergyMeter::new();
+        m.on_interval(0.0, 2.0, DnnKind::Y416);
+        m.advance_to(10.0);
+        // 10 s idle floor + 2 s of (7.5 - 2.6) W above idle
+        let expect = POWER_IDLE_W * 10.0 + 2.0 * (7.5 - POWER_IDLE_W);
+        assert!((m.energy_j() - expect).abs() < 1e-12);
+        assert!((m.avg_power_w() - expect / 10.0).abs() < 1e-12);
+        assert!((m.gpu_busy_frac() - 0.2).abs() < 1e-12);
+        // mean GPU: idle + 20% of (91 - idle)
+        let gpu = GPU_IDLE_PCT + 0.2 * (91.0 - GPU_IDLE_PCT);
+        assert!((m.avg_gpu_pct() - gpu).abs() < 1e-12);
+        assert_eq!(m.inferences(), 1);
+        assert!(
+            (m.energy_per_dnn_j()[DnnKind::Y416.index()] - 2.0 * 7.5).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn advance_is_monotone() {
+        let mut m = EnergyMeter::new();
+        m.advance_to(5.0);
+        m.advance_to(2.0); // no-op
+        assert_eq!(m.duration_s(), 5.0);
+        m.on_interval(1.0, 7.0, DnnKind::TinyY288);
+        assert_eq!(m.duration_s(), 7.0);
+    }
+
+    #[test]
+    fn from_trace_matches_incremental() {
+        let mut t = ScheduleTrace::default();
+        t.push(0.0, 0.027, DnnKind::TinyY288);
+        t.push(0.1, 0.253, DnnKind::Y416);
+        t.duration = 2.0;
+        let post = EnergyMeter::from_trace(&t);
+
+        let mut inc = EnergyMeter::new();
+        inc.on_interval(0.0, 0.027, DnnKind::TinyY288);
+        inc.on_interval(0.1, 0.253, DnnKind::Y416);
+        inc.advance_to(2.0);
+        assert_eq!(post.summary(), inc.summary());
+    }
+
+    #[test]
+    fn from_trace_repairs_double_booked_input() {
+        // overlapping intervals meter their union, exactly like the
+        // tegrastats sampler's normalised view
+        let mut t = ScheduleTrace::default();
+        t.push(0.0, 1.0, DnnKind::Y416);
+        t.push(0.5, 1.5, DnnKind::Y416);
+        t.duration = 2.0;
+        let m = EnergyMeter::from_trace(&t);
+        assert!((m.busy_total_s() - 1.5).abs() < 1e-12);
+        assert!((m.gpu_busy_frac() - 0.75).abs() < 1e-12);
+        let expect =
+            POWER_IDLE_W * 2.0 + 1.5 * (7.5 - POWER_IDLE_W);
+        assert!((m.energy_j() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturated_run_reads_active_power() {
+        let mut m = EnergyMeter::new();
+        m.on_interval(0.0, 30.0, DnnKind::Y288);
+        assert!((m.avg_power_w() - 7.2).abs() < 1e-12);
+        assert!((m.avg_gpu_pct() - 84.0).abs() < 1e-12);
+        assert!((m.gpu_busy_frac() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn active_scale_cuts_dynamic_power_only() {
+        let mut nominal = EnergyMeter::new();
+        let mut capped = EnergyMeter::with_active_scale(0.49);
+        for m in [&mut nominal, &mut capped] {
+            m.on_interval(0.0, 1.0, DnnKind::Y416);
+            m.advance_to(2.0);
+        }
+        let idle = POWER_IDLE_W * 2.0;
+        let nom_active = nominal.energy_j() - idle;
+        let cap_active = capped.energy_j() - idle;
+        assert!((cap_active - 0.49 * nom_active).abs() < 1e-12);
+        // utilisation is unaffected by the power scale
+        assert_eq!(nominal.gpu_busy_frac(), capped.gpu_busy_frac());
+    }
+
+    #[test]
+    fn zero_length_intervals_add_nothing() {
+        let mut m = EnergyMeter::new();
+        m.on_interval(1.0, 1.0, DnnKind::Y416);
+        assert_eq!(m.busy_total_s(), 0.0);
+        assert_eq!(m.inferences(), 1);
+        assert_eq!(m.duration_s(), 1.0);
+    }
+}

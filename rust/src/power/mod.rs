@@ -1,0 +1,38 @@
+//! Energy/utilisation governance: online metering, budget enforcement
+//! and power-aware DNN selection.
+//!
+//! The paper's resource headline (§IV.D, Figs. 13–15) is that TOD
+//! matches YOLOv4-416 accuracy on MOT17-05 while using **45.1% of the
+//! GPU resource and 62.7% of the board power**. This module makes that
+//! axis a first-class, *enforceable* quantity instead of a post-hoc
+//! figure:
+//!
+//! * [`EnergyMeter`] / [`PowerSummary`] — incremental joules, average
+//!   watts, GPU-busy fraction and per-DNN energy, folded interval by
+//!   interval as a [`crate::coordinator::session::StreamSession`]
+//!   steps (and reproducible post-hoc from any
+//!   [`crate::telemetry::tegrastats::ScheduleTrace`]).
+//! * [`PowerBudget`] — a sliding-window governor that masks the DNNs
+//!   whose execution would push windowed mean power (watts cap) or GPU
+//!   utilisation (percent cap) over budget, optionally under a
+//!   DVFS-style [`RateCap`] (stretched latencies, `scale²` dynamic
+//!   power).
+//! * [`BudgetedPolicy`] — composes the mask with any selection policy
+//!   (demotion semantics), or runs an energy-aware argmax over a
+//!   calibrated table: highest projected AP within budget, ties broken
+//!   by lowest energy per frame.
+//!
+//! Entry points: `tod run --watts-budget/--gpu-budget`, `tod power`,
+//! `tod figures --id power`, `Campaign::power_budgeted`,
+//! `benches/power.rs` and `examples/power_budget.rs`. See DESIGN.md
+//! §10.
+
+pub mod budget;
+pub mod meter;
+pub mod policy;
+
+pub use budget::{
+    BudgetConfig, DnnMask, PowerBudget, RateCap, SharedBudget,
+};
+pub use meter::{EnergyMeter, PowerSummary};
+pub use policy::BudgetedPolicy;

@@ -1,0 +1,334 @@
+//! Budget-aware selection: any [`SelectionPolicy`] composed with a
+//! [`PowerBudget`] governor.
+//!
+//! Two composition modes:
+//!
+//! * **Mask** — wrap an existing policy (threshold ladder, projected,
+//!   fixed...). The inner policy picks as usual; if its choice is
+//!   budget-infeasible it is demoted to the heaviest *feasible* lighter
+//!   DNN (degrading accuracy is recoverable, breaching the power cap is
+//!   not). With no caps configured the wrapper is bit-identical to the
+//!   inner policy — pinned by the golden test in `rust/tests/power.rs`.
+//! * **Argmax** — energy-aware selection over a calibrated
+//!   [`CalibrationTable`]: pick the budget-feasible DNN with the
+//!   highest projected AP, breaking ties toward the lowest energy per
+//!   frame. With an unbounded governor this coincides with
+//!   [`crate::coordinator::projected::ProjectedAccuracyPolicy`].
+//!
+//! When *no* DNN is feasible (the window is saturated), both modes fall
+//! back to the lightest DNN: it drains the window fastest and is the
+//! cheapest way to keep the stream's detections fresh while the
+//! governor recovers headroom.
+
+use crate::coordinator::policy::SelectionPolicy;
+use crate::features::FrameFeatures;
+use crate::predictor::CalibrationTable;
+use crate::DnnKind;
+
+use super::budget::{DnnMask, PowerBudget, SharedBudget};
+
+enum Mode {
+    Mask(Box<dyn SelectionPolicy>),
+    Argmax { table: CalibrationTable },
+}
+
+/// A [`SelectionPolicy`] whose choices respect a [`PowerBudget`].
+///
+/// The governor learns stream time through the policy notification
+/// hooks ([`SelectionPolicy::on_frame`] /
+/// [`SelectionPolicy::on_inferred`]), which
+/// [`crate::coordinator::session::StreamSession`] drives every step —
+/// so budget enforcement works unchanged under both the single-stream
+/// driver and the multi-stream scheduler. Hand the same
+/// [`SharedBudget`] to several streams' policies to enforce one
+/// board-level budget across all of them.
+pub struct BudgetedPolicy {
+    mode: Mode,
+    budget: SharedBudget,
+    /// Capture start of the frame being decided (set by `on_frame`).
+    now: f64,
+}
+
+impl BudgetedPolicy {
+    /// Mask mode over a privately owned governor.
+    pub fn masking(
+        inner: Box<dyn SelectionPolicy>,
+        budget: PowerBudget,
+    ) -> Self {
+        Self::masking_shared(inner, budget.shared())
+    }
+
+    /// Mask mode over a shared (board-level) governor.
+    pub fn masking_shared(
+        inner: Box<dyn SelectionPolicy>,
+        budget: SharedBudget,
+    ) -> Self {
+        BudgetedPolicy { mode: Mode::Mask(inner), budget, now: 0.0 }
+    }
+
+    /// Energy-aware argmax mode over a privately owned governor.
+    pub fn argmax(table: CalibrationTable, budget: PowerBudget) -> Self {
+        Self::argmax_shared(table, budget.shared())
+    }
+
+    /// Energy-aware argmax mode over a shared governor.
+    pub fn argmax_shared(
+        table: CalibrationTable,
+        budget: SharedBudget,
+    ) -> Self {
+        BudgetedPolicy { mode: Mode::Argmax { table }, budget, now: 0.0 }
+    }
+
+    /// Handle to the governor (e.g. to share it with another stream).
+    pub fn budget(&self) -> SharedBudget {
+        self.budget.clone()
+    }
+
+    /// Heaviest feasible DNN no heavier than `chosen`; the lightest
+    /// DNN when nothing is feasible.
+    fn demote(chosen: DnnKind, mask: &DnnMask) -> DnnKind {
+        for i in (0..=chosen.index()).rev() {
+            if mask[i] {
+                return DnnKind::from_index(i)
+                    .expect("mask index is in range");
+            }
+        }
+        DnnKind::ALL[0]
+    }
+
+    /// Feasible argmax of projected AP; ties go to the lower
+    /// energy-per-frame; lightest DNN when nothing is feasible.
+    fn argmax_select(
+        table: &CalibrationTable,
+        budget: &PowerBudget,
+        mask: &DnnMask,
+        features: &FrameFeatures,
+    ) -> DnnKind {
+        let mut best: Option<(DnnKind, f64, f64)> = None;
+        for k in DnnKind::ALL {
+            if !mask[k.index()] {
+                continue;
+            }
+            let ap = table.project_features(k, features);
+            let energy = budget.energy_per_frame_j(k);
+            let better = match best {
+                None => true,
+                Some((_, bap, be)) => {
+                    ap > bap || (ap == bap && energy < be)
+                }
+            };
+            if better {
+                best = Some((k, ap, energy));
+            }
+        }
+        best.map(|(k, _, _)| k).unwrap_or(DnnKind::ALL[0])
+    }
+}
+
+impl SelectionPolicy for BudgetedPolicy {
+    fn select(&mut self, features: &FrameFeatures) -> DnnKind {
+        let budget = self.budget.borrow();
+        let mask = budget.feasible(self.now);
+        match &mut self.mode {
+            Mode::Mask(inner) => {
+                let chosen = inner.select(features);
+                if mask[chosen.index()] {
+                    chosen
+                } else {
+                    Self::demote(chosen, &mask)
+                }
+            }
+            Mode::Argmax { table } => {
+                Self::argmax_select(table, &budget, &mask, features)
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        let desc = self.budget.borrow().descriptor();
+        match &self.mode {
+            Mode::Mask(inner) => {
+                format!("budgeted{{{}|{}}}", inner.label(), desc)
+            }
+            Mode::Argmax { table } => {
+                format!("budgeted{{argmax@{}fps|{}}}", table.fps, desc)
+            }
+        }
+    }
+
+    fn on_frame(&mut self, t_s: f64) {
+        self.now = t_s;
+        self.budget.borrow_mut().advance_to(t_s);
+        if let Mode::Mask(inner) = &mut self.mode {
+            inner.on_frame(t_s);
+        }
+    }
+
+    fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
+        self.budget.borrow_mut().record(start_s, end_s, dnn);
+        if let Mode::Mask(inner) = &mut self.mode {
+            inner.on_inferred(start_s, end_s, dnn);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{FixedPolicy, MbbsPolicy};
+    use crate::coordinator::projected::ProjectedAccuracyPolicy;
+    use crate::coordinator::policy::Thresholds;
+    use crate::sim::latency::LatencyModel;
+
+    fn det() -> LatencyModel {
+        LatencyModel::deterministic()
+    }
+
+    #[test]
+    fn unbounded_mask_matches_inner_exactly() {
+        let mut bare = MbbsPolicy::tod_default();
+        let mut wrapped = BudgetedPolicy::masking(
+            Box::new(MbbsPolicy::tod_default()),
+            PowerBudget::unbounded(),
+        );
+        for i in 0..500 {
+            let f = FrameFeatures::mbbs_only(i as f64 * 2e-4);
+            assert_eq!(wrapped.select(&f), bare.select(&f));
+        }
+    }
+
+    #[test]
+    fn infeasible_choice_demotes_to_heaviest_feasible() {
+        // cold start under 6.5 W: Y-288/Y-416 infeasible, so a fixed
+        // Y-416 policy demotes to tiny-416
+        let mut p = BudgetedPolicy::masking(
+            Box::new(FixedPolicy(DnnKind::Y416)),
+            PowerBudget::watts(6.5, &det()),
+        );
+        p.on_frame(0.0);
+        assert_eq!(
+            p.select(&FrameFeatures::mbbs_only(0.0)),
+            DnnKind::TinyY416
+        );
+    }
+
+    #[test]
+    fn saturated_window_falls_back_to_lightest() {
+        let mut p = BudgetedPolicy::masking(
+            Box::new(FixedPolicy(DnnKind::Y416)),
+            PowerBudget::watts(6.5, &det()),
+        );
+        p.on_inferred(0.0, 2.0, DnnKind::Y416);
+        p.on_frame(2.0);
+        assert_eq!(
+            p.select(&FrameFeatures::mbbs_only(0.0)),
+            DnnKind::TinyY288
+        );
+    }
+
+    #[test]
+    fn recovered_headroom_restores_inner_choice() {
+        let mut p = BudgetedPolicy::masking(
+            Box::new(FixedPolicy(DnnKind::Y416)),
+            PowerBudget::watts(6.5, &det()),
+        );
+        p.on_inferred(0.0, 1.0, DnnKind::Y416);
+        // two windows of idle later, Y-416 is feasible again
+        p.on_frame(3.0);
+        assert_eq!(
+            p.select(&FrameFeatures::mbbs_only(0.0)),
+            DnnKind::Y416
+        );
+    }
+
+    #[test]
+    fn unbounded_argmax_matches_projected_policy() {
+        let th = Thresholds::h_opt();
+        let table = CalibrationTable::from_ladder(&th, &DnnKind::ALL);
+        let proj = ProjectedAccuracyPolicy::new(table.clone(), &det());
+        let mut arg =
+            BudgetedPolicy::argmax(table, PowerBudget::unbounded());
+        for i in 0..2000 {
+            let f = FrameFeatures::mbbs_only((i as f64 + 0.5) * 5e-5);
+            assert_eq!(
+                arg.select(&f),
+                proj.select_pure(&f),
+                "diverged at {f:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn argmax_respects_the_mask() {
+        // ladder table says Y-416 for tiny MBBS, but under a cold-start
+        // 6.5 W cap the argmax lands on the best *feasible* rung
+        let th = Thresholds::h_opt();
+        let table = CalibrationTable::from_ladder(&th, &DnnKind::ALL);
+        let mut arg = BudgetedPolicy::argmax(
+            table,
+            PowerBudget::watts(6.5, &det()),
+        );
+        arg.on_frame(0.0);
+        let pick = arg.select(&FrameFeatures::mbbs_only(0.001));
+        assert!(
+            pick == DnnKind::TinyY416,
+            "expected the heaviest feasible rung, got {pick:?}"
+        );
+    }
+
+    #[test]
+    fn argmax_ties_break_to_lower_energy() {
+        // flat table: every DNN projects identically -> lowest energy
+        // per frame (the lightest) must win
+        let ap = (0..DnnKind::COUNT)
+            .map(|_| vec![vec![0.5; 1]; 1])
+            .collect();
+        let table =
+            CalibrationTable::new(30.0, vec![0.01], vec![0.0], ap);
+        let mut arg =
+            BudgetedPolicy::argmax(table, PowerBudget::unbounded());
+        assert_eq!(
+            arg.select(&FrameFeatures::mbbs_only(0.02)),
+            DnnKind::TinyY288
+        );
+    }
+
+    #[test]
+    fn labels_identify_mode_and_budget() {
+        let p = BudgetedPolicy::masking(
+            Box::new(MbbsPolicy::tod_default()),
+            PowerBudget::watts(6.5, &det()),
+        );
+        assert_eq!(
+            p.label(),
+            "budgeted{TOD{0.007,0.03,0.04}|W<=6.5,win=1s}"
+        );
+        let th = Thresholds::h_opt();
+        let a = BudgetedPolicy::argmax(
+            CalibrationTable::from_ladder(&th, &DnnKind::ALL),
+            PowerBudget::unbounded(),
+        );
+        assert_eq!(a.label(), "budgeted{argmax@30fps|unbounded}");
+    }
+
+    #[test]
+    fn shared_budget_sees_both_streams() {
+        let shared = PowerBudget::watts(6.5, &det()).shared();
+        let mut a = BudgetedPolicy::masking_shared(
+            Box::new(FixedPolicy(DnnKind::Y416)),
+            shared.clone(),
+        );
+        let mut b = BudgetedPolicy::masking_shared(
+            Box::new(FixedPolicy(DnnKind::Y416)),
+            shared.clone(),
+        );
+        // stream A saturates the shared window; stream B is masked too
+        a.on_inferred(0.0, 2.0, DnnKind::Y416);
+        b.on_frame(2.0);
+        assert_eq!(
+            b.select(&FrameFeatures::mbbs_only(0.0)),
+            DnnKind::TinyY288
+        );
+        assert_eq!(shared.borrow().n_retained(), 1);
+    }
+}

@@ -77,10 +77,10 @@ impl CalibrationTable {
                 return Err(format!("{name} must be finite and >= 0"));
             }
         }
-        if self.ap.len() != DnnKind::ALL.len() {
+        if self.ap.len() != DnnKind::COUNT {
             return Err(format!(
                 "need {} DNN grids, got {}",
-                DnnKind::ALL.len(),
+                DnnKind::COUNT,
                 self.ap.len()
             ));
         }
@@ -128,7 +128,7 @@ impl CalibrationTable {
 
     /// Total number of (dnn × size × speed) cells.
     pub fn n_cells(&self) -> usize {
-        DnnKind::ALL.len() * self.size_axis.len() * self.speed_axis.len()
+        DnnKind::COUNT * self.size_axis.len() * self.speed_axis.len()
     }
 
     /// A degenerate, size-only table that reproduces an MBBS threshold
@@ -160,7 +160,7 @@ impl CalibrationTable {
         let mut ap =
             vec![
                 vec![vec![0.0; 1]; size_axis.len()];
-                DnnKind::ALL.len()
+                DnnKind::COUNT
             ];
         for (ci, &r) in regions.iter().enumerate() {
             let intended = n_regions - 1 - r; // ladder position

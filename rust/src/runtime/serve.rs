@@ -60,7 +60,7 @@ pub struct ServeReport {
     pub wall_s: f64,
     /// (p50_ms, p95_ms, n) per DNN.
     pub per_dnn: Vec<(DnnKind, f64, f64, usize)>,
-    pub deploy: [u64; 4],
+    pub deploy: [u64; DnnKind::COUNT],
     pub switches: u64,
 }
 
@@ -126,7 +126,7 @@ pub fn serve_sequence(
     let mut backend = PjrtBackend::new(pool, fw, fh);
     let mut features = FeatureExtractor::new(fw, fh);
     let mut carried: Vec<Detection> = Vec::new();
-    let mut deploy = [0u64; 4];
+    let mut deploy = [0u64; DnnKind::COUNT];
     let mut switches = 0u64;
     let mut last: Option<DnnKind> = None;
     let t0 = Instant::now();

@@ -15,7 +15,7 @@ use crate::DnnKind;
 /// Latency source for the scheduler's virtual clock.
 #[derive(Debug, Clone)]
 pub struct LatencyModel {
-    profiles: [DnnProfile; 4],
+    profiles: [DnnProfile; DnnKind::COUNT],
     /// When false, jitter is disabled and `sample` returns the mean.
     jitter: bool,
     rng: Rng,
@@ -25,12 +25,7 @@ impl LatencyModel {
     /// Jetson-Nano-calibrated model with multiplicative jitter.
     pub fn jetson_nano(seed: u64) -> Self {
         LatencyModel {
-            profiles: [
-                DnnProfile::of(DnnKind::TinyY288),
-                DnnProfile::of(DnnKind::TinyY416),
-                DnnProfile::of(DnnKind::Y288),
-                DnnProfile::of(DnnKind::Y416),
-            ],
+            profiles: DnnKind::ALL.map(DnnProfile::of),
             jitter: true,
             rng: Rng::new(seed ^ 0x1a7e_0c10),
         }
@@ -51,8 +46,23 @@ impl LatencyModel {
 
     /// Mean latencies of all four variants, lightest first — the
     /// feasibility vector budget-constrained policies check per frame.
-    pub fn means(&self) -> [f64; 4] {
+    pub fn means(&self) -> [f64; DnnKind::COUNT] {
         DnnKind::ALL.map(|d| self.mean(d))
+    }
+
+    /// A copy with every latency mean multiplied by `factor` — the
+    /// execution half of a DVFS-style frequency cap
+    /// ([`crate::power::RateCap`] stretches by `1/scale`). Jitter, as a
+    /// fraction of the mean, is unchanged.
+    pub fn stretched(mut self, factor: f64) -> Self {
+        assert!(
+            factor > 0.0 && factor.is_finite(),
+            "latency stretch factor must be positive and finite"
+        );
+        for p in self.profiles.iter_mut() {
+            p.latency_mean_s *= factor;
+        }
+        self
     }
 
     /// Sample one inference latency, seconds.
@@ -188,6 +198,23 @@ mod tests {
     #[should_panic(expected = "non-negative")]
     fn negative_alpha_rejected() {
         ContentionModel::new(-0.1);
+    }
+
+    #[test]
+    fn stretched_scales_means_only() {
+        let m = LatencyModel::deterministic().stretched(2.0);
+        let base = LatencyModel::deterministic();
+        for d in DnnKind::ALL {
+            assert!((m.mean(d) - 2.0 * base.mean(d)).abs() < 1e-15);
+        }
+        // half-frequency Y-416: 306 ms — even 14 FPS is out of reach
+        assert!(!m.meets_realtime(DnnKind::TinyY416, 14.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "stretch factor")]
+    fn stretched_rejects_zero() {
+        let _ = LatencyModel::deterministic().stretched(0.0);
     }
 
     #[test]

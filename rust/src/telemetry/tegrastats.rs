@@ -7,7 +7,11 @@ use crate::DnnKind;
 /// The DNN-busy intervals produced by one scheduled run.
 #[derive(Debug, Clone, Default)]
 pub struct ScheduleTrace {
-    /// (start, end, dnn) in stream seconds; non-overlapping, ordered.
+    /// (start, end, dnn) in stream seconds. Producers append in
+    /// schedule order; consumers that need ordering/non-overlap go
+    /// through [`ScheduleTrace::normalised_busy`], which repairs
+    /// out-of-order or overlapping input in release builds too (the
+    /// multi-stream merge can interleave streams arbitrarily).
     pub busy: Vec<(f64, f64, DnnKind)>,
     /// Total stream duration, seconds.
     pub duration: f64,
@@ -15,18 +19,60 @@ pub struct ScheduleTrace {
 
 impl ScheduleTrace {
     pub fn push(&mut self, start: f64, end: f64, dnn: DnnKind) {
-        debug_assert!(end >= start);
+        debug_assert!(end >= start, "interval ends before it starts");
         self.busy.push((start, end, dnn));
         self.duration = self.duration.max(end);
     }
 
-    /// Busy fraction per DNN over the whole run.
-    pub fn duty_cycle(&self) -> [f64; 4] {
-        let mut out = [0.0; 4];
+    /// True when `busy` is sorted by start and non-overlapping — the
+    /// invariant every serialised scheduler maintains.
+    fn is_normalised(&self) -> bool {
+        let mut prev_end = f64::NEG_INFINITY;
+        for &(s, e, _) in &self.busy {
+            if s < prev_end || e < s {
+                return false;
+            }
+            prev_end = e;
+        }
+        true
+    }
+
+    /// The busy list with ordering/non-overlap guaranteed: the common
+    /// (already valid) case borrows; out-of-order or overlapping input
+    /// is sorted and overlap-clipped (later intervals keep only the
+    /// time not already claimed — busy time becomes the union, so
+    /// duty cycles and 1 Hz samples can never double-count a
+    /// double-booked accelerator).
+    pub fn normalised_busy(
+        &self,
+    ) -> std::borrow::Cow<'_, [(f64, f64, DnnKind)]> {
+        if self.is_normalised() {
+            return std::borrow::Cow::Borrowed(&self.busy);
+        }
+        let mut sorted = self.busy.clone();
+        sorted.sort_by(|a, b| {
+            (a.0, a.1).partial_cmp(&(b.0, b.1)).expect("finite times")
+        });
+        let mut out: Vec<(f64, f64, DnnKind)> =
+            Vec::with_capacity(sorted.len());
+        let mut claimed_until = f64::NEG_INFINITY;
+        for (s, e, d) in sorted {
+            let clipped = s.max(claimed_until);
+            if e > clipped {
+                out.push((clipped, e, d));
+                claimed_until = e;
+            }
+        }
+        std::borrow::Cow::Owned(out)
+    }
+
+    /// Busy fraction per DNN over the whole run (overlap-repaired).
+    pub fn duty_cycle(&self) -> [f64; DnnKind::COUNT] {
+        let mut out = [0.0; DnnKind::COUNT];
         if self.duration <= 0.0 {
             return out;
         }
-        for &(s, e, d) in &self.busy {
+        for &(s, e, d) in self.normalised_busy().iter() {
             out[d.index()] += (e - s) / self.duration;
         }
         out
@@ -47,7 +93,7 @@ pub struct TelemetrySample {
 /// The sampler.
 #[derive(Debug, Clone)]
 pub struct TegrastatsSim {
-    profiles: [DnnProfile; 4],
+    profiles: [DnnProfile; DnnKind::COUNT],
     /// Sampling resolution, seconds (tegrastats default: 1.0).
     pub resolution: f64,
 }
@@ -55,29 +101,40 @@ pub struct TegrastatsSim {
 impl Default for TegrastatsSim {
     fn default() -> Self {
         TegrastatsSim {
-            profiles: [
-                DnnProfile::of(DnnKind::TinyY288),
-                DnnProfile::of(DnnKind::TinyY416),
-                DnnProfile::of(DnnKind::Y288),
-                DnnProfile::of(DnnKind::Y416),
-            ],
+            profiles: DnnKind::ALL.map(DnnProfile::of),
             resolution: 1.0,
         }
     }
 }
 
 impl TegrastatsSim {
-    /// Sample a schedule trace at the configured resolution.
+    /// Length of the sampling window starting at `t` — the resolution,
+    /// except for the final partial window, which is clipped to the
+    /// trace duration so its mean covers only elapsed time.
+    fn window_len(&self, trace: &ScheduleTrace, t: f64) -> f64 {
+        (trace.duration - t).min(self.resolution)
+    }
+
+    /// Sample a schedule trace at the configured resolution. Each
+    /// sample is the mean power/GPU over its (possibly clipped final)
+    /// window, so `Σ power · window_len` equals the trace's total
+    /// energy exactly — pinned by the energy-conservation tests and by
+    /// equality with [`crate::power::EnergyMeter`].
     pub fn sample(&self, trace: &ScheduleTrace) -> Vec<TelemetrySample> {
         let n = (trace.duration / self.resolution).ceil() as usize;
+        let busy = trace.normalised_busy();
         let mut samples = Vec::with_capacity(n);
         for i in 0..n {
             let w0 = i as f64 * self.resolution;
-            let w1 = w0 + self.resolution;
-            let mut busy_frac = [0.0f64; 4];
-            for &(s, e, d) in &trace.busy {
+            let len = self.window_len(trace, w0);
+            if len <= 0.0 {
+                break;
+            }
+            let w1 = w0 + len;
+            let mut busy_frac = [0.0f64; DnnKind::COUNT];
+            for &(s, e, d) in busy.iter() {
                 let overlap = (e.min(w1) - s.max(w0)).max(0.0);
-                busy_frac[d.index()] += overlap / self.resolution;
+                busy_frac[d.index()] += overlap / len;
             }
             let mut power = POWER_IDLE_W;
             let mut gpu = GPU_IDLE_PCT;
@@ -95,28 +152,44 @@ impl TegrastatsSim {
         samples
     }
 
-    /// Mean power over a trace, watts.
+    /// Mean power over a trace, watts (time-weighted — the final
+    /// partial window counts only its elapsed length, so this equals
+    /// total energy over total duration).
     pub fn mean_power(&self, trace: &ScheduleTrace) -> f64 {
-        let s = self.sample(trace);
-        if s.is_empty() {
-            return POWER_IDLE_W;
-        }
-        s.iter().map(|x| x.power_w).sum::<f64>() / s.len() as f64
+        self.weighted_mean(trace, |s| s.power_w, POWER_IDLE_W)
     }
 
-    /// Mean GPU utilisation over a trace, percent.
+    /// Mean GPU utilisation over a trace, percent (time-weighted).
     pub fn mean_gpu(&self, trace: &ScheduleTrace) -> f64 {
-        let s = self.sample(trace);
-        if s.is_empty() {
-            return GPU_IDLE_PCT;
+        self.weighted_mean(trace, |s| s.gpu_util_pct, GPU_IDLE_PCT)
+    }
+
+    fn weighted_mean(
+        &self,
+        trace: &ScheduleTrace,
+        value: impl Fn(&TelemetrySample) -> f64,
+        empty: f64,
+    ) -> f64 {
+        let samples = self.sample(trace);
+        let mut acc = 0.0;
+        let mut total = 0.0;
+        for s in &samples {
+            let len = self.window_len(trace, s.t);
+            acc += value(s) * len;
+            total += len;
         }
-        s.iter().map(|x| x.gpu_util_pct).sum::<f64>() / s.len() as f64
+        if total <= 0.0 {
+            empty
+        } else {
+            acc / total
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::power::EnergyMeter;
     use crate::sim::profiles::mem_loaded_gb;
 
     fn saturated_trace(dnn: DnnKind, secs: f64) -> ScheduleTrace {
@@ -130,6 +203,14 @@ mod tests {
         }
         t.duration = secs;
         t
+    }
+
+    /// Σ sample power × window length — the discrete energy readout.
+    fn sampled_energy_j(sim: &TegrastatsSim, t: &ScheduleTrace) -> f64 {
+        sim.sample(t)
+            .iter()
+            .map(|s| s.power_w * sim.window_len(t, s.t))
+            .sum()
     }
 
     #[test]
@@ -148,6 +229,28 @@ mod tests {
         let t = ScheduleTrace { busy: vec![], duration: 10.0 };
         assert!((sim.mean_power(&t) - POWER_IDLE_W).abs() < 1e-9);
         assert!((sim.mean_gpu(&t) - GPU_IDLE_PCT).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_zero_duration_trace_yields_no_samples() {
+        let sim = TegrastatsSim::default();
+        let t = ScheduleTrace::default();
+        assert!(sim.sample(&t).is_empty());
+        assert_eq!(sim.mean_power(&t), POWER_IDLE_W);
+        assert_eq!(sim.mean_gpu(&t), GPU_IDLE_PCT);
+        assert_eq!(t.duty_cycle(), [0.0; DnnKind::COUNT]);
+    }
+
+    #[test]
+    fn zero_duration_interval_adds_no_energy() {
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        t.push(0.5, 0.5, DnnKind::Y416);
+        t.duration = 2.0;
+        assert!((sim.mean_power(&t) - POWER_IDLE_W).abs() < 1e-12);
+        assert!(
+            (sampled_energy_j(&sim, &t) - POWER_IDLE_W * 2.0).abs() < 1e-12
+        );
     }
 
     #[test]
@@ -176,6 +279,53 @@ mod tests {
         assert_eq!(s.len(), 13);
         assert_eq!(s[0].t, 0.0);
         assert_eq!(s[12].t, 12.0);
+        // the final partial window is saturated too: its mean is over
+        // the elapsed half-second, not a phantom full second
+        assert!((s[12].power_w - 7.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interval_spanning_a_window_boundary_splits_energy() {
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        // 0.8..1.2: 0.2 s in window 0, 0.2 s in window 1
+        t.push(0.8, 1.2, DnnKind::Y416);
+        t.duration = 2.0;
+        let s = sim.sample(&t);
+        assert_eq!(s.len(), 2);
+        let expect = POWER_IDLE_W + 0.2 * (7.5 - POWER_IDLE_W);
+        assert!((s[0].power_w - expect).abs() < 1e-12);
+        assert!((s[1].power_w - expect).abs() < 1e-12);
+        // and the split conserves the interval's energy
+        let meter = EnergyMeter::from_trace(&t);
+        assert!(
+            (sampled_energy_j(&sim, &t) - meter.energy_j()).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn partial_final_window_conserves_energy() {
+        // 2.3 s trace: 3 windows, the last 0.3 s long; window energies
+        // must sum to the trace energy exactly
+        let sim = TegrastatsSim::default();
+        let mut t = ScheduleTrace::default();
+        t.push(0.1, 0.8, DnnKind::TinyY416);
+        t.push(1.9, 2.3, DnnKind::Y288);
+        t.duration = 2.3;
+        let s = sim.sample(&t);
+        assert_eq!(s.len(), 3);
+        let meter = EnergyMeter::from_trace(&t);
+        assert!(
+            (sampled_energy_j(&sim, &t) - meter.energy_j()).abs() < 1e-9,
+            "sampled {} vs metered {}",
+            sampled_energy_j(&sim, &t),
+            meter.energy_j()
+        );
+        // time-weighted mean power equals the meter's average power
+        assert!(
+            (sim.mean_power(&t) - meter.avg_power_w()).abs() < 1e-9
+        );
+        assert!((sim.mean_gpu(&t) - meter.avg_gpu_pct()).abs() < 1e-9);
     }
 
     #[test]
@@ -208,6 +358,49 @@ mod tests {
         for s in sim.sample(&t) {
             assert!(s.gpu_util_pct <= 100.0);
         }
+    }
+
+    #[test]
+    fn out_of_order_trace_is_repaired() {
+        // multistream merges can interleave; sampling and duty cycles
+        // must not depend on push order
+        let mut ordered = ScheduleTrace::default();
+        ordered.push(0.2, 0.4, DnnKind::TinyY288);
+        ordered.push(1.1, 1.3, DnnKind::Y416);
+        ordered.duration = 2.0;
+        let mut shuffled = ScheduleTrace::default();
+        shuffled.busy.push((1.1, 1.3, DnnKind::Y416));
+        shuffled.busy.push((0.2, 0.4, DnnKind::TinyY288));
+        shuffled.duration = 2.0;
+        assert_eq!(ordered.duty_cycle(), shuffled.duty_cycle());
+        let sim = TegrastatsSim::default();
+        assert_eq!(sim.sample(&ordered), sim.sample(&shuffled));
+        assert_eq!(
+            shuffled.normalised_busy().as_ref(),
+            ordered.busy.as_slice()
+        );
+    }
+
+    #[test]
+    fn overlapping_trace_counts_union_busy_time() {
+        // a double-booked accelerator cannot read above active power
+        let mut t = ScheduleTrace::default();
+        t.push(0.0, 1.0, DnnKind::Y416);
+        t.push(0.5, 1.5, DnnKind::Y416);
+        t.duration = 2.0;
+        // union busy = 1.5 s of 2.0 s
+        let duty = t.duty_cycle()[DnnKind::Y416.index()];
+        assert!((duty - 0.75).abs() < 1e-12, "duty {duty}");
+        let sim = TegrastatsSim::default();
+        let p = sim.mean_power(&t);
+        let expect = POWER_IDLE_W + 0.75 * (7.5 - POWER_IDLE_W);
+        assert!((p - expect).abs() < 1e-9, "power {p} vs {expect}");
+        // fully contained duplicates vanish entirely
+        let mut c = ScheduleTrace::default();
+        c.push(0.0, 2.0, DnnKind::Y416);
+        c.push(0.5, 1.0, DnnKind::Y288);
+        c.duration = 2.0;
+        assert_eq!(c.normalised_busy().len(), 1);
     }
 
     #[test]

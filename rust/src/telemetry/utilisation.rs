@@ -22,7 +22,7 @@ pub struct UtilisationSummary {
     /// Total accelerator-busy seconds across all streams.
     pub busy: f64,
     /// Busy seconds split by DNN variant.
-    pub busy_per_dnn: [f64; 4],
+    pub busy_per_dnn: [f64; DnnKind::COUNT],
     /// Total inferences across all streams.
     pub inferences: u64,
     /// All busy intervals on one timeline, sorted by start — feed this
@@ -36,7 +36,7 @@ impl UtilisationSummary {
     pub fn from_traces(traces: &[&ScheduleTrace]) -> Self {
         let mut merged = ScheduleTrace::default();
         let mut busy = 0.0;
-        let mut busy_per_dnn = [0.0f64; 4];
+        let mut busy_per_dnn = [0.0f64; DnnKind::COUNT];
         let mut inferences = 0u64;
         let mut makespan = 0.0f64;
         for t in traces {

@@ -2,13 +2,21 @@
 //! simulator and bench harness.
 
 /// Streaming mean/variance via Welford's algorithm, plus min/max.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must be the same empty state as [`Welford::new`] — a
+/// derived all-zeros default would corrupt `min` for every later push.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -42,12 +50,23 @@ impl Welford {
         self.variance().sqrt()
     }
 
+    /// Smallest sample, or NaN before any sample arrives (the raw
+    /// ±INFINITY sentinels must never leak into reports).
     pub fn min(&self) -> f64 {
-        self.min
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
     }
 
+    /// Largest sample, or NaN before any sample arrives.
     pub fn max(&self) -> f64 {
-        self.max
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
     }
 
     pub fn merge(&mut self, other: &Welford) {
@@ -188,6 +207,42 @@ mod tests {
         assert_eq!(w.min(), -1.0);
         assert_eq!(w.max(), 10.0);
         assert_eq!(w.count(), 6);
+    }
+
+    #[test]
+    fn welford_empty_state_is_all_nan() {
+        let w = Welford::new();
+        assert_eq!(w.count(), 0);
+        assert!(w.mean().is_nan());
+        assert!(w.variance().is_nan());
+        assert!(w.std().is_nan());
+        assert!(w.min().is_nan(), "empty min must not report +INFINITY");
+        assert!(w.max().is_nan(), "empty max must not report -INFINITY");
+        // the Default impl is the same empty state
+        let d = Welford::default();
+        assert!(d.min().is_nan() && d.max().is_nan());
+    }
+
+    #[test]
+    fn welford_single_sample_pins_min_max() {
+        let mut w = Welford::new();
+        w.push(3.25);
+        assert_eq!(w.min(), 3.25);
+        assert_eq!(w.max(), 3.25);
+        assert_eq!(w.mean(), 3.25);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn welford_merge_with_empty_keeps_guards() {
+        let mut a = Welford::new();
+        let b = Welford::new();
+        a.merge(&b);
+        assert!(a.min().is_nan() && a.max().is_nan());
+        a.push(1.0);
+        a.merge(&Welford::new());
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 1.0);
     }
 
     #[test]
