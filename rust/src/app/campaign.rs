@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
 use crate::coordinator::multistream::{
-    DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
+    BatchingSim, DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
 };
 use crate::coordinator::policy::{FixedPolicy, MbbsPolicy, Thresholds};
 use crate::coordinator::projected::ProjectedAccuracyPolicy;
@@ -58,6 +58,10 @@ pub struct Campaign {
     /// Calibration tables keyed by eval-FPS bits (drop cost is per-FPS).
     calibrations: BTreeMap<u64, CalibrationTable>,
     multistream: BTreeMap<(usize, DispatchPolicy), MultiStreamResult>,
+    /// Batched multi-stream runs keyed by (streams, dispatch,
+    /// max_batch) under the Jetson batched latency model.
+    multistream_batched:
+        BTreeMap<(usize, DispatchPolicy, usize), MultiStreamResult>,
     thresholds: Thresholds,
 }
 
@@ -82,6 +86,7 @@ impl Campaign {
             power_budgeted: BTreeMap::new(),
             calibrations: BTreeMap::new(),
             multistream: BTreeMap::new(),
+            multistream_batched: BTreeMap::new(),
             thresholds,
         }
     }
@@ -232,43 +237,81 @@ impl Campaign {
         &self.chameleon[&id]
     }
 
-    /// `n` concurrent TOD streams (stream `i` replays catalog sequence
-    /// `ALL[i % 7]` at its eval FPS) packed onto one shared accelerator
-    /// with the Jetson contention default.
+    /// Run `n` concurrent TOD streams (stream `i` replays catalog
+    /// sequence `ALL[i % 7]` at its eval FPS) over one shared
+    /// accelerator with the Jetson contention default — the one
+    /// construction both the unbatched and batched campaign entry
+    /// points go through, so their runs stay comparable.
+    fn run_multistream(
+        &self,
+        n: usize,
+        dispatch: DispatchPolicy,
+        batching: Option<BatchingSim>,
+    ) -> MultiStreamResult {
+        let mut sched = MultiStreamScheduler::new(
+            dispatch,
+            ContentionModel::jetson_nano(),
+            LatencyModel::deterministic(),
+        );
+        if let Some(b) = batching {
+            sched = sched.with_batching(b);
+        }
+        for i in 0..n {
+            let id = SequenceId::ALL[i % SequenceId::ALL.len()];
+            let seq = &self.sequences[&id];
+            let det = OracleBackend(OracleDetector::new(
+                seq.spec.seed,
+                seq.spec.width as f64,
+                seq.spec.height as f64,
+            ));
+            sched.add_stream(
+                StreamSession::new(
+                    seq,
+                    MbbsPolicy::new(self.thresholds.clone()),
+                    id.eval_fps(),
+                ),
+                Box::new(det),
+            );
+        }
+        sched.run()
+    }
+
+    /// `n` concurrent TOD streams packed onto one shared accelerator
+    /// with the Jetson contention default (see
+    /// [`run_multistream`](Self::run_multistream)).
     pub fn multistream(
         &mut self,
         n: usize,
         dispatch: DispatchPolicy,
     ) -> &MultiStreamResult {
         if !self.multistream.contains_key(&(n, dispatch)) {
-            let ids: Vec<SequenceId> = (0..n)
-                .map(|i| SequenceId::ALL[i % SequenceId::ALL.len()])
-                .collect();
-            let mut sched = MultiStreamScheduler::new(
-                dispatch,
-                ContentionModel::jetson_nano(),
-                LatencyModel::deterministic(),
-            );
-            for &id in &ids {
-                let seq = &self.sequences[&id];
-                let det = OracleBackend(OracleDetector::new(
-                    seq.spec.seed,
-                    seq.spec.width as f64,
-                    seq.spec.height as f64,
-                ));
-                sched.add_stream(
-                    StreamSession::new(
-                        seq,
-                        MbbsPolicy::new(self.thresholds.clone()),
-                        id.eval_fps(),
-                    ),
-                    Box::new(det),
-                );
-            }
-            let r = sched.run();
+            let r = self.run_multistream(n, dispatch, None);
             self.multistream.insert((n, dispatch), r);
         }
         &self.multistream[&(n, dispatch)]
+    }
+
+    /// Like [`multistream`](Self::multistream), with deterministic
+    /// cross-stream micro-batching under the Jetson setup share
+    /// ([`BatchingSim`]): the virtual-time quantification of the
+    /// batching server's throughput win. `max_batch == 1` reproduces
+    /// the unbatched run bit for bit.
+    pub fn multistream_batched(
+        &mut self,
+        n: usize,
+        dispatch: DispatchPolicy,
+        max_batch: usize,
+    ) -> &MultiStreamResult {
+        let key = (n, dispatch, max_batch);
+        if !self.multistream_batched.contains_key(&key) {
+            let r = self.run_multistream(
+                n,
+                dispatch,
+                Some(BatchingSim::jetson_nano(max_batch)),
+            );
+            self.multistream_batched.insert(key, r);
+        }
+        &self.multistream_batched[&key]
     }
 
     /// The multi-stream scaling study: aggregate AP / drop-rate /
@@ -371,6 +414,30 @@ mod tests {
         // packing more streams onto one accelerator must not lower the
         // aggregate drop rate
         assert!(rows.last().unwrap().drop_rate >= rows[0].drop_rate);
+    }
+
+    #[test]
+    fn multistream_batched_memoized_and_wins_throughput() {
+        let mut c = Campaign::new();
+        let plain = c.multistream(4, DispatchPolicy::RoundRobin);
+        let plain_ips = plain.utilisation.throughput_ips();
+        // max_batch 1 is the unbatched schedule bit for bit
+        let b1 = c.multistream_batched(4, DispatchPolicy::RoundRobin, 1);
+        assert_eq!(
+            b1.utilisation.throughput_ips(),
+            plain_ips,
+            "max_batch=1 must be bit-identical"
+        );
+        let b4 = c.multistream_batched(4, DispatchPolicy::RoundRobin, 4);
+        let b4_ips = b4.utilisation.throughput_ips();
+        assert!(
+            b4_ips >= plain_ips,
+            "batching must not lose throughput"
+        );
+        assert!(b4.batching.is_some());
+        let again =
+            c.multistream_batched(4, DispatchPolicy::RoundRobin, 4);
+        assert_eq!(again.utilisation.throughput_ips(), b4_ips);
     }
 
     #[test]

@@ -101,7 +101,7 @@ impl Bench {
                 break;
             }
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(|a, b| a.total_cmp(b));
         let mean =
             samples_ns.iter().sum::<f64>() / samples_ns.len().max(1) as f64;
         let result = BenchResult {

@@ -11,6 +11,7 @@
 //! §V).
 
 use crate::coordinator::scheduler::{Detector, RunResult};
+use crate::dataset::mot::GtEntry;
 use crate::dataset::synth::Sequence;
 use crate::detection::{Detection, FrameDetections};
 use crate::eval::ap::{ApMethod, SequenceEval};
@@ -93,6 +94,23 @@ pub fn run_chameleon_lite(
     let mut mbbs_series = Vec::with_capacity(seq.n_frames() as usize);
     let mut dnn_series = Vec::with_capacity(seq.n_frames() as usize);
     let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
+    let mut n_failed = 0u64;
+    // a failed backend call marks the *frame* failed (n_failed counts
+    // frames, matching RunResult::n_failed semantics — one profiling
+    // frame issues several calls) and contributes an empty candidate
+    // set; the baseline keeps running (panic-free serving discipline)
+    fn detect_or_empty(
+        det: &mut dyn Detector,
+        frame_failed: &mut bool,
+        f: u64,
+        gt: &[GtEntry],
+        k: DnnKind,
+    ) -> Vec<Detection> {
+        det.detect(f, gt, k).unwrap_or_else(|_| {
+            *frame_failed = true;
+            Vec::new()
+        })
+    }
 
     for frame in FrameSource::new(seq, eval_fps) {
         let profile_now = (frame.id - 1) % cfg.window == 0;
@@ -106,24 +124,42 @@ pub fn run_chameleon_lite(
         let (outcome, interval) = acc.on_frame(frame.id, || total_time);
         match outcome {
             FrameOutcome::Inferred => {
+                let mut frame_failed = false;
                 if profile_now {
-                    // evaluate every candidate against the heavyweight
-                    let reference = FrameDetections {
-                        frame: frame.id,
-                        detections: detector.detect(
-                            frame.id,
-                            frame.gt,
-                            DnnKind::Y416,
-                        ),
-                    }
-                    .filtered()
-                    .detections;
+                    // evaluate every candidate against the heavyweight;
+                    // a failed reference call keeps the carried set
+                    // (carry-forward, like the session loop) instead of
+                    // replacing it with nothing
+                    let reference = match detector.detect(
+                        frame.id,
+                        frame.gt,
+                        DnnKind::Y416,
+                    ) {
+                        Ok(raw) => {
+                            FrameDetections {
+                                frame: frame.id,
+                                detections: raw,
+                            }
+                            .filtered()
+                            .detections
+                        }
+                        Err(_) => {
+                            frame_failed = true;
+                            carried.clone()
+                        }
+                    };
                     let mut chosen = DnnKind::Y416;
                     for k in DnnKind::ALL {
                         // lightest first: first to pass the floor wins
                         let cand = FrameDetections {
                             frame: frame.id,
-                            detections: detector.detect(frame.id, frame.gt, k),
+                            detections: detect_or_empty(
+                                detector,
+                                &mut frame_failed,
+                                frame.id,
+                                frame.gt,
+                                k,
+                            ),
                         }
                         .filtered()
                         .detections;
@@ -136,14 +172,22 @@ pub fn run_chameleon_lite(
                     carried = reference; // best available output this frame
                     deploy[DnnKind::Y416.index()] += 1;
                 } else {
-                    let raw = detector.detect(frame.id, frame.gt, dnn);
-                    carried = FrameDetections {
-                        frame: frame.id,
-                        detections: raw,
+                    match detector.detect(frame.id, frame.gt, dnn) {
+                        Ok(raw) => {
+                            carried = FrameDetections {
+                                frame: frame.id,
+                                detections: raw,
+                            }
+                            .filtered()
+                            .detections;
+                        }
+                        // failed inference: keep the carried detections
+                        Err(_) => frame_failed = true,
                     }
-                    .filtered()
-                    .detections;
                     deploy[dnn.index()] += 1;
+                }
+                if frame_failed {
+                    n_failed += 1;
                 }
                 if let Some((s, e)) = interval {
                     trace.push(s, e, if profile_now { DnnKind::Y416 } else { dnn });
@@ -172,6 +216,7 @@ pub fn run_chameleon_lite(
         n_frames: seq.n_frames(),
         n_inferred: acc.n_inferred(),
         n_dropped: acc.n_dropped(),
+        n_failed,
         deploy_counts: deploy,
         switches,
         power: crate::power::EnergyMeter::from_trace(&trace).summary(),

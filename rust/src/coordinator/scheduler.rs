@@ -26,19 +26,39 @@ use crate::DnnKind;
 use super::policy::SelectionPolicy;
 use super::session::{SessionEvent, StreamSession};
 
+/// Why one inference request failed (engine error, missing variant,
+/// malformed output). Carried per frame so a single bad PJRT call can
+/// fail its own frame without aborting the stream or the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DetectError(pub String);
+
+impl std::fmt::Display for DetectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inference failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for DetectError {}
+
 /// Inference backend abstraction: the oracle simulator or the PJRT
 /// runtime (or anything else that maps a frame to detections).
+///
+/// `detect` is fallible by design: a real backend can lose an engine or
+/// hit a bad PJRT call mid-stream, and the serving loop must degrade
+/// (carry the previous detections forward, count the failure) instead
+/// of panicking. Simulated backends simply always return `Ok`.
 pub trait Detector {
-    /// Produce raw detections for a frame.
+    /// Produce raw detections for a frame, or report why the inference
+    /// failed.
     fn detect(
         &mut self,
         frame: u64,
         gt: &[GtEntry],
         dnn: DnnKind,
-    ) -> Vec<Detection>;
+    ) -> Result<Vec<Detection>, DetectError>;
 }
 
-/// The oracle-backed detector (accuracy experiments).
+/// The oracle-backed detector (accuracy experiments; never fails).
 pub struct OracleBackend(pub OracleDetector);
 
 impl Detector for OracleBackend {
@@ -47,8 +67,8 @@ impl Detector for OracleBackend {
         frame: u64,
         gt: &[GtEntry],
         dnn: DnnKind,
-    ) -> Vec<Detection> {
-        self.0.detect(frame, gt, dnn)
+    ) -> Result<Vec<Detection>, DetectError> {
+        Ok(self.0.detect(frame, gt, dnn))
     }
 }
 
@@ -65,6 +85,10 @@ pub struct RunResult {
     pub n_frames: u64,
     pub n_inferred: u64,
     pub n_dropped: u64,
+    /// Frames whose inference *ran* (accelerator time was spent) but
+    /// the backend reported an error; their previous detections were
+    /// carried forward. Always 0 for simulated backends.
+    pub n_failed: u64,
     /// Inference count per DNN (Fig. 10's deployment frequency).
     pub deploy_counts: [u64; DnnKind::COUNT],
     /// Number of DNN switches between consecutive inferences.
@@ -132,9 +156,15 @@ pub fn run_offline(
     let mut mbbs_series = Vec::with_capacity(seq.n_frames() as usize);
     let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
     let mut dnn_series = Vec::with_capacity(seq.n_frames() as usize);
+    let mut n_failed = 0u64;
     for f in 1..=seq.n_frames() {
         let gt = seq.gt(f);
-        let raw = detector.detect(f, gt, dnn);
+        // offline mode has no carry-forward: a failed inference simply
+        // contributes an empty detection set for its own frame
+        let raw = detector.detect(f, gt, dnn).unwrap_or_else(|_| {
+            n_failed += 1;
+            Vec::new()
+        });
         let dets =
             FrameDetections { frame: f, detections: raw }.filtered().detections;
         mbbs_series.push(mbbs(&dets, fw, fh));
@@ -156,6 +186,7 @@ pub fn run_offline(
         n_frames: seq.n_frames(),
         n_inferred: seq.n_frames(),
         n_dropped: 0,
+        n_failed,
         deploy_counts: {
             let mut d = [0u64; DnnKind::COUNT];
             d[dnn.index()] = seq.n_frames();

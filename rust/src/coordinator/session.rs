@@ -38,6 +38,10 @@ pub enum SessionEvent {
     /// The DNN ran on this frame; `interval` is the accelerator-busy
     /// window in stream seconds.
     Inferred { frame: u64, dnn: DnnKind, interval: (f64, f64) },
+    /// The DNN ran (accelerator time was spent over `interval`) but the
+    /// backend reported an error: the previous detections carry forward
+    /// and the failure is counted, never panicked on.
+    InferenceFailed { frame: u64, dnn: DnnKind, interval: (f64, f64) },
     /// The accelerator was still busy; the previous detections carry
     /// forward (Algorithm 2).
     Dropped { frame: u64 },
@@ -71,6 +75,9 @@ pub struct StreamSession<'a> {
     /// Online energy/utilisation accounting (folded per step, not
     /// post-hoc — see [`crate::power::EnergyMeter`]).
     meter: EnergyMeter,
+    /// Inferences whose backend reported an error (detections carried
+    /// forward instead).
+    n_failed: u64,
     /// 1-based id of the next frame to present.
     next_frame: u64,
 }
@@ -101,6 +108,7 @@ impl<'a> StreamSession<'a> {
                 seq.spec.height as f64,
             ),
             meter: EnergyMeter::new(),
+            n_failed: 0,
             next_frame: 1,
         }
     }
@@ -161,6 +169,11 @@ impl<'a> StreamSession<'a> {
         self.acc.n_inferred()
     }
 
+    /// Inferences whose backend reported an error so far.
+    pub fn n_failed(&self) -> u64 {
+        self.n_failed
+    }
+
     /// Stream-feature view of the currently carried detections (what
     /// the policy will see at the next step).
     pub fn stream_features(&self) -> crate::features::FrameFeatures {
@@ -200,6 +213,37 @@ impl<'a> StreamSession<'a> {
         resource_free: f64,
         inflation: f64,
     ) -> SessionEvent {
+        self.step_with(
+            detector,
+            &mut |dnn| {
+                let base = latency.sample(dnn);
+                if inflation == 1.0 {
+                    base
+                } else {
+                    base * inflation
+                }
+            },
+            resource_free,
+        )
+    }
+
+    /// Advance the stream by one frame with the inference latency
+    /// supplied by the caller per selected DNN.
+    ///
+    /// This is the core step every other form delegates to. Handing the
+    /// caller the `DnnKind -> seconds` mapping lets schedulers price a
+    /// dispatch by its *context* — e.g. the batched multi-stream
+    /// scheduler charges only the marginal per-item cost when the
+    /// selected DNN continues the accelerator's current micro-batch
+    /// ([`crate::sim::latency::BatchLatencyModel`]). `latency_of` is
+    /// called at most once, and only when the frame is actually
+    /// inferred.
+    pub fn step_with(
+        &mut self,
+        detector: &mut dyn Detector,
+        latency_of: &mut dyn FnMut(DnnKind) -> f64,
+        resource_free: f64,
+    ) -> SessionEvent {
         if self.is_finished() {
             return SessionEvent::Finished;
         }
@@ -221,30 +265,21 @@ impl<'a> StreamSession<'a> {
         self.mbbs_series.push(feats.mbbs);
         let dnn = self.policy.select(&feats);
 
-        let (outcome, interval) =
-            self.acc.on_frame_shared(frame, resource_free, || {
-                let base = latency.sample(dnn);
-                if inflation == 1.0 {
-                    base
-                } else {
-                    base * inflation
-                }
-            });
+        let (outcome, interval) = self
+            .acc
+            .on_frame_shared(frame, resource_free, || latency_of(dnn));
         let event = match outcome {
             FrameOutcome::Inferred => {
-                let raw = detector.detect(frame, gt, dnn);
-                let fd = FrameDetections { frame, detections: raw };
-                self.carried = fd.filtered().detections;
-                // speed advances only on fresh snapshots: a carried set
-                // matched against itself would read as zero motion
-                self.features.on_detections(frame, &self.carried);
-                self.deploy[dnn.index()] += 1;
+                // the accelerator time is committed whether or not the
+                // backend succeeds: the busy interval, energy and
+                // deploy accounting describe what the hardware did
                 let interval =
                     interval.expect("inferred frame has a busy interval");
                 let (s, e) = interval;
                 self.trace.push(s, e, dnn);
                 self.meter.on_interval(s, e, dnn);
                 self.policy.on_inferred(s, e, dnn);
+                self.deploy[dnn.index()] += 1;
                 if let Some(prev) = self.last_dnn {
                     if prev != dnn {
                         self.switches += 1;
@@ -252,7 +287,24 @@ impl<'a> StreamSession<'a> {
                 }
                 self.last_dnn = Some(dnn);
                 self.dnn_series.push(Some(dnn));
-                SessionEvent::Inferred { frame, dnn, interval }
+                match detector.detect(frame, gt, dnn) {
+                    Ok(raw) => {
+                        let fd = FrameDetections { frame, detections: raw };
+                        self.carried = fd.filtered().detections;
+                        // speed advances only on fresh snapshots: a
+                        // carried set matched against itself would read
+                        // as zero motion
+                        self.features.on_detections(frame, &self.carried);
+                        SessionEvent::Inferred { frame, dnn, interval }
+                    }
+                    Err(_) => {
+                        // failed inference: this frame keeps the stale
+                        // carried detections; the stream (and process)
+                        // keep running
+                        self.n_failed += 1;
+                        SessionEvent::InferenceFailed { frame, dnn, interval }
+                    }
+                }
             }
             FrameOutcome::Dropped => {
                 self.dnn_series.push(None);
@@ -289,6 +341,7 @@ impl<'a> StreamSession<'a> {
             n_frames: self.seq.n_frames(),
             n_inferred: self.acc.n_inferred(),
             n_dropped: self.acc.n_dropped(),
+            n_failed: self.n_failed,
             deploy_counts: self.deploy,
             switches: self.switches,
             power: self.meter.summary(),
@@ -343,6 +396,7 @@ mod tests {
             match s.step(&mut det, &mut lat) {
                 SessionEvent::Finished => break,
                 SessionEvent::Inferred { frame, .. }
+                | SessionEvent::InferenceFailed { frame, .. }
                 | SessionEvent::Dropped { frame } => {
                     frames_seen += 1;
                     assert_eq!(frame, frames_seen);

@@ -52,6 +52,23 @@ impl FrameDetections {
     }
 }
 
+/// Descending-confidence ordering with NaN ranked *last*.
+///
+/// A NaN score carries no confidence information, so it must lose
+/// every comparison: ranked first (as raw `total_cmp` would put it) a
+/// NaN-scored box would claim ground truth in matching and suppress
+/// genuinely confident boxes in NMS — one bad tensor value erasing
+/// valid detections. Ranked last, the damage stays confined to the
+/// NaN detection itself (and the score filter drops it anyway).
+pub fn by_score_desc_nan_last(a: f32, b: f32) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater, // a sorts after b
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
+
 /// Median of Bounding-Box Sizes as a fraction of the frame area — the
 /// paper's per-frame signal (§III.B.3). Returns 0.0 when there are no
 /// boxes, which routes Algorithm 1 to the heaviest DNN (its `else`
@@ -65,9 +82,11 @@ pub fn mbbs(dets: &[Detection], frame_w: f64, frame_h: f64) -> f64 {
         .map(|d| d.bbox.area_frac(frame_w, frame_h))
         .collect();
     // In-place O(n) selection; no allocation beyond the areas scratch.
+    // total_cmp: a NaN area (degenerate box from a broken decode) must
+    // not abort the serving loop — it sorts above +inf deterministically.
     let mid = areas.len() / 2;
     let (_, m, _) =
-        areas.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        areas.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
     let hi = *m;
     if areas.len() % 2 == 1 {
         hi
@@ -85,8 +104,10 @@ pub fn mbbs(dets: &[Detection], frame_w: f64, frame_h: f64) -> f64 {
 /// different class ids never suppress each other.
 pub fn nms(dets: &[Detection], iou_thresh: f64) -> Vec<Detection> {
     let mut order: Vec<usize> = (0..dets.len()).collect();
+    // NaN-safe descending score order; NaN ranks last so it can never
+    // suppress a genuinely confident box
     order.sort_by(|&a, &b| {
-        dets[b].score.partial_cmp(&dets[a].score).unwrap()
+        by_score_desc_nan_last(dets[a].score, dets[b].score)
     });
     let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
     let mut suppressed = vec![false; dets.len()];
@@ -214,5 +235,45 @@ mod tests {
     #[test]
     fn nms_empty_input() {
         assert!(nms(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn nan_score_does_not_panic_nms_or_mbbs() {
+        // a detector emitting one NaN score must not abort the pipeline
+        let dets = vec![
+            det(0., 0., 10., 10., 0.8),
+            det(50., 50., 10., 10., f32::NAN),
+            det(100., 100., 10., 10., 0.6),
+        ];
+        let kept = nms(&dets, 0.5);
+        assert_eq!(kept.len(), 3);
+        let m = mbbs(&dets, 1000., 1000.);
+        assert!(m.is_finite());
+    }
+
+    #[test]
+    fn nan_score_cannot_suppress_valid_detections() {
+        // regression: NaN must rank last, so a NaN-scored box never
+        // claims NMS priority over a genuinely confident overlap (the
+        // score filter then removes the NaN box, so damage from one
+        // bad tensor value stays confined to that detection)
+        let dets = vec![
+            det(1., 1., 10., 10., f32::NAN),
+            det(0., 0., 10., 10., 0.9),
+        ];
+        let kept = nms(&dets, 0.5);
+        assert_eq!(kept.len(), 1, "NaN box must be the suppressed one");
+        assert_eq!(kept[0].score, 0.9);
+        use std::cmp::Ordering;
+        assert_eq!(by_score_desc_nan_last(0.1, f32::NAN), Ordering::Less);
+        assert_eq!(
+            by_score_desc_nan_last(f32::NAN, 0.1),
+            Ordering::Greater
+        );
+        assert_eq!(
+            by_score_desc_nan_last(f32::NAN, f32::NAN),
+            Ordering::Equal
+        );
+        assert_eq!(by_score_desc_nan_last(0.9, 0.1), Ordering::Less);
     }
 }

@@ -5,6 +5,10 @@
 //! provided: the continuous (VOC-2010 / MOT devkit) all-point rule used
 //! by default, and the classic 11-point rule for cross-checking.
 
+// Evaluation sits on the serving path (per-stream AP reports): a NaN
+// confidence must degrade one ranking, never panic the process.
+#![deny(clippy::unwrap_used)]
+
 use crate::eval::matching::FrameMatch;
 
 /// AP integration rule.
@@ -59,7 +63,12 @@ pub fn pr_curve(scored: &[(f32, bool)], n_gt: usize) -> Vec<(f64, f64)> {
         return Vec::new();
     }
     let mut s: Vec<(f32, bool)> = scored.to_vec();
-    s.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // NaN-safe descending sort: one NaN confidence from a broken head
+    // must not abort a whole evaluation. NaN carries no confidence, so
+    // it ranks last — it cannot outrank any finite-score detection.
+    s.sort_by(|a, b| {
+        crate::detection::by_score_desc_nan_last(a.0, b.0)
+    });
     let mut tp = 0usize;
     let mut fp = 0usize;
     let mut curve = Vec::with_capacity(s.len());
@@ -220,6 +229,23 @@ mod tests {
         let a = e.ap(ApMethod::AllPoint);
         let b = e.ap(ApMethod::ElevenPoint);
         assert!((a - b).abs() < 0.08, "all={a} eleven={b}");
+    }
+
+    #[test]
+    fn nan_score_does_not_abort_evaluation() {
+        // regression: a single NaN confidence used to panic the sort
+        // inside pr_curve; it must now rank deterministically (last,
+        // as a no-confidence detection) and leave the AP finite
+        let e = eval_from(
+            vec![(0.9, true), (f32::NAN, false), (0.7, true)],
+            2,
+        );
+        let ap = e.ap(ApMethod::AllPoint);
+        assert!(ap.is_finite());
+        assert!((0.0..=1.0).contains(&ap));
+        // the NaN FP ranks below both TPs, so full recall is reached
+        // at precision 1 before the FP appears: AP = 1
+        assert!((ap - 1.0).abs() < 1e-12, "ap={ap}");
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! removed from scoring entirely rather than counted as false positives,
 //! following the MOT devkit.
 
+// Matching sits on the serving path: NaN scores/IoUs must never panic.
+#![deny(clippy::unwrap_used)]
+
 use crate::dataset::mot::GtEntry;
 use crate::detection::Detection;
 
@@ -36,8 +39,14 @@ pub fn match_frame(
         gt.iter().filter(|g| !g.is_considered()).collect();
 
     let mut order: Vec<usize> = (0..dets.len()).collect();
+    // NaN-safe descending score order with NaN ranked last: a
+    // NaN-scored detection must neither panic the frame's evaluation
+    // nor steal a ground-truth match from a confident detection
     order.sort_by(|&a, &b| {
-        dets[b].score.partial_cmp(&dets[a].score).unwrap()
+        crate::detection::by_score_desc_nan_last(
+            dets[a].score,
+            dets[b].score,
+        )
     });
 
     let mut gt_taken = vec![false; considered.len()];
@@ -180,5 +189,40 @@ mod tests {
         let m = match_frame(&[], &[], IOU_THRESHOLD);
         assert_eq!(m.n_gt, 0);
         assert!(m.scored.is_empty());
+    }
+
+    #[test]
+    fn nan_score_matches_without_panicking() {
+        // one NaN-scored detection among real ones: the frame still
+        // matches, with the NaN entry ranked last deterministically
+        let g = vec![gt(0., 0., 10., 10., 1.0, 1)];
+        let d = vec![
+            det(0., 0., 10., 10., 0.6),
+            det(100., 100., 10., 10., f32::NAN),
+        ];
+        let m = match_frame(&d, &g, IOU_THRESHOLD);
+        assert_eq!(m.n_gt, 1);
+        assert_eq!(m.scored.len(), 2);
+        let tp = m.scored.iter().filter(|(_, t)| *t).count();
+        assert_eq!(tp, 1);
+    }
+
+    #[test]
+    fn nan_score_cannot_steal_a_match() {
+        // both detections overlap the single gt box; the NaN-scored
+        // one ranks last, so the confident detection takes the TP
+        let g = vec![gt(0., 0., 10., 10., 1.0, 1)];
+        let d = vec![
+            det(1., 0., 10., 10., f32::NAN),
+            det(0., 0., 10., 10., 0.8),
+        ];
+        let m = match_frame(&d, &g, IOU_THRESHOLD);
+        let tps: Vec<f32> = m
+            .scored
+            .iter()
+            .filter(|(_, t)| *t)
+            .map(|(s, _)| *s)
+            .collect();
+        assert_eq!(tps, vec![0.8], "the finite score must win the gt");
     }
 }

@@ -207,7 +207,9 @@ fn match_displacements(
             }
         }
     }
-    iou_pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // NaN-safe: a degenerate box can yield a NaN IoU; it must sort
+    // deterministically, not panic the per-frame feature update
+    iou_pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     for &(_, i, j) in &iou_pairs {
         if prev_used[i] || cur_used[j] {
             continue;
@@ -235,7 +237,7 @@ fn match_displacements(
             }
         }
     }
-    dist_pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    dist_pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     for &(_, i, j) in &dist_pairs {
         if prev_used[i] || cur_used[j] {
             continue;

@@ -60,9 +60,40 @@
 //! lowest energy per frame). With no caps configured every policy is
 //! bit-identical to its unwrapped self.
 //!
+//! ## Serving at scale: the micro-batching server
+//!
+//! Production traffic means many cameras per box and a request path
+//! that must never die. [`runtime::server::InferenceServer`] puts a
+//! multi-producer micro-batching front in front of the engine pool:
+//! concurrent streams submit [`runtime::server::InferRequest`]s, the
+//! server collects them into per-DNN batches (flush at
+//! `max_batch` or `max_wait` — [`runtime::batch::BatchConfig`]),
+//! dispatches each batch on the crate's [`exec::pool::ThreadPool`],
+//! and resolves every request through its own
+//! [`runtime::server::ResultHandle`]. Admission is bounded
+//! (block-or-shed, [`runtime::batch::AdmissionPolicy`]) and the whole
+//! path is **panic-free by construction**: engine errors fail their
+//! own request ([`runtime::server::ServeError`]), a panicking backend
+//! is caught per item, and a batch that never runs resolves its
+//! requests with a shutdown error instead of stranding waiters. The
+//! same discipline runs down the stack: the
+//! [`coordinator::scheduler::Detector`] trait is fallible, a failed
+//! inference carries the previous detections forward
+//! ([`coordinator::session::SessionEvent::InferenceFailed`]), and the
+//! evaluators order NaN scores deterministically instead of panicking.
+//!
+//! The batching *win* is quantified deterministically in virtual time:
+//! [`sim::latency::BatchLatencyModel`] prices a batch as setup +
+//! per-item marginal cost (a batch of one costs exactly the unbatched
+//! mean), and [`coordinator::multistream::BatchingSim`] lets the
+//! multi-stream scheduler amortise setup across back-to-back same-DNN
+//! dispatches — `tod multistream --batch` and `benches/batching.rs`
+//! print the frames/s side by side.
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
-//! the multi-stream architecture (§8) and the power subsystem (§10),
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! the multi-stream architecture (§8), the power subsystem (§10) and
+//! the batching server (§11), and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
 
 pub mod app;
 pub mod bench;

@@ -20,7 +20,9 @@ use std::path::PathBuf;
 use tod::app::Campaign;
 use tod::cli::Args;
 use tod::coordinator::baselines::{run_chameleon_lite, ChameleonConfig};
-use tod::coordinator::multistream::{DispatchPolicy, MultiStreamScheduler};
+use tod::coordinator::multistream::{
+    BatchingSim, DispatchPolicy, MultiStreamScheduler,
+};
 use tod::coordinator::policy::{
     FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds,
 };
@@ -32,7 +34,8 @@ use tod::power::{
     BudgetConfig, BudgetedPolicy, EnergyMeter, PowerBudget, RateCap,
 };
 use tod::predictor::{calibrate, store, CalibrationConfig, CalibrationTable};
-use tod::sim::latency::{ContentionModel, LatencyModel};
+use tod::runtime::batch::{AdmissionPolicy, BatchConfig};
+use tod::sim::latency::{BatchLatencyModel, ContentionModel, LatencyModel};
 use tod::sim::oracle::OracleDetector;
 use tod::telemetry::tegrastats::TegrastatsSim;
 use tod::DnnKind;
@@ -92,7 +95,13 @@ fn usage() {
          synthetic\n  \
          operating points (oracle ground truth) and writes it as \
          versioned JSON\n\
-         multistream [--streams 4] [--dispatch rr|edf] [--alpha 0.12]\n\
+         multistream [--streams 4] [--dispatch rr|edf] [--alpha 0.12]\n  \
+         [--batch [--max-batch 4] [--setup-frac 0.35]]  --batch compares \
+         the\n  \
+         same schedule with cross-stream micro-batching (setup cost \
+         amortised\n  \
+         across back-to-back same-DNN dispatches) against per-request \
+         dispatch\n\
          multistream --scaling [--scale 1,2,4,8] [--dispatch rr|edf]\n\
          power [--seq MOT17-05] [--watts 6.5] [--gpu PCT] \
          [--window 1.0]\n  \
@@ -102,7 +111,14 @@ fn usage() {
          claim);\n  \
          --rate-cap adds a DVFS-style frequency-capped TOD run\n\
          dataset --out <dir>\n\
-         serve [--frames 60] [--artifacts artifacts] [--policy tod]\n\
+         serve [--frames 60] [--artifacts artifacts] [--policy tod]\n  \
+         [--batch [--streams 4] [--max-batch 4] [--max-wait-ms 2] \
+         [--shed]]\n  \
+         --batch serves N concurrent synthetic streams through the \
+         micro-\n  \
+         batching server (per-DNN batches, bounded queue, panic-free \
+         per-request\n  \
+         results); --shed rejects on overload instead of blocking\n\
          bench-report"
     );
 }
@@ -223,6 +239,12 @@ fn print_run(r: &RunResult) {
         r.drop_rate() * 100.0,
         r.switches
     );
+    if r.n_failed > 0 {
+        println!(
+            "  {} inferences failed (detections carried forward)",
+            r.n_failed
+        );
+    }
     let freq = r.deploy_freq();
     println!(
         "  deploy: YT-288 {:.1}% YT-416 {:.1}% Y-288 {:.1}% Y-416 {:.1}%",
@@ -701,23 +723,92 @@ fn cmd_multistream(args: &Args) -> i32 {
         .map(|i| SequenceId::ALL[i % SequenceId::ALL.len()])
         .collect();
     let seqs: Vec<_> = ids.iter().map(|&id| generate(id)).collect();
-    let mut sched = MultiStreamScheduler::new(
-        dispatch,
-        ContentionModel::new(alpha),
-        LatencyModel::deterministic(),
-    );
-    for (id, seq) in ids.iter().zip(&seqs) {
-        let det = OracleBackend(OracleDetector::new(
-            seq.spec.seed,
-            seq.spec.width as f64,
-            seq.spec.height as f64,
-        ));
-        sched.add_stream(
-            StreamSession::new(seq, MbbsPolicy::tod_default(), id.eval_fps()),
-            Box::new(det),
+    let build = |batching: Option<BatchingSim>| {
+        let mut sched = MultiStreamScheduler::new(
+            dispatch,
+            ContentionModel::new(alpha),
+            LatencyModel::deterministic(),
         );
+        if let Some(b) = batching {
+            sched = sched.with_batching(b);
+        }
+        for (id, seq) in ids.iter().zip(&seqs) {
+            let det = OracleBackend(OracleDetector::new(
+                seq.spec.seed,
+                seq.spec.width as f64,
+                seq.spec.height as f64,
+            ));
+            sched.add_stream(
+                StreamSession::new(
+                    seq,
+                    MbbsPolicy::tod_default(),
+                    id.eval_fps(),
+                ),
+                Box::new(det),
+            );
+        }
+        sched.run()
+    };
+    if args.has("batch") {
+        let max_batch = match args.get_parse("max-batch", 4usize) {
+            Ok(v) if v >= 1 => v,
+            Ok(v) => {
+                eprintln!("--max-batch must be >= 1, got {v}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let setup_frac = match args.get_parse(
+            "setup-frac",
+            BatchLatencyModel::DEFAULT_SETUP_FRAC,
+        ) {
+            Ok(v) if (0.0..1.0).contains(&v) => v,
+            Ok(v) => {
+                eprintln!("--setup-frac must be in [0, 1), got {v}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let plain = build(None);
+        let batched =
+            build(Some(BatchingSim::new(setup_frac, max_batch)));
+        println!(
+            "{n} streams, {dispatch} dispatch, alpha {alpha}: \
+             per-request vs micro-batched (max_batch {max_batch}, \
+             setup share {setup_frac}):"
+        );
+        println!(
+            "  {:<14} {:>8} {:>7} {:>7} {:>7}",
+            "mode", "inf/s", "util%", "drop%", "mean AP"
+        );
+        for (label, r) in
+            [("per-request", &plain), ("micro-batched", &batched)]
+        {
+            println!(
+                "  {label:<14} {:>8.1} {:>7.1} {:>7.1} {:>7.3}",
+                r.utilisation.throughput_ips(),
+                r.utilisation.utilisation() * 100.0,
+                r.drop_rate() * 100.0,
+                r.mean_ap(),
+            );
+        }
+        println!(
+            "  throughput x{:.2}",
+            batched.utilisation.throughput_ips()
+                / plain.utilisation.throughput_ips().max(1e-12)
+        );
+        if let Some(stats) = &batched.batching {
+            println!("  batching: {stats}");
+        }
+        return 0;
     }
-    let result = sched.run();
+    let result = build(None);
     println!(
         "{n} streams over one accelerator ({dispatch} dispatch, \
          contention alpha {alpha}):"
@@ -773,7 +864,58 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    match tod::runtime::serve::serve_demo(&artifacts, frames) {
+    let served = if args.has("batch") {
+        let streams = match args.get_parse("streams", 4usize) {
+            Ok(v) => v.max(1),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let max_batch = match args.get_parse("max-batch", 4usize) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let max_wait_ms = match args.get_parse("max-wait-ms", 2.0f64) {
+            Ok(v) if v >= 0.0 && v.is_finite() => v,
+            Ok(v) => {
+                eprintln!("--max-wait-ms must be non-negative, got {v}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let default_cfg = BatchConfig::default();
+        let cfg = BatchConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(
+                (max_wait_ms * 1e3) as u64,
+            ),
+            admission: if args.has("shed") {
+                AdmissionPolicy::Shed
+            } else {
+                AdmissionPolicy::Block
+            },
+            // a full batch must be admissible: grow the default queue
+            // bound with --max-batch instead of failing validation
+            queue_cap: default_cfg.queue_cap.max(max_batch),
+        };
+        if let Err(e) = cfg.validate() {
+            eprintln!("invalid batch config: {e}");
+            return 2;
+        }
+        tod::runtime::serve::serve_batched_demo(
+            &artifacts, frames, streams, cfg,
+        )
+    } else {
+        tod::runtime::serve::serve_demo(&artifacts, frames)
+    };
+    match served {
         Ok(report) => {
             println!("{report}");
             0

@@ -1,0 +1,412 @@
+//! Micro-batch collection for the inference server: per-DNN pending
+//! queues with size- and deadline-bounded flushing.
+//!
+//! Requests from concurrent streams accumulate per variant; a queue
+//! becomes *due* the moment it holds [`BatchConfig::max_batch`] items
+//! (size flush) or its oldest request has waited
+//! [`BatchConfig::max_wait`] (deadline flush — batching must never add
+//! unbounded latency to a lone stream). [`MicroBatcher`] is the pure
+//! data structure; the locking, completion handles and execution live
+//! in [`super::server`], and the deterministic virtual-time counterpart
+//! used by the simulator is
+//! [`crate::sim::latency::BatchLatencyModel`].
+
+// This module is on the serving path: no unwrap/expect — every failure
+// mode must surface as a value, not a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::DnnKind;
+
+/// What to do with a request that arrives while the pending queue is
+/// at [`BatchConfig::queue_cap`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Apply backpressure: the submitting stream blocks until space
+    /// frees up (the default — no request is ever silently lost).
+    Block,
+    /// Shed load: reject immediately with a queue-full error the
+    /// caller can downgrade on (e.g. carry the previous detections).
+    Shed,
+}
+
+/// Tunables for the micro-batching server.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Flush a variant's queue as soon as it holds this many requests.
+    pub max_batch: usize,
+    /// Flush a variant's queue once its oldest request has waited this
+    /// long, even if the batch is not full.
+    pub max_wait: Duration,
+    /// Bound on requests admitted but not yet dispatched (admission
+    /// control across all variants).
+    pub queue_cap: usize,
+    /// Policy when the queue is at capacity.
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 64,
+            admission: AdmissionPolicy::Block,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Validate the configuration, naming the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("max_batch must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue_cap must be >= 1".into());
+        }
+        if self.queue_cap < self.max_batch {
+            return Err(format!(
+                "queue_cap ({}) must be >= max_batch ({}) or full \
+                 batches could never form",
+                self.queue_cap, self.max_batch
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-variant batch accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VariantBatchStats {
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Requests carried by those batches.
+    pub items: u64,
+    /// Largest batch dispatched.
+    pub largest: usize,
+}
+
+impl VariantBatchStats {
+    /// Mean items per batch (0.0 before the first dispatch).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Batch statistics across all variants, plus admission shedding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Indexed by [`DnnKind::index`].
+    pub per_dnn: [VariantBatchStats; DnnKind::COUNT],
+    /// Requests rejected by [`AdmissionPolicy::Shed`].
+    pub shed: u64,
+}
+
+impl Default for BatchStats {
+    fn default() -> Self {
+        BatchStats {
+            per_dnn: [VariantBatchStats::default(); DnnKind::COUNT],
+            shed: 0,
+        }
+    }
+}
+
+impl BatchStats {
+    /// Fold one dispatched batch into the accounting.
+    pub fn record(&mut self, dnn: DnnKind, n: usize) {
+        let v = &mut self.per_dnn[dnn.index()];
+        v.batches += 1;
+        v.items += n as u64;
+        v.largest = v.largest.max(n);
+    }
+
+    pub fn total_batches(&self) -> u64 {
+        self.per_dnn.iter().map(|v| v.batches).sum()
+    }
+
+    pub fn total_items(&self) -> u64 {
+        self.per_dnn.iter().map(|v| v.items).sum()
+    }
+
+    /// Mean items per batch over every variant.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.total_batches();
+        if b == 0 {
+            0.0
+        } else {
+            self.total_items() as f64 / b as f64
+        }
+    }
+}
+
+impl std::fmt::Display for BatchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} batches / {} items (mean {:.2}/batch",
+            self.total_batches(),
+            self.total_items(),
+            self.mean_batch()
+        )?;
+        if self.shed > 0 {
+            write!(f, ", {} shed", self.shed)?;
+        }
+        write!(f, ")")?;
+        for k in DnnKind::ALL {
+            let v = &self.per_dnn[k.index()];
+            if v.batches > 0 {
+                write!(
+                    f,
+                    "\n  {:16} {:>5} batches, mean {:.2}, largest {}",
+                    k.artifact_name(),
+                    v.batches,
+                    v.mean_batch(),
+                    v.largest
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Queue index -> variant. Indices are always `< DnnKind::COUNT` by
+/// construction; fall back to the heaviest variant rather than
+/// panicking on the serving path.
+fn variant_at(idx: usize) -> DnnKind {
+    DnnKind::from_index(idx).unwrap_or(DnnKind::Y416)
+}
+
+/// One pending request with its enqueue time.
+struct Pending<T> {
+    since: Instant,
+    item: T,
+}
+
+/// Per-DNN pending queues with size/deadline flush rules. Pure data
+/// structure: the caller supplies `now` explicitly, which keeps every
+/// flush decision deterministic and unit-testable.
+pub struct MicroBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    queues: Vec<VecDeque<Pending<T>>>,
+    queued: usize,
+}
+
+impl<T> MicroBatcher<T> {
+    /// `max_batch >= 1`; a zero `max_wait` makes every request due
+    /// immediately (degenerates to per-request dispatch when paired
+    /// with `max_batch == 1`).
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        MicroBatcher {
+            max_batch,
+            max_wait,
+            queues: (0..DnnKind::COUNT).map(|_| VecDeque::new()).collect(),
+            queued: 0,
+        }
+    }
+
+    /// Total pending requests across every variant.
+    pub fn len(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Enqueue one request for `dnn` at time `now`.
+    pub fn push(&mut self, dnn: DnnKind, item: T, now: Instant) {
+        self.queues[dnn.index()].push_back(Pending { since: now, item });
+        self.queued += 1;
+    }
+
+    /// Earliest deadline-flush instant over the non-empty queues, or
+    /// `None` when nothing is pending. A full queue is due *now*.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut earliest: Option<Instant> = None;
+        for q in &self.queues {
+            let Some(head) = q.front() else { continue };
+            let due = if q.len() >= self.max_batch {
+                head.since // already due: deadline in the past
+            } else {
+                head.since + self.max_wait
+            };
+            earliest = Some(match earliest {
+                Some(e) if e <= due => e,
+                _ => due,
+            });
+        }
+        earliest
+    }
+
+    /// Pop the most urgent due batch at time `now`: full queues first
+    /// (largest wins), then expired queues by oldest head; ties break
+    /// on the lower variant index. Returns up to `max_batch` items.
+    pub fn pop_due(&mut self, now: Instant) -> Option<(DnnKind, Vec<T>)> {
+        let mut best: Option<(usize, usize, Instant)> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            let Some(head) = q.front() else { continue };
+            let full = q.len() >= self.max_batch;
+            let expired = now.duration_since(head.since) >= self.max_wait;
+            if !full && !expired {
+                continue;
+            }
+            let candidate = (i, q.len().min(self.max_batch), head.since);
+            best = Some(match best {
+                // prefer larger batches, then older heads
+                Some(b) if b.1 > candidate.1
+                    || (b.1 == candidate.1 && b.2 <= candidate.2) =>
+                {
+                    b
+                }
+                _ => candidate,
+            });
+        }
+        let (idx, take, _) = best?;
+        Some((variant_at(idx), self.drain(idx, take)))
+    }
+
+    /// Pop any pending batch regardless of deadlines (shutdown drain).
+    pub fn pop_any(&mut self) -> Option<(DnnKind, Vec<T>)> {
+        let idx = self.queues.iter().position(|q| !q.is_empty())?;
+        let take = self.queues[idx].len().min(self.max_batch);
+        Some((variant_at(idx), self.drain(idx, take)))
+    }
+
+    fn drain(&mut self, idx: usize, n: usize) -> Vec<T> {
+        let q = &mut self.queues[idx];
+        let out: Vec<T> = q.drain(..n).map(|p| p.item).collect();
+        self.queued -= out.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn config_validation_names_the_field() {
+        assert!(BatchConfig::default().validate().is_ok());
+        let bad = BatchConfig { max_batch: 0, ..BatchConfig::default() };
+        assert!(bad.validate().unwrap_err().contains("max_batch"));
+        let bad = BatchConfig { queue_cap: 0, ..BatchConfig::default() };
+        assert!(bad.validate().unwrap_err().contains("queue_cap"));
+        let bad = BatchConfig {
+            max_batch: 8,
+            queue_cap: 4,
+            ..BatchConfig::default()
+        };
+        assert!(bad.validate().unwrap_err().contains("full"));
+    }
+
+    #[test]
+    fn size_flush_at_max_batch() {
+        let mut b = MicroBatcher::new(3, Duration::from_secs(3600));
+        let now = t0();
+        b.push(DnnKind::Y416, 1u32, now);
+        b.push(DnnKind::Y416, 2, now);
+        assert!(b.pop_due(now).is_none(), "not full, not expired");
+        b.push(DnnKind::Y416, 3, now);
+        let (dnn, items) = b.pop_due(now).expect("full queue is due");
+        assert_eq!(dnn, DnnKind::Y416);
+        assert_eq!(items, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flush_after_max_wait() {
+        let wait = Duration::from_millis(50);
+        let mut b = MicroBatcher::new(8, wait);
+        let now = t0();
+        b.push(DnnKind::TinyY288, 7u32, now);
+        assert!(b.pop_due(now).is_none());
+        assert_eq!(b.next_deadline(), Some(now + wait));
+        let (dnn, items) =
+            b.pop_due(now + wait).expect("expired queue is due");
+        assert_eq!(dnn, DnnKind::TinyY288);
+        assert_eq!(items, vec![7]);
+    }
+
+    #[test]
+    fn oversize_queue_flushes_in_max_batch_chunks() {
+        let mut b = MicroBatcher::new(2, Duration::from_secs(3600));
+        let now = t0();
+        for i in 0..5u32 {
+            b.push(DnnKind::Y288, i, now);
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.pop_due(now), Some((DnnKind::Y288, vec![0, 1])));
+        assert_eq!(b.pop_due(now), Some((DnnKind::Y288, vec![2, 3])));
+        // the remainder is below max_batch and not yet expired
+        assert_eq!(b.pop_due(now), None);
+        assert_eq!(b.pop_any(), Some((DnnKind::Y288, vec![4])));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn fuller_queue_wins_then_older_head() {
+        let mut b = MicroBatcher::new(4, Duration::from_millis(10));
+        let now = t0();
+        b.push(DnnKind::TinyY288, 1u32, now);
+        b.push(DnnKind::Y416, 2, now);
+        b.push(DnnKind::Y416, 3, now);
+        let later = now + Duration::from_millis(20);
+        // both expired; Y-416 holds more items so it flushes first
+        assert_eq!(b.pop_due(later), Some((DnnKind::Y416, vec![2, 3])));
+        assert_eq!(b.pop_due(later), Some((DnnKind::TinyY288, vec![1])));
+    }
+
+    #[test]
+    fn variants_never_mix_in_one_batch() {
+        let mut b = MicroBatcher::new(2, Duration::ZERO);
+        let now = t0();
+        b.push(DnnKind::TinyY288, 1u32, now);
+        b.push(DnnKind::Y416, 2, now);
+        let mut seen = Vec::new();
+        while let Some((dnn, items)) = b.pop_due(now) {
+            assert_eq!(items.len(), 1);
+            seen.push(dnn);
+        }
+        assert_eq!(seen.len(), 2);
+        assert_ne!(seen[0], seen[1]);
+    }
+
+    #[test]
+    fn stats_accumulate_and_render() {
+        let mut s = BatchStats::default();
+        s.record(DnnKind::Y416, 4);
+        s.record(DnnKind::Y416, 2);
+        s.record(DnnKind::TinyY288, 1);
+        assert_eq!(s.total_batches(), 3);
+        assert_eq!(s.total_items(), 7);
+        assert!((s.mean_batch() - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.per_dnn[DnnKind::Y416.index()].largest, 4);
+        assert!((s.per_dnn[DnnKind::Y416.index()].mean_batch() - 3.0).abs()
+            < 1e-12);
+        let text = s.to_string();
+        assert!(text.contains("3 batches"));
+        assert!(text.contains("yolov4-416"));
+    }
+
+    #[test]
+    fn empty_batcher_has_no_deadline() {
+        let b: MicroBatcher<u32> =
+            MicroBatcher::new(4, Duration::from_millis(1));
+        assert_eq!(b.next_deadline(), None);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -7,14 +7,25 @@
 //! rasterizes frames ([`raster`]), and decodes raw YOLO heads into
 //! detections ([`decode`]) using the shapes/anchors recorded in
 //! `artifacts/manifest.json` ([`manifest`]).
+//!
+//! Scaling layer: [`batch`] collects requests from concurrent streams
+//! into per-DNN micro-batches and [`server`] serves them panic-free
+//! behind bounded admission — see DESIGN.md §11.
 
+pub mod batch;
 pub mod decode;
 pub mod engine;
 pub mod manifest;
 pub mod pool;
 pub mod raster;
 pub mod serve;
+pub mod server;
 
+pub use batch::{AdmissionPolicy, BatchConfig, BatchStats};
 pub use engine::Engine;
 pub use manifest::{HeadSpec, Manifest, VariantSpec};
 pub use pool::EnginePool;
+pub use server::{
+    AdmitError, BatchDetector, InferRequest, InferenceServer, ResultHandle,
+    ServeError, ServerCore,
+};

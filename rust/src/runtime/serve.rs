@@ -2,21 +2,37 @@
 //! decode -> policy, with all four engines preloaded. Python never runs
 //! here — the binary is self-contained once `make artifacts` has built
 //! the HLO text.
+//!
+//! Two shapes are provided: [`serve_sequence`] drives one stream with
+//! per-request dispatch, and [`serve_batched`] multiplexes N streams
+//! through the micro-batching [`ServerCore`] (client threads submit,
+//! the engine-owning thread pumps batches — compiled executables never
+//! cross threads). Both are panic-free: an engine failure fails its own
+//! frame (counted, detections carried forward), never the process.
+
+// Serving path: engine failures and NaNs must degrade per frame, not
+// panic the loop.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::path::Path;
-use std::time::Instant;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::policy::{MbbsPolicy, SelectionPolicy};
-use crate::coordinator::scheduler::Detector;
+use crate::coordinator::scheduler::{DetectError, Detector};
 use crate::dataset::mot::GtEntry;
 use crate::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
 use crate::detection::{Detection, FrameDetections};
 use crate::features::FeatureExtractor;
+use crate::runtime::batch::{BatchConfig, BatchStats};
 use crate::runtime::decode::decode;
 use crate::runtime::pool::EnginePool;
 use crate::runtime::raster::rasterize;
+use crate::runtime::server::{
+    BatchPoll, InferRequest, ServeError, ServerCore,
+};
 use crate::util::stats::percentile;
 use crate::DnnKind;
 
@@ -37,21 +53,52 @@ impl<'a> PjrtBackend<'a> {
 }
 
 impl<'a> Detector for PjrtBackend<'a> {
+    /// Fallible by contract: a missing variant or failed PJRT call
+    /// propagates as an error for *this frame* instead of crashing the
+    /// serving loop.
     fn detect(
         &mut self,
         frame: u64,
         gt: &[GtEntry],
         dnn: DnnKind,
-    ) -> Vec<Detection> {
-        let engine = self.pool.engine(dnn).expect("variant not loaded");
+    ) -> std::result::Result<Vec<Detection>, DetectError> {
+        let engine = self
+            .pool
+            .engine(dnn)
+            .map_err(|e| DetectError(format!("{e:#}")))?;
         let spec = engine.spec().clone();
         let img =
             rasterize(gt, self.frame_w, self.frame_h, spec.input_size, frame);
         let t0 = Instant::now();
-        let heads = engine.infer(&img).expect("inference failed");
+        let heads = engine
+            .infer(&img)
+            .map_err(|e| DetectError(format!("{e:#}")))?;
         self.latencies.push((dnn, t0.elapsed().as_secs_f64()));
-        decode(&heads, &spec, self.frame_w, self.frame_h)
+        Ok(decode(&heads, &spec, self.frame_w, self.frame_h))
     }
+}
+
+/// Run one request directly against the pool (shared by the batched
+/// pump and any caller that owns the engines on the current thread).
+pub fn infer_on_pool(
+    pool: &EnginePool,
+    req: &InferRequest,
+) -> std::result::Result<Vec<Detection>, ServeError> {
+    let engine = pool
+        .engine(req.dnn)
+        .map_err(|e| ServeError::Engine(format!("{e:#}")))?;
+    let spec = engine.spec();
+    let img = rasterize(
+        &req.gt,
+        req.frame_w,
+        req.frame_h,
+        spec.input_size,
+        req.frame,
+    );
+    let heads = engine
+        .infer(&img)
+        .map_err(|e| ServeError::Engine(format!("{e:#}")))?;
+    Ok(decode(&heads, spec, req.frame_w, req.frame_h))
 }
 
 /// Latency/throughput report for one serving run.
@@ -62,6 +109,8 @@ pub struct ServeReport {
     pub per_dnn: Vec<(DnnKind, f64, f64, usize)>,
     pub deploy: [u64; DnnKind::COUNT],
     pub switches: u64,
+    /// Frames whose inference failed (detections carried forward).
+    pub failed: u64,
 }
 
 impl std::fmt::Display for ServeReport {
@@ -84,6 +133,13 @@ impl std::fmt::Display for ServeReport {
                 n
             )?;
         }
+        if self.failed > 0 {
+            writeln!(
+                f,
+                "  {} frames failed inference (carried forward)",
+                self.failed
+            )?;
+        }
         writeln!(
             f,
             "  deploy counts (YT-288/YT-416/Y-288/Y-416): {:?}, switches {}",
@@ -98,8 +154,16 @@ impl std::fmt::Display for ServeReport {
 /// drop-frame accounting is exercised by the simulation campaign).
 pub fn serve_demo(artifacts: &Path, frames: u64) -> Result<String> {
     let pool = EnginePool::load(artifacts)?;
-    let spec = SequenceSpec {
-        name: "SERVE-DEMO".into(),
+    let seq = demo_sequence(0, frames);
+    let report = serve_sequence(&pool, &seq, &mut MbbsPolicy::tod_default())?;
+    Ok(report.to_string())
+}
+
+/// A deterministic synthetic demo stream; `stream` varies the seed so
+/// multi-stream demos don't serve four copies of one scene.
+fn demo_sequence(stream: u64, frames: u64) -> Sequence {
+    Sequence::generate(SequenceSpec {
+        name: format!("SERVE-DEMO-{stream}"),
         width: 640,
         height: 480,
         fps: 30.0,
@@ -109,14 +173,80 @@ pub fn serve_demo(artifacts: &Path, frames: u64) -> Result<String> {
         depth_range: (1.0, 2.5),
         walk_speed: 1.5,
         camera: CameraMotion::Walking { pan_speed: 6.0 },
-        seed: 2021,
-    };
-    let seq = Sequence::generate(spec);
-    let report = serve_sequence(&pool, &seq, &mut MbbsPolicy::tod_default())?;
-    Ok(report.to_string())
+        seed: 2021 + stream,
+    })
 }
 
-/// Run a policy over a sequence with real PJRT inference on every frame.
+/// Per-stream serving bookkeeping shared by the per-request loop
+/// ([`serve_sequence`]) and the batched client loop: the select ->
+/// infer -> carry-forward discipline lives in exactly one place, so
+/// the batched path cannot drift from the unbatched semantics the
+/// bit-identical-per-request guarantee rests on.
+struct StreamState {
+    features: FeatureExtractor,
+    carried: Vec<Detection>,
+    deploy: [u64; DnnKind::COUNT],
+    switches: u64,
+    failed: u64,
+    last: Option<DnnKind>,
+}
+
+impl StreamState {
+    fn new(frame_w: f64, frame_h: f64) -> Self {
+        StreamState {
+            features: FeatureExtractor::new(frame_w, frame_h),
+            carried: Vec::new(),
+            deploy: [0; DnnKind::COUNT],
+            switches: 0,
+            failed: 0,
+            last: None,
+        }
+    }
+
+    /// Select the DNN for the next frame from the carried detections.
+    fn select(&mut self, policy: &mut dyn SelectionPolicy) -> DnnKind {
+        let feats = self.features.features(&self.carried);
+        policy.select(&feats)
+    }
+
+    /// Fold one frame's outcome. `Some(raw)` replaces the carried set
+    /// and advances the speed estimate; `None` (a failed request)
+    /// keeps the carried detections and counts the failure. `spent`
+    /// says whether the backend actually ran — deploy/switch
+    /// accounting mirrors the session loop, counting only spent
+    /// accelerator time (a shed/never-admitted request deploys
+    /// nothing).
+    fn on_result(
+        &mut self,
+        frame: u64,
+        dnn: DnnKind,
+        raw: Option<Vec<Detection>>,
+        spent: bool,
+    ) {
+        if spent {
+            self.deploy[dnn.index()] += 1;
+            if let Some(prev) = self.last {
+                if prev != dnn {
+                    self.switches += 1;
+                }
+            }
+            self.last = Some(dnn);
+        }
+        match raw {
+            Some(raw) => {
+                self.carried = FrameDetections { frame, detections: raw }
+                    .filtered()
+                    .detections;
+                self.features.on_detections(frame, &self.carried);
+            }
+            None => self.failed += 1,
+        }
+    }
+}
+
+/// Run a policy over a sequence with real PJRT inference on every
+/// frame. A failed inference fails only its own frame: the previous
+/// detections carry forward and the failure is counted in the report.
 pub fn serve_sequence(
     pool: &EnginePool,
     seq: &Sequence,
@@ -124,39 +254,38 @@ pub fn serve_sequence(
 ) -> Result<ServeReport> {
     let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
     let mut backend = PjrtBackend::new(pool, fw, fh);
-    let mut features = FeatureExtractor::new(fw, fh);
-    let mut carried: Vec<Detection> = Vec::new();
-    let mut deploy = [0u64; DnnKind::COUNT];
-    let mut switches = 0u64;
-    let mut last: Option<DnnKind> = None;
+    let mut state = StreamState::new(fw, fh);
     let t0 = Instant::now();
     for f in 1..=seq.n_frames() {
-        let feats = features.features(&carried);
-        let dnn = policy.select(&feats);
-        let raw = backend.detect(f, seq.gt(f), dnn);
-        carried = FrameDetections { frame: f, detections: raw }
-            .filtered()
-            .detections;
-        features.on_detections(f, &carried);
-        deploy[dnn.index()] += 1;
-        if let Some(prev) = last {
-            if prev != dnn {
-                switches += 1;
-            }
-        }
-        last = Some(dnn);
+        let dnn = state.select(policy);
+        // the engine ran (spent time) whether or not it succeeded
+        let raw = backend.detect(f, seq.gt(f), dnn).ok();
+        state.on_result(f, dnn, raw, true);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let mut per_dnn = Vec::new();
+    Ok(ServeReport {
+        frames: seq.n_frames(),
+        wall_s: wall,
+        per_dnn: per_dnn_percentiles(&backend.latencies),
+        deploy: state.deploy,
+        switches: state.switches,
+        failed: state.failed,
+    })
+}
+
+/// (p50_ms, p95_ms, n) per DNN from (dnn, seconds) samples.
+fn per_dnn_percentiles(
+    latencies: &[(DnnKind, f64)],
+) -> Vec<(DnnKind, f64, f64, usize)> {
+    let mut out = Vec::new();
     for k in DnnKind::ALL {
-        let ms: Vec<f64> = backend
-            .latencies
+        let ms: Vec<f64> = latencies
             .iter()
             .filter(|(d, _)| *d == k)
             .map(|(_, s)| s * 1e3)
             .collect();
         if !ms.is_empty() {
-            per_dnn.push((
+            out.push((
                 k,
                 percentile(&ms, 50.0),
                 percentile(&ms, 95.0),
@@ -164,11 +293,237 @@ pub fn serve_sequence(
             ));
         }
     }
-    Ok(ServeReport {
+    out
+}
+
+/// Report for one batched multi-stream serving run.
+pub struct BatchedServeReport {
+    pub streams: usize,
+    /// Total frames served across every stream.
+    pub frames: u64,
+    pub wall_s: f64,
+    /// Requests that resolved with an error (their frames carried the
+    /// previous detections forward).
+    pub failed: u64,
+    pub deploy: [u64; DnnKind::COUNT],
+    pub switches: u64,
+    /// Micro-batch statistics (batches formed, mean/largest size).
+    pub stats: BatchStats,
+    /// (p50_ms, p95_ms, n) per DNN measured per *batch* dispatch.
+    pub per_dnn_batch: Vec<(DnnKind, f64, f64, usize)>,
+}
+
+impl std::fmt::Display for BatchedServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} frames from {} concurrent streams in {:.2}s \
+             ({:.2} frames/s, micro-batched CPU-PJRT)",
+            self.frames,
+            self.streams,
+            self.wall_s,
+            self.frames as f64 / self.wall_s
+        )?;
+        writeln!(f, "  batching: {}", self.stats)?;
+        for (k, p50, p95, n) in &self.per_dnn_batch {
+            writeln!(
+                f,
+                "  {:16} batch p50 {:7.1} ms  p95 {:7.1} ms  ({} batches)",
+                k.artifact_name(),
+                p50,
+                p95,
+                n
+            )?;
+        }
+        if self.failed > 0 {
+            writeln!(
+                f,
+                "  {} requests failed (each failed only its own frame)",
+                self.failed
+            )?;
+        }
+        writeln!(
+            f,
+            "  deploy counts (YT-288/YT-416/Y-288/Y-416): {:?}, switches {}",
+            self.deploy, self.switches
+        )
+    }
+}
+
+/// Per-stream outcome of a batched serving client.
+struct StreamOutcome {
+    frames: u64,
+    failed: u64,
+    deploy: [u64; DnnKind::COUNT],
+    switches: u64,
+}
+
+/// One stream's client loop: select -> submit -> wait -> carry.
+/// Identical per-stream semantics to [`serve_sequence`] (the shared
+/// [`StreamState`] bookkeeping), so batched results are bit-identical
+/// per request to unbatched execution.
+fn run_stream_client(
+    core: &ServerCore,
+    stream: u64,
+    seq: &Sequence,
+    mut policy: Box<dyn SelectionPolicy>,
+) -> StreamOutcome {
+    let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
+    let mut state = StreamState::new(fw, fh);
+    for f in 1..=seq.n_frames() {
+        let dnn = state.select(policy.as_mut());
+        let submitted = core.submit(InferRequest {
+            stream,
+            frame: f,
+            dnn,
+            frame_w: fw,
+            frame_h: fh,
+            gt: seq.gt(f).to_vec(),
+        });
+        let outcome = match submitted {
+            Ok(handle) => handle.wait(),
+            Err(e) => Err(ServeError::NotAdmitted(e)),
+        };
+        // shed, shutdown or engine failure: this frame keeps the
+        // carried detections and the stream continues. Only requests
+        // the backend actually executed count as deployed.
+        match outcome {
+            Ok(raw) => state.on_result(f, dnn, Some(raw), true),
+            Err(
+                ServeError::NotAdmitted(_) | ServeError::Shutdown,
+            ) => state.on_result(f, dnn, None, false),
+            Err(_) => state.on_result(f, dnn, None, true),
+        }
+    }
+    StreamOutcome {
         frames: seq.n_frames(),
+        failed: state.failed,
+        deploy: state.deploy,
+        switches: state.switches,
+    }
+}
+
+/// Serve N concurrent streams through the micro-batching server with
+/// real PJRT inference.
+///
+/// Client threads run the per-stream policy loops and submit requests;
+/// *this* thread — the one that owns the [`EnginePool`] — pumps the
+/// [`ServerCore`] and executes each micro-batch, so compiled PJRT
+/// executables never cross a thread boundary.
+pub fn serve_batched(
+    pool: &EnginePool,
+    seqs: &[Sequence],
+    cfg: BatchConfig,
+    make_policy: &(dyn Fn() -> Box<dyn SelectionPolicy> + Sync),
+) -> Result<BatchedServeReport> {
+    if seqs.is_empty() {
+        bail!("serve_batched needs at least one stream");
+    }
+    if let Err(e) = cfg.validate() {
+        bail!("invalid batch config: {e}");
+    }
+    let core = ServerCore::new(cfg);
+    let live = AtomicUsize::new(seqs.len());
+    let mut batch_lat: Vec<(DnnKind, f64)> = Vec::new();
+    let t0 = Instant::now();
+    let outcomes: Vec<StreamOutcome> =
+        std::thread::scope(|s| -> Result<Vec<StreamOutcome>> {
+            let handles: Vec<_> = seqs
+                .iter()
+                .enumerate()
+                .map(|(si, seq)| {
+                    let core = core.clone();
+                    let live = &live;
+                    s.spawn(move || {
+                        // decrement on drop so a panicking client still
+                        // releases the pump (mirrors ThreadPool's slot
+                        // guard)
+                        struct Live<'a>(&'a AtomicUsize);
+                        impl Drop for Live<'_> {
+                            fn drop(&mut self) {
+                                self.0.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                        let _live = Live(live);
+                        run_stream_client(
+                            &core,
+                            si as u64,
+                            seq,
+                            make_policy(),
+                        )
+                    })
+                })
+                .collect();
+            // pump: execute micro-batches on the engine-owning thread
+            while live.load(Ordering::SeqCst) > 0 {
+                if let BatchPoll::Batch(batch) =
+                    core.next_batch(Duration::from_millis(2))
+                {
+                    let dnn = batch.dnn();
+                    let bt = Instant::now();
+                    batch.run_with(&mut |req| infer_on_pool(pool, req));
+                    batch_lat.push((dnn, bt.elapsed().as_secs_f64()));
+                }
+            }
+            // drain anything a dying client left behind
+            core.close();
+            loop {
+                match core.next_batch(Duration::from_millis(1)) {
+                    BatchPoll::Batch(batch) => {
+                        batch.run_with(&mut |req| infer_on_pool(pool, req));
+                    }
+                    BatchPoll::Idle => continue,
+                    BatchPoll::Drained => break,
+                }
+            }
+            let mut outs = Vec::with_capacity(handles.len());
+            for h in handles {
+                outs.push(h.join().map_err(|_| {
+                    anyhow!("a stream client thread panicked")
+                })?);
+            }
+            Ok(outs)
+        })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut deploy = [0u64; DnnKind::COUNT];
+    let mut frames = 0u64;
+    let mut failed = 0u64;
+    let mut switches = 0u64;
+    for o in &outcomes {
+        frames += o.frames;
+        failed += o.failed;
+        switches += o.switches;
+        for (total, n) in deploy.iter_mut().zip(o.deploy.iter()) {
+            *total += n;
+        }
+    }
+    Ok(BatchedServeReport {
+        streams: seqs.len(),
+        frames,
         wall_s: wall,
-        per_dnn,
+        failed,
         deploy,
         switches,
+        stats: core.stats(),
+        per_dnn_batch: per_dnn_percentiles(&batch_lat),
     })
+}
+
+/// The `tod serve --batch` demo: N synthetic streams through the
+/// micro-batching server.
+pub fn serve_batched_demo(
+    artifacts: &Path,
+    frames: u64,
+    streams: usize,
+    cfg: BatchConfig,
+) -> Result<String> {
+    let pool = EnginePool::load(artifacts)?;
+    let seqs: Vec<Sequence> = (0..streams.max(1) as u64)
+        .map(|i| demo_sequence(i, frames))
+        .collect();
+    let report = serve_batched(&pool, &seqs, cfg, &|| {
+        Box::new(MbbsPolicy::tod_default())
+    })?;
+    Ok(report.to_string())
 }

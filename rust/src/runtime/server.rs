@@ -1,0 +1,724 @@
+//! Multi-producer micro-batching inference server.
+//!
+//! Concurrent streams submit [`InferRequest`]s; the server collects
+//! them into per-DNN micro-batches (size- and deadline-bounded, see
+//! [`super::batch`]), dispatches each batch as one job, and hands every
+//! submitter a [`ResultHandle`] it can block on. Three invariants make
+//! the path production-shaped:
+//!
+//! * **Panic-free**: every request resolves to a `Result`. An engine
+//!   error fails its own request; a *panic* inside the backend is
+//!   caught per item, so a poisoned batch fails only the requests in
+//!   it — the process, the workers and the other streams keep going.
+//! * **Admission-controlled**: the pending queue is bounded
+//!   ([`crate::runtime::batch::BatchConfig::queue_cap`]); overload
+//!   either blocks the submitter (backpressure) or sheds the request
+//!   with [`AdmitError::QueueFull`], per
+//!   [`crate::runtime::batch::AdmissionPolicy`].
+//! * **No silent loss**: a dropped (never-executed) batch job fails its
+//!   requests with [`ServeError::Shutdown`] instead of leaving waiters
+//!   parked forever.
+//!
+//! [`ServerCore`] is the engine-agnostic heart (queues + completion
+//! plumbing): any thread may pump it via [`ServerCore::next_batch`] and
+//! execute batches wherever it likes — the PJRT demo pumps on the
+//! thread that owns the engine pool, so compiled executables never
+//! cross threads. [`InferenceServer`] is the turnkey threaded front:
+//! a dispatcher thread pops due batches and runs them on the crate's
+//! [`ThreadPool`] against a shared [`BatchDetector`].
+
+// Serving path: a NaN, a dead engine or a poisoned lock must surface
+// as a value, never a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::dataset::mot::GtEntry;
+use crate::detection::Detection;
+use crate::exec::pool::ThreadPool;
+use crate::runtime::batch::{
+    AdmissionPolicy, BatchConfig, BatchStats, MicroBatcher,
+};
+use crate::DnnKind;
+
+/// One inference request from one stream.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Caller-chosen stream tag (diagnostics only).
+    pub stream: u64,
+    /// 1-based frame id within the stream.
+    pub frame: u64,
+    /// Variant the stream's policy selected.
+    pub dnn: DnnKind,
+    /// Source frame dimensions (the decode scale).
+    pub frame_w: f64,
+    pub frame_h: f64,
+    /// The frame payload of this reproduction: ground-truth boxes the
+    /// backend rasterizes into the input image.
+    pub gt: Vec<GtEntry>,
+}
+
+/// Why one request failed. Failures are per request by construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The backend reported an error (missing variant, PJRT failure,
+    /// malformed output).
+    Engine(String),
+    /// The backend panicked while executing this request's batch; the
+    /// panic was caught and confined to the affected items.
+    BatchPanicked,
+    /// The server shut down (or lost its workers) before the request
+    /// ran.
+    Shutdown,
+    /// The request was never admitted (shed under overload, or the
+    /// server closed to new work) — distinct from [`Self::Engine`] so
+    /// operators can tell deliberate load shedding from a dying
+    /// backend.
+    NotAdmitted(AdmitError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+            ServeError::BatchPanicked => {
+                f.write_str("backend panicked while serving this batch")
+            }
+            ServeError::Shutdown => {
+                f.write_str("server shut down before the request ran")
+            }
+            ServeError::NotAdmitted(e) => {
+                write!(f, "not admitted: {e}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request inference outcome.
+pub type ServeResult = Result<Vec<Detection>, ServeError>;
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Shed-mode admission control rejected the request (queue full).
+    QueueFull,
+    /// The server is closed to new work.
+    Shutdown,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => {
+                f.write_str("request shed: pending queue full")
+            }
+            AdmitError::Shutdown => f.write_str("server closed"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Batch execution backend for the threaded [`InferenceServer`].
+///
+/// `infer` must be callable from any worker thread. `on_batch_start`
+/// fires once per dispatched batch before its items run — backends
+/// model (or perform) per-dispatch setup there, so batching has
+/// something to amortise.
+pub trait BatchDetector: Send + Sync {
+    /// Run one request.
+    fn infer(&self, req: &InferRequest) -> ServeResult;
+
+    /// Called once before a batch of `n` same-variant requests runs.
+    fn on_batch_start(&self, dnn: DnnKind, n: usize) {
+        let _ = (dnn, n);
+    }
+}
+
+/// Recover the guard from a poisoned lock: the server must keep
+/// serving other requests even after a panic somewhere else poisoned a
+/// mutex (the panic itself was already confined by `catch_unwind`).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One-shot completion slot shared by a request and its executor.
+///
+/// Resolution is tracked by a flag separate from the result's
+/// presence: taking the result (via `wait`/`try_wait`) must not reopen
+/// the slot, or a late drop-guard write could overwrite a delivered
+/// success with a spurious shutdown error.
+struct Completion {
+    slot: Mutex<Slot>,
+    ready: Condvar,
+}
+
+struct Slot {
+    result: Option<ServeResult>,
+    resolved: bool,
+}
+
+impl Completion {
+    fn new() -> Arc<Completion> {
+        Arc::new(Completion {
+            slot: Mutex::new(Slot { result: None, resolved: false }),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// First write wins; later writes (e.g. the drop guard after a
+    /// normal completion) are no-ops — even after the first result has
+    /// already been taken by a waiter.
+    fn fulfil(&self, result: ServeResult) {
+        let mut slot = lock_unpoisoned(&self.slot);
+        if !slot.resolved {
+            slot.resolved = true;
+            slot.result = Some(result);
+            self.ready.notify_all();
+        }
+    }
+}
+
+/// Waitable handle for one submitted request.
+pub struct ResultHandle {
+    done: Arc<Completion>,
+}
+
+impl ResultHandle {
+    /// Block until the request resolves. Every admitted request
+    /// resolves: completed batches fulfil normally, and batches that
+    /// are dropped unexecuted fail their requests with
+    /// [`ServeError::Shutdown`]. If the result was already consumed by
+    /// an earlier [`try_wait`](Self::try_wait), reports `Shutdown`
+    /// rather than hanging.
+    pub fn wait(self) -> ServeResult {
+        let mut slot = lock_unpoisoned(&self.done.slot);
+        loop {
+            if let Some(result) = slot.result.take() {
+                return result;
+            }
+            if slot.resolved {
+                return Err(ServeError::Shutdown);
+            }
+            slot = self
+                .done
+                .ready
+                .wait(slot)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking probe; `Some` exactly once, when the result is in.
+    pub fn try_wait(&self) -> Option<ServeResult> {
+        lock_unpoisoned(&self.done.slot).result.take()
+    }
+}
+
+/// One queued request plus its completion slot.
+pub struct BatchJob {
+    req: InferRequest,
+    done: Arc<Completion>,
+}
+
+impl BatchJob {
+    pub fn request(&self) -> &InferRequest {
+        &self.req
+    }
+
+    /// Resolve this request.
+    pub fn complete(self, result: ServeResult) {
+        self.done.fulfil(result);
+    }
+}
+
+/// A never-executed job must not strand its waiter.
+impl Drop for BatchJob {
+    fn drop(&mut self) {
+        self.done.fulfil(Err(ServeError::Shutdown));
+    }
+}
+
+/// One flushed micro-batch: same-variant jobs ready to execute.
+pub struct MicroBatch {
+    dnn: DnnKind,
+    jobs: Vec<BatchJob>,
+}
+
+impl MicroBatch {
+    pub fn dnn(&self) -> DnnKind {
+        self.dnn
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Execute every job with `infer`, catching panics **per item**: a
+    /// panicking request resolves to [`ServeError::BatchPanicked`] and
+    /// the rest of the batch still runs.
+    pub fn run_with(
+        self,
+        infer: &mut dyn FnMut(&InferRequest) -> ServeResult,
+    ) {
+        for job in self.jobs {
+            let outcome =
+                catch_unwind(AssertUnwindSafe(|| infer(job.request())));
+            match outcome {
+                Ok(result) => job.complete(result),
+                Err(_) => job.complete(Err(ServeError::BatchPanicked)),
+            }
+        }
+    }
+
+    /// Execute against a [`BatchDetector`] (setup hook + per-item run).
+    pub fn run(self, detector: &dyn BatchDetector) {
+        let n = self.len();
+        let dnn = self.dnn;
+        if catch_unwind(AssertUnwindSafe(|| {
+            detector.on_batch_start(dnn, n)
+        }))
+        .is_err()
+        {
+            // a panicking setup poisons the whole batch — but only the
+            // batch: each request resolves instead of the process dying
+            for job in self.jobs {
+                job.complete(Err(ServeError::BatchPanicked));
+            }
+            return;
+        }
+        self.run_with(&mut |req| detector.infer(req));
+    }
+}
+
+/// What [`ServerCore::next_batch`] observed.
+pub enum BatchPoll {
+    /// A due batch, ready to execute.
+    Batch(MicroBatch),
+    /// Nothing came due within the wait budget.
+    Idle,
+    /// The server is closed and every pending request has been handed
+    /// out: the pump loop can stop.
+    Drained,
+}
+
+struct CoreState {
+    batcher: MicroBatcher<BatchJob>,
+    closed: bool,
+}
+
+struct CoreShared {
+    state: Mutex<CoreState>,
+    /// Pump wake-up: new work, a newly due batch, or close.
+    kick: Condvar,
+    /// Submitter wake-up: queue space freed, or close.
+    space: Condvar,
+    cfg: BatchConfig,
+    stats: Mutex<BatchStats>,
+}
+
+/// Engine-agnostic server core: bounded admission, per-DNN
+/// micro-batching, completion handles. Clone handles freely — all
+/// clones share one queue.
+#[derive(Clone)]
+pub struct ServerCore {
+    shared: Arc<CoreShared>,
+}
+
+impl ServerCore {
+    /// Panics only on an invalid config (see
+    /// [`BatchConfig::validate`]); prefer validating CLI input first.
+    pub fn new(cfg: BatchConfig) -> ServerCore {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid batch config: {e}");
+        }
+        let batcher = MicroBatcher::new(cfg.max_batch, cfg.max_wait);
+        ServerCore {
+            shared: Arc::new(CoreShared {
+                state: Mutex::new(CoreState { batcher, closed: false }),
+                kick: Condvar::new(),
+                space: Condvar::new(),
+                cfg,
+                stats: Mutex::new(BatchStats::default()),
+            }),
+        }
+    }
+
+    /// Submit one request; returns a handle the caller can block on.
+    ///
+    /// At capacity, [`AdmissionPolicy::Block`] waits for space while
+    /// [`AdmissionPolicy::Shed`] fails fast with
+    /// [`AdmitError::QueueFull`].
+    pub fn submit(
+        &self,
+        req: InferRequest,
+    ) -> Result<ResultHandle, AdmitError> {
+        let sh = &self.shared;
+        let mut st = lock_unpoisoned(&sh.state);
+        loop {
+            if st.closed {
+                return Err(AdmitError::Shutdown);
+            }
+            if st.batcher.len() < sh.cfg.queue_cap {
+                break;
+            }
+            match sh.cfg.admission {
+                AdmissionPolicy::Shed => {
+                    drop(st);
+                    lock_unpoisoned(&sh.stats).shed += 1;
+                    return Err(AdmitError::QueueFull);
+                }
+                AdmissionPolicy::Block => {
+                    st = sh
+                        .space
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+        let done = Completion::new();
+        let dnn = req.dnn;
+        st.batcher.push(
+            dnn,
+            BatchJob { req, done: done.clone() },
+            Instant::now(),
+        );
+        drop(st);
+        // wake the pump: the push may have completed a batch or armed
+        // the first deadline
+        sh.kick.notify_all();
+        Ok(ResultHandle { done })
+    }
+
+    /// Stop admitting work. Pending requests still flush: keep pumping
+    /// [`next_batch`](Self::next_batch) until it returns
+    /// [`BatchPoll::Drained`] (blocked submitters are woken and fail
+    /// with [`AdmitError::Shutdown`]).
+    pub fn close(&self) {
+        lock_unpoisoned(&self.shared.state).closed = true;
+        self.shared.kick.notify_all();
+        self.shared.space.notify_all();
+    }
+
+    /// Pending (admitted, undispatched) requests.
+    pub fn pending(&self) -> usize {
+        lock_unpoisoned(&self.shared.state).batcher.len()
+    }
+
+    /// Snapshot of the batch/admission statistics.
+    pub fn stats(&self) -> BatchStats {
+        lock_unpoisoned(&self.shared.stats).clone()
+    }
+
+    /// Wait up to `idle_timeout` for a batch to come due and pop it.
+    ///
+    /// Size-complete queues pop immediately; otherwise the call parks
+    /// until the earliest deadline (or a kick) and re-checks. After
+    /// [`close`](Self::close), every remaining request flushes
+    /// immediately regardless of deadlines, then the poll reports
+    /// [`BatchPoll::Drained`].
+    pub fn next_batch(&self, idle_timeout: Duration) -> BatchPoll {
+        let sh = &self.shared;
+        let started = Instant::now();
+        let mut st = lock_unpoisoned(&sh.state);
+        loop {
+            let now = Instant::now();
+            let popped = if st.closed {
+                st.batcher.pop_any()
+            } else {
+                st.batcher.pop_due(now)
+            };
+            if let Some((dnn, jobs)) = popped {
+                drop(st);
+                sh.space.notify_all();
+                lock_unpoisoned(&sh.stats).record(dnn, jobs.len());
+                return BatchPoll::Batch(MicroBatch { dnn, jobs });
+            }
+            if st.closed && st.batcher.is_empty() {
+                return BatchPoll::Drained;
+            }
+            let elapsed = started.elapsed();
+            if elapsed >= idle_timeout {
+                return BatchPoll::Idle;
+            }
+            let mut wait = idle_timeout - elapsed;
+            if let Some(deadline) = st.batcher.next_deadline() {
+                wait = wait.min(deadline.saturating_duration_since(now));
+            }
+            // zero-duration waits still yield the lock; clamp to a
+            // minimal park so a due-at-now race cannot spin hot
+            wait = wait.max(Duration::from_micros(50));
+            let (guard, _timeout) = sh
+                .kick
+                .wait_timeout(st, wait)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+}
+
+/// Turnkey threaded server: a dispatcher thread pops due batches off a
+/// [`ServerCore`] and executes them on the crate's [`ThreadPool`]
+/// against a shared [`BatchDetector`].
+pub struct InferenceServer {
+    core: ServerCore,
+    pool: Arc<ThreadPool>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start the dispatcher and `workers` pool workers.
+    pub fn start(
+        detector: Arc<dyn BatchDetector>,
+        cfg: BatchConfig,
+        workers: usize,
+    ) -> InferenceServer {
+        let core = ServerCore::new(cfg);
+        let pool =
+            Arc::new(ThreadPool::new(workers.max(1), workers.max(1) * 2));
+        let pump_core = core.clone();
+        let pump_pool = pool.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("tod-batch-dispatch".into())
+            .spawn(move || loop {
+                match pump_core.next_batch(Duration::from_millis(20)) {
+                    BatchPoll::Batch(batch) => {
+                        let det = detector.clone();
+                        // a failed submit (all workers dead) drops the
+                        // closure; BatchJob's drop guard then fails the
+                        // batch's requests with Shutdown instead of
+                        // stranding their waiters
+                        let _ = pump_pool.submit(move || batch.run(&*det));
+                    }
+                    BatchPoll::Idle => continue,
+                    BatchPoll::Drained => break,
+                }
+            })
+            .ok();
+        InferenceServer { core, pool, dispatcher }
+    }
+
+    /// Submit one request (see [`ServerCore::submit`]).
+    pub fn submit(
+        &self,
+        req: InferRequest,
+    ) -> Result<ResultHandle, AdmitError> {
+        // a dispatcher that failed to spawn would strand every waiter:
+        // refuse admission instead
+        if self.dispatcher.is_none() {
+            return Err(AdmitError::Shutdown);
+        }
+        self.core.submit(req)
+    }
+
+    /// Batch/admission statistics so far.
+    pub fn stats(&self) -> BatchStats {
+        self.core.stats()
+    }
+
+    /// Pending (admitted, undispatched) requests.
+    pub fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    /// Graceful shutdown: stop intake, flush pending batches, wait for
+    /// in-flight work, return the final statistics.
+    pub fn shutdown(mut self) -> BatchStats {
+        self.finish();
+        self.core.stats()
+    }
+
+    fn finish(&mut self) {
+        self.core.close();
+        if let Some(d) = self.dispatcher.take() {
+            d.join().ok();
+        }
+        // all batches are submitted by now; wait for the workers
+        self.pool.wait_idle();
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::BBox;
+
+    fn req(stream: u64, frame: u64, dnn: DnnKind) -> InferRequest {
+        InferRequest {
+            stream,
+            frame,
+            dnn,
+            frame_w: 640.0,
+            frame_h: 480.0,
+            gt: Vec::new(),
+        }
+    }
+
+    /// Deterministic synthetic backend: one box derived from the
+    /// request identity, so batched results are comparable bit for bit.
+    struct Synth;
+
+    fn synth_infer(r: &InferRequest) -> ServeResult {
+        Ok(vec![Detection::new(
+            BBox::new(r.frame as f64, r.stream as f64, 10.0, 20.0),
+            0.9,
+            crate::detection::PERSON_CLASS,
+        )])
+    }
+
+    impl BatchDetector for Synth {
+        fn infer(&self, r: &InferRequest) -> ServeResult {
+            synth_infer(r)
+        }
+    }
+
+    #[test]
+    fn core_serves_a_full_batch_inline() {
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            ..BatchConfig::default()
+        });
+        let h1 = core.submit(req(0, 1, DnnKind::Y416)).unwrap();
+        let h2 = core.submit(req(1, 1, DnnKind::Y416)).unwrap();
+        match core.next_batch(Duration::from_millis(200)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.dnn(), DnnKind::Y416);
+                assert_eq!(b.len(), 2);
+                b.run_with(&mut synth_infer);
+            }
+            _ => panic!("expected a due batch"),
+        }
+        let d1 = h1.wait().unwrap();
+        let d2 = h2.wait().unwrap();
+        assert_eq!(d1[0].bbox.y, 0.0);
+        assert_eq!(d2[0].bbox.y, 1.0);
+        let stats = core.stats();
+        assert_eq!(stats.total_batches(), 1);
+        assert_eq!(stats.total_items(), 2);
+    }
+
+    #[test]
+    fn deadline_flushes_a_lone_request() {
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..BatchConfig::default()
+        });
+        let h = core.submit(req(0, 3, DnnKind::TinyY288)).unwrap();
+        match core.next_batch(Duration::from_secs(5)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.len(), 1);
+                b.run_with(&mut synth_infer);
+            }
+            _ => panic!("deadline flush did not fire"),
+        }
+        assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn shed_admission_rejects_at_capacity() {
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            queue_cap: 2,
+            admission: AdmissionPolicy::Shed,
+        });
+        let _h1 = core.submit(req(0, 1, DnnKind::Y288)).unwrap();
+        let _h2 = core.submit(req(1, 1, DnnKind::Y288)).unwrap();
+        assert_eq!(
+            core.submit(req(2, 1, DnnKind::Y288)).err(),
+            Some(AdmitError::QueueFull)
+        );
+        assert_eq!(core.stats().shed, 1);
+        assert_eq!(core.pending(), 2);
+    }
+
+    #[test]
+    fn closed_core_drains_and_rejects() {
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            ..BatchConfig::default()
+        });
+        let h = core.submit(req(0, 1, DnnKind::Y416)).unwrap();
+        core.close();
+        assert_eq!(
+            core.submit(req(1, 1, DnnKind::Y416)).err(),
+            Some(AdmitError::Shutdown)
+        );
+        // pending work still flushes (regardless of its far deadline)...
+        let BatchPoll::Batch(b) = core.next_batch(Duration::from_secs(5))
+        else {
+            panic!("closed core must flush pending work")
+        };
+        // ...and a batch dropped unexecuted fails its requests instead
+        // of stranding them
+        drop(b);
+        assert_eq!(h.wait(), Err(ServeError::Shutdown));
+        assert!(matches!(
+            core.next_batch(Duration::from_millis(10)),
+            BatchPoll::Drained
+        ));
+    }
+
+    #[test]
+    fn try_wait_delivers_exactly_once() {
+        // regression: the job's drop guard must not re-open a slot
+        // whose result was already taken (a second poll used to see a
+        // spurious Shutdown error)
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            ..BatchConfig::default()
+        });
+        let h = core.submit(req(0, 5, DnnKind::Y288)).unwrap();
+        let BatchPoll::Batch(b) = core.next_batch(Duration::from_secs(5))
+        else {
+            panic!("batch due immediately at max_wait zero")
+        };
+        b.run_with(&mut synth_infer); // complete() then drop guard
+        let first = h.try_wait().expect("result is in");
+        assert!(first.is_ok());
+        assert!(
+            h.try_wait().is_none(),
+            "second poll must not resurrect a result"
+        );
+    }
+
+    #[test]
+    fn threaded_server_round_trips() {
+        let server = InferenceServer::start(
+            Arc::new(Synth),
+            BatchConfig::default(),
+            2,
+        );
+        let handles: Vec<ResultHandle> = (0..16)
+            .map(|i| {
+                server
+                    .submit(req(i % 4, i, DnnKind::ALL[(i % 4) as usize]))
+                    .unwrap()
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let dets = h.wait().unwrap();
+            assert_eq!(dets[0].bbox.x, i as f64);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.total_items(), 16);
+        assert!(stats.total_batches() >= 4, "one batch per variant min");
+    }
+}

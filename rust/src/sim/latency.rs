@@ -87,6 +87,112 @@ impl LatencyModel {
     }
 }
 
+/// Batched inference latency: fixed per-dispatch setup plus a marginal
+/// per-item cost.
+///
+/// Micro-batching same-variant requests amortises the per-dispatch
+/// overhead an edge accelerator pays on every engine invocation —
+/// weight/engine (re)binding, host-side launch, pre/post-processing
+/// setup (the throughput lever studied by the parallel-detection edge
+/// work in PAPERS.md). The model is affine in the batch size `n`:
+///
+/// `latency(dnn, n) = first(dnn) + (n - 1) * marginal(dnn)`,  n >= 1
+///
+/// anchored so a batch of one costs *exactly* the unbatched mean
+/// ([`LatencyModel::mean`]) — a batched schedule with `max_batch == 1`
+/// is therefore bit-identical to an unbatched one. The per-item cost
+/// `latency / n` strictly decreases with `n` whenever the setup share
+/// is positive.
+#[derive(Debug, Clone)]
+pub struct BatchLatencyModel {
+    /// Cost of a batch of one (== the unbatched mean), seconds.
+    first_s: [f64; DnnKind::COUNT],
+    /// Marginal cost of each additional item, seconds.
+    marginal_s: [f64; DnnKind::COUNT],
+}
+
+impl BatchLatencyModel {
+    /// Fraction of the unbatched mean attributed to per-dispatch setup
+    /// on the Jetson-Nano profile (engine bind + host launch overhead —
+    /// a modelling assumption, held fixed across variants).
+    pub const DEFAULT_SETUP_FRAC: f64 = 0.35;
+
+    /// Build from per-variant unbatched means; `setup_frac` in [0, 1)
+    /// is the share of the mean amortised away inside a batch.
+    pub fn from_means(
+        means: [f64; DnnKind::COUNT],
+        setup_frac: f64,
+    ) -> Self {
+        assert!(
+            (0.0..1.0).contains(&setup_frac),
+            "setup fraction must be in [0, 1), got {setup_frac}"
+        );
+        let mut marginal = [0.0; DnnKind::COUNT];
+        for (mean, out) in means.iter().zip(marginal.iter_mut()) {
+            assert!(
+                *mean > 0.0 && mean.is_finite(),
+                "latency means must be positive and finite"
+            );
+            *out = mean * (1.0 - setup_frac);
+        }
+        BatchLatencyModel { first_s: means, marginal_s: marginal }
+    }
+
+    /// Derive from a [`LatencyModel`]'s means.
+    pub fn from_model(model: &LatencyModel, setup_frac: f64) -> Self {
+        Self::from_means(model.means(), setup_frac)
+    }
+
+    /// Jetson-Nano-calibrated default (deterministic means,
+    /// [`Self::DEFAULT_SETUP_FRAC`] setup share).
+    pub fn jetson_nano() -> Self {
+        Self::from_model(
+            &LatencyModel::deterministic(),
+            Self::DEFAULT_SETUP_FRAC,
+        )
+    }
+
+    /// Cost of a batch of one — exactly the unbatched mean.
+    pub fn first(&self, dnn: DnnKind) -> f64 {
+        self.first_s[dnn.index()]
+    }
+
+    /// Marginal cost of each item after the first.
+    pub fn marginal(&self, dnn: DnnKind) -> f64 {
+        self.marginal_s[dnn.index()]
+    }
+
+    /// The amortisable setup share of a dispatch, seconds.
+    pub fn setup(&self, dnn: DnnKind) -> f64 {
+        self.first(dnn) - self.marginal(dnn)
+    }
+
+    /// Total latency of a batch of `n` items (0.0 for an empty batch).
+    pub fn batch_latency(&self, dnn: DnnKind, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        self.first(dnn) + (n - 1) as f64 * self.marginal(dnn)
+    }
+
+    /// Effective per-item latency inside a batch of `n`.
+    pub fn per_item(&self, dnn: DnnKind, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        self.batch_latency(dnn, n) / n as f64
+    }
+
+    /// Throughput multiplier of batching `n` items vs `n` singleton
+    /// dispatches (>= 1.0, and exactly 1.0 at `n <= 1`).
+    pub fn speedup(&self, dnn: DnnKind, n: usize) -> f64 {
+        if n <= 1 {
+            return 1.0;
+        }
+        n as f64 * self.first(dnn) / self.batch_latency(dnn, n)
+    }
+}
+
 /// Contention-aware latency inflation for a shared accelerator.
 ///
 /// The multi-stream scheduler serialises inferences on the virtual GPU,
@@ -215,6 +321,49 @@ mod tests {
     #[should_panic(expected = "stretch factor")]
     fn stretched_rejects_zero() {
         let _ = LatencyModel::deterministic().stretched(0.0);
+    }
+
+    #[test]
+    fn batch_of_one_costs_exactly_the_unbatched_mean() {
+        let m = LatencyModel::deterministic();
+        let b = BatchLatencyModel::jetson_nano();
+        for d in DnnKind::ALL {
+            // bit-exact anchor: max_batch == 1 schedules reproduce the
+            // unbatched schedule bit for bit
+            assert_eq!(b.batch_latency(d, 1), m.mean(d));
+            assert_eq!(b.first(d), m.mean(d));
+            assert_eq!(b.batch_latency(d, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn per_item_cost_decreases_and_speedup_grows() {
+        let b = BatchLatencyModel::jetson_nano();
+        for d in DnnKind::ALL {
+            let mut prev = f64::INFINITY;
+            for n in 1..=8usize {
+                let item = b.per_item(d, n);
+                assert!(item < prev, "{d}: per-item not decreasing at {n}");
+                prev = item;
+                assert!(b.speedup(d, n) >= 1.0);
+                // affine structure: total = first + (n-1) * marginal
+                let expect =
+                    b.first(d) + (n - 1) as f64 * b.marginal(d);
+                assert!((b.batch_latency(d, n) - expect).abs() < 1e-15);
+            }
+            assert_eq!(b.speedup(d, 1), 1.0);
+            assert!(b.speedup(d, 4) > 1.2, "{d}: no batching win");
+            assert!(b.setup(d) > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "setup fraction")]
+    fn batch_model_rejects_full_setup_fraction() {
+        let _ = BatchLatencyModel::from_model(
+            &LatencyModel::deterministic(),
+            1.0,
+        );
     }
 
     #[test]

@@ -50,7 +50,9 @@ impl UtilisationSummary {
         }
         merged
             .busy
-            .sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+            .sort_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1))
+            });
         merged.duration = makespan;
         UtilisationSummary {
             n_streams: traces.len(),

@@ -91,15 +91,22 @@ impl Welford {
     }
 }
 
-/// Exact median by partial sort. Returns NaN on empty input.
+/// Exact median by partial sort under the IEEE total order (NaN-safe:
+/// NaN samples sort above +inf instead of panicking the comparator).
+///
+/// Edge cases are defined, not inherited from `select_nth_unstable_by`
+/// preconditions: empty input returns NaN, a single element returns
+/// that element for any value (including NaN).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
+    if xs.len() == 1 {
+        return xs[0];
+    }
     let mut v: Vec<f64> = xs.to_vec();
     let mid = v.len() / 2;
-    let (_, m, _) =
-        v.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    let (_, m, _) = v.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
     let hi = *m;
     if v.len() % 2 == 1 {
         hi
@@ -114,19 +121,27 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile (p in [0, 100]) of unsorted data.
+///
+/// Defined edge cases: empty input or NaN `p` return NaN; a single
+/// element is returned unchanged for every `p`; NaN samples sort above
+/// +inf (IEEE total order) instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, p)
 }
 
-/// Percentile of already-sorted data.
+/// Percentile of already-sorted data (same edge cases as
+/// [`percentile`]).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
+    if sorted.is_empty() || p.is_nan() {
         return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
     }
     let p = p.clamp(0.0, 100.0);
     let rank = p / 100.0 * (sorted.len() - 1) as f64;
@@ -290,6 +305,38 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_and_median_single_element() {
+        // defined behaviour, not a select_nth precondition accident
+        for p in [0.0, 13.7, 50.0, 100.0, -5.0, 250.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25);
+            assert_eq!(percentile_sorted(&[7.25], p), 7.25);
+        }
+        assert_eq!(median(&[7.25]), 7.25);
+        assert!(median(&[f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p_and_rejects_nan_p() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 1000.0), 3.0);
+        assert!(percentile(&xs, f64::NAN).is_nan());
+        assert!(percentile_sorted(&xs, f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_order_statistics() {
+        // NaN sorts above +inf under total_cmp: the order statistics
+        // stay deterministic and the process stays alive
+        let xs = [1.0, f64::NAN, 3.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert_eq!(p50, 2.5); // sorted: [1, 2, 3, NaN]
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        let m = median(&xs); // mid pair (2, 3) -> 2.5
+        assert_eq!(m, 2.5);
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Batching-server acceptance suite (DESIGN.md §11):
+//!
+//! * batched results are a permutation-invariant, bit-identical match
+//!   of unbatched results per request;
+//! * an injected engine error or backend panic fails only the affected
+//!   requests — the process, the workers and the other streams survive;
+//! * a NaN detection score degrades one ranking instead of aborting an
+//!   evaluation (regression for the `partial_cmp().unwrap()` panics);
+//! * the batched latency model shows a deterministic throughput win for
+//!   >= 4 concurrent streams, with `max_batch == 1` bit-identical to
+//!   per-request dispatch.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tod::coordinator::multistream::{
+    BatchingSim, DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
+};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::coordinator::scheduler::{
+    run_realtime, DetectError, Detector, OracleBackend,
+};
+use tod::coordinator::session::StreamSession;
+use tod::dataset::mot::GtEntry;
+use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::detection::{Detection, PERSON_CLASS};
+use tod::geometry::BBox;
+use tod::runtime::batch::{AdmissionPolicy, BatchConfig};
+use tod::runtime::server::{
+    BatchDetector, InferRequest, InferenceServer, ResultHandle, ServeError,
+    ServeResult,
+};
+use tod::sim::latency::{ContentionModel, LatencyModel};
+use tod::sim::oracle::OracleDetector;
+use tod::testing::prop::PropConfig;
+use tod::DnnKind;
+
+fn request(stream: u64, frame: u64, dnn: DnnKind) -> InferRequest {
+    InferRequest {
+        stream,
+        frame,
+        dnn,
+        frame_w: 640.0,
+        frame_h: 480.0,
+        gt: Vec::new(),
+    }
+}
+
+/// Pure function of the request identity: what any deterministic
+/// backend must reproduce regardless of batch composition or order.
+fn expected_detections(req: &InferRequest) -> Vec<Detection> {
+    vec![Detection::new(
+        BBox::new(
+            (req.frame % 600) as f64,
+            (req.stream * 7 % 400) as f64,
+            10.0 + req.dnn.index() as f64,
+            20.0,
+        ),
+        0.5 + 0.1 * req.dnn.index() as f32,
+        PERSON_CLASS,
+    )]
+}
+
+/// Deterministic synthetic engine.
+struct SynthEngine;
+
+impl BatchDetector for SynthEngine {
+    fn infer(&self, req: &InferRequest) -> ServeResult {
+        Ok(expected_detections(req))
+    }
+}
+
+/// Engine that errors on one variant and panics on one frame id.
+struct FaultyEngine {
+    error_dnn: DnnKind,
+    panic_frame: u64,
+}
+
+impl BatchDetector for FaultyEngine {
+    fn infer(&self, req: &InferRequest) -> ServeResult {
+        if req.dnn == self.error_dnn {
+            return Err(ServeError::Engine(format!(
+                "injected failure for {}",
+                req.dnn
+            )));
+        }
+        assert!(req.frame != self.panic_frame, "injected panic");
+        Ok(expected_detections(req))
+    }
+}
+
+#[test]
+fn batched_results_match_unbatched_per_request() {
+    // property: for random request sets, every request's result through
+    // the batching server is bit-identical to direct execution, for
+    // several batch shapes (permutation invariance: the assignment of
+    // requests to batches must not leak into any result)
+    PropConfig::with_cases(8).run("batched == direct per request", |g| {
+        let n_req = g.usize_in(8, 40);
+        let reqs: Vec<InferRequest> = (0..n_req)
+            .map(|i| {
+                let dnn = *g.choice(&DnnKind::ALL);
+                request(g.usize_in(0, 3) as u64, i as u64, dnn)
+            })
+            .collect();
+        let max_batch = g.usize_in(1, 6);
+        let server = InferenceServer::start(
+            Arc::new(SynthEngine),
+            BatchConfig {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                ..BatchConfig::default()
+            },
+            g.usize_in(1, 4),
+        );
+        let handles: Vec<(InferRequest, ResultHandle)> = reqs
+            .iter()
+            .map(|r| {
+                (r.clone(), server.submit(r.clone()).expect("admitted"))
+            })
+            .collect();
+        let mut ok = true;
+        for (req, h) in handles {
+            let got = h.wait().expect("synthetic engine never fails");
+            ok &= got == expected_detections(&req);
+        }
+        let stats = server.shutdown();
+        ok && stats.total_items() == n_req as u64
+    });
+}
+
+#[test]
+fn injected_engine_error_fails_only_its_requests() {
+    let server = InferenceServer::start(
+        Arc::new(FaultyEngine {
+            error_dnn: DnnKind::Y416,
+            panic_frame: u64::MAX, // no panics in this test
+        }),
+        BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchConfig::default()
+        },
+        2,
+    );
+    let mut handles = Vec::new();
+    for i in 0..24u64 {
+        let dnn = DnnKind::ALL[(i % 4) as usize];
+        handles.push((dnn, server.submit(request(0, i, dnn)).unwrap()));
+    }
+    let mut failed = 0;
+    let mut succeeded = 0;
+    for (dnn, h) in handles {
+        match h.wait() {
+            Ok(dets) => {
+                assert_ne!(dnn, DnnKind::Y416, "Y-416 must have failed");
+                assert!(!dets.is_empty());
+                succeeded += 1;
+            }
+            Err(ServeError::Engine(msg)) => {
+                assert_eq!(dnn, DnnKind::Y416, "only Y-416 may fail");
+                assert!(msg.contains("injected"));
+                failed += 1;
+            }
+            Err(other) => panic!("unexpected error: {other:?}"),
+        }
+    }
+    assert_eq!(failed, 6);
+    assert_eq!(succeeded, 18);
+    // the server is still healthy after the failures
+    let h = server.submit(request(0, 1000, DnnKind::TinyY288)).unwrap();
+    assert!(h.wait().is_ok());
+}
+
+#[test]
+fn backend_panic_fails_only_its_own_request() {
+    let server = InferenceServer::start(
+        Arc::new(FaultyEngine {
+            error_dnn: DnnKind::Y416,
+            panic_frame: 13,
+        }),
+        BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchConfig::default()
+        },
+        2,
+    );
+    // frames 10..18 on one variant: frame 13 shares a batch with
+    // healthy neighbours
+    let handles: Vec<(u64, ResultHandle)> = (10..18u64)
+        .map(|f| {
+            (f, server.submit(request(0, f, DnnKind::TinyY288)).unwrap())
+        })
+        .collect();
+    for (f, h) in handles {
+        match h.wait() {
+            Ok(_) => assert_ne!(f, 13, "the panicking frame cannot succeed"),
+            Err(ServeError::BatchPanicked) => assert_eq!(f, 13),
+            Err(other) => panic!("frame {f}: unexpected error {other:?}"),
+        }
+    }
+    // workers caught the panic: the server still serves
+    let h = server.submit(request(0, 1, DnnKind::Y288)).unwrap();
+    assert!(h.wait().is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn shed_admission_is_request_scoped() {
+    // a server with a tiny queue and shedding admission: overload
+    // errors are per request and the queue recovers
+    let server = InferenceServer::start(
+        Arc::new(SynthEngine),
+        BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 2,
+            admission: AdmissionPolicy::Shed,
+        },
+        1,
+    );
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..200u64 {
+        match server.submit(request(0, i, DnnKind::Y288)) {
+            Ok(h) => admitted.push(h),
+            Err(e) => {
+                assert_eq!(e.to_string(), "request shed: pending queue full");
+                shed += 1;
+            }
+        }
+    }
+    for h in admitted {
+        assert!(h.wait().is_ok(), "admitted requests must complete");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.total_items() + shed, 200);
+}
+
+/// A detector that pollutes the oracle's output with NaNs each frame:
+/// one NaN-*scored* detection (exercises the score filter and NaN-safe
+/// score sorts) and one NaN-*sized* detection with a valid score
+/// (exercises the NaN-safe area/IoU comparators in mbbs, matching and
+/// the feature extractor — the exact `partial_cmp().unwrap()` sites
+/// this PR fixed).
+struct NanDetector(OracleBackend);
+
+impl Detector for NanDetector {
+    fn detect(
+        &mut self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+    ) -> Result<Vec<Detection>, DetectError> {
+        let mut dets = self.0.detect(frame, gt, dnn)?;
+        dets.push(Detection::new(
+            BBox::new(5.0, 5.0, 30.0, 60.0),
+            f32::NAN,
+            PERSON_CLASS,
+        ));
+        dets.push(Detection::new(
+            BBox::new(10.0, 10.0, f64::NAN, 60.0),
+            0.9,
+            PERSON_CLASS,
+        ));
+        Ok(dets)
+    }
+}
+
+/// A detector that always fails.
+struct DeadEngine;
+
+impl Detector for DeadEngine {
+    fn detect(
+        &mut self,
+        _frame: u64,
+        _gt: &[GtEntry],
+        _dnn: DnnKind,
+    ) -> Result<Vec<Detection>, DetectError> {
+        Err(DetectError("engine lost".into()))
+    }
+}
+
+fn small_seq(seed: u64, frames: u64) -> Sequence {
+    Sequence::generate(SequenceSpec {
+        name: format!("BATCH-{seed}"),
+        width: 960,
+        height: 540,
+        fps: 30.0,
+        frames,
+        density: 6,
+        ref_height: 220.0,
+        depth_range: (1.0, 2.0),
+        walk_speed: 1.5,
+        camera: CameraMotion::Static,
+        seed,
+    })
+}
+
+fn oracle(seq: &Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+#[test]
+fn nan_score_does_not_abort_a_scheduled_run() {
+    // AP regression: a detector emitting NaN scores and NaN-sized
+    // boxes must not panic the evaluator, the MBBS statistic or the
+    // feature extractor anywhere on the realtime path
+    let seq = small_seq(3, 90);
+    let mut det = NanDetector(oracle(&seq));
+    let mut pol = MbbsPolicy::tod_default();
+    let mut lat = LatencyModel::deterministic();
+    let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, 30.0);
+    assert!(r.ap.is_finite());
+    assert!((0.0..=1.0).contains(&r.ap));
+    assert_eq!(r.n_failed, 0);
+    assert_eq!(r.n_inferred + r.n_dropped, r.n_frames);
+}
+
+#[test]
+fn failing_engine_fails_frames_not_the_process() {
+    // every inference errors: the stream completes with zero AP and
+    // full failure accounting instead of crashing
+    let seq = small_seq(4, 60);
+    let mut det = DeadEngine;
+    let mut pol = MbbsPolicy::tod_default();
+    let mut lat = LatencyModel::deterministic();
+    let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, 30.0);
+    assert_eq!(r.n_failed, r.n_inferred);
+    assert!(r.n_failed > 0);
+    assert_eq!(r.ap, 0.0, "no detections ever arrive");
+    assert_eq!(r.n_inferred + r.n_dropped, r.n_frames);
+}
+
+fn run_streams(
+    seqs: &[Sequence],
+    batching: Option<BatchingSim>,
+) -> MultiStreamResult {
+    let mut sched = MultiStreamScheduler::new(
+        DispatchPolicy::RoundRobin,
+        ContentionModel::jetson_nano(),
+        LatencyModel::deterministic(),
+    );
+    if let Some(b) = batching {
+        sched = sched.with_batching(b);
+    }
+    for s in seqs {
+        sched.add_stream(
+            StreamSession::new(s, MbbsPolicy::tod_default(), 30.0),
+            Box::new(oracle(s)),
+        );
+    }
+    sched.run()
+}
+
+#[test]
+fn batched_latency_model_wins_throughput_for_four_streams() {
+    // the acceptance number: >= 4 concurrent synthetic streams must
+    // show higher frames/s (inferences per virtual second) under the
+    // batched latency model than under per-request dispatch
+    let seqs: Vec<Sequence> = (0..4).map(|_| small_seq(11, 120)).collect();
+    let plain = run_streams(&seqs, None);
+    let batched = run_streams(&seqs, Some(BatchingSim::jetson_nano(4)));
+    assert!(
+        batched.utilisation.throughput_ips()
+            > plain.utilisation.throughput_ips(),
+        "batched {} <= per-request {} inf/s",
+        batched.utilisation.throughput_ips(),
+        plain.utilisation.throughput_ips()
+    );
+    let stats = batched.batching.as_ref().expect("batched stats");
+    assert!(stats.mean_batch() > 1.2, "no batches formed: {stats}");
+    // per-stream accounting still conserves
+    for s in &batched.per_stream {
+        assert_eq!(s.n_inferred + s.n_dropped, s.n_frames);
+    }
+}
+
+#[test]
+fn batched_max_batch_one_matches_per_request_bit_for_bit() {
+    let seqs: Vec<Sequence> =
+        (0..4).map(|i| small_seq(20 + i, 90)).collect();
+    let plain = run_streams(&seqs, None);
+    let batched = run_streams(&seqs, Some(BatchingSim::jetson_nano(1)));
+    for (a, b) in plain.per_stream.iter().zip(&batched.per_stream) {
+        assert_eq!(a.ap, b.ap);
+        assert_eq!(a.deploy_counts, b.deploy_counts);
+        assert_eq!(a.n_dropped, b.n_dropped);
+        assert_eq!(a.mbbs_series, b.mbbs_series);
+        assert_eq!(a.dnn_series, b.dnn_series);
+        assert_eq!(a.trace.busy, b.trace.busy);
+    }
+}
+
+#[test]
+fn concurrent_streams_through_the_server_stay_isolated() {
+    // end-to-end: 4 client threads share one server; one stream's
+    // variant always fails, the other streams are untouched
+    let server = Arc::new(InferenceServer::start(
+        Arc::new(FaultyEngine {
+            error_dnn: DnnKind::Y416,
+            panic_frame: u64::MAX,
+        }),
+        BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchConfig::default()
+        },
+        3,
+    ));
+    let mut clients = Vec::new();
+    for stream in 0..4u64 {
+        let server = server.clone();
+        clients.push(std::thread::spawn(move || {
+            // stream 3 insists on the failing variant
+            let dnn = if stream == 3 {
+                DnnKind::Y416
+            } else {
+                DnnKind::ALL[stream as usize]
+            };
+            let mut failures = 0u64;
+            for f in 1..=30u64 {
+                let h = server
+                    .submit(request(stream, f, dnn))
+                    .expect("admitted");
+                match h.wait() {
+                    Ok(dets) => assert!(!dets.is_empty()),
+                    Err(ServeError::Engine(_)) => failures += 1,
+                    Err(other) => panic!("unexpected: {other:?}"),
+                }
+            }
+            failures
+        }));
+    }
+    let failures: Vec<u64> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+    assert_eq!(failures, vec![0, 0, 0, 30], "only stream 3 may fail");
+    // aggregated per-request counts survive in the stats
+    let per_dnn_results: HashMap<usize, u64> = server
+        .stats()
+        .per_dnn
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (i, v.items))
+        .collect();
+    assert_eq!(per_dnn_results[&DnnKind::Y416.index()], 30);
+}

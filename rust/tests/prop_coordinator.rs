@@ -215,12 +215,13 @@ fn carried_detections_only_from_the_past() {
             frame: u64,
             _gt: &[tod::dataset::mot::GtEntry],
             _dnn: DnnKind,
-        ) -> Vec<Detection> {
-            vec![Detection::new(
+        ) -> Result<Vec<Detection>, tod::coordinator::scheduler::DetectError>
+        {
+            Ok(vec![Detection::new(
                 BBox::new(frame as f64, 0.0, 10.0, 10.0),
                 0.9,
                 PERSON_CLASS,
-            )]
+            )])
         }
     }
     PropConfig::with_cases(16).run("carry-forward causality", |g| {

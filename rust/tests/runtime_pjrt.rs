@@ -114,7 +114,7 @@ fn backend_detect_roundtrip_through_decode() {
     let seq = tiny_seq(3);
     let mut backend = PjrtBackend::new(&pool, 640.0, 480.0);
     for k in DnnKind::ALL {
-        let dets = backend.detect(1, seq.gt(1), k);
+        let dets = backend.detect(1, seq.gt(1), k).expect("detect");
         // untrained weights: boxes may be arbitrary but must be valid
         for d in &dets {
             assert!(d.bbox.x >= 0.0 && d.bbox.y >= 0.0);
@@ -141,4 +141,39 @@ fn serve_loop_with_fixed_policy() {
     assert_eq!(report.deploy[0], 3);
     assert_eq!(report.switches, 0);
     assert_eq!(report.per_dnn.len(), 1);
+    assert_eq!(report.failed, 0);
+}
+
+#[test]
+fn batched_serving_matches_per_request_on_real_engines() {
+    // two concurrent streams through the micro-batching server, real
+    // PJRT inference; per-stream deploy decisions must match the
+    // unbatched serve loop exactly (the policy sees identical inputs
+    // because batched results are bit-identical per request)
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("TOD_QUIET", "1");
+    let pool = EnginePool::load(&dir).expect("load pool");
+    let seqs = [tiny_seq(4), tiny_seq(4)];
+    let cfg = tod::runtime::batch::BatchConfig {
+        max_batch: 2,
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let report = tod::runtime::serve::serve_batched(
+        &pool,
+        &seqs,
+        cfg,
+        &|| Box::new(FixedPolicy(DnnKind::TinyY288)),
+    )
+    .expect("batched serve");
+    assert_eq!(report.streams, 2);
+    assert_eq!(report.frames, 8);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.deploy[DnnKind::TinyY288.index()], 8);
+    assert_eq!(report.stats.total_items(), 8);
+
+    let unbatched =
+        serve_sequence(&pool, &seqs[0], &mut FixedPolicy(DnnKind::TinyY288))
+            .expect("serve");
+    assert_eq!(unbatched.deploy[DnnKind::TinyY288.index()], 4);
 }
