@@ -1,0 +1,94 @@
+//! The scenario matrix, end to end: replay every curated edge workload
+//! under adaptive and fixed selection and print the differential the
+//! conformance suite pins — adaptive never loses to the best fixed DNN,
+//! on any scenario.
+//!
+//! Uses the free ladder-shaped calibration table so the example runs in
+//! seconds; `tod figures --id scenario` (and the goldens under
+//! `rust/tests/goldens/`) use the fully calibrated table instead.
+//!
+//! ```bash
+//! cargo run --release --example scenario_matrix
+//! ```
+
+use tod::coordinator::policy::Thresholds;
+use tod::predictor::CalibrationTable;
+use tod::scenario::{
+    run_scenario, scenario_spec, HarnessConfig, RunRecord, ScenarioId,
+};
+use tod::DnnKind;
+
+fn main() {
+    let table =
+        CalibrationTable::from_ladder(&Thresholds::h_opt(), &DnnKind::ALL);
+
+    println!(
+        "{:<16} {:>5} {:>8} {:>9} {:>9} {:>8} {:>8}",
+        "scenario", "strm", "frames", "tod AP", "best fix", "margin", "drop%"
+    );
+    for id in ScenarioId::ALL {
+        let spec = scenario_spec(id);
+        let streams = spec.compile().expect("matrix scenarios compile");
+
+        // adaptive: the ladder projected through a calibration surface
+        let adaptive = run_scenario(
+            &spec.name,
+            &streams,
+            &HarnessConfig::projected(table.clone()),
+        )
+        .expect("replay");
+        let record = RunRecord::from_run(&adaptive, spec.seed);
+
+        // the four fixed baselines
+        let mut best_fixed = f64::NEG_INFINITY;
+        let mut best_label = DnnKind::TinyY288;
+        for k in DnnKind::ALL {
+            let run = run_scenario(
+                &spec.name,
+                &streams,
+                &HarnessConfig::fixed(k),
+            )
+            .expect("replay");
+            if run.mean_ap() > best_fixed {
+                best_fixed = run.mean_ap();
+                best_label = k;
+            }
+        }
+
+        let a = &record.aggregate;
+        println!(
+            "{:<16} {:>5} {:>8} {:>9.3} {:>9.3} {:>+8.3} {:>7.1}%  (best: {})",
+            record.scenario,
+            record.streams.len(),
+            a.frames,
+            a.mean_ap,
+            best_fixed,
+            a.mean_ap - best_fixed,
+            if a.frames == 0 {
+                0.0
+            } else {
+                a.dropped as f64 / a.frames as f64 * 100.0
+            },
+            best_label.short_label(),
+        );
+
+        // phase story for the first stream: where the selection moved
+        let s = &record.streams[0];
+        let phase_story: Vec<String> = s
+            .phases
+            .iter()
+            .map(|p| {
+                let top = DnnKind::ALL
+                    .iter()
+                    .max_by_key(|d| p.deploy[d.index()])
+                    .expect("four variants");
+                format!("{}->{}", p.label, top.short_label())
+            })
+            .collect();
+        println!("{:<16} {}", "", phase_story.join("  "));
+    }
+    println!(
+        "\n(each scenario shifts regime mid-run; the margin column is \
+         what `tod scenario check` pins per scenario in the goldens)"
+    );
+}

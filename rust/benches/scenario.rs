@@ -1,0 +1,73 @@
+//! Bench: scenario compilation and replay throughput.
+//!
+//! The conformance harness replays 8 scenarios × 7 configurations per
+//! `tod scenario check`, so compile + replay cost is what bounds CI
+//! latency. Compilation (world synthesis) must stay trivially cheap
+//! next to replay, and replay must stay far below a wall-second per
+//! virtual-second — the printed frame counts give the per-frame cost.
+
+use tod::bench::{black_box, Bench};
+use tod::scenario::{
+    run_scenario, scenario_spec, HarnessConfig, ScenarioId,
+};
+
+fn main() {
+    let mut b = Bench::slow();
+
+    // compilation: spec -> concrete phased sequences (world synthesis)
+    {
+        let spec = scenario_spec(ScenarioId::CameraHandoff);
+        b.case("scenario/compile_camera_handoff", || {
+            black_box(spec.compile().expect("compile").len());
+        });
+    }
+
+    // single-stream replay: the regime-shifting relay feed
+    {
+        let spec = scenario_spec(ScenarioId::CameraHandoff);
+        let streams = spec.compile().expect("compile");
+        let frames: u64 = streams.iter().map(|s| s.seq.n_frames()).sum();
+        let cfg = HarnessConfig::tod();
+        b.case("scenario/replay_camera_handoff_tod", || {
+            black_box(
+                run_scenario(&spec.name, &streams, &cfg)
+                    .expect("replay")
+                    .mean_ap(),
+            );
+        });
+        println!("    -> camera-handoff replays {frames} frames per iter");
+    }
+
+    // multi-stream churn replay: 3 sessions, staggered joins, shared
+    // accelerator — the heaviest dispatch loop in the matrix
+    {
+        let spec = scenario_spec(ScenarioId::StreamChurn);
+        let streams = spec.compile().expect("compile");
+        let frames: u64 = streams.iter().map(|s| s.seq.n_frames()).sum();
+        let cfg = HarnessConfig::tod();
+        b.case("scenario/replay_stream_churn_tod", || {
+            black_box(
+                run_scenario(&spec.name, &streams, &cfg)
+                    .expect("replay")
+                    .mean_ap(),
+            );
+        });
+        println!("    -> stream-churn replays {frames} frames per iter");
+    }
+
+    // budgeted replay: the governor on the per-frame path
+    {
+        let spec = scenario_spec(ScenarioId::BudgetSqueeze);
+        let streams = spec.compile().expect("compile");
+        let cfg = HarnessConfig::tod().with_watts(spec.watts_budget);
+        b.case("scenario/replay_budget_squeeze_governed", || {
+            black_box(
+                run_scenario(&spec.name, &streams, &cfg)
+                    .expect("replay")
+                    .mean_ap(),
+            );
+        });
+    }
+
+    b.save_csv("scenario.csv").ok();
+}

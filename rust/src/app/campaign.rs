@@ -17,6 +17,8 @@ use crate::dataset::catalog::{generate, SequenceId};
 use crate::dataset::synth::Sequence;
 use crate::power::{BudgetedPolicy, PowerBudget};
 use crate::predictor::{calibrate, CalibrationConfig, CalibrationTable};
+use crate::scenario::conformance::{run_report, ScenarioReport};
+use crate::scenario::matrix::{scenario_spec, ScenarioId};
 use crate::sim::latency::{ContentionModel, LatencyModel};
 use crate::sim::oracle::OracleDetector;
 use crate::DnnKind;
@@ -62,6 +64,9 @@ pub struct Campaign {
     /// max_batch) under the Jetson batched latency model.
     multistream_batched:
         BTreeMap<(usize, DispatchPolicy, usize), MultiStreamResult>,
+    /// Conformance reports of the scenario matrix (the `scenario`
+    /// experiment), one per scenario id.
+    scenario_reports: BTreeMap<ScenarioId, ScenarioReport>,
     thresholds: Thresholds,
 }
 
@@ -87,6 +92,7 @@ impl Campaign {
             calibrations: BTreeMap::new(),
             multistream: BTreeMap::new(),
             multistream_batched: BTreeMap::new(),
+            scenario_reports: BTreeMap::new(),
             thresholds,
         }
     }
@@ -333,6 +339,19 @@ impl Campaign {
                 }
             })
             .collect()
+    }
+
+    /// Conformance report of one matrix scenario (all canonical
+    /// configurations plus the differential margins), memoized. The
+    /// matrix specs are validated at 30 FPS by construction, so replay
+    /// cannot fail.
+    pub fn scenario_report(&mut self, id: ScenarioId) -> &ScenarioReport {
+        if !self.scenario_reports.contains_key(&id) {
+            let report = run_report(&scenario_spec(id))
+                .expect("matrix scenarios are valid by construction");
+            self.scenario_reports.insert(id, report);
+        }
+        &self.scenario_reports[&id]
     }
 
     /// Best fixed-DNN real-time AP on a sequence (the paper's

@@ -12,6 +12,7 @@ pub mod multistream_fig;
 pub mod policy_stats;
 pub mod power_fig;
 pub mod predictor_fig;
+pub mod scenario_fig;
 pub mod table1;
 pub mod telemetry_figs;
 
@@ -42,10 +43,10 @@ impl ExperimentOutput {
 
 /// All experiment ids: the paper's artifacts in paper order, then the
 /// beyond-the-paper studies.
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "ablations",
-    "multistream", "predictor", "power",
+    "multistream", "predictor", "power", "scenario",
 ];
 
 /// Run one experiment by id.
@@ -70,6 +71,7 @@ pub fn run(id: &str, campaign: &mut Campaign) -> Option<ExperimentOutput> {
         }
         "predictor" => Some(predictor_fig::predictor_compare(campaign)),
         "power" => Some(power_fig::power_table(campaign)),
+        "scenario" => Some(scenario_fig::scenario_table(campaign)),
         _ => None,
     }
 }

@@ -1,0 +1,86 @@
+//! The `scenario` experiment: the matrix differential table.
+//!
+//! For every scenario of the curated matrix, reports the best fixed
+//! DNN, projected selection, and the watts-budgeted selector — mean AP,
+//! drop rate, board power — plus the adaptive-vs-fixed margins the
+//! conformance layer pins per scenario (DESIGN.md §12). This is the
+//! human-readable face of the goldens under `rust/tests/goldens/`.
+
+use crate::app::Campaign;
+use crate::scenario::matrix::ScenarioId;
+use crate::util::csv::CsvTable;
+use crate::util::table::AsciiTable;
+
+use super::ExperimentOutput;
+
+pub fn scenario_table(c: &mut Campaign) -> ExperimentOutput {
+    let header = vec![
+        "scenario",
+        "best_fixed",
+        "best_fixed_ap",
+        "projected_ap",
+        "projected_margin",
+        "watts_cap",
+        "budgeted_ap",
+        "budgeted_margin",
+        "drop_pct_projected",
+        "board_w_budgeted",
+    ];
+    let mut table = AsciiTable::new(
+        "scenario — adaptive vs best-fixed margins across the matrix",
+        header.clone(),
+    );
+    let mut csv = CsvTable::new(header);
+    let mut worst_projected = f64::INFINITY;
+    let mut worst_budgeted = f64::INFINITY;
+    for id in ScenarioId::ALL {
+        let report = c.scenario_report(id).clone();
+        let d = &report.differential;
+        let projected = report
+            .records
+            .iter()
+            .find(|r| r.config == "projected")
+            .expect("canonical projected run");
+        let budgeted = report
+            .records
+            .iter()
+            .find(|r| r.config.starts_with("projected@"))
+            .expect("canonical budgeted run");
+        let drop_pct = if projected.aggregate.frames == 0 {
+            0.0
+        } else {
+            projected.aggregate.dropped as f64
+                / projected.aggregate.frames as f64
+                * 100.0
+        };
+        worst_projected = worst_projected.min(d.projected_margin);
+        worst_budgeted = worst_budgeted.min(d.budgeted_margin);
+        let row = vec![
+            report.scenario.clone(),
+            d.best_fixed.trim_start_matches("fixed:").to_string(),
+            format!("{:.3}", d.best_fixed_ap),
+            format!("{:.3}", d.projected_ap),
+            format!("{:+.3}", d.projected_margin),
+            format!("{:.1}", d.watts_budget),
+            format!("{:.3}", d.budgeted_ap),
+            format!("{:+.3}", d.budgeted_margin),
+            format!("{drop_pct:.1}"),
+            format!("{:.2}", budgeted.aggregate.avg_power_w),
+        ];
+        table.push(row.clone());
+        csv.push(row);
+    }
+    let text = format!(
+        "{}\n(margins: projected vs best fixed, budgeted vs best \
+         budget-feasible fixed; worst projected margin {worst_projected:+.3}, \
+         worst budgeted margin {worst_budgeted:+.3} — the conformance \
+         suite requires both >= 0 on every scenario)\n",
+        table.render(),
+    );
+    ExperimentOutput {
+        id: "scenario",
+        title: "scenario: matrix differential table".into(),
+        text,
+        csv: vec![("scenario_matrix.csv".into(), csv)],
+    }
+}

@@ -90,10 +90,29 @@
 //! dispatches — `tod multistream --batch` and `benches/batching.rs`
 //! print the frames/s side by side.
 //!
+//! ## Scenario diversity, pinned byte for byte
+//!
+//! The paper's claim is adaptation to *changing* streams, yet its
+//! evaluation replays seven static sequences. The [`scenario`]
+//! subsystem makes workload diversity first-class: composable phased
+//! scenario descriptions ([`scenario::ScenarioSpec`] — density,
+//! object-size geometry, camera motion, FPS sag/burst, day/night
+//! noise, stream churn; versioned JSON via [`scenario::store`]),
+//! compiled deterministically onto [`dataset::synth`] worlds and
+//! replayed end to end by [`scenario::harness`] over the production
+//! [`coordinator::session::StreamSession`] state machine under any
+//! policy × dispatch × watts-budget × batching configuration. Every
+//! run flattens into a byte-stable [`scenario::RunRecord`]; the eight
+//! curated scenarios of [`scenario::matrix`] are pinned by golden
+//! reports under `rust/tests/goldens/` (`tod scenario
+//! {list,run,record,check}`), including the differential claim that
+//! projected and watts-budgeted selection never lose to the best
+//! (budget-feasible) fixed DNN on any scenario.
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
-//! the multi-stream architecture (§8), the power subsystem (§10) and
-//! the batching server (§11), and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! the multi-stream architecture (§8), the power subsystem (§10),
+//! the batching server (§11) and the scenario matrix + conformance
+//! harness (§12), and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod app;
 pub mod bench;
@@ -109,6 +128,7 @@ pub mod geometry;
 pub mod power;
 pub mod predictor;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod telemetry;
 pub mod testing;

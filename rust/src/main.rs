@@ -11,6 +11,8 @@
 //!   the resource-saving study: fixed Y-416 vs TOD vs budgeted TOD.
 //! * `dataset --out <dir>` — export the synthetic MOT17Det-like catalog
 //!   as MOT gt.txt files.
+//! * `scenario {list,run,record,check}` — the scenario matrix and its
+//!   golden-trace conformance harness (DESIGN.md §12).
 //! * `serve [--frames N] [--artifacts dir]` — end-to-end PJRT serving
 //!   demo on the request path (requires `make artifacts`).
 //! * `bench-report` — one-line summary of key performance counters.
@@ -50,6 +52,7 @@ fn main() {
         Some("multistream") => cmd_multistream(&args),
         Some("power") => cmd_power(&args),
         Some("dataset") => cmd_dataset(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-report") => cmd_bench_report(),
         Some(other) => {
@@ -69,10 +72,10 @@ fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
          usage: tod <figures|search|run|calibrate|multistream|power|\
-         dataset|serve|bench-report> [flags]\n\
+         dataset|scenario|serve|bench-report> [flags]\n\
          \n\
          figures --all | --id <table1|fig4..fig15|multistream|predictor|\
-         power> [--out results]\n\
+         power|scenario> [--out results]\n\
          search\n\
          run --seq MOT17-05 [--policy <spec>] [--fps 14] \
          [--watts-budget W]\n  \
@@ -111,6 +114,21 @@ fn usage() {
          claim);\n  \
          --rate-cap adds a DVFS-style frequency-capped TOD run\n\
          dataset --out <dir>\n\
+         scenario list | run --name <scenario> [--spec file.json]\n  \
+         [--config tod|projected|budgeted|fixed:<dnn>] [--dispatch rr|edf]\n  \
+         [--watts W] [--max-batch N] [--json]  replays one scenario of \
+         the\n  \
+         matrix (or a tod-scenario JSON document) end to end and prints \
+         the\n  \
+         canonical run record\n\
+         scenario record [--goldens DIR]  re-runs the 8-scenario matrix \
+         and\n  \
+         writes the golden reports (default DIR: rust/tests/goldens)\n\
+         scenario check [--goldens DIR] [--bootstrap]  re-runs the \
+         matrix and\n  \
+         byte-compares against the committed goldens; --bootstrap \
+         records\n  \
+         them first when the directory holds none\n\
          serve [--frames 60] [--artifacts artifacts] [--policy tod]\n  \
          [--batch [--streams 4] [--max-batch 4] [--max-wait-ms 2] \
          [--shed]]\n  \
@@ -853,6 +871,355 @@ fn cmd_dataset(args: &Args) -> i32 {
         );
     }
     0
+}
+
+/// Goldens directory: `rust/tests/goldens` from the repository root,
+/// `tests/goldens` when already inside `rust/` (the CI working dir).
+/// Errors when neither exists — resolving relative to an arbitrary
+/// CWD would silently scatter goldens into an unrelated directory;
+/// pass `--goldens DIR` explicitly from outside the repo.
+fn default_goldens_dir() -> Result<PathBuf, String> {
+    for candidate in ["rust/tests/goldens", "tests/goldens"] {
+        let p = PathBuf::from(candidate);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    Err("no goldens directory found relative to the current directory \
+         (expected rust/tests/goldens or tests/goldens); run from the \
+         repository root or pass --goldens DIR"
+        .into())
+}
+
+fn cmd_scenario(args: &Args) -> i32 {
+    use tod::scenario::{conformance, harness, matrix, record, store};
+
+    let verb = args.positional.first().map(String::as_str);
+    match verb {
+        Some("list") => {
+            println!("scenario matrix ({} scenarios):", matrix::ScenarioId::ALL.len());
+            for id in matrix::ScenarioId::ALL {
+                let spec = matrix::scenario_spec(id);
+                let phases: Vec<String> = spec
+                    .streams
+                    .iter()
+                    .map(|s| {
+                        let ph: Vec<&str> = s
+                            .phases
+                            .iter()
+                            .map(|p| p.label.as_str())
+                            .collect();
+                        format!("{}[{}]", s.label, ph.join(">"))
+                    })
+                    .collect();
+                println!(
+                    "  {:<16} {} frames, {} stream(s): {}\n    {}",
+                    spec.name,
+                    spec.n_frames(),
+                    spec.streams.len(),
+                    phases.join(" "),
+                    spec.description
+                );
+            }
+            0
+        }
+        Some("run") => {
+            let spec = if let Some(path) = args.get("spec") {
+                match store::load(&PathBuf::from(path)) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            } else {
+                let name = args.get("name").unwrap_or("rush-hour-surge");
+                match name.parse::<matrix::ScenarioId>() {
+                    Ok(id) => matrix::scenario_spec(id),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            };
+            let config_spec = args.get("config").unwrap_or("tod");
+            let needs_table =
+                matches!(config_spec, "projected" | "budgeted");
+            if needs_table {
+                // same guard as conformance::run_report: the table's
+                // drop pricing is per-FPS, so projecting a non-matrix
+                // spec through it would be silently wrong
+                let fps = tod::scenario::conformance::MATRIX_FPS;
+                if (spec.base_fps - fps).abs() > 1e-9 {
+                    eprintln!(
+                        "scenario {:?} runs at {} FPS but --config \
+                         {config_spec} projects from the {fps} FPS \
+                         calibration table; re-author the scenario at \
+                         {fps} FPS (or use --config tod|fixed:<dnn>)",
+                        spec.name, spec.base_fps
+                    );
+                    return 2;
+                }
+                eprintln!(
+                    "note: fitting the calibration table (one-off per \
+                     invocation; persisted tables are not used here so \
+                     runs stay conformance-identical)"
+                );
+            }
+            let mut cfg = match config_spec {
+                "tod" => harness::HarnessConfig::tod(),
+                "projected" => harness::HarnessConfig::projected(
+                    conformance::calibration_table().clone(),
+                ),
+                "budgeted" => harness::HarnessConfig::projected(
+                    conformance::calibration_table().clone(),
+                )
+                .with_watts(spec.watts_budget),
+                other => {
+                    if let Some(d) = other.strip_prefix("fixed:") {
+                        match d.parse() {
+                            Ok(k) => harness::HarnessConfig::fixed(k),
+                            Err(e) => {
+                                eprintln!("{e}");
+                                return 2;
+                            }
+                        }
+                    } else {
+                        eprintln!(
+                            "unknown --config: {other} (want tod|projected|\
+                             budgeted|fixed:<dnn>)"
+                        );
+                        return 2;
+                    }
+                }
+            };
+            match args.get_parse("dispatch", DispatchPolicy::RoundRobin) {
+                Ok(d) => cfg = cfg.with_dispatch(d),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+            if args.has("watts") {
+                match args.get_parse("watts", spec.watts_budget) {
+                    Ok(w) if w > 0.0 && w.is_finite() => {
+                        cfg = cfg.with_watts(w)
+                    }
+                    Ok(w) => {
+                        eprintln!("--watts must be positive, got {w}");
+                        return 2;
+                    }
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            if args.has("max-batch") {
+                match args.get_parse("max-batch", 4usize) {
+                    Ok(n) if n >= 1 => {
+                        cfg = cfg.with_batching(BatchingSim::jetson_nano(n))
+                    }
+                    Ok(n) => {
+                        eprintln!("--max-batch must be >= 1, got {n}");
+                        return 2;
+                    }
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            let streams = match spec.compile() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let run =
+                match harness::run_scenario(&spec.name, &streams, &cfg) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                };
+            let rec = record::RunRecord::from_run(&run, spec.seed);
+            if args.has("json") {
+                print!("{}", rec.canonical_text());
+                return 0;
+            }
+            println!(
+                "scenario {} config {} (seed {}):",
+                rec.scenario, rec.config, rec.seed
+            );
+            for s in &rec.streams {
+                println!(
+                    "  {:<10} join {:>4.1}s | AP {:.3} | frames {} \
+                     inferred {} dropped {} ({:.1}%) | switches {} | \
+                     {:.2} W",
+                    s.label,
+                    s.join_s,
+                    s.ap,
+                    s.frames,
+                    s.inferred,
+                    s.dropped,
+                    if s.frames == 0 {
+                        0.0
+                    } else {
+                        s.dropped as f64 / s.frames as f64 * 100.0
+                    },
+                    s.switches,
+                    s.avg_power_w,
+                );
+                for p in &s.phases {
+                    let freq: Vec<String> = DnnKind::ALL
+                        .iter()
+                        .map(|d| {
+                            format!(
+                                "{} {}",
+                                d.short_label(),
+                                p.deploy[d.index()]
+                            )
+                        })
+                        .collect();
+                    println!(
+                        "    phase {:<10} {} frames, {} inferred, mean \
+                         MBBS {:.4} | {}",
+                        p.label,
+                        p.frames,
+                        p.inferred,
+                        p.mean_mbbs,
+                        freq.join(" ")
+                    );
+                }
+            }
+            let a = &rec.aggregate;
+            println!(
+                "  aggregate: mean AP {:.3} | drop {:.1}% | makespan \
+                 {:.1}s | util {:.1}% | board {:.2} W",
+                a.mean_ap,
+                if a.frames == 0 {
+                    0.0
+                } else {
+                    a.dropped as f64 / a.frames as f64 * 100.0
+                },
+                a.makespan_s,
+                a.utilisation * 100.0,
+                a.avg_power_w,
+            );
+            0
+        }
+        Some("record") => {
+            let dir = match args.get("goldens").map(PathBuf::from) {
+                Some(d) => d,
+                None => match default_goldens_dir() {
+                    Ok(d) => d,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                },
+            };
+            eprintln!(
+                "recording the scenario matrix (8 scenarios x 7 configs; \
+                 includes the one-off calibration campaign)..."
+            );
+            match tod::scenario::conformance::write_goldens(&dir) {
+                Ok(paths) => {
+                    for p in &paths {
+                        println!("recorded {}", p.display());
+                    }
+                    0
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    1
+                }
+            }
+        }
+        Some("check") => {
+            let dir = match args.get("goldens").map(PathBuf::from) {
+                Some(d) => d,
+                None => match default_goldens_dir() {
+                    Ok(d) => d,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                },
+            };
+            if args.has("bootstrap") {
+                match conformance::bootstrap_goldens_if_missing(&dir) {
+                    Ok(true) => eprintln!(
+                        "no goldens under {} — recorded the matrix first \
+                         (commit the files to pin them)",
+                        dir.display()
+                    ),
+                    Ok(false) => {}
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
+                }
+            }
+            let results = match conformance::check_goldens(&dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            let mut failed = 0;
+            for (name, verdict) in &results {
+                match verdict {
+                    conformance::CheckVerdict::Match => {
+                        println!("  {name:<16} OK (bit-identical)");
+                    }
+                    conformance::CheckVerdict::Missing => {
+                        failed += 1;
+                        println!(
+                            "  {name:<16} MISSING (run `tod scenario \
+                             record`)"
+                        );
+                    }
+                    conformance::CheckVerdict::Mismatch {
+                        line,
+                        golden,
+                        observed,
+                    } => {
+                        failed += 1;
+                        println!(
+                            "  {name:<16} MISMATCH at line {line}\n    \
+                             golden:   {golden}\n    observed: {observed}"
+                        );
+                    }
+                }
+            }
+            if failed > 0 {
+                eprintln!(
+                    "{failed}/{} scenarios failed conformance",
+                    results.len()
+                );
+                1
+            } else {
+                println!(
+                    "all {} scenarios bit-identical to {}",
+                    results.len(),
+                    dir.display()
+                );
+                0
+            }
+        }
+        other => {
+            eprintln!(
+                "scenario needs a verb: list|run|record|check (got {:?})",
+                other.unwrap_or("none")
+            );
+            2
+        }
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {

@@ -1,0 +1,432 @@
+//! Golden-trace conformance: canonical runs, differential margins, and
+//! byte-exact golden files.
+//!
+//! For every matrix scenario the conformance layer replays a fixed set
+//! of configurations — the `H_opt` ladder, projected-accuracy
+//! selection, the watts-budgeted selector, and the four fixed-DNN
+//! baselines — and assembles one [`ScenarioReport`]: all the
+//! [`RunRecord`]s plus a [`Differential`] section pinning the claim the
+//! matrix exists to defend, *adaptive selection never loses to the best
+//! fixed DNN, on any scenario*. Reports render byte-stably, so
+//! `tod scenario record` writes goldens under `rust/tests/goldens/` and
+//! `tod scenario check` (and CI) re-runs the matrix and compares bytes.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use crate::predictor::{calibrate, CalibrationConfig, CalibrationTable};
+use crate::util::json::Json;
+use crate::DnnKind;
+
+use super::harness::{run_scenario, HarnessConfig};
+use super::matrix::{scenario_spec, ScenarioId};
+use super::record::{self, RunRecord};
+use super::spec::ScenarioSpec;
+
+/// The `schema` tag identifying a scenario-report document.
+pub const SCHEMA_TAG: &str = "tod-scenario-report";
+
+/// Report version this build writes and checks against.
+pub const REPORT_VERSION: u32 = 1;
+
+/// Base FPS every conformance scenario must share, so one calibration
+/// table (whose drop pricing is per-FPS) serves the whole matrix.
+pub const MATRIX_FPS: f64 = 30.0;
+
+/// The calibration table the projected/budgeted configurations select
+/// from: the default 5×5 size×speed campaign at [`MATRIX_FPS`],
+/// computed once per process (deterministic in its fixed seed).
+pub fn calibration_table() -> &'static CalibrationTable {
+    static TABLE: OnceLock<CalibrationTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        calibrate(&CalibrationConfig::default_for_fps(MATRIX_FPS))
+    })
+}
+
+/// The canonical configuration set replayed on every scenario, in
+/// report order: ladder TOD, projected, budgeted (projected argmax
+/// under the scenario's watts cap), then the four fixed baselines.
+pub fn canonical_configs(spec: &ScenarioSpec) -> Vec<HarnessConfig> {
+    let table = calibration_table().clone();
+    let mut out = vec![
+        HarnessConfig::tod(),
+        HarnessConfig::projected(table.clone()),
+        HarnessConfig::projected(table).with_watts(spec.watts_budget),
+    ];
+    out.extend(DnnKind::ALL.iter().map(|&k| HarnessConfig::fixed(k)));
+    out
+}
+
+/// The adaptive-vs-fixed margins the matrix pins per scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Differential {
+    /// Config label of the best fixed DNN by mean AP.
+    pub best_fixed: String,
+    pub best_fixed_ap: f64,
+    /// Projected selection's mean AP and its margin over `best_fixed`.
+    pub projected_ap: f64,
+    pub projected_margin: f64,
+    /// Watts cap the budgeted run was governed by.
+    pub watts_budget: f64,
+    /// Best fixed DNN whose measured board power fits the cap (the
+    /// lowest-power fixed config when none fits).
+    pub best_feasible_fixed: String,
+    pub best_feasible_fixed_ap: f64,
+    /// Budgeted selection's mean AP and its margin over
+    /// `best_feasible_fixed`.
+    pub budgeted_ap: f64,
+    pub budgeted_margin: f64,
+}
+
+/// One scenario's full conformance artifact: every canonical run plus
+/// the differential margins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub differential: Differential,
+    /// Records in [`canonical_configs`] order.
+    pub records: Vec<RunRecord>,
+}
+
+impl ScenarioReport {
+    /// The golden-file rendering (pretty JSON, sorted keys, trailing
+    /// newline). Byte-stable for a fixed report.
+    pub fn canonical_text(&self) -> String {
+        to_json(self).to_pretty()
+    }
+}
+
+/// Replay every canonical configuration of `spec` and assemble the
+/// report.
+pub fn run_report(spec: &ScenarioSpec) -> Result<ScenarioReport, String> {
+    if (spec.base_fps - MATRIX_FPS).abs() > 1e-9 {
+        return Err(format!(
+            "scenario {:?} runs at {} FPS; conformance requires \
+             {MATRIX_FPS} FPS (one calibration table serves the matrix)",
+            spec.name, spec.base_fps
+        ));
+    }
+    let streams = spec.compile()?;
+    let mut records = Vec::new();
+    for cfg in canonical_configs(spec) {
+        let run = run_scenario(&spec.name, &streams, &cfg)?;
+        records.push(RunRecord::from_run(&run, spec.seed));
+    }
+    let differential = differential(spec, &records)?;
+    Ok(ScenarioReport {
+        scenario: spec.name.clone(),
+        seed: spec.seed,
+        differential,
+        records,
+    })
+}
+
+fn differential(
+    spec: &ScenarioSpec,
+    records: &[RunRecord],
+) -> Result<Differential, String> {
+    let find = |label: &str| {
+        records
+            .iter()
+            .find(|r| r.config == label)
+            .ok_or_else(|| format!("missing canonical run {label:?}"))
+    };
+    let projected = find("projected")?;
+    let budgeted = find(&format!("projected@{}W", spec.watts_budget))?;
+    let fixed: Vec<&RunRecord> = records
+        .iter()
+        .filter(|r| r.config.starts_with("fixed:"))
+        .collect();
+    if fixed.len() != DnnKind::COUNT {
+        return Err(format!(
+            "expected {} fixed runs, found {}",
+            DnnKind::COUNT,
+            fixed.len()
+        ));
+    }
+    let best = fixed
+        .iter()
+        .max_by(|a, b| a.aggregate.mean_ap.total_cmp(&b.aggregate.mean_ap))
+        .expect("fixed set is non-empty");
+    let feasible: Vec<&&RunRecord> = fixed
+        .iter()
+        .filter(|r| r.aggregate.avg_power_w <= spec.watts_budget + 1e-9)
+        .collect();
+    let best_feasible = if feasible.is_empty() {
+        // nothing fits the cap: compare against the coolest fixed run
+        fixed
+            .iter()
+            .min_by(|a, b| {
+                a.aggregate.avg_power_w.total_cmp(&b.aggregate.avg_power_w)
+            })
+            .expect("fixed set is non-empty")
+    } else {
+        feasible
+            .into_iter()
+            .max_by(|a, b| {
+                a.aggregate.mean_ap.total_cmp(&b.aggregate.mean_ap)
+            })
+            .expect("feasible set is non-empty")
+    };
+    Ok(Differential {
+        best_fixed: best.config.clone(),
+        best_fixed_ap: best.aggregate.mean_ap,
+        projected_ap: projected.aggregate.mean_ap,
+        projected_margin: projected.aggregate.mean_ap
+            - best.aggregate.mean_ap,
+        watts_budget: spec.watts_budget,
+        best_feasible_fixed: best_feasible.config.clone(),
+        best_feasible_fixed_ap: best_feasible.aggregate.mean_ap,
+        budgeted_ap: budgeted.aggregate.mean_ap,
+        budgeted_margin: budgeted.aggregate.mean_ap
+            - best_feasible.aggregate.mean_ap,
+    })
+}
+
+/// Serialize a report to its versioned JSON document.
+pub fn to_json(report: &ScenarioReport) -> Json {
+    let d = &report.differential;
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA_TAG)),
+        ("version", Json::num(REPORT_VERSION as f64)),
+        ("scenario", Json::str(&report.scenario)),
+        ("seed", Json::num(report.seed as f64)),
+        (
+            "differential",
+            Json::obj(vec![
+                ("best_fixed", Json::str(&d.best_fixed)),
+                ("best_fixed_ap", Json::num(d.best_fixed_ap)),
+                ("projected_ap", Json::num(d.projected_ap)),
+                ("projected_margin", Json::num(d.projected_margin)),
+                ("watts_budget", Json::num(d.watts_budget)),
+                ("best_feasible_fixed", Json::str(&d.best_feasible_fixed)),
+                (
+                    "best_feasible_fixed_ap",
+                    Json::num(d.best_feasible_fixed_ap),
+                ),
+                ("budgeted_ap", Json::num(d.budgeted_ap)),
+                ("budgeted_margin", Json::num(d.budgeted_margin)),
+            ]),
+        ),
+        ("runs", Json::arr(report.records.iter().map(record::to_json))),
+    ])
+}
+
+/// Golden file path of a scenario under `dir`.
+pub fn golden_path(dir: &Path, scenario: &str) -> PathBuf {
+    dir.join(format!("{scenario}.json"))
+}
+
+/// Re-run the full matrix and write one golden per scenario under
+/// `dir`. Returns the written paths.
+pub fn write_goldens(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    let mut out = Vec::new();
+    for id in ScenarioId::ALL {
+        let report = run_report(&scenario_spec(id))?;
+        let path = golden_path(dir, &report.scenario);
+        std::fs::write(&path, report.canonical_text())
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+        out.push(path);
+    }
+    Ok(out)
+}
+
+/// True when no golden file exists yet for any matrix scenario (a
+/// fresh checkout before the first `tod scenario record`).
+pub fn goldens_missing(dir: &Path) -> bool {
+    ScenarioId::ALL
+        .iter()
+        .all(|id| !golden_path(dir, id.name()).exists())
+}
+
+/// Bootstrap: when `dir` holds no goldens at all, record the full
+/// matrix into it and return `true`. With any golden present this is a
+/// no-op returning `false` — partial sets are *not* repaired silently
+/// (a deleted golden must fail the check, not regrow).
+pub fn bootstrap_goldens_if_missing(dir: &Path) -> Result<bool, String> {
+    if goldens_missing(dir) {
+        write_goldens(dir)?;
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// One scenario's conformance verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckVerdict {
+    /// Bytes match the committed golden.
+    Match,
+    /// The golden file is missing (run `tod scenario record`).
+    Missing,
+    /// Bytes differ; carries the first differing line (1-based) and a
+    /// short excerpt of golden vs observed.
+    Mismatch { line: usize, golden: String, observed: String },
+}
+
+/// Re-run the matrix and byte-compare each report against the goldens
+/// in `dir`. Returns `(scenario name, verdict)` per scenario.
+pub fn check_goldens(
+    dir: &Path,
+) -> Result<Vec<(String, CheckVerdict)>, String> {
+    let mut out = Vec::new();
+    for id in ScenarioId::ALL {
+        let report = run_report(&scenario_spec(id))?;
+        let path = golden_path(dir, &report.scenario);
+        let verdict = match std::fs::read_to_string(&path) {
+            Err(_) => CheckVerdict::Missing,
+            Ok(golden) => {
+                let observed = report.canonical_text();
+                if golden == observed {
+                    CheckVerdict::Match
+                } else {
+                    let (line, g, o) = first_diff(&golden, &observed);
+                    CheckVerdict::Mismatch {
+                        line,
+                        golden: g,
+                        observed: o,
+                    }
+                }
+            }
+        };
+        out.push((report.scenario, verdict));
+    }
+    Ok(out)
+}
+
+/// First differing line of two texts (1-based), with both lines.
+fn first_diff(a: &str, b: &str) -> (usize, String, String) {
+    for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+        if la != lb {
+            return (i + 1, la.to_string(), lb.to_string());
+        }
+    }
+    let n = a.lines().count().min(b.lines().count());
+    (
+        n + 1,
+        a.lines().nth(n).unwrap_or("<eof>").to_string(),
+        b.lines().nth(n).unwrap_or("<eof>").to_string(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::Thresholds;
+    use crate::predictor::CalibrationTable;
+    use crate::scenario::spec::{PhaseSpec, StreamSpec};
+
+    /// A free ladder-shaped table so unit tests never pay for the full
+    /// calibration campaign (the real table is exercised by the
+    /// integration suite in `rust/tests/scenario.rs`).
+    fn ladder_table() -> CalibrationTable {
+        CalibrationTable::from_ladder(&Thresholds::h_opt(), &DnnKind::ALL)
+    }
+
+    fn tiny_spec() -> ScenarioSpec {
+        ScenarioSpec::new(
+            "conf-unit",
+            "tiny conformance scenario",
+            vec![StreamSpec::new(
+                "cam0",
+                vec![
+                    PhaseSpec::new("a", 40).ref_height(140.0),
+                    PhaseSpec::new("b", 40).ref_height(430.0),
+                ],
+            )],
+        )
+        .seed(77)
+    }
+
+    fn tiny_report(spec: &ScenarioSpec) -> ScenarioReport {
+        // canonical_configs but with the free ladder table
+        let streams = spec.compile().unwrap();
+        let mut configs = vec![
+            HarnessConfig::tod(),
+            HarnessConfig::projected(ladder_table()),
+            HarnessConfig::projected(ladder_table())
+                .with_watts(spec.watts_budget),
+        ];
+        configs.extend(DnnKind::ALL.iter().map(|&k| HarnessConfig::fixed(k)));
+        let records = configs
+            .iter()
+            .map(|cfg| {
+                RunRecord::from_run(
+                    &run_scenario(&spec.name, &streams, cfg).unwrap(),
+                    spec.seed,
+                )
+            })
+            .collect::<Vec<_>>();
+        let differential = differential(spec, &records).unwrap();
+        ScenarioReport {
+            scenario: spec.name.clone(),
+            seed: spec.seed,
+            differential,
+            records,
+        }
+    }
+
+    #[test]
+    fn report_text_is_stable_and_parses() {
+        let spec = tiny_spec();
+        let a = tiny_report(&spec);
+        let b = tiny_report(&spec);
+        assert_eq!(a.canonical_text(), b.canonical_text());
+        let doc = Json::parse(&a.canonical_text()).unwrap();
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(SCHEMA_TAG)
+        );
+        assert_eq!(
+            doc.get("runs").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(3 + DnnKind::COUNT)
+        );
+    }
+
+    #[test]
+    fn differential_names_real_configs() {
+        let spec = tiny_spec();
+        let r = tiny_report(&spec);
+        let d = &r.differential;
+        assert!(d.best_fixed.starts_with("fixed:"), "{d:?}");
+        assert!(d.best_feasible_fixed.starts_with("fixed:"), "{d:?}");
+        assert_eq!(
+            d.projected_margin,
+            d.projected_ap - d.best_fixed_ap
+        );
+        assert_eq!(
+            d.budgeted_margin,
+            d.budgeted_ap - d.best_feasible_fixed_ap
+        );
+        assert_eq!(d.watts_budget, spec.watts_budget);
+    }
+
+    #[test]
+    fn golden_write_and_check_cycle_on_temp_dir() {
+        // exercise the file plumbing with a hand-rolled single report
+        // (the full-matrix cycle runs in the integration suite)
+        let spec = tiny_spec();
+        let report = tiny_report(&spec);
+        let dir = std::env::temp_dir().join("tod_conf_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = golden_path(&dir, &report.scenario);
+        std::fs::write(&path, report.canonical_text()).unwrap();
+        let golden = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(golden, report.canonical_text());
+        // a perturbed byte must be caught as a mismatch
+        let tampered = golden.replace("\"seed\": 77", "\"seed\": 78");
+        assert_ne!(tampered, golden);
+        let (line, g, o) = first_diff(&golden, &tampered);
+        assert!(line >= 1);
+        assert_ne!(g, o);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_matrix_fps_is_rejected() {
+        let spec = tiny_spec().base_fps(14.0);
+        assert!(run_report(&spec).unwrap_err().contains("14"));
+    }
+}

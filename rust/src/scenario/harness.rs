@@ -1,0 +1,799 @@
+//! Deterministic scenario replay: any policy × scheduler × budget ×
+//! batching configuration, end to end, from a single seed.
+//!
+//! [`run_scenario`] drives every compiled stream of a scenario to
+//! completion over one shared virtual accelerator, reusing the exact
+//! per-stream state machine the production drivers use
+//! ([`crate::coordinator::session::StreamSession`]) — Algorithm 1/2,
+//! carry-forward, evaluation, metering all come from there. The
+//! *dispatch loop* is a board-time sibling of
+//! [`crate::coordinator::multistream::MultiStreamScheduler::run`]:
+//! it keeps that loop's invariants (one inference at a time, RR/EDF
+//! orders, occupancy-based contention, the same-DNN batching
+//! continuation predicate — change one, change both) and adds what the
+//! scheduler cannot express, epoch-shifted streams and per-phase
+//! pricing. On top of the session it layers the scenario semantics:
+//!
+//! * **Churn** — a stream's frame clock starts at its `join_s` epoch;
+//!   the dispatcher compares readiness/deadlines in *board* time and
+//!   translates the accelerator-free floor back into stream time, so
+//!   late joiners contend exactly as a camera plugged in mid-run would.
+//!   Budget governors see board time through an epoch-shifting policy
+//!   adapter, which lets one [`crate::power::SharedBudget`] govern
+//!   streams with different epochs.
+//! * **FPS sag/burst** — each phase's `fps_scale` multiplies the priced
+//!   inference latency (the period-relative transform; see
+//!   [`super::spec::PhaseSpec::fps_scale`]).
+//! * **Day/night noise** — [`NoisyDetector`] post-filters the oracle
+//!   deterministically per `(frame, dnn)`, so schedules cannot perturb
+//!   what a detector "would have seen".
+//! * **Batching** — the same back-to-back same-DNN continuation pricing
+//!   as [`crate::coordinator::multistream::BatchingSim`], evaluated in
+//!   board time across streams.
+//!
+//! A single-stream, single-phase, clean, uncontended scenario under the
+//! default config reproduces [`crate::coordinator::scheduler::
+//! run_realtime`] bit for bit (pinned in `rust/tests/scenario.rs`).
+
+use crate::coordinator::multistream::{BatchingSim, DispatchPolicy};
+use crate::coordinator::policy::{FixedPolicy, MbbsPolicy, SelectionPolicy};
+use crate::coordinator::projected::ProjectedAccuracyPolicy;
+use crate::coordinator::scheduler::{DetectError, Detector, OracleBackend, RunResult};
+use crate::coordinator::session::{SessionEvent, StreamSession};
+use crate::dataset::mot::GtEntry;
+use crate::detection::Detection;
+use crate::power::{BudgetedPolicy, EnergyMeter, PowerBudget, PowerSummary};
+use crate::predictor::CalibrationTable;
+use crate::sim::latency::{ContentionModel, LatencyModel};
+use crate::sim::oracle::OracleDetector;
+use crate::telemetry::tegrastats::ScheduleTrace;
+use crate::telemetry::utilisation::UtilisationSummary;
+use crate::util::rng::Rng;
+use crate::DnnKind;
+
+use super::spec::{CompiledStream, NoiseProfile};
+
+/// Which selection policy every stream of the run uses.
+#[derive(Debug, Clone)]
+pub enum PolicyKind {
+    /// Algorithm 1 with the paper's `H_opt` ladder.
+    Tod,
+    /// Always the same DNN (the fixed baselines).
+    Fixed(DnnKind),
+    /// Projected-accuracy selection over a calibration table
+    /// ([`HarnessConfig::table`] must be set).
+    Projected,
+}
+
+/// One end-to-end configuration of the replay harness.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub policy: PolicyKind,
+    pub dispatch: DispatchPolicy,
+    /// Board-level watts cap shared by every stream (None = ungoverned).
+    pub watts_budget: Option<f64>,
+    /// Cross-stream micro-batching (None = per-request dispatch).
+    pub batching: Option<BatchingSim>,
+    /// Contention inflation between co-resident streams.
+    pub contention: ContentionModel,
+    /// Latency source (deterministic for conformance runs).
+    pub latency: LatencyModel,
+    /// Calibration table for [`PolicyKind::Projected`] and for the
+    /// energy-aware argmax when a watts budget is set on it.
+    pub table: Option<CalibrationTable>,
+}
+
+impl HarnessConfig {
+    fn base(policy: PolicyKind) -> Self {
+        HarnessConfig {
+            policy,
+            dispatch: DispatchPolicy::RoundRobin,
+            watts_budget: None,
+            batching: None,
+            contention: ContentionModel::jetson_nano(),
+            latency: LatencyModel::deterministic(),
+            table: None,
+        }
+    }
+
+    /// Algorithm 1 with `H_opt`.
+    pub fn tod() -> Self {
+        Self::base(PolicyKind::Tod)
+    }
+
+    /// A fixed single-DNN deployment.
+    pub fn fixed(dnn: DnnKind) -> Self {
+        Self::base(PolicyKind::Fixed(dnn))
+    }
+
+    /// Projected-accuracy selection over `table`.
+    pub fn projected(table: CalibrationTable) -> Self {
+        let mut cfg = Self::base(PolicyKind::Projected);
+        cfg.table = Some(table);
+        cfg
+    }
+
+    /// Cap board power at `watts` (shared across all streams). A
+    /// projected policy becomes the energy-aware argmax.
+    pub fn with_watts(mut self, watts: f64) -> Self {
+        assert!(
+            watts > 0.0 && watts.is_finite(),
+            "watts budget must be positive and finite"
+        );
+        self.watts_budget = Some(watts);
+        self
+    }
+
+    pub fn with_dispatch(mut self, dispatch: DispatchPolicy) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    pub fn with_batching(mut self, batching: BatchingSim) -> Self {
+        self.batching = Some(batching);
+        self
+    }
+
+    pub fn with_contention(mut self, contention: ContentionModel) -> Self {
+        self.contention = contention;
+        self
+    }
+
+    /// Canonical configuration label used in records and goldens.
+    pub fn label(&self) -> String {
+        let mut out = match &self.policy {
+            PolicyKind::Tod => "tod".to_string(),
+            PolicyKind::Fixed(k) => format!("fixed:{}", k.artifact_name()),
+            PolicyKind::Projected => "projected".to_string(),
+        };
+        if let Some(w) = self.watts_budget {
+            out.push_str(&format!("@{w}W"));
+        }
+        if let Some(b) = &self.batching {
+            out.push_str(&format!("+batch{}", b.max_batch));
+        }
+        out
+    }
+
+    /// Build the per-stream policy stack (base policy, optional shared
+    /// watts governor, epoch shift).
+    fn build_policy(
+        &self,
+        epoch: f64,
+        shared: &Option<crate::power::SharedBudget>,
+    ) -> Result<Box<dyn SelectionPolicy>, String> {
+        let base: Box<dyn SelectionPolicy> = match (&self.policy, shared) {
+            (PolicyKind::Tod, None) => Box::new(MbbsPolicy::tod_default()),
+            (PolicyKind::Fixed(k), None) => Box::new(FixedPolicy(*k)),
+            (PolicyKind::Projected, None) => {
+                let table = self.table.clone().ok_or(
+                    "projected policy needs a calibration table \
+                     (HarnessConfig::projected)",
+                )?;
+                Box::new(ProjectedAccuracyPolicy::new(table, &self.latency))
+            }
+            (PolicyKind::Tod, Some(b)) => Box::new(
+                BudgetedPolicy::masking_shared(
+                    Box::new(MbbsPolicy::tod_default()),
+                    b.clone(),
+                ),
+            ),
+            (PolicyKind::Fixed(k), Some(b)) => Box::new(
+                BudgetedPolicy::masking_shared(
+                    Box::new(FixedPolicy(*k)),
+                    b.clone(),
+                ),
+            ),
+            (PolicyKind::Projected, Some(b)) => {
+                let table = self.table.clone().ok_or(
+                    "projected policy needs a calibration table \
+                     (HarnessConfig::projected)",
+                )?;
+                Box::new(BudgetedPolicy::argmax_shared(table, b.clone()))
+            }
+        };
+        Ok(if epoch == 0.0 {
+            base
+        } else {
+            Box::new(EpochShift { inner: base, epoch })
+        })
+    }
+}
+
+/// Shifts the stream-time policy hooks by the stream's join epoch, so
+/// board-level governors ([`crate::power::SharedBudget`]) see one
+/// coherent clock across streams that joined at different times.
+struct EpochShift {
+    inner: Box<dyn SelectionPolicy>,
+    epoch: f64,
+}
+
+impl SelectionPolicy for EpochShift {
+    fn select(&mut self, features: &crate::features::FrameFeatures) -> DnnKind {
+        self.inner.select(features)
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn on_frame(&mut self, t_s: f64) {
+        self.inner.on_frame(t_s + self.epoch);
+    }
+
+    fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
+        self.inner
+            .on_inferred(start_s + self.epoch, end_s + self.epoch, dnn);
+    }
+}
+
+/// Deterministic day/night post-filter over any detector backend.
+///
+/// For a frame in a noisy phase, each detection is dropped with the
+/// phase's `miss` probability and surviving confidences are attenuated
+/// by `1 - conf_loss`. The random draws are a pure function of
+/// `(stream seed, frame, dnn)` — the schedule a policy takes cannot
+/// change what the detector would have seen, keeping comparisons
+/// paired exactly like the oracle itself.
+pub struct NoisyDetector<'a> {
+    inner: Box<dyn Detector + 'a>,
+    seed: u64,
+    /// `(first_frame, profile)` per phase, ascending.
+    phases: Vec<(u64, NoiseProfile)>,
+}
+
+impl<'a> NoisyDetector<'a> {
+    pub fn new(
+        inner: Box<dyn Detector + 'a>,
+        seed: u64,
+        phases: Vec<(u64, NoiseProfile)>,
+    ) -> Self {
+        NoisyDetector { inner, seed, phases }
+    }
+
+    /// Wrap the oracle for a compiled stream (no-op pass-through when
+    /// every phase is clean).
+    pub fn for_stream(stream: &CompiledStream) -> Box<dyn Detector + 'a> {
+        let oracle = OracleBackend(OracleDetector::new(
+            stream.seq.spec.seed,
+            stream.seq.spec.width as f64,
+            stream.seq.spec.height as f64,
+        ));
+        if stream.phases.iter().all(|p| p.noise.is_clean()) {
+            return Box::new(oracle);
+        }
+        Box::new(NoisyDetector::new(
+            Box::new(oracle),
+            stream.seq.spec.seed,
+            stream
+                .phase_starts
+                .iter()
+                .zip(&stream.phases)
+                .map(|(&f, p)| (f, p.noise))
+                .collect(),
+        ))
+    }
+
+    fn noise_at(&self, frame: u64) -> NoiseProfile {
+        let i = match self.phases.binary_search_by_key(&frame, |&(f, _)| f) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        self.phases.get(i).map(|&(_, n)| n).unwrap_or(NoiseProfile::DAY)
+    }
+}
+
+impl Detector for NoisyDetector<'_> {
+    fn detect(
+        &mut self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+    ) -> Result<Vec<Detection>, DetectError> {
+        let dets = self.inner.detect(frame, gt, dnn)?;
+        let noise = self.noise_at(frame);
+        if noise.is_clean() {
+            return Ok(dets);
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ frame.wrapping_mul(0x6a09e667f3bcc909)
+                ^ ((dnn.index() as u64 + 1) << 48),
+        );
+        Ok(dets
+            .into_iter()
+            .filter(|_| !rng.chance(noise.miss))
+            .map(|mut d| {
+                d.score *= (1.0 - noise.conf_loss) as f32;
+                d
+            })
+            .collect())
+    }
+}
+
+/// One stream's outcome plus its scenario coordinates.
+#[derive(Debug, Clone)]
+pub struct StreamRun {
+    pub label: String,
+    pub join_s: f64,
+    pub result: RunResult,
+    /// Phase boundary metadata copied from the compiled stream (first
+    /// frame + label + frame count per phase), for per-phase series.
+    pub phase_starts: Vec<u64>,
+    pub phase_labels: Vec<String>,
+    pub phase_frames: Vec<u64>,
+}
+
+/// Everything one harness run produces.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub scenario: String,
+    pub config: String,
+    pub per_stream: Vec<StreamRun>,
+    /// Board-time aggregate utilisation (traces shifted by each
+    /// stream's join epoch).
+    pub utilisation: UtilisationSummary,
+    /// Board-level energy/power over the merged board timeline.
+    pub power: PowerSummary,
+}
+
+impl ScenarioRun {
+    /// Mean AP across streams.
+    pub fn mean_ap(&self) -> f64 {
+        if self.per_stream.is_empty() {
+            return 0.0;
+        }
+        self.per_stream.iter().map(|s| s.result.ap).sum::<f64>()
+            / self.per_stream.len() as f64
+    }
+
+    /// Aggregate drop rate over all streams' frames.
+    pub fn drop_rate(&self) -> f64 {
+        let frames: u64 =
+            self.per_stream.iter().map(|s| s.result.n_frames).sum();
+        let dropped: u64 =
+            self.per_stream.iter().map(|s| s.result.n_dropped).sum();
+        if frames == 0 {
+            0.0
+        } else {
+            dropped as f64 / frames as f64
+        }
+    }
+}
+
+struct Slot<'a> {
+    session: StreamSession<'a>,
+    detector: Box<dyn Detector + 'a>,
+    compiled: &'a CompiledStream,
+}
+
+/// Replay a compiled scenario under `config`. Deterministic in the
+/// scenario seed and the config (conformance runs use a deterministic
+/// latency model).
+pub fn run_scenario(
+    scenario_name: &str,
+    streams: &[CompiledStream],
+    config: &HarnessConfig,
+) -> Result<ScenarioRun, String> {
+    let shared = config
+        .watts_budget
+        .map(|w| PowerBudget::watts(w, &config.latency).shared());
+    let mut latency = config.latency.clone();
+    let mut slots: Vec<Slot> = Vec::with_capacity(streams.len());
+    for c in streams {
+        let policy = config.build_policy(c.join_s, &shared)?;
+        slots.push(Slot {
+            session: StreamSession::new(&c.seq, policy, c.eval_fps),
+            detector: NoisyDetector::for_stream(c),
+            compiled: c,
+        });
+    }
+
+    // board-time scheduling state
+    let mut gpu_free = 0.0f64;
+    let mut rr_cursor = 0usize;
+    // micro-batch run state (board time)
+    let mut run_dnn: Option<DnnKind> = None;
+    let mut run_len = 0usize;
+    let mut run_end = f64::NEG_INFINITY;
+
+    loop {
+        // streams with a frame the accelerator will actually run, in
+        // board time (stream-local readiness shifted by the join epoch)
+        let candidates: Vec<(usize, f64, f64)> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                let ready = s.compiled.join_s + s.session.next_infer_ready()?;
+                let deadline =
+                    s.compiled.join_s + s.session.next_infer_deadline()?;
+                Some((i, ready, deadline))
+            })
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        // dispatch only among streams ready by the time the
+        // accelerator frees (or the earliest-ready stream when the
+        // accelerator is ahead of every arrival). Without this horizon
+        // an oblivious round-robin would dispatch a stream that joins
+        // seconds from now and idle the board while live streams drop.
+        let earliest = candidates
+            .iter()
+            .map(|&(_, r, _)| r)
+            .fold(f64::INFINITY, f64::min);
+        let horizon = gpu_free.max(earliest) + 1e-12;
+        let eligible: Vec<(usize, f64, f64)> = candidates
+            .iter()
+            .filter(|&&(_, r, _)| r <= horizon)
+            .copied()
+            .collect();
+        let chosen = match config.dispatch {
+            DispatchPolicy::RoundRobin => eligible
+                .iter()
+                .find(|(i, _, _)| *i >= rr_cursor)
+                .or_else(|| eligible.first())
+                .copied()
+                .expect("the earliest-ready candidate is always eligible"),
+            DispatchPolicy::EarliestDeadlineFirst => eligible
+                .iter()
+                .copied()
+                .min_by(|a, b| a.2.total_cmp(&b.2).then(a.0.cmp(&b.0)))
+                .expect("the earliest-ready candidate is always eligible"),
+        };
+        let (idx, ready, _) = chosen;
+        let start_est = gpu_free.max(ready);
+        let occupancy = candidates
+            .iter()
+            .filter(|(_, r, _)| *r <= start_est + 1e-12)
+            .count()
+            .max(1);
+        let inflation = config.contention.factor(occupancy);
+
+        let slot = &mut slots[idx];
+        let epoch = slot.compiled.join_s;
+        loop {
+            // the frame that will be inferred if this step infers (the
+            // drained drops present earlier frames, which never call
+            // the pricing closure)
+            let infer_frame = slot.session.next_infer_frame();
+            let was_cont = std::cell::Cell::new(false);
+            let compiled = slot.compiled;
+            let batching = &config.batching;
+            let (rd, rl, re) = (run_dnn, run_len, run_end);
+            let event = slot.session.step_with(
+                slot.detector.as_mut(),
+                &mut |dnn| {
+                    let mut base = latency.sample(dnn);
+                    // phase-local capture-clock scale (FPS sag/burst)
+                    if let Some(f) = infer_frame {
+                        let scale =
+                            compiled.phases[compiled.phase_of(f)].fps_scale;
+                        if scale != 1.0 {
+                            base *= scale;
+                        }
+                    }
+                    if let Some(b) = batching {
+                        let cont = rd == Some(dnn)
+                            && rl < b.max_batch
+                            && start_est <= re + 1e-12;
+                        was_cont.set(cont);
+                        if cont {
+                            base *= 1.0 - b.setup_frac;
+                        }
+                    }
+                    if inflation == 1.0 {
+                        base
+                    } else {
+                        base * inflation
+                    }
+                },
+                gpu_free - epoch,
+            );
+            match event {
+                SessionEvent::Inferred { dnn, interval: (_, end), .. }
+                | SessionEvent::InferenceFailed {
+                    dnn,
+                    interval: (_, end),
+                    ..
+                } => {
+                    let end_global = epoch + end;
+                    if config.batching.is_some() {
+                        if was_cont.get() {
+                            run_len += 1;
+                        } else {
+                            run_dnn = Some(dnn);
+                            run_len = 1;
+                        }
+                        run_end = end_global;
+                    }
+                    gpu_free = gpu_free.max(end_global);
+                    break;
+                }
+                SessionEvent::Dropped { .. } => continue,
+                SessionEvent::Finished => break,
+            }
+        }
+        rr_cursor = (idx + 1) % slots.len();
+    }
+
+    // drain streams whose remaining frames are all destined to drop
+    for slot in &mut slots {
+        let epoch = slot.compiled.join_s;
+        while !slot.session.is_finished() {
+            slot.session.step_with(
+                slot.detector.as_mut(),
+                &mut |dnn| latency.sample(dnn),
+                gpu_free - epoch,
+            );
+        }
+    }
+
+    let per_stream: Vec<StreamRun> = slots
+        .into_iter()
+        .map(|s| {
+            let compiled = s.compiled;
+            StreamRun {
+                label: compiled.label.clone(),
+                join_s: compiled.join_s,
+                result: s.session.finish(),
+                phase_starts: compiled.phase_starts.clone(),
+                phase_labels: compiled
+                    .phases
+                    .iter()
+                    .map(|p| p.label.clone())
+                    .collect(),
+                phase_frames: compiled
+                    .phases
+                    .iter()
+                    .map(|p| p.frames)
+                    .collect(),
+            }
+        })
+        .collect();
+
+    // board-time aggregates: shift each stream's trace by its epoch
+    let shifted: Vec<ScheduleTrace> = per_stream
+        .iter()
+        .map(|s| {
+            let mut t = ScheduleTrace::default();
+            for &(start, end, dnn) in &s.result.trace.busy {
+                t.push(s.join_s + start, s.join_s + end, dnn);
+            }
+            t.duration = s.join_s + s.result.trace.duration;
+            t
+        })
+        .collect();
+    let refs: Vec<&ScheduleTrace> = shifted.iter().collect();
+    let utilisation = UtilisationSummary::from_traces(&refs);
+    let power = EnergyMeter::from_trace(&utilisation.merged).summary();
+
+    Ok(ScenarioRun {
+        scenario: scenario_name.to_string(),
+        config: config.label(),
+        per_stream,
+        utilisation,
+        power,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::run_realtime;
+    use crate::dataset::synth::CameraMotion;
+    use crate::scenario::spec::{PhaseSpec, ScenarioSpec, StreamSpec};
+
+    fn single_clean() -> ScenarioSpec {
+        ScenarioSpec::new(
+            "harness-unit",
+            "one clean stream",
+            vec![StreamSpec::new(
+                "cam0",
+                vec![PhaseSpec::new("only", 90).density(6).ref_height(260.0)],
+            )],
+        )
+        .seed(41)
+    }
+
+    #[test]
+    fn clean_single_stream_matches_run_realtime_bit_for_bit() {
+        let spec = single_clean();
+        let streams = spec.compile().unwrap();
+        let cfg = HarnessConfig::tod();
+        let run = run_scenario(&spec.name, &streams, &cfg).unwrap();
+        assert_eq!(run.per_stream.len(), 1);
+
+        let seq = &streams[0].seq;
+        let mut pol = MbbsPolicy::tod_default();
+        let mut det = OracleBackend(OracleDetector::new(
+            seq.spec.seed,
+            seq.spec.width as f64,
+            seq.spec.height as f64,
+        ));
+        let mut lat = LatencyModel::deterministic();
+        let legacy = run_realtime(seq, &mut pol, &mut det, &mut lat, 30.0);
+
+        let r = &run.per_stream[0].result;
+        assert_eq!(r.ap, legacy.ap);
+        assert_eq!(r.dnn_series, legacy.dnn_series);
+        assert_eq!(r.mbbs_series, legacy.mbbs_series);
+        assert_eq!(r.trace.busy, legacy.trace.busy);
+        assert_eq!(r.n_dropped, legacy.n_dropped);
+    }
+
+    #[test]
+    fn harness_is_deterministic() {
+        let spec = ScenarioSpec::new(
+            "harness-det",
+            "two streams with churn and noise",
+            vec![
+                StreamSpec::new(
+                    "cam0",
+                    vec![
+                        PhaseSpec::new("day", 60),
+                        PhaseSpec::new("night", 60)
+                            .noise(NoiseProfile::NIGHT)
+                            .fps_scale(1.3),
+                    ],
+                ),
+                StreamSpec::new(
+                    "cam1",
+                    vec![PhaseSpec::new("drive", 80)
+                        .camera(CameraMotion::Vehicle { flow_speed: 14.0 })],
+                )
+                .join_at(1.5),
+            ],
+        )
+        .seed(5);
+        let streams = spec.compile().unwrap();
+        let cfg = HarnessConfig::tod().with_watts(6.5);
+        let a = run_scenario(&spec.name, &streams, &cfg).unwrap();
+        let b = run_scenario(&spec.name, &streams, &cfg).unwrap();
+        for (x, y) in a.per_stream.iter().zip(&b.per_stream) {
+            assert_eq!(x.result.ap, y.result.ap);
+            assert_eq!(x.result.dnn_series, y.result.dnn_series);
+            assert_eq!(x.result.trace.busy, y.result.trace.busy);
+        }
+        assert_eq!(a.power, b.power);
+    }
+
+    #[test]
+    fn churned_stream_defers_to_its_epoch() {
+        let spec = ScenarioSpec::new(
+            "harness-churn",
+            "late joiner",
+            vec![
+                StreamSpec::new("cam0", vec![PhaseSpec::new("a", 60)]),
+                StreamSpec::new("cam1", vec![PhaseSpec::new("b", 60)])
+                    .join_at(4.0),
+            ],
+        )
+        .seed(9);
+        let streams = spec.compile().unwrap();
+        let run = run_scenario(
+            &spec.name,
+            &streams,
+            &HarnessConfig::fixed(DnnKind::TinyY288),
+        )
+        .unwrap();
+        // the late joiner's board-time busy intervals all start at or
+        // after its epoch; the board never double-books
+        let late = &run.per_stream[1];
+        assert!(late
+            .result
+            .trace
+            .busy
+            .iter()
+            .all(|&(s, _, _)| late.join_s + s >= 4.0 - 1e-12));
+        assert!(run.utilisation.overlap_seconds() < 1e-9);
+        // board makespan covers the late joiner's whole stream
+        assert!(run.utilisation.makespan >= 4.0 + 60.0 / 30.0 - 1e-9);
+    }
+
+    #[test]
+    fn fps_burst_phase_raises_drops() {
+        let mk = |scale: f64| {
+            let spec = ScenarioSpec::new(
+                "harness-fps",
+                "burst phase",
+                vec![StreamSpec::new(
+                    "cam0",
+                    vec![
+                        PhaseSpec::new("nominal", 80).ref_height(130.0),
+                        PhaseSpec::new("burst", 80)
+                            .ref_height(130.0)
+                            .fps_scale(scale),
+                    ],
+                )],
+            )
+            .seed(13);
+            let streams = spec.compile().unwrap();
+            let run = run_scenario(
+                &spec.name,
+                &streams,
+                &HarnessConfig::fixed(DnnKind::Y288),
+            )
+            .unwrap();
+            run.per_stream[0].result.n_dropped
+        };
+        let nominal = mk(1.0);
+        let burst = mk(1.6);
+        let sag = mk(0.4);
+        assert!(burst > nominal, "burst {burst} vs nominal {nominal}");
+        assert!(sag < nominal, "sag {sag} vs nominal {nominal}");
+    }
+
+    #[test]
+    fn night_noise_costs_accuracy() {
+        let mk = |noise: NoiseProfile| {
+            let spec = ScenarioSpec::new(
+                "harness-night",
+                "noise phase",
+                vec![StreamSpec::new(
+                    "cam0",
+                    vec![PhaseSpec::new("p", 120).noise(noise)],
+                )],
+            )
+            .seed(17);
+            let streams = spec.compile().unwrap();
+            run_scenario(&spec.name, &streams, &HarnessConfig::tod())
+                .unwrap()
+                .per_stream[0]
+                .result
+                .ap
+        };
+        let day = mk(NoiseProfile::DAY);
+        let night = mk(NoiseProfile::NIGHT);
+        assert!(night < day - 0.02, "night {night} vs day {day}");
+    }
+
+    #[test]
+    fn watts_budget_holds_on_board_power() {
+        let spec = ScenarioSpec::new(
+            "harness-watts",
+            "small objects lean heavy",
+            vec![StreamSpec::new(
+                "cam0",
+                vec![PhaseSpec::new("small", 240)
+                    .ref_height(120.0)
+                    .density(6)],
+            )],
+        )
+        .seed(23);
+        let streams = spec.compile().unwrap();
+        let free =
+            run_scenario(&spec.name, &streams, &HarnessConfig::tod()).unwrap();
+        let capped = run_scenario(
+            &spec.name,
+            &streams,
+            &HarnessConfig::tod().with_watts(6.0),
+        )
+        .unwrap();
+        assert!(free.power.avg_power_w > 6.0, "{}", free.power.avg_power_w);
+        assert!(
+            capped.power.avg_power_w <= 6.0 + 0.3,
+            "{}",
+            capped.power.avg_power_w
+        );
+    }
+
+    #[test]
+    fn config_labels_are_canonical() {
+        assert_eq!(HarnessConfig::tod().label(), "tod");
+        assert_eq!(
+            HarnessConfig::fixed(DnnKind::Y416).label(),
+            "fixed:yolov4-416"
+        );
+        assert_eq!(
+            HarnessConfig::tod().with_watts(6.5).label(),
+            "tod@6.5W"
+        );
+        assert_eq!(
+            HarnessConfig::tod()
+                .with_batching(BatchingSim::jetson_nano(4))
+                .label(),
+            "tod+batch4"
+        );
+    }
+}

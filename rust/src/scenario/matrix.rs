@@ -1,0 +1,438 @@
+//! The curated scenario matrix: eight named edge workloads.
+//!
+//! Every scenario stresses a different axis of the deployment space the
+//! single-sequence MOT17 catalog cannot reach (AyE-Edge's argument in
+//! PAPERS.md): regime *shifts* mid-stream, day/night noise, capture-
+//! clock sag/burst, camera handoffs, stream churn and power squeezes.
+//! Each scenario is built so that no single fixed DNN is right in every
+//! phase — a phase with small far-field boxes punishes the light nets
+//! (capacity), a phase with large fast-moving boxes punishes the heavy
+//! nets (drops + stale carried detections) — which is what the
+//! differential layer in [`super::conformance`] pins: adaptive
+//! selection must never lose to the best fixed DNN on any scenario.
+//! The matrix is the regression backbone: `tod scenario check` replays
+//! all eight against the goldens in `rust/tests/goldens/`.
+
+use crate::dataset::synth::CameraMotion;
+
+use super::spec::{NoiseProfile, PhaseSpec, ScenarioSpec, StreamSpec};
+
+/// Identifier for the eight curated scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ScenarioId {
+    RushHourSurge,
+    NightDrift,
+    FpsSag,
+    CameraHandoff,
+    StreamChurn,
+    BudgetSqueeze,
+    BurstyCrowd,
+    SteadySparse,
+}
+
+impl ScenarioId {
+    /// All scenarios, in matrix order.
+    pub const ALL: [ScenarioId; 8] = [
+        ScenarioId::RushHourSurge,
+        ScenarioId::NightDrift,
+        ScenarioId::FpsSag,
+        ScenarioId::CameraHandoff,
+        ScenarioId::StreamChurn,
+        ScenarioId::BudgetSqueeze,
+        ScenarioId::BurstyCrowd,
+        ScenarioId::SteadySparse,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioId::RushHourSurge => "rush-hour-surge",
+            ScenarioId::NightDrift => "night-drift",
+            ScenarioId::FpsSag => "fps-sag",
+            ScenarioId::CameraHandoff => "camera-handoff",
+            ScenarioId::StreamChurn => "stream-churn",
+            ScenarioId::BudgetSqueeze => "budget-squeeze",
+            ScenarioId::BurstyCrowd => "bursty-crowd",
+            ScenarioId::SteadySparse => "steady-sparse",
+        }
+    }
+}
+
+impl std::fmt::Display for ScenarioId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ScenarioId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ScenarioId::ALL
+            .iter()
+            .find(|id| id.name() == s)
+            .copied()
+            .ok_or_else(|| {
+                let names: Vec<&str> =
+                    ScenarioId::ALL.iter().map(|id| id.name()).collect();
+                format!(
+                    "unknown scenario: {s:?} (want one of {})",
+                    names.join("|")
+                )
+            })
+    }
+}
+
+/// Build the spec of one matrix scenario.
+pub fn scenario_spec(id: ScenarioId) -> ScenarioSpec {
+    match id {
+        // A hand-carried plaza camera through rush hour: sparse close
+        // walkers under a brisk pan (staleness punishes the heavy
+        // nets), then a dense far-field surge from a parked position
+        // (capacity punishes the light nets), then the tail.
+        ScenarioId::RushHourSurge => ScenarioSpec::new(
+            "rush-hour-surge",
+            "sparse close walkers under a pan -> dense far-field surge \
+             -> tail; the size regime flips twice",
+            vec![StreamSpec::new(
+                "plaza",
+                vec![
+                    PhaseSpec::new("calm", 140)
+                        .density(5)
+                        .ref_height(430.0)
+                        .depth_range(1.0, 1.8)
+                        .walk_speed(1.4)
+                        .camera(CameraMotion::Walking { pan_speed: 16.0 }),
+                    PhaseSpec::new("surge", 160)
+                        .density(24)
+                        .ref_height(150.0)
+                        .depth_range(1.6, 3.0)
+                        .walk_speed(2.0),
+                    PhaseSpec::new("ease", 100)
+                        .density(9)
+                        .ref_height(320.0)
+                        .depth_range(1.1, 2.0)
+                        .walk_speed(1.6)
+                        .camera(CameraMotion::Walking { pan_speed: 12.0 }),
+                ],
+            )])
+            .seed(0x51de_0001),
+
+        // A mast camera by day (far field, small boxes), handed to a
+        // patrol bodycam at night (close crowd, fast pan) while
+        // detection noise ramps through dusk into night.
+        ScenarioId::NightDrift => ScenarioSpec::new(
+            "night-drift",
+            "far-field day watch -> dusk -> close night patrol under \
+             ramping detection noise",
+            vec![StreamSpec::new(
+                "watch",
+                vec![
+                    PhaseSpec::new("day", 150)
+                        .density(12)
+                        .ref_height(180.0)
+                        .depth_range(1.4, 2.8),
+                    PhaseSpec::new("dusk", 100)
+                        .density(10)
+                        .ref_height(300.0)
+                        .depth_range(1.2, 2.2)
+                        .camera(CameraMotion::Walking { pan_speed: 10.0 })
+                        .noise(NoiseProfile { miss: 0.12, conf_loss: 0.1 }),
+                    PhaseSpec::new("night", 150)
+                        .density(7)
+                        .ref_height(480.0)
+                        .depth_range(1.0, 1.8)
+                        .camera(CameraMotion::Walking { pan_speed: 14.0 })
+                        .noise(NoiseProfile::NIGHT),
+                ],
+            )])
+            .seed(0x51de_0002),
+
+        // The capture clock misbehaves: a nominal small-object feed, a
+        // sag to ~0.55x (heavy nets suddenly affordable), then a
+        // backlog burst at 1.35x on a flipped large-fast regime where
+        // every extra millisecond costs dropped frames.
+        ScenarioId::FpsSag => ScenarioSpec::new(
+            "fps-sag",
+            "nominal -> camera sags to ~0.55x -> backlog burst at 1.35x \
+             on a flipped size regime",
+            vec![StreamSpec::new(
+                "feed",
+                vec![
+                    PhaseSpec::new("nominal", 120)
+                        .density(10)
+                        .ref_height(140.0)
+                        .depth_range(1.4, 2.8),
+                    PhaseSpec::new("sag", 120)
+                        .density(10)
+                        .ref_height(140.0)
+                        .depth_range(1.4, 2.8)
+                        .fps_scale(0.55),
+                    PhaseSpec::new("burst", 120)
+                        .density(7)
+                        .ref_height(420.0)
+                        .depth_range(1.0, 1.8)
+                        .camera(CameraMotion::Walking { pan_speed: 20.0 })
+                        .fps_scale(1.35),
+                ],
+            )])
+            .seed(0x51de_0003),
+
+        // One logical feed handed between three physically different
+        // cameras: fixed mast (small static), vehicle dashcam (mid,
+        // fast flow), handheld close-up (large, fast pan).
+        ScenarioId::CameraHandoff => ScenarioSpec::new(
+            "camera-handoff",
+            "mast camera -> vehicle dashcam -> handheld close-up; all \
+             three motion classes in one stream",
+            vec![StreamSpec::new(
+                "relay",
+                vec![
+                    PhaseSpec::new("mast", 130)
+                        .density(14)
+                        .ref_height(170.0)
+                        .depth_range(1.4, 2.8),
+                    PhaseSpec::new("dashcam", 130)
+                        .density(10)
+                        .ref_height(250.0)
+                        .walk_speed(2.2)
+                        .camera(CameraMotion::Vehicle { flow_speed: 16.0 }),
+                    PhaseSpec::new("handheld", 130)
+                        .density(7)
+                        .ref_height(520.0)
+                        .depth_range(1.0, 1.8)
+                        .camera(CameraMotion::Walking { pan_speed: 26.0 }),
+                ],
+            )])
+            .seed(0x51de_0004),
+
+        // Cameras come and go on one accelerator: a steady walker from
+        // t=0, a dashcam joining at 2 s, a dense far-field crowd camera
+        // joining at 4 s; every stream leaves when its footage ends.
+        ScenarioId::StreamChurn => ScenarioSpec::new(
+            "stream-churn",
+            "three cameras join staggered on one accelerator and leave \
+             when their footage ends",
+            vec![
+                StreamSpec::new(
+                    "steady",
+                    vec![PhaseSpec::new("walk", 220)
+                        .density(8)
+                        .ref_height(320.0)
+                        .depth_range(1.0, 2.0)
+                        .camera(CameraMotion::Walking { pan_speed: 10.0 })],
+                ),
+                StreamSpec::new(
+                    "dashcam",
+                    vec![PhaseSpec::new("drive", 180)
+                        .density(10)
+                        .ref_height(240.0)
+                        .camera(CameraMotion::Vehicle { flow_speed: 14.0 })],
+                )
+                .join_at(2.0),
+                StreamSpec::new(
+                    "crowd",
+                    vec![PhaseSpec::new("dense", 160)
+                        .density(18)
+                        .ref_height(170.0)
+                        .depth_range(1.4, 2.6)],
+                )
+                .join_at(4.0),
+            ],
+        )
+        .seed(0x51de_0005),
+
+        // Small far-field objects pull selection onto the heavy nets
+        // exactly when the board cap is tightest: the budgeted
+        // configurations must hold 5.8 W through the squeeze while the
+        // ungoverned ladder runs hot.
+        ScenarioId::BudgetSqueeze => ScenarioSpec::new(
+            "budget-squeeze",
+            "a small-object squeeze phase demands the heavy nets while \
+             the board cap sits at 5.8 W",
+            vec![StreamSpec::new(
+                "gate",
+                vec![
+                    PhaseSpec::new("lean", 120)
+                        .density(8)
+                        .ref_height(330.0)
+                        .depth_range(1.0, 2.0)
+                        .camera(CameraMotion::Walking { pan_speed: 10.0 }),
+                    PhaseSpec::new("squeeze", 160)
+                        .density(12)
+                        .ref_height(140.0)
+                        .depth_range(1.4, 2.8),
+                    PhaseSpec::new("relax", 100)
+                        .density(6)
+                        .ref_height(380.0)
+                        .depth_range(1.0, 1.9)
+                        .camera(CameraMotion::Walking { pan_speed: 8.0 }),
+                ],
+            )])
+            .seed(0x51de_0006)
+            .watts_budget(5.8),
+
+        // The crowd flaps: close-up lulls under an operator pan
+        // alternating with dense far-field bursts — the light-net and
+        // heavy-net regimes swap every three seconds.
+        ScenarioId::BurstyCrowd => ScenarioSpec::new(
+            "bursty-crowd",
+            "lull/burst/lull/burst crowd flapping between the light-net \
+             and heavy-net regimes",
+            vec![StreamSpec::new(
+                "court",
+                vec![
+                    PhaseSpec::new("lull1", 90)
+                        .density(4)
+                        .ref_height(420.0)
+                        .depth_range(1.0, 1.8)
+                        .camera(CameraMotion::Walking { pan_speed: 12.0 }),
+                    PhaseSpec::new("burst1", 90)
+                        .density(22)
+                        .ref_height(160.0)
+                        .depth_range(1.5, 2.9),
+                    PhaseSpec::new("lull2", 90)
+                        .density(4)
+                        .ref_height(420.0)
+                        .depth_range(1.0, 1.8)
+                        .camera(CameraMotion::Walking { pan_speed: 12.0 }),
+                    PhaseSpec::new("burst2", 90)
+                        .density(22)
+                        .ref_height(160.0)
+                        .depth_range(1.5, 2.9),
+                ],
+            )])
+            .seed(0x51de_0007),
+
+        // The near-control: a short far-field approach, then one long
+        // steady sparse phase of large fast walkers where the lightest
+        // net is the clear winner — adaptive selection must settle
+        // there and stay, not churn.
+        ScenarioId::SteadySparse => ScenarioSpec::new(
+            "steady-sparse",
+            "short far-field approach, then a long steady sparse phase \
+             of large fast walkers",
+            vec![StreamSpec::new(
+                "lane",
+                vec![
+                    PhaseSpec::new("approach", 80)
+                        .density(10)
+                        .ref_height(150.0)
+                        .depth_range(1.4, 2.8),
+                    PhaseSpec::new("steady", 320)
+                        .density(3)
+                        .ref_height(450.0)
+                        .depth_range(1.0, 1.6)
+                        .camera(CameraMotion::Walking { pan_speed: 18.0 }),
+                ],
+            )])
+            .seed(0x51de_0008),
+    }
+}
+
+/// Build the full matrix, in [`ScenarioId::ALL`] order.
+pub fn matrix() -> Vec<ScenarioSpec> {
+    ScenarioId::ALL.iter().map(|&id| scenario_spec(id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scenarios_validate_and_compile() {
+        for id in ScenarioId::ALL {
+            let spec = scenario_spec(id);
+            assert_eq!(spec.name, id.name());
+            assert!(!spec.description.is_empty());
+            spec.validate().unwrap_or_else(|e| panic!("{id}: {e}"));
+            let streams = spec.compile().unwrap();
+            assert_eq!(streams.len(), spec.streams.len());
+        }
+    }
+
+    #[test]
+    fn names_parse_back() {
+        for id in ScenarioId::ALL {
+            assert_eq!(id.name().parse::<ScenarioId>().unwrap(), id);
+        }
+        assert!("mystery-scene".parse::<ScenarioId>().is_err());
+    }
+
+    #[test]
+    fn matrix_names_and_seeds_are_unique() {
+        let specs = matrix();
+        assert_eq!(specs.len(), 8);
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len());
+        let seeds: std::collections::BTreeSet<u64> =
+            specs.iter().map(|s| s.seed).collect();
+        assert_eq!(seeds.len(), specs.len());
+    }
+
+    #[test]
+    fn matrix_covers_the_deployment_axes() {
+        let specs = matrix();
+        // at least one scenario with noise, one with fps_scale on both
+        // sides of 1, one with churn (join > 0), one with a non-default
+        // watts cap, and all three camera classes somewhere
+        let phases =
+            || specs.iter().flat_map(|s| &s.streams).flat_map(|s| &s.phases);
+        assert!(phases().any(|p| !p.noise.is_clean()));
+        assert!(phases().any(|p| p.fps_scale < 1.0));
+        assert!(phases().any(|p| p.fps_scale > 1.0));
+        assert!(specs
+            .iter()
+            .flat_map(|s| &s.streams)
+            .any(|s| s.join_s > 0.0));
+        assert!(specs
+            .iter()
+            .any(|s| s.watts_budget != crate::app::DEFAULT_WATTS_BUDGET));
+        assert!(phases().any(|p| matches!(p.camera, CameraMotion::Static)));
+        assert!(phases()
+            .any(|p| matches!(p.camera, CameraMotion::Walking { .. })));
+        assert!(phases()
+            .any(|p| matches!(p.camera, CameraMotion::Vehicle { .. })));
+        // multi-phase regime shifts are the point: most scenarios have
+        // more than one phase
+        let shifting = specs
+            .iter()
+            .filter(|s| s.streams.iter().any(|st| st.phases.len() > 1))
+            .count();
+        assert!(shifting >= 5, "only {shifting} scenarios shift regimes");
+    }
+
+    #[test]
+    fn every_scenario_mixes_light_and_heavy_regimes() {
+        // the differential layer's premise: each scenario must contain
+        // both a large-object regime (light nets suffice) and a
+        // small-object regime (capacity matters), across its phases or
+        // streams — except that multi-stream scenarios may split the
+        // regimes across streams. Nominal MBBS proxies: ref_height at
+        // mid depth as an area fraction of the 960x540 frame.
+        for spec in matrix() {
+            let mut fracs = Vec::new();
+            for stream in &spec.streams {
+                for p in &stream.phases {
+                    let d = (p.depth_range.0 + p.depth_range.1) / 2.0;
+                    let h = p.ref_height / d;
+                    let frac = (h * h * 0.41)
+                        / (spec.width as f64 * spec.height as f64);
+                    fracs.push(frac);
+                }
+            }
+            let max = fracs.iter().cloned().fold(0.0f64, f64::max);
+            let min = fracs.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                max > 0.03,
+                "{}: no large-object regime (max nominal MBBS {max})",
+                spec.name
+            );
+            assert!(
+                min < 0.012,
+                "{}: no small-object regime (min nominal MBBS {min})",
+                spec.name
+            );
+        }
+    }
+}

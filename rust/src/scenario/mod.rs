@@ -1,0 +1,44 @@
+//! Scenario matrix + deterministic conformance harness.
+//!
+//! The paper's claim is that TOD adapts to *changing* stream
+//! characteristics, yet its evaluation replays seven static sequences.
+//! This subsystem makes scenario diversity a first-class, regression-
+//! pinned artifact:
+//!
+//! * [`spec`] — composable scenario descriptions: typed builders for
+//!   phased workloads (crowd density, object-size geometry, camera
+//!   motion, FPS sag/burst, day/night detection noise) across one or
+//!   more churning streams, compiled deterministically onto
+//!   [`crate::dataset::synth`] sequences.
+//! * [`store`] — versioned JSON persistence for scenario documents
+//!   (schema `tod-scenario`), so deployments can describe their own
+//!   workloads and replay them through the same harness.
+//! * [`matrix`] — the eight curated scenarios (`rush-hour-surge`,
+//!   `night-drift`, `fps-sag`, `camera-handoff`, `stream-churn`,
+//!   `budget-squeeze`, `bursty-crowd`, `steady-sparse`).
+//! * [`harness`] — the deterministic replay loop: any policy ×
+//!   dispatch × watts-budget × batching configuration, end to end from
+//!   a single seed, over the production [`crate::coordinator::session::
+//!   StreamSession`] state machine.
+//! * [`record`] — the canonical, byte-stable [`record::RunRecord`]
+//!   (schema `tod-scenario-run`).
+//! * [`conformance`] — golden-trace conformance: per-scenario reports
+//!   with adaptive-vs-fixed differential margins, written by
+//!   `tod scenario record` into `rust/tests/goldens/` and byte-checked
+//!   by `tod scenario check` and CI.
+//!
+//! See DESIGN.md §12 for the harness semantics (churn epochs, the
+//! fps-scale transform, noise pairing) and how to re-record goldens.
+
+pub mod conformance;
+pub mod harness;
+pub mod matrix;
+pub mod record;
+pub mod spec;
+pub mod store;
+
+pub use conformance::{check_goldens, run_report, ScenarioReport};
+pub use harness::{run_scenario, HarnessConfig, PolicyKind, ScenarioRun};
+pub use matrix::{matrix, scenario_spec, ScenarioId};
+pub use record::RunRecord;
+pub use spec::{NoiseProfile, PhaseSpec, ScenarioSpec, StreamSpec};

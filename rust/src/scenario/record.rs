@@ -1,0 +1,437 @@
+//! The canonical, byte-stable record of one scenario run.
+//!
+//! A [`RunRecord`] is the golden-file unit: everything a configuration
+//! run produced — per-stream AP, deploy counts, drops, switches, power,
+//! and per-phase series — flattened into plain numbers. Serialisation
+//! is versioned (schema tag + version) and *byte-stable*: object keys
+//! are sorted ([`crate::util::json::Json`] stores objects in a
+//! `BTreeMap`), floats print in Rust's shortest round-trippable form,
+//! and no wall-clock or platform value ever enters the document. The
+//! same seed therefore reproduces the same bytes, which is what makes
+//! `tod scenario check` diffs meaningful (pinned by the golden-
+//! stability test in `rust/tests/scenario.rs`).
+
+use crate::util::json::Json;
+use crate::DnnKind;
+
+use super::harness::{ScenarioRun, StreamRun};
+
+/// The `schema` tag identifying a run-record document.
+pub const SCHEMA_TAG: &str = "tod-scenario-run";
+
+/// Run-record version this build reads and writes.
+pub const RECORD_VERSION: u32 = 1;
+
+/// Per-phase slice of one stream's run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRecord {
+    pub label: String,
+    pub frames: u64,
+    pub inferred: u64,
+    pub dropped: u64,
+    /// Inference count per DNN within the phase.
+    pub deploy: [u64; DnnKind::COUNT],
+    /// Mean of the per-frame MBBS the policy saw during the phase.
+    pub mean_mbbs: f64,
+}
+
+/// One stream's flattened outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamRecord {
+    pub label: String,
+    pub join_s: f64,
+    pub eval_fps: f64,
+    pub policy: String,
+    pub ap: f64,
+    pub frames: u64,
+    pub inferred: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    pub switches: u64,
+    pub deploy: [u64; DnnKind::COUNT],
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub gpu_busy_frac: f64,
+    pub phases: Vec<PhaseRecord>,
+}
+
+/// Scenario-level aggregate of a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateRecord {
+    pub mean_ap: f64,
+    pub frames: u64,
+    pub inferred: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    pub switches: u64,
+    /// Board-time makespan, seconds.
+    pub makespan_s: f64,
+    /// Board busy fraction over the makespan.
+    pub utilisation: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub gpu_busy_frac: f64,
+}
+
+/// The canonical record of one (scenario × configuration) run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub scenario: String,
+    pub config: String,
+    pub seed: u64,
+    pub aggregate: AggregateRecord,
+    pub streams: Vec<StreamRecord>,
+}
+
+impl RunRecord {
+    /// Flatten a harness run into its canonical record.
+    pub fn from_run(run: &ScenarioRun, seed: u64) -> RunRecord {
+        let streams: Vec<StreamRecord> =
+            run.per_stream.iter().map(stream_record).collect();
+        let sum = |f: fn(&StreamRecord) -> u64| -> u64 {
+            streams.iter().map(f).sum()
+        };
+        RunRecord {
+            scenario: run.scenario.clone(),
+            config: run.config.clone(),
+            seed,
+            aggregate: AggregateRecord {
+                mean_ap: run.mean_ap(),
+                frames: sum(|s| s.frames),
+                inferred: sum(|s| s.inferred),
+                dropped: sum(|s| s.dropped),
+                failed: sum(|s| s.failed),
+                switches: sum(|s| s.switches),
+                makespan_s: run.utilisation.makespan,
+                utilisation: run.utilisation.utilisation(),
+                energy_j: run.power.energy_j,
+                avg_power_w: run.power.avg_power_w,
+                gpu_busy_frac: run.power.gpu_busy_frac,
+            },
+            streams,
+        }
+    }
+
+    /// The golden-file rendering: pretty JSON with sorted keys and a
+    /// trailing newline. Byte-stable for a fixed record.
+    pub fn canonical_text(&self) -> String {
+        to_json(self).to_pretty()
+    }
+}
+
+fn stream_record(s: &StreamRun) -> StreamRecord {
+    let r = &s.result;
+    let mut phases = Vec::with_capacity(s.phase_starts.len());
+    for (pi, &start) in s.phase_starts.iter().enumerate() {
+        let frames = s.phase_frames[pi];
+        // 0-based frame index range of the phase in the per-frame series
+        let lo = (start - 1) as usize;
+        let hi = (lo + frames as usize).min(r.dnn_series.len());
+        let mut deploy = [0u64; DnnKind::COUNT];
+        let mut inferred = 0u64;
+        for d in r.dnn_series[lo..hi].iter().flatten() {
+            deploy[d.index()] += 1;
+            inferred += 1;
+        }
+        let span = (hi - lo).max(1) as f64;
+        let mean_mbbs =
+            r.mbbs_series[lo..hi].iter().sum::<f64>() / span;
+        phases.push(PhaseRecord {
+            label: s.phase_labels[pi].clone(),
+            frames,
+            inferred,
+            dropped: (hi - lo) as u64 - inferred,
+            deploy,
+            mean_mbbs,
+        });
+    }
+    StreamRecord {
+        label: s.label.clone(),
+        join_s: s.join_s,
+        eval_fps: r.fps,
+        policy: r.policy.clone(),
+        ap: r.ap,
+        frames: r.n_frames,
+        inferred: r.n_inferred,
+        dropped: r.n_dropped,
+        failed: r.n_failed,
+        switches: r.switches,
+        deploy: r.deploy_counts,
+        energy_j: r.power.energy_j,
+        avg_power_w: r.power.avg_power_w,
+        gpu_busy_frac: r.power.gpu_busy_frac,
+        phases,
+    }
+}
+
+fn deploy_json(deploy: &[u64; DnnKind::COUNT]) -> Json {
+    Json::arr(deploy.iter().map(|&v| Json::num(v as f64)))
+}
+
+fn deploy_from_json(v: &Json) -> Result<[u64; DnnKind::COUNT], String> {
+    let arr = v.as_arr().ok_or("deploy is not an array")?;
+    if arr.len() != DnnKind::COUNT {
+        return Err(format!(
+            "deploy has {} entries (want {})",
+            arr.len(),
+            DnnKind::COUNT
+        ));
+    }
+    let mut out = [0u64; DnnKind::COUNT];
+    for (i, cell) in arr.iter().enumerate() {
+        out[i] = cell
+            .as_usize()
+            .ok_or("deploy cell is not a non-negative integer")?
+            as u64;
+    }
+    Ok(out)
+}
+
+/// Serialize a record to its versioned JSON document.
+pub fn to_json(record: &RunRecord) -> Json {
+    let streams = record.streams.iter().map(|s| {
+        let phases = s.phases.iter().map(|p| {
+            Json::obj(vec![
+                ("label", Json::str(&p.label)),
+                ("frames", Json::num(p.frames as f64)),
+                ("inferred", Json::num(p.inferred as f64)),
+                ("dropped", Json::num(p.dropped as f64)),
+                ("deploy", deploy_json(&p.deploy)),
+                ("mean_mbbs", Json::num(p.mean_mbbs)),
+            ])
+        });
+        Json::obj(vec![
+            ("label", Json::str(&s.label)),
+            ("join_s", Json::num(s.join_s)),
+            ("eval_fps", Json::num(s.eval_fps)),
+            ("policy", Json::str(&s.policy)),
+            ("ap", Json::num(s.ap)),
+            ("frames", Json::num(s.frames as f64)),
+            ("inferred", Json::num(s.inferred as f64)),
+            ("dropped", Json::num(s.dropped as f64)),
+            ("failed", Json::num(s.failed as f64)),
+            ("switches", Json::num(s.switches as f64)),
+            ("deploy", deploy_json(&s.deploy)),
+            ("energy_j", Json::num(s.energy_j)),
+            ("avg_power_w", Json::num(s.avg_power_w)),
+            ("gpu_busy_frac", Json::num(s.gpu_busy_frac)),
+            ("phases", Json::arr(phases)),
+        ])
+    });
+    let a = &record.aggregate;
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA_TAG)),
+        ("version", Json::num(RECORD_VERSION as f64)),
+        ("scenario", Json::str(&record.scenario)),
+        ("config", Json::str(&record.config)),
+        ("seed", Json::num(record.seed as f64)),
+        (
+            "aggregate",
+            Json::obj(vec![
+                ("mean_ap", Json::num(a.mean_ap)),
+                ("frames", Json::num(a.frames as f64)),
+                ("inferred", Json::num(a.inferred as f64)),
+                ("dropped", Json::num(a.dropped as f64)),
+                ("failed", Json::num(a.failed as f64)),
+                ("switches", Json::num(a.switches as f64)),
+                ("makespan_s", Json::num(a.makespan_s)),
+                ("utilisation", Json::num(a.utilisation)),
+                ("energy_j", Json::num(a.energy_j)),
+                ("avg_power_w", Json::num(a.avg_power_w)),
+                ("gpu_busy_frac", Json::num(a.gpu_busy_frac)),
+            ]),
+        ),
+        ("streams", Json::arr(streams)),
+    ])
+}
+
+/// Parse and validate a record from its JSON document.
+pub fn from_json(doc: &Json) -> Result<RunRecord, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing 'schema' tag")?;
+    if schema != SCHEMA_TAG {
+        return Err(format!("wrong schema: {schema:?} (want {SCHEMA_TAG:?})"));
+    }
+    let version = doc
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or("missing 'version'")?;
+    if version != RECORD_VERSION as usize {
+        return Err(format!(
+            "run record version {version} unsupported (this build reads \
+             version {RECORD_VERSION}; re-run `tod scenario record`)"
+        ));
+    }
+    let str_field = |v: &Json, key: &str| {
+        v.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing '{key}'"))
+    };
+    let num = |v: &Json, key: &str| {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing '{key}'"))
+    };
+    let count = |v: &Json, key: &str| {
+        v.get(key)
+            .and_then(Json::as_usize)
+            .map(|n| n as u64)
+            .ok_or_else(|| format!("missing '{key}'"))
+    };
+    let a = doc.get("aggregate").ok_or("missing 'aggregate'")?;
+    let aggregate = AggregateRecord {
+        mean_ap: num(a, "mean_ap")?,
+        frames: count(a, "frames")?,
+        inferred: count(a, "inferred")?,
+        dropped: count(a, "dropped")?,
+        failed: count(a, "failed")?,
+        switches: count(a, "switches")?,
+        makespan_s: num(a, "makespan_s")?,
+        utilisation: num(a, "utilisation")?,
+        energy_j: num(a, "energy_j")?,
+        avg_power_w: num(a, "avg_power_w")?,
+        gpu_busy_frac: num(a, "gpu_busy_frac")?,
+    };
+    let mut streams = Vec::new();
+    for s in doc
+        .get("streams")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'streams'")?
+    {
+        let mut phases = Vec::new();
+        for p in s
+            .get("phases")
+            .and_then(Json::as_arr)
+            .ok_or("stream: missing 'phases'")?
+        {
+            phases.push(PhaseRecord {
+                label: str_field(p, "label")?,
+                frames: count(p, "frames")?,
+                inferred: count(p, "inferred")?,
+                dropped: count(p, "dropped")?,
+                deploy: deploy_from_json(
+                    p.get("deploy").ok_or("phase: missing 'deploy'")?,
+                )?,
+                mean_mbbs: num(p, "mean_mbbs")?,
+            });
+        }
+        streams.push(StreamRecord {
+            label: str_field(s, "label")?,
+            join_s: num(s, "join_s")?,
+            eval_fps: num(s, "eval_fps")?,
+            policy: str_field(s, "policy")?,
+            ap: num(s, "ap")?,
+            frames: count(s, "frames")?,
+            inferred: count(s, "inferred")?,
+            dropped: count(s, "dropped")?,
+            failed: count(s, "failed")?,
+            switches: count(s, "switches")?,
+            deploy: deploy_from_json(
+                s.get("deploy").ok_or("stream: missing 'deploy'")?,
+            )?,
+            energy_j: num(s, "energy_j")?,
+            avg_power_w: num(s, "avg_power_w")?,
+            gpu_busy_frac: num(s, "gpu_busy_frac")?,
+            phases,
+        });
+    }
+    Ok(RunRecord {
+        scenario: str_field(doc, "scenario")?,
+        config: str_field(doc, "config")?,
+        seed: doc
+            .get("seed")
+            .and_then(Json::as_usize)
+            .ok_or("missing 'seed'")? as u64,
+        aggregate,
+        streams,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::harness::{run_scenario, HarnessConfig};
+    use crate::scenario::spec::{PhaseSpec, ScenarioSpec, StreamSpec};
+
+    fn sample_record() -> RunRecord {
+        let spec = ScenarioSpec::new(
+            "record-unit",
+            "two-phase record scenario",
+            vec![StreamSpec::new(
+                "cam0",
+                vec![
+                    PhaseSpec::new("a", 40).ref_height(130.0),
+                    PhaseSpec::new("b", 40).ref_height(420.0),
+                ],
+            )],
+        )
+        .seed(3);
+        let streams = spec.compile().unwrap();
+        let run =
+            run_scenario(&spec.name, &streams, &HarnessConfig::tod()).unwrap();
+        RunRecord::from_run(&run, spec.seed)
+    }
+
+    #[test]
+    fn record_accounting_is_consistent() {
+        let r = sample_record();
+        assert_eq!(r.streams.len(), 1);
+        let s = &r.streams[0];
+        assert_eq!(s.frames, 80);
+        assert_eq!(s.inferred + s.dropped, s.frames);
+        assert_eq!(s.deploy.iter().sum::<u64>(), s.inferred);
+        // per-phase slices partition the stream
+        assert_eq!(s.phases.len(), 2);
+        let ph_frames: u64 = s.phases.iter().map(|p| p.frames).sum();
+        let ph_inferred: u64 = s.phases.iter().map(|p| p.inferred).sum();
+        let ph_dropped: u64 = s.phases.iter().map(|p| p.dropped).sum();
+        assert_eq!(ph_frames, s.frames);
+        assert_eq!(ph_inferred, s.inferred);
+        assert_eq!(ph_dropped, s.dropped);
+        for p in &s.phases {
+            assert_eq!(p.deploy.iter().sum::<u64>(), p.inferred);
+        }
+        // phase b's close-up crowd must read much larger than phase a
+        assert!(s.phases[1].mean_mbbs > s.phases[0].mean_mbbs * 3.0);
+        assert_eq!(r.aggregate.frames, s.frames);
+        assert_eq!(r.aggregate.mean_ap, s.ap);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = sample_record();
+        let doc = to_json(&r);
+        assert_eq!(from_json(&doc).unwrap(), r);
+        let reparsed = Json::parse(&r.canonical_text()).unwrap();
+        assert_eq!(from_json(&reparsed).unwrap(), r);
+    }
+
+    #[test]
+    fn canonical_text_is_byte_stable_through_a_round_trip() {
+        // the golden contract: parse(text) -> to_json -> text must be
+        // the identity, or `tod scenario check` diffs are meaningless
+        let r = sample_record();
+        let text = r.canonical_text();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.canonical_text(), text);
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn wrong_schema_and_version_rejected() {
+        let doc = to_json(&sample_record());
+        let mut wrong_schema = doc.clone();
+        if let Json::Obj(m) = &mut wrong_schema {
+            m.insert("schema".into(), Json::str("nope"));
+        }
+        assert!(from_json(&wrong_schema).unwrap_err().contains("schema"));
+        let mut wrong_version = doc;
+        if let Json::Obj(m) = &mut wrong_version {
+            m.insert("version".into(), Json::num(9.0));
+        }
+        assert!(from_json(&wrong_version).unwrap_err().contains("version 9"));
+    }
+}

@@ -1,0 +1,549 @@
+//! Composable scenario descriptions: phased edge workloads.
+//!
+//! A [`ScenarioSpec`] describes a *workload*, not a single sequence: one
+//! or more camera streams, each sequencing [`PhaseSpec`]s that shift the
+//! regime mid-run — crowd density, object-size distribution (via the
+//! perspective `ref_height`/depth geometry of [`crate::dataset::synth`]),
+//! camera-motion class, capture-clock scale (FPS sag/burst), and
+//! detection noise (day/night) — plus stream churn (staggered joins and
+//! early leaves). Everything is deterministic in the scenario seed:
+//! [`ScenarioSpec::compile`] lowers each stream onto a concrete
+//! [`Sequence`] (phases concatenated, frames renumbered, ids kept
+//! unique) together with the per-phase harness annotations the replay
+//! loop ([`super::harness`]) needs.
+
+use crate::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+
+/// Detection-noise profile of a phase (the day/night axis).
+///
+/// Night footage is harder for every detector: a fraction of the
+/// would-be detections is missed outright and confidences sag. The
+/// harness applies this as a deterministic post-filter on the oracle's
+/// output ([`super::harness::NoisyDetector`]) — a pure function of
+/// `(frame, dnn)`, so policy comparisons stay paired.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseProfile {
+    /// Probability that a detection is dropped, in [0, 1).
+    pub miss: f64,
+    /// Multiplicative confidence attenuation, in [0, 1) (0 = none).
+    pub conf_loss: f64,
+}
+
+impl NoiseProfile {
+    /// Clean daylight footage: the oracle's output untouched.
+    pub const DAY: NoiseProfile = NoiseProfile { miss: 0.0, conf_loss: 0.0 };
+
+    /// Night-time attenuation: roughly a quarter of the detections
+    /// vanish and confidences drop by a fifth.
+    pub const NIGHT: NoiseProfile =
+        NoiseProfile { miss: 0.25, conf_loss: 0.2 };
+
+    pub fn is_clean(&self) -> bool {
+        self.miss == 0.0 && self.conf_loss == 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.miss) {
+            return Err(format!("noise miss must be in [0,1): {}", self.miss));
+        }
+        if !(0.0..1.0).contains(&self.conf_loss) {
+            return Err(format!(
+                "noise conf_loss must be in [0,1): {}",
+                self.conf_loss
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One regime segment of a stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    /// Short label ("rush", "night", ...) used in per-phase series.
+    pub label: String,
+    /// Frames in the phase (> 0).
+    pub frames: u64,
+    /// Target simultaneously visible pedestrians.
+    pub density: usize,
+    /// Reference box height at depth 1.0 (controls the MBBS regime).
+    pub ref_height: f64,
+    /// Depth range [near, far] — spread of the size distribution.
+    pub depth_range: (f64, f64),
+    /// Pedestrian world speed, px/frame at depth 1.0.
+    pub walk_speed: f64,
+    /// Camera-motion class during the phase.
+    pub camera: CameraMotion,
+    /// Capture-clock scale relative to the scenario base FPS (1.0 =
+    /// nominal). Compiled as the period-relative transform: the frame
+    /// clock stays fixed and every inference in the phase is priced at
+    /// `sample × fps_scale`, which reproduces the drop-regime of a
+    /// camera running at `fps_scale × base_fps` against an unchanged
+    /// accelerator. `< 1` = sagging camera (load lightens), `> 1` =
+    /// backlog burst (budgets tighten).
+    pub fps_scale: f64,
+    /// Detection-noise profile (day/night).
+    pub noise: NoiseProfile,
+}
+
+impl PhaseSpec {
+    /// A daylight static-camera phase with mid-crowd defaults; chain
+    /// the builder methods to shape the regime.
+    pub fn new(label: &str, frames: u64) -> Self {
+        PhaseSpec {
+            label: label.to_string(),
+            frames,
+            density: 10,
+            ref_height: 240.0,
+            depth_range: (1.0, 2.2),
+            walk_speed: 1.5,
+            camera: CameraMotion::Static,
+            fps_scale: 1.0,
+            noise: NoiseProfile::DAY,
+        }
+    }
+
+    pub fn density(mut self, density: usize) -> Self {
+        self.density = density;
+        self
+    }
+
+    pub fn ref_height(mut self, ref_height: f64) -> Self {
+        self.ref_height = ref_height;
+        self
+    }
+
+    pub fn depth_range(mut self, near: f64, far: f64) -> Self {
+        self.depth_range = (near, far);
+        self
+    }
+
+    pub fn walk_speed(mut self, walk_speed: f64) -> Self {
+        self.walk_speed = walk_speed;
+        self
+    }
+
+    pub fn camera(mut self, camera: CameraMotion) -> Self {
+        self.camera = camera;
+        self
+    }
+
+    pub fn fps_scale(mut self, fps_scale: f64) -> Self {
+        self.fps_scale = fps_scale;
+        self
+    }
+
+    pub fn noise(mut self, noise: NoiseProfile) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.label.is_empty() {
+            return Err("phase label must not be empty".into());
+        }
+        if self.frames == 0 {
+            return Err(format!("phase {:?}: frames must be > 0", self.label));
+        }
+        if !(self.ref_height > 0.0 && self.ref_height.is_finite()) {
+            return Err(format!(
+                "phase {:?}: ref_height must be positive and finite",
+                self.label
+            ));
+        }
+        if !(self.depth_range.0 > 0.0 && self.depth_range.1 >= self.depth_range.0)
+        {
+            return Err(format!(
+                "phase {:?}: depth range must be 0 < near <= far",
+                self.label
+            ));
+        }
+        if !(self.fps_scale > 0.0 && self.fps_scale.is_finite()) {
+            return Err(format!(
+                "phase {:?}: fps_scale must be positive and finite",
+                self.label
+            ));
+        }
+        self.noise
+            .validate()
+            .map_err(|e| format!("phase {:?}: {e}", self.label))
+    }
+}
+
+/// One camera stream of the scenario: a phase sequence plus churn
+/// coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// Stream label ("cam0", ...).
+    pub label: String,
+    /// Board time (seconds) at which the stream joins. Its frame clock
+    /// starts at the join, so frame 1 arrives `1/fps` later; a stream
+    /// *leaves* when its phases run out of frames.
+    pub join_s: f64,
+    /// The stream's regime phases, replayed in order.
+    pub phases: Vec<PhaseSpec>,
+}
+
+impl StreamSpec {
+    pub fn new(label: &str, phases: Vec<PhaseSpec>) -> Self {
+        StreamSpec { label: label.to_string(), join_s: 0.0, phases }
+    }
+
+    pub fn join_at(mut self, join_s: f64) -> Self {
+        self.join_s = join_s;
+        self
+    }
+
+    /// Total frames across all phases.
+    pub fn n_frames(&self) -> u64 {
+        self.phases.iter().map(|p| p.frames).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.label.is_empty() {
+            return Err("stream label must not be empty".into());
+        }
+        if self.phases.is_empty() {
+            return Err(format!(
+                "stream {:?}: needs at least one phase",
+                self.label
+            ));
+        }
+        if !(self.join_s >= 0.0 && self.join_s.is_finite()) {
+            return Err(format!(
+                "stream {:?}: join_s must be finite and >= 0",
+                self.label
+            ));
+        }
+        for p in &self.phases {
+            p.validate().map_err(|e| format!("stream {:?}: {e}", self.label))?;
+        }
+        Ok(())
+    }
+}
+
+/// A complete scenario: named, seeded, versioned (see [`super::store`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Unique name ("rush-hour-surge", ...).
+    pub name: String,
+    /// One-line description for `tod scenario list`.
+    pub description: String,
+    /// Master seed; every stream/phase world derives from it.
+    pub seed: u64,
+    /// Frame geometry shared by all streams.
+    pub width: u32,
+    pub height: u32,
+    /// Base evaluation FPS (phases scale it via `fps_scale`).
+    pub base_fps: f64,
+    /// Watts budget the canonical "budgeted" configuration runs under.
+    pub watts_budget: f64,
+    pub streams: Vec<StreamSpec>,
+}
+
+impl ScenarioSpec {
+    pub fn new(name: &str, description: &str, streams: Vec<StreamSpec>) -> Self {
+        ScenarioSpec {
+            name: name.to_string(),
+            description: description.to_string(),
+            seed: 0x5ce0,
+            width: 960,
+            height: 540,
+            base_fps: 30.0,
+            watts_budget: crate::app::DEFAULT_WATTS_BUDGET,
+            streams,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn geometry(mut self, width: u32, height: u32) -> Self {
+        self.width = width;
+        self.height = height;
+        self
+    }
+
+    pub fn base_fps(mut self, fps: f64) -> Self {
+        self.base_fps = fps;
+        self
+    }
+
+    pub fn watts_budget(mut self, watts: f64) -> Self {
+        self.watts_budget = watts;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("scenario name must not be empty".into());
+        }
+        if self.streams.is_empty() {
+            return Err(format!(
+                "scenario {:?}: needs at least one stream",
+                self.name
+            ));
+        }
+        if self.width == 0 || self.height == 0 {
+            return Err(format!(
+                "scenario {:?}: frame geometry must be non-empty",
+                self.name
+            ));
+        }
+        if !(self.base_fps > 0.0 && self.base_fps.is_finite()) {
+            return Err(format!(
+                "scenario {:?}: base_fps must be positive and finite",
+                self.name
+            ));
+        }
+        if !(self.watts_budget > 0.0 && self.watts_budget.is_finite()) {
+            return Err(format!(
+                "scenario {:?}: watts_budget must be positive and finite",
+                self.name
+            ));
+        }
+        let mut labels = std::collections::BTreeSet::new();
+        for s in &self.streams {
+            s.validate().map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+            if !labels.insert(s.label.clone()) {
+                return Err(format!(
+                    "scenario {:?}: duplicate stream label {:?}",
+                    self.name, s.label
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total frames across all streams.
+    pub fn n_frames(&self) -> u64 {
+        self.streams.iter().map(StreamSpec::n_frames).sum()
+    }
+
+    /// Lower every stream onto a concrete synthetic sequence plus the
+    /// per-phase harness annotations. Deterministic in `self.seed`.
+    pub fn compile(&self) -> Result<Vec<CompiledStream>, String> {
+        self.validate()?;
+        self.streams
+            .iter()
+            .enumerate()
+            .map(|(si, stream)| self.compile_stream(si, stream))
+            .collect()
+    }
+
+    fn compile_stream(
+        &self,
+        stream_idx: usize,
+        stream: &StreamSpec,
+    ) -> Result<CompiledStream, String> {
+        // one sub-world per phase, seeded from (scenario, stream, phase)
+        let stream_seed = self
+            .seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(stream_idx as u64 + 1);
+        let mut frames = Vec::with_capacity(stream.n_frames() as usize);
+        let mut phase_starts = Vec::with_capacity(stream.phases.len());
+        let mut next_frame: u64 = 1;
+        for (pi, phase) in stream.phases.iter().enumerate() {
+            phase_starts.push(next_frame);
+            let spec = SequenceSpec {
+                name: format!("{}/{}/{}", self.name, stream.label, phase.label),
+                width: self.width,
+                height: self.height,
+                fps: self.base_fps,
+                frames: phase.frames,
+                density: phase.density,
+                ref_height: phase.ref_height,
+                depth_range: phase.depth_range,
+                walk_speed: phase.walk_speed,
+                camera: phase.camera,
+                seed: stream_seed
+                    .wrapping_mul(0x9e3779b97f4a7c15)
+                    .wrapping_add(pi as u64 + 1),
+            };
+            let sub = Sequence::generate(spec);
+            // renumber frames to the stream timeline; offset ids so they
+            // stay unique across phase worlds
+            let id_offset = (pi as i64 + 1) << 20;
+            for rows in &sub.frames {
+                let mut out = Vec::with_capacity(rows.len());
+                for r in rows {
+                    let mut r = r.clone();
+                    r.frame = next_frame;
+                    r.id += id_offset;
+                    out.push(r);
+                }
+                frames.push(out);
+                next_frame += 1;
+            }
+        }
+        let spec = SequenceSpec {
+            name: format!("{}/{}", self.name, stream.label),
+            width: self.width,
+            height: self.height,
+            fps: self.base_fps,
+            frames: stream.n_frames(),
+            // spec-level world stats describe the first phase (the
+            // per-phase truth lives in `phases`)
+            density: stream.phases[0].density,
+            ref_height: stream.phases[0].ref_height,
+            depth_range: stream.phases[0].depth_range,
+            walk_speed: stream.phases[0].walk_speed,
+            camera: stream.phases[0].camera,
+            seed: stream_seed,
+        };
+        Ok(CompiledStream {
+            label: stream.label.clone(),
+            seq: Sequence { spec, frames },
+            phase_starts,
+            phases: stream.phases.clone(),
+            join_s: stream.join_s,
+            eval_fps: self.base_fps,
+        })
+    }
+}
+
+/// One stream lowered onto a concrete sequence plus per-phase
+/// annotations for the replay harness.
+#[derive(Debug, Clone)]
+pub struct CompiledStream {
+    pub label: String,
+    /// All phases concatenated, frames renumbered 1..=n.
+    pub seq: Sequence,
+    /// First frame (1-based) of each phase.
+    pub phase_starts: Vec<u64>,
+    /// The phase specs (same order as `phase_starts`).
+    pub phases: Vec<PhaseSpec>,
+    /// Board time at which the stream joins.
+    pub join_s: f64,
+    /// Evaluation FPS of the stream's frame clock.
+    pub eval_fps: f64,
+}
+
+impl CompiledStream {
+    /// Index of the phase a 1-based frame belongs to.
+    pub fn phase_of(&self, frame: u64) -> usize {
+        match self.phase_starts.binary_search(&frame) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        }
+    }
+
+    /// 1-based frame range `[start, end]` of a phase.
+    pub fn phase_frames(&self, phase: usize) -> (u64, u64) {
+        let start = self.phase_starts[phase];
+        (start, start + self.phases[phase].frames - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_phase_scenario() -> ScenarioSpec {
+        ScenarioSpec::new(
+            "unit",
+            "two-phase unit scenario",
+            vec![StreamSpec::new(
+                "cam0",
+                vec![
+                    PhaseSpec::new("sparse", 30).density(4).ref_height(320.0),
+                    PhaseSpec::new("surge", 40)
+                        .density(18)
+                        .ref_height(120.0)
+                        .noise(NoiseProfile::NIGHT),
+                ],
+            )],
+        )
+        .seed(7)
+    }
+
+    #[test]
+    fn compile_concatenates_and_renumbers() {
+        let s = two_phase_scenario();
+        let streams = s.compile().unwrap();
+        assert_eq!(streams.len(), 1);
+        let c = &streams[0];
+        assert_eq!(c.seq.n_frames(), 70);
+        assert_eq!(c.phase_starts, vec![1, 31]);
+        for (i, rows) in c.seq.frames.iter().enumerate() {
+            for r in rows {
+                assert_eq!(r.frame, i as u64 + 1);
+            }
+        }
+        // distinct id spaces per phase
+        let ids_a: std::collections::BTreeSet<i64> =
+            c.seq.frames[0].iter().map(|r| r.id).collect();
+        let ids_b: std::collections::BTreeSet<i64> =
+            c.seq.frames[69].iter().map(|r| r.id).collect();
+        assert!(ids_a.is_disjoint(&ids_b));
+    }
+
+    #[test]
+    fn compile_is_deterministic_in_seed() {
+        let a = two_phase_scenario().compile().unwrap();
+        let b = two_phase_scenario().compile().unwrap();
+        assert_eq!(a[0].seq.all_entries(), b[0].seq.all_entries());
+        let c = two_phase_scenario().seed(8).compile().unwrap();
+        assert_ne!(a[0].seq.all_entries(), c[0].seq.all_entries());
+    }
+
+    #[test]
+    fn phase_lookup_matches_boundaries() {
+        let c = &two_phase_scenario().compile().unwrap()[0];
+        assert_eq!(c.phase_of(1), 0);
+        assert_eq!(c.phase_of(30), 0);
+        assert_eq!(c.phase_of(31), 1);
+        assert_eq!(c.phase_of(70), 1);
+        assert_eq!(c.phase_frames(0), (1, 30));
+        assert_eq!(c.phase_frames(1), (31, 70));
+    }
+
+    #[test]
+    fn phase_shift_changes_the_size_regime() {
+        // the surge phase's close-up crowd must read much larger/denser
+        let c = &two_phase_scenario().compile().unwrap()[0];
+        let count_a = c.seq.frames[..30].iter().map(Vec::len).sum::<usize>();
+        let count_b = c.seq.frames[40..].iter().map(Vec::len).sum::<usize>();
+        assert!(count_b > count_a * 2, "surge {count_b} vs sparse {count_a}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = two_phase_scenario();
+        s.streams[0].phases[0].frames = 0;
+        assert!(s.validate().is_err());
+
+        let mut s = two_phase_scenario();
+        s.streams[0].phases[1].fps_scale = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = two_phase_scenario();
+        s.streams[0].phases[1].noise.miss = 1.5;
+        assert!(s.validate().is_err());
+
+        let mut s = two_phase_scenario();
+        s.streams.push(s.streams[0].clone());
+        assert!(s.validate().unwrap_err().contains("duplicate"));
+
+        let mut s = two_phase_scenario();
+        s.streams[0].join_s = -1.0;
+        assert!(s.validate().is_err());
+
+        assert!(two_phase_scenario().validate().is_ok());
+    }
+
+    #[test]
+    fn noise_profiles_validate() {
+        assert!(NoiseProfile::DAY.is_clean());
+        assert!(!NoiseProfile::NIGHT.is_clean());
+        assert!(NoiseProfile::NIGHT.validate().is_ok());
+        assert!(NoiseProfile { miss: -0.1, conf_loss: 0.0 }
+            .validate()
+            .is_err());
+        assert!(NoiseProfile { miss: 0.0, conf_loss: 1.0 }
+            .validate()
+            .is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! Versioned JSON persistence for [`ScenarioSpec`].
+//!
+//! Scenarios are *data*, not code: a deployment can describe its own
+//! edge workloads (phases, churn, noise) in a JSON document and replay
+//! them through the same harness that pins the built-in matrix. The
+//! schema carries an explicit tag + version (the
+//! [`crate::predictor::store`] discipline) so a binary never silently
+//! misreads a scenario written by a different generation.
+//!
+//! ```json
+//! {
+//!   "schema": "tod-scenario",
+//!   "version": 1,
+//!   "name": "rush-hour-surge",
+//!   "description": "...",
+//!   "seed": 23056, "width": 960, "height": 540,
+//!   "base_fps": 30, "watts_budget": 6.5,
+//!   "streams": [
+//!     { "label": "cam0", "join_s": 0,
+//!       "phases": [
+//!         { "label": "calm", "frames": 150, "density": 6,
+//!           "ref_height": 320, "depth_near": 1.0, "depth_far": 2.2,
+//!           "walk_speed": 1.5, "fps_scale": 1,
+//!           "camera": {"kind": "static"},
+//!           "noise": {"miss": 0, "conf_loss": 0} } ] } ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::dataset::synth::CameraMotion;
+use crate::util::json::Json;
+
+use super::spec::{NoiseProfile, PhaseSpec, ScenarioSpec, StreamSpec};
+
+/// The `schema` tag identifying a scenario document.
+pub const SCHEMA_TAG: &str = "tod-scenario";
+
+/// Scenario document version this build reads and writes.
+pub const SCENARIO_VERSION: u32 = 1;
+
+fn camera_to_json(camera: &CameraMotion) -> Json {
+    match camera {
+        CameraMotion::Static => Json::obj(vec![("kind", Json::str("static"))]),
+        CameraMotion::Walking { pan_speed } => Json::obj(vec![
+            ("kind", Json::str("walking")),
+            ("pan_speed", Json::num(*pan_speed)),
+        ]),
+        CameraMotion::Vehicle { flow_speed } => Json::obj(vec![
+            ("kind", Json::str("vehicle")),
+            ("flow_speed", Json::num(*flow_speed)),
+        ]),
+    }
+}
+
+fn camera_from_json(v: &Json) -> Result<CameraMotion, String> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("camera: missing 'kind'")?;
+    match kind {
+        "static" => Ok(CameraMotion::Static),
+        "walking" => Ok(CameraMotion::Walking {
+            pan_speed: v
+                .get("pan_speed")
+                .and_then(Json::as_f64)
+                .ok_or("camera walking: missing 'pan_speed'")?,
+        }),
+        "vehicle" => Ok(CameraMotion::Vehicle {
+            flow_speed: v
+                .get("flow_speed")
+                .and_then(Json::as_f64)
+                .ok_or("camera vehicle: missing 'flow_speed'")?,
+        }),
+        other => Err(format!("camera: unknown kind {other:?}")),
+    }
+}
+
+fn phase_to_json(p: &PhaseSpec) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&p.label)),
+        ("frames", Json::num(p.frames as f64)),
+        ("density", Json::num(p.density as f64)),
+        ("ref_height", Json::num(p.ref_height)),
+        ("depth_near", Json::num(p.depth_range.0)),
+        ("depth_far", Json::num(p.depth_range.1)),
+        ("walk_speed", Json::num(p.walk_speed)),
+        ("camera", camera_to_json(&p.camera)),
+        ("fps_scale", Json::num(p.fps_scale)),
+        (
+            "noise",
+            Json::obj(vec![
+                ("miss", Json::num(p.noise.miss)),
+                ("conf_loss", Json::num(p.noise.conf_loss)),
+            ]),
+        ),
+    ])
+}
+
+fn phase_from_json(v: &Json) -> Result<PhaseSpec, String> {
+    let str_field = |key: &str| {
+        v.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("phase: missing '{key}'"))
+    };
+    let num = |key: &str| {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("phase: missing '{key}'"))
+    };
+    let noise = v.get("noise").ok_or("phase: missing 'noise'")?;
+    Ok(PhaseSpec {
+        label: str_field("label")?,
+        frames: v
+            .get("frames")
+            .and_then(Json::as_usize)
+            .ok_or("phase: missing 'frames'")? as u64,
+        density: v
+            .get("density")
+            .and_then(Json::as_usize)
+            .ok_or("phase: missing 'density'")?,
+        ref_height: num("ref_height")?,
+        depth_range: (num("depth_near")?, num("depth_far")?),
+        walk_speed: num("walk_speed")?,
+        camera: camera_from_json(
+            v.get("camera").ok_or("phase: missing 'camera'")?,
+        )?,
+        fps_scale: num("fps_scale")?,
+        noise: NoiseProfile {
+            miss: noise
+                .get("miss")
+                .and_then(Json::as_f64)
+                .ok_or("noise: missing 'miss'")?,
+            conf_loss: noise
+                .get("conf_loss")
+                .and_then(Json::as_f64)
+                .ok_or("noise: missing 'conf_loss'")?,
+        },
+    })
+}
+
+/// Serialize a scenario to its versioned JSON document.
+pub fn to_json(spec: &ScenarioSpec) -> Json {
+    let streams = spec.streams.iter().map(|s| {
+        Json::obj(vec![
+            ("label", Json::str(&s.label)),
+            ("join_s", Json::num(s.join_s)),
+            ("phases", Json::arr(s.phases.iter().map(phase_to_json))),
+        ])
+    });
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA_TAG)),
+        ("version", Json::num(SCENARIO_VERSION as f64)),
+        ("name", Json::str(&spec.name)),
+        ("description", Json::str(&spec.description)),
+        ("seed", Json::num(spec.seed as f64)),
+        ("width", Json::num(spec.width as f64)),
+        ("height", Json::num(spec.height as f64)),
+        ("base_fps", Json::num(spec.base_fps)),
+        ("watts_budget", Json::num(spec.watts_budget)),
+        ("streams", Json::arr(streams)),
+    ])
+}
+
+/// Parse and validate a scenario from its JSON document.
+pub fn from_json(doc: &Json) -> Result<ScenarioSpec, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing 'schema' tag")?;
+    if schema != SCHEMA_TAG {
+        return Err(format!("wrong schema: {schema:?} (want {SCHEMA_TAG:?})"));
+    }
+    let version = doc
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or("missing 'version'")?;
+    if version != SCENARIO_VERSION as usize {
+        return Err(format!(
+            "scenario version {version} unsupported (this build reads \
+             version {SCENARIO_VERSION})"
+        ));
+    }
+    let str_field = |key: &str| {
+        doc.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing '{key}'"))
+    };
+    let mut streams = Vec::new();
+    for s in doc
+        .get("streams")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'streams'")?
+    {
+        let phases = s
+            .get("phases")
+            .and_then(Json::as_arr)
+            .ok_or("stream: missing 'phases'")?
+            .iter()
+            .map(phase_from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        streams.push(StreamSpec {
+            label: s
+                .get("label")
+                .and_then(Json::as_str)
+                .ok_or("stream: missing 'label'")?
+                .to_string(),
+            join_s: s
+                .get("join_s")
+                .and_then(Json::as_f64)
+                .ok_or("stream: missing 'join_s'")?,
+            phases,
+        });
+    }
+    let spec = ScenarioSpec {
+        name: str_field("name")?,
+        description: str_field("description")?,
+        seed: doc
+            .get("seed")
+            .and_then(Json::as_usize)
+            .ok_or("missing 'seed'")? as u64,
+        width: doc
+            .get("width")
+            .and_then(Json::as_usize)
+            .ok_or("missing 'width'")? as u32,
+        height: doc
+            .get("height")
+            .and_then(Json::as_usize)
+            .ok_or("missing 'height'")? as u32,
+        base_fps: doc
+            .get("base_fps")
+            .and_then(Json::as_f64)
+            .ok_or("missing 'base_fps'")?,
+        watts_budget: doc
+            .get("watts_budget")
+            .and_then(Json::as_f64)
+            .ok_or("missing 'watts_budget'")?,
+        streams,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Write a scenario to `path` as pretty JSON (parent dirs created).
+pub fn save(spec: &ScenarioSpec, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(spec).to_pretty())
+}
+
+/// Load and validate a scenario from `path`.
+pub fn load(path: &Path) -> Result<ScenarioSpec, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let doc =
+        Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScenarioSpec {
+        ScenarioSpec::new(
+            "store-unit",
+            "store round-trip scenario",
+            vec![
+                StreamSpec::new(
+                    "cam0",
+                    vec![
+                        PhaseSpec::new("day", 40),
+                        PhaseSpec::new("night", 50)
+                            .noise(NoiseProfile::NIGHT)
+                            .camera(CameraMotion::Walking { pan_speed: 12.0 })
+                            .fps_scale(0.6),
+                    ],
+                ),
+                StreamSpec::new(
+                    "cam1",
+                    vec![PhaseSpec::new("drive", 30)
+                        .camera(CameraMotion::Vehicle { flow_speed: 18.0 })],
+                )
+                .join_at(2.5),
+            ],
+        )
+        .seed(99)
+        .watts_budget(5.5)
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let s = sample();
+        let doc = to_json(&s);
+        assert_eq!(from_json(&doc).unwrap(), s);
+        let reparsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(from_json(&reparsed).unwrap(), s);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = sample();
+        let dir = std::env::temp_dir().join("tod_scenario_store_test");
+        let path = dir.join("scenario.json");
+        save(&s, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), s);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_schema_and_version_rejected() {
+        let doc = to_json(&sample());
+        let mut wrong_schema = doc.clone();
+        if let Json::Obj(m) = &mut wrong_schema {
+            m.insert("schema".into(), Json::str("not-a-scenario"));
+        }
+        assert!(from_json(&wrong_schema).unwrap_err().contains("schema"));
+        let mut wrong_version = doc;
+        if let Json::Obj(m) = &mut wrong_version {
+            m.insert("version".into(), Json::num(42.0));
+        }
+        assert!(from_json(&wrong_version).unwrap_err().contains("version 42"));
+    }
+
+    #[test]
+    fn invalid_payload_rejected_by_validation() {
+        let mut bad = sample();
+        bad.streams[0].phases[0].frames = 0;
+        assert!(from_json(&to_json(&bad)).is_err());
+        assert!(load(Path::new("/nonexistent/scenario.json")).is_err());
+    }
+}

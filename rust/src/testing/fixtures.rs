@@ -1,0 +1,207 @@
+//! Shared test fixtures: the sequence/oracle/policy builders the
+//! integration suites converged on, promoted out of per-file copies.
+//!
+//! Every suite used to re-declare the same helpers (a seeded oracle for
+//! a sequence, a small 960×540 synthetic world, random thresholds for
+//! property tests, a bit-identity comparator for [`RunResult`]s). They
+//! live here once so a change to the canonical test world — or to what
+//! "bit-identical" means — edits one place.
+
+use crate::coordinator::policy::Thresholds;
+use crate::coordinator::scheduler::{OracleBackend, RunResult};
+use crate::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use crate::sim::oracle::OracleDetector;
+use crate::testing::prop::Gen;
+
+/// The oracle backend seeded for a sequence — the one way every suite
+/// builds its detector.
+pub fn oracle_for(seq: &Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+/// Builder over [`SequenceSpec`] with the canonical small test world:
+/// 960×540 @ 30 FPS, density 6, `ref_height` 220, depth [1, 2], walk
+/// speed 1.5, static camera. Override what the test cares about.
+#[derive(Debug, Clone)]
+pub struct SeqBuilder {
+    spec: SequenceSpec,
+}
+
+impl SeqBuilder {
+    /// Canonical world named `{prefix}-{seed}`.
+    pub fn new(prefix: &str, seed: u64) -> Self {
+        SeqBuilder {
+            spec: SequenceSpec {
+                name: format!("{prefix}-{seed}"),
+                width: 960,
+                height: 540,
+                fps: 30.0,
+                frames: 120,
+                density: 6,
+                ref_height: 220.0,
+                depth_range: (1.0, 2.0),
+                walk_speed: 1.5,
+                camera: CameraMotion::Static,
+                seed,
+            },
+        }
+    }
+
+    pub fn frames(mut self, frames: u64) -> Self {
+        self.spec.frames = frames;
+        self
+    }
+
+    pub fn density(mut self, density: usize) -> Self {
+        self.spec.density = density;
+        self
+    }
+
+    pub fn ref_height(mut self, ref_height: f64) -> Self {
+        self.spec.ref_height = ref_height;
+        self
+    }
+
+    pub fn depth_range(mut self, near: f64, far: f64) -> Self {
+        self.spec.depth_range = (near, far);
+        self
+    }
+
+    pub fn walk_speed(mut self, walk_speed: f64) -> Self {
+        self.spec.walk_speed = walk_speed;
+        self
+    }
+
+    pub fn camera(mut self, camera: CameraMotion) -> Self {
+        self.spec.camera = camera;
+        self
+    }
+
+    pub fn geometry(mut self, width: u32, height: u32) -> Self {
+        self.spec.width = width;
+        self.spec.height = height;
+        self
+    }
+
+    pub fn build(self) -> Sequence {
+        Sequence::generate(self.spec)
+    }
+}
+
+/// The canonical small test stream (`SeqBuilder` defaults).
+pub fn synth_stream(prefix: &str, seed: u64, frames: u64) -> Sequence {
+    SeqBuilder::new(prefix, seed).frames(frames).build()
+}
+
+/// Small-object variant (`ref_height` 120): selection leans on the
+/// heavy networks, so power caps and capacity effects actually bind.
+pub fn small_object_stream(prefix: &str, seed: u64, frames: u64) -> Sequence {
+    SeqBuilder::new(prefix, seed)
+        .frames(frames)
+        .ref_height(120.0)
+        .build()
+}
+
+/// Random 800×600 world for property suites: 20–150 frames, density
+/// 1–12, static or walking camera.
+pub fn random_seq(g: &mut Gen) -> Sequence {
+    SeqBuilder::new("PROP", g.usize_in(0, 1_000_000) as u64)
+        .geometry(800, 600)
+        .frames(g.usize_in(20, 150) as u64)
+        .density(g.usize_in(1, 12))
+        .ref_height(g.f64_in(60.0, 420.0))
+        .depth_range(1.0, 2.4)
+        .walk_speed(g.f64_in(0.5, 3.0))
+        .camera(if g.bool() {
+            CameraMotion::Static
+        } else {
+            CameraMotion::Walking { pan_speed: g.f64_in(1.0, 25.0) }
+        })
+        .build()
+}
+
+/// Random strictly ascending three-rung thresholds for the full ladder.
+pub fn random_thresholds(g: &mut Gen) -> Thresholds {
+    let h1 = g.f64_in(1e-4, 0.01);
+    let h2 = h1 + g.f64_in(1e-4, 0.05);
+    let h3 = h2 + g.f64_in(1e-4, 0.1);
+    Thresholds::new(vec![h1, h2, h3]).expect("generated ascending")
+}
+
+/// Bit-identity over everything a scheduled run produces (series,
+/// schedule and summary counters — the equivalence the session/
+/// scheduler golden tests pin).
+pub fn results_identical(a: &RunResult, b: &RunResult) -> bool {
+    a.ap == b.ap
+        && a.n_frames == b.n_frames
+        && a.n_inferred == b.n_inferred
+        && a.n_dropped == b.n_dropped
+        && a.deploy_counts == b.deploy_counts
+        && a.switches == b.switches
+        && a.mbbs_series == b.mbbs_series
+        && a.dnn_series == b.dnn_series
+        && a.trace.busy == b.trace.busy
+        && a.trace.duration == b.trace.duration
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::MbbsPolicy;
+    use crate::coordinator::scheduler::run_realtime;
+    use crate::sim::latency::LatencyModel;
+    use crate::testing::prop::PropConfig;
+
+    #[test]
+    fn builder_defaults_are_the_canonical_world() {
+        let seq = synth_stream("FIX", 7, 30);
+        assert_eq!(seq.spec.name, "FIX-7");
+        assert_eq!((seq.spec.width, seq.spec.height), (960, 540));
+        assert_eq!(seq.spec.fps, 30.0);
+        assert_eq!(seq.n_frames(), 30);
+        // deterministic per seed, distinct across seeds
+        let again = synth_stream("FIX", 7, 30);
+        assert_eq!(seq.all_entries(), again.all_entries());
+        let other = synth_stream("FIX", 8, 30);
+        assert_ne!(seq.all_entries(), other.all_entries());
+    }
+
+    #[test]
+    fn small_object_stream_reads_small() {
+        let small = small_object_stream("FIX", 7, 60);
+        let big = synth_stream("FIX", 7, 60);
+        let med = |s: &Sequence| {
+            crate::util::stats::median(&s.mbbs_series())
+        };
+        assert!(med(&small) < med(&big));
+    }
+
+    #[test]
+    fn random_thresholds_are_always_valid() {
+        PropConfig::with_cases(64).run("thresholds ascend", |g| {
+            let t = random_thresholds(g);
+            t.values().windows(2).all(|w| w[0] < w[1]) && t.n_dnn() == 4
+        });
+    }
+
+    #[test]
+    fn results_identical_detects_equality_and_difference() {
+        let seq = synth_stream("FIX", 9, 60);
+        let run = || {
+            let mut det = oracle_for(&seq);
+            let mut pol = MbbsPolicy::tod_default();
+            let mut lat = LatencyModel::deterministic();
+            run_realtime(&seq, &mut pol, &mut det, &mut lat, 30.0)
+        };
+        let a = run();
+        let b = run();
+        assert!(results_identical(&a, &b));
+        let mut c = run();
+        c.switches += 1;
+        assert!(!results_identical(&a, &c));
+    }
+}

@@ -1,5 +1,7 @@
-//! Property-testing mini-harness (proptest stand-in; DESIGN.md §3).
+//! Property-testing mini-harness (proptest stand-in; DESIGN.md §3) and
+//! the shared integration-test fixtures.
 
+pub mod fixtures;
 pub mod prop;
 
 pub use prop::{Gen, PropConfig};

@@ -63,4 +63,34 @@ mod tests {
     fn zero_fps_rejected() {
         FrameClock::new(0.0);
     }
+
+    #[test]
+    #[should_panic(expected = "fps must be positive")]
+    fn negative_fps_rejected() {
+        FrameClock::new(-30.0);
+    }
+
+    #[test]
+    fn exact_boundary_maps_to_the_arriving_frame() {
+        // power-of-two fps: arrivals are exact binary floats, so the
+        // boundary behaviour is deterministic (no epsilon needed).
+        // frame_at(t) is "latest frame that HAS arrived by t", and a
+        // frame arriving exactly at t counts as arrived.
+        let c = FrameClock::new(32.0);
+        for f in 1..200u64 {
+            let t = c.arrival(f);
+            assert_eq!(c.frame_at(t), f, "boundary at frame {f}");
+            // just before the boundary the previous frame is current
+            assert_eq!(c.frame_at(t - 1e-9), f - 1);
+        }
+    }
+
+    #[test]
+    fn period_times_fps_is_one_frame() {
+        for fps in [14.0, 24.0, 30.0, 32.0, 60.0] {
+            let c = FrameClock::new(fps);
+            assert!((c.arrival(1) - c.period()).abs() < 1e-12);
+            assert_eq!(c.fps(), fps);
+        }
+    }
 }

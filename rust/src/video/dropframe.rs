@@ -281,6 +281,84 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "fps must be positive")]
+    fn zero_fps_rejected() {
+        // the zero-FPS guard lives in FrameClock; the accounting must
+        // refuse to construct rather than divide by zero later
+        DropFrameAccounting::new(0.0);
+    }
+
+    #[test]
+    fn exact_deadline_boundary_is_deterministic() {
+        // power-of-two fps (32) makes arrivals exact binary floats.
+        // An inference ending exactly ON frame 2's arrival (2 periods)
+        // supersedes frame 2 and keeps frame 3 — the paper's
+        // `int(acc*FPS)+1` recurrence, with no epsilon ambiguity.
+        let fps = 32.0;
+        let period = 1.0 / fps;
+        let mut acc = DropFrameAccounting::new(fps);
+        assert_eq!(acc.on_frame(1, || 2.0 * period).0, FrameOutcome::Inferred);
+        assert_eq!(acc.next_eligible(), 3);
+        assert_eq!(
+            acc.on_frame(2, || unreachable!()).0,
+            FrameOutcome::Dropped
+        );
+        assert_eq!(acc.on_frame(3, || period).0, FrameOutcome::Inferred);
+
+        // ending strictly INSIDE frame 2's capture window keeps frame 2
+        let mut acc = DropFrameAccounting::new(fps);
+        assert_eq!(
+            acc.on_frame(1, || 1.5 * period).0,
+            FrameOutcome::Inferred
+        );
+        assert_eq!(acc.next_eligible(), 2);
+        assert_eq!(acc.on_frame(2, || period).0, FrameOutcome::Inferred);
+    }
+
+    #[test]
+    fn accounting_sums_to_frames_issued() {
+        // inferred + dropped == frames presented, for constant, mixed
+        // and degenerate (zero-latency) schedules — the conservation
+        // every RunResult relies on
+        let schedules: [fn(u64) -> f64; 4] = [
+            |_| 0.0,
+            |_| 0.027,
+            |_| 0.153,
+            |f| if f % 7 == 0 { 0.2 } else { 0.01 },
+        ];
+        for (si, latency_of) in schedules.iter().enumerate() {
+            for n in [1u64, 2, 9, 250] {
+                let mut acc = DropFrameAccounting::new(30.0);
+                for f in 1..=n {
+                    acc.on_frame(f, || latency_of(f));
+                }
+                assert_eq!(
+                    acc.n_inferred() + acc.n_dropped(),
+                    n,
+                    "schedule {si}, {n} frames"
+                );
+                assert!(acc.n_inferred() >= 1, "schedule {si}");
+                assert!((0.0..=1.0).contains(&acc.drop_rate()));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_latency_never_drops_and_tracks_stream_time() {
+        let mut acc = DropFrameAccounting::new(30.0);
+        for f in 1..=90 {
+            let (o, iv) = acc.on_frame(f, || 0.0);
+            assert_eq!(o, FrameOutcome::Inferred);
+            let (s, e) = iv.unwrap();
+            assert_eq!(s, e, "zero-latency interval is a point");
+        }
+        assert_eq!(acc.n_dropped(), 0);
+        assert_eq!(acc.busy_time(), 0.0);
+        // the clamp keeps virtual time pinned to the stream clock
+        assert!((acc.now() - 90.0 / 30.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn mixed_latency_recovers() {
         // a slow inference followed by fast ones: drops happen only in
         // the slow shadow

@@ -23,7 +23,7 @@ use tod::coordinator::scheduler::{
 };
 use tod::coordinator::session::StreamSession;
 use tod::dataset::mot::GtEntry;
-use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::dataset::synth::Sequence;
 use tod::detection::{Detection, PERSON_CLASS};
 use tod::geometry::BBox;
 use tod::runtime::batch::{AdmissionPolicy, BatchConfig};
@@ -32,7 +32,7 @@ use tod::runtime::server::{
     ServeResult,
 };
 use tod::sim::latency::{ContentionModel, LatencyModel};
-use tod::sim::oracle::OracleDetector;
+use tod::testing::fixtures::{oracle_for as oracle, synth_stream};
 use tod::testing::prop::PropConfig;
 use tod::DnnKind;
 
@@ -285,27 +285,7 @@ impl Detector for DeadEngine {
 }
 
 fn small_seq(seed: u64, frames: u64) -> Sequence {
-    Sequence::generate(SequenceSpec {
-        name: format!("BATCH-{seed}"),
-        width: 960,
-        height: 540,
-        fps: 30.0,
-        frames,
-        density: 6,
-        ref_height: 220.0,
-        depth_range: (1.0, 2.0),
-        walk_speed: 1.5,
-        camera: CameraMotion::Static,
-        seed,
-    })
-}
-
-fn oracle(seq: &Sequence) -> OracleBackend {
-    OracleBackend(OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    ))
+    synth_stream("BATCH", seed, frames)
 }
 
 #[test]

@@ -3,11 +3,11 @@
 
 use tod::app::Campaign;
 use tod::coordinator::policy::{MbbsPolicy, Thresholds};
-use tod::coordinator::scheduler::{run_realtime, OracleBackend};
+use tod::coordinator::scheduler::run_realtime;
 use tod::dataset::catalog::{generate, SequenceId};
 use tod::sim::latency::LatencyModel;
-use tod::sim::oracle::OracleDetector;
 use tod::telemetry::tegrastats::TegrastatsSim;
+use tod::testing::fixtures::oracle_for;
 use tod::DnnKind;
 
 #[test]
@@ -169,17 +169,10 @@ fn tod_on_mot05_mostly_tiny288() {
 fn custom_thresholds_change_deployment() {
     // pushing h3 up starves tiny-288 (sanity of the knob the search turns)
     let seq = generate(SequenceId::Mot05);
-    let mk = || {
-        OracleBackend(OracleDetector::new(
-            seq.spec.seed,
-            seq.spec.width as f64,
-            seq.spec.height as f64,
-        ))
-    };
     let run = |th: Thresholds| {
         let mut pol = MbbsPolicy::new(th);
         let mut lat = LatencyModel::deterministic();
-        run_realtime(&seq, &mut pol, &mut mk(), &mut lat, 14.0)
+        run_realtime(&seq, &mut pol, &mut oracle_for(&seq), &mut lat, 14.0)
             .deploy_freq()
     };
     let low = run(Thresholds::new(vec![0.007, 0.03, 0.04]).unwrap());
@@ -191,11 +184,7 @@ fn custom_thresholds_change_deployment() {
 fn latency_jitter_does_not_flip_conclusions() {
     // run TOD with jittered latencies; the MOT17-05 structure holds
     let seq = generate(SequenceId::Mot05);
-    let mut det = OracleBackend(OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    ));
+    let mut det = oracle_for(&seq);
     let mut pol = MbbsPolicy::tod_default();
     let mut lat = LatencyModel::jetson_nano(123);
     let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, 14.0);

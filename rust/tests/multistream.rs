@@ -6,62 +6,16 @@
 use tod::coordinator::multistream::{
     DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
 };
-use tod::coordinator::policy::{MbbsPolicy, Thresholds};
-use tod::coordinator::scheduler::{run_realtime, OracleBackend, RunResult};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::coordinator::scheduler::run_realtime;
 use tod::coordinator::session::{SessionEvent, StreamSession};
 use tod::dataset::catalog::{generate, SequenceId};
-use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::dataset::synth::Sequence;
 use tod::sim::latency::{ContentionModel, LatencyModel};
-use tod::sim::oracle::OracleDetector;
-use tod::testing::prop::{Gen, PropConfig};
-
-fn random_seq(g: &mut Gen) -> Sequence {
-    Sequence::generate(SequenceSpec {
-        name: "PROP-MS".into(),
-        width: 800,
-        height: 600,
-        fps: 30.0,
-        frames: g.usize_in(20, 150) as u64,
-        density: g.usize_in(1, 12),
-        ref_height: g.f64_in(60.0, 420.0),
-        depth_range: (1.0, 2.4),
-        walk_speed: g.f64_in(0.5, 3.0),
-        camera: if g.bool() {
-            CameraMotion::Static
-        } else {
-            CameraMotion::Walking { pan_speed: g.f64_in(1.0, 25.0) }
-        },
-        seed: g.usize_in(0, 1_000_000) as u64,
-    })
-}
-
-fn random_thresholds(g: &mut Gen) -> Thresholds {
-    let h1 = g.f64_in(1e-4, 0.01);
-    let h2 = h1 + g.f64_in(1e-4, 0.05);
-    let h3 = h2 + g.f64_in(1e-4, 0.1);
-    Thresholds::new(vec![h1, h2, h3]).expect("generated ascending")
-}
-
-fn oracle(seq: &Sequence) -> OracleBackend {
-    OracleBackend(OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    ))
-}
-
-fn results_identical(a: &RunResult, b: &RunResult) -> bool {
-    a.ap == b.ap
-        && a.n_frames == b.n_frames
-        && a.n_inferred == b.n_inferred
-        && a.n_dropped == b.n_dropped
-        && a.deploy_counts == b.deploy_counts
-        && a.switches == b.switches
-        && a.mbbs_series == b.mbbs_series
-        && a.dnn_series == b.dnn_series
-        && a.trace.busy == b.trace.busy
-        && a.trace.duration == b.trace.duration
-}
+use tod::testing::fixtures::{
+    oracle_for as oracle, random_seq, random_thresholds, results_identical,
+};
+use tod::testing::prop::PropConfig;
 
 #[test]
 fn session_stepwise_matches_legacy_loop() {

@@ -6,41 +6,21 @@
 use tod::app::{Campaign, DEFAULT_WATTS_BUDGET};
 use tod::coordinator::multistream::{DispatchPolicy, MultiStreamScheduler};
 use tod::coordinator::policy::MbbsPolicy;
-use tod::coordinator::scheduler::{run_realtime, OracleBackend};
+use tod::coordinator::scheduler::run_realtime;
 use tod::coordinator::session::{SessionEvent, StreamSession};
 use tod::dataset::catalog::SequenceId;
-use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
+use tod::dataset::synth::Sequence;
 use tod::power::{
     BudgetedPolicy, EnergyMeter, PowerBudget, RateCap, SharedBudget,
 };
 use tod::sim::latency::{ContentionModel, LatencyModel};
-use tod::sim::oracle::OracleDetector;
+use tod::testing::fixtures::{oracle_for, small_object_stream, SeqBuilder};
 use tod::DnnKind;
-
-fn oracle_for(seq: &Sequence) -> OracleBackend {
-    OracleBackend(OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    ))
-}
 
 /// Small-object synthetic stream: TOD leans on the heavy networks, so
 /// a watts budget actually binds.
 fn small_object_seq(seed: u64, frames: u64) -> Sequence {
-    Sequence::generate(SequenceSpec {
-        name: format!("PWR-{seed}"),
-        width: 960,
-        height: 540,
-        fps: 30.0,
-        frames,
-        density: 6,
-        ref_height: 120.0,
-        depth_range: (1.0, 2.0),
-        walk_speed: 1.5,
-        camera: CameraMotion::Static,
-        seed,
-    })
+    small_object_stream("PWR", seed, frames)
 }
 
 /// Golden equivalence: a [`BudgetedPolicy`] with no caps must be
@@ -271,19 +251,11 @@ fn rate_cap_trades_drops_for_power() {
     // large close-up objects: TOD stays on tiny-288, which meets 30
     // FPS at nominal clocks (no drops, 81% duty) but not at 0.7x —
     // so the rate cap visibly trades drops/busy-time for watts
-    let seq = Sequence::generate(SequenceSpec {
-        name: "PWR-RATE".into(),
-        width: 960,
-        height: 540,
-        fps: 30.0,
-        frames: 300,
-        density: 6,
-        ref_height: 500.0,
-        depth_range: (1.0, 1.6),
-        walk_speed: 1.5,
-        camera: CameraMotion::Static,
-        seed: 7,
-    });
+    let seq = SeqBuilder::new("PWR-RATE", 7)
+        .frames(300)
+        .ref_height(500.0)
+        .depth_range(1.0, 1.6)
+        .build();
     let fps = 30.0;
     let mut lat = LatencyModel::deterministic();
     let mut pol = MbbsPolicy::tod_default();

@@ -5,23 +5,14 @@
 use tod::app::Campaign;
 use tod::coordinator::policy::{MbbsPolicy, Thresholds};
 use tod::coordinator::projected::ProjectedAccuracyPolicy;
-use tod::coordinator::scheduler::{run_realtime, OracleBackend};
+use tod::coordinator::scheduler::run_realtime;
 use tod::dataset::catalog::{generate, SequenceId};
-use tod::dataset::synth::Sequence;
 use tod::features::FrameFeatures;
 use tod::predictor::store;
 use tod::predictor::{calibrate, CalibrationConfig, CalibrationTable};
 use tod::sim::latency::LatencyModel;
-use tod::sim::oracle::OracleDetector;
+use tod::testing::fixtures::oracle_for;
 use tod::DnnKind;
-
-fn oracle_for(seq: &Sequence) -> OracleBackend {
-    OracleBackend(OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    ))
-}
 
 /// Golden equivalence: `ProjectedAccuracyPolicy` degenerated to
 /// size-only selection (one speed bin, ladder-shaped AP surface) must

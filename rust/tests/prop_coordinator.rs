@@ -1,24 +1,17 @@
 //! Property tests on coordinator invariants (proptest-style via
 //! `tod::testing::prop`; see DESIGN.md §3 and §7).
 
-use tod::coordinator::policy::{MbbsPolicy, SelectionPolicy, Thresholds};
-use tod::coordinator::scheduler::{run_realtime, Detector, OracleBackend};
+use tod::coordinator::policy::MbbsPolicy;
+use tod::coordinator::scheduler::{run_realtime, Detector};
 use tod::dataset::synth::{CameraMotion, Sequence, SequenceSpec};
 use tod::detection::{mbbs, nms, Detection, PERSON_CLASS};
 use tod::eval::ap::{average_precision, ApMethod};
 use tod::geometry::BBox;
 use tod::sim::latency::LatencyModel;
-use tod::sim::oracle::OracleDetector;
-use tod::testing::prop::{Gen, PropConfig};
+use tod::testing::fixtures::{oracle_for, random_thresholds};
+use tod::testing::prop::PropConfig;
 use tod::video::dropframe::DropFrameAccounting;
 use tod::DnnKind;
-
-fn random_thresholds(g: &mut Gen) -> Thresholds {
-    let h1 = g.f64_in(1e-4, 0.01);
-    let h2 = h1 + g.f64_in(1e-4, 0.05);
-    let h3 = h2 + g.f64_in(1e-4, 0.1);
-    Thresholds::new(vec![h1, h2, h3]).expect("generated ascending")
-}
 
 #[test]
 fn policy_monotone_in_mbbs() {
@@ -188,11 +181,7 @@ fn scheduler_deploy_counts_match_inferred() {
             },
             seed: g.usize_in(0, 1_000_000) as u64,
         });
-        let mut det = OracleBackend(OracleDetector::new(
-            seq.spec.seed,
-            640.0,
-            480.0,
-        ));
+        let mut det = oracle_for(&seq);
         let mut pol = MbbsPolicy::new(random_thresholds(g));
         let mut lat = LatencyModel::deterministic();
         let fps = g.f64_in(10.0, 40.0);
@@ -262,11 +251,7 @@ fn switch_count_bounded_by_inferred() {
             camera: CameraMotion::Walking { pan_speed: g.f64_in(0.0, 25.0) },
             seed: g.usize_in(0, 99999) as u64,
         });
-        let mut det = OracleBackend(OracleDetector::new(
-            seq.spec.seed,
-            640.0,
-            480.0,
-        ));
+        let mut det = oracle_for(&seq);
         let mut pol = MbbsPolicy::new(random_thresholds(g));
         let mut lat = LatencyModel::deterministic();
         let r = run_realtime(&seq, &mut pol, &mut det, &mut lat, 30.0);

@@ -1,0 +1,187 @@
+//! Property tests for the stream-feature extractor
+//! (`features/extract.rs`): the invariants selection correctness rests
+//! on, over randomized detection streams (`tod::testing::prop` style).
+
+use tod::detection::{Detection, PERSON_CLASS};
+use tod::features::{FeatureConfig, FeatureExtractor, FrameFeatures};
+use tod::geometry::BBox;
+use tod::testing::prop::{Gen, PropConfig};
+
+const W: f64 = 1280.0;
+const H: f64 = 720.0;
+
+fn det(x: f64, y: f64, w: f64, h: f64) -> Detection {
+    Detection::new(BBox::new(x, y, w, h), 0.9, PERSON_CLASS)
+}
+
+fn random_dets(g: &mut Gen, n: usize) -> Vec<Detection> {
+    (0..n)
+        .map(|_| {
+            det(
+                g.f64_in(0.0, W - 80.0),
+                g.f64_in(0.0, H - 80.0),
+                g.f64_in(1.0, 220.0),
+                g.f64_in(1.0, 320.0),
+            )
+        })
+        .collect()
+}
+
+/// Fresh extractor with no smoothing, so the property reads the raw
+/// per-update speed estimate.
+fn raw_extractor() -> FeatureExtractor {
+    FeatureExtractor::with_config(
+        FeatureConfig { ewma_alpha: 1.0, ..FeatureConfig::default() },
+        W,
+        H,
+    )
+}
+
+#[test]
+fn speed_is_never_negative_and_always_finite() {
+    PropConfig::default().run("speed >= 0 and finite", |g| {
+        let mut fx = raw_extractor();
+        let mut frame = 0u64;
+        for _ in 0..g.usize_in(1, 12) {
+            frame += g.usize_in(1, 5) as u64;
+            let dets = random_dets(g, g.usize_in(0, 10));
+            fx.on_detections(frame, &dets);
+            let f = fx.features(&dets);
+            if !(f.speed >= 0.0 && f.speed.is_finite()) {
+                return false;
+            }
+            if !(f.mbbs >= 0.0 && f.density >= 0.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn frame_gap_normalisation_is_invariant_to_schedule_sparsity() {
+    // a rigid translation at constant px/frame must read the same
+    // per-frame speed whether snapshots arrive every frame or every
+    // k-th frame — the property that makes speed comparable between
+    // light-DNN (dense) and heavy-DNN (sparse) schedules.
+    //
+    // The exact-equality form of the property holds only where the
+    // matcher is guaranteed to pair every box with its own successor:
+    // boxes must be large enough (and spaced widely enough) that the
+    // biggest per-snapshot displacement (8 px/frame x gap 6 = 48 px)
+    // stays inside the centroid gate and below the inter-box spacing —
+    // hence the structured grid generator, not `random_dets`.
+    PropConfig::with_cases(64).run("gap-normalised speed", |g| {
+        let vx = g.f64_in(0.5, 8.0);
+        let vy = g.f64_in(-3.0, 3.0);
+        let gap = g.usize_in(1, 6) as u64;
+        let n = g.usize_in(1, 5);
+        let base: Vec<Detection> = (0..n)
+            .map(|i| {
+                det(
+                    250.0 * i as f64 + g.f64_in(0.0, 30.0),
+                    g.f64_in(0.0, H - 200.0),
+                    g.f64_in(60.0, 120.0),
+                    g.f64_in(80.0, 160.0),
+                )
+            })
+            .collect();
+        let diag = (W * W + H * H).sqrt();
+
+        let speed_at_gap = |gap: u64| {
+            let mut fx = raw_extractor();
+            for k in 0..6u64 {
+                let f = 1 + k * gap;
+                let t = (f - 1) as f64;
+                let moved: Vec<Detection> = base
+                    .iter()
+                    .map(|d| {
+                        det(
+                            d.bbox.x + vx * t,
+                            d.bbox.y + vy * t,
+                            d.bbox.w,
+                            d.bbox.h,
+                        )
+                    })
+                    .collect();
+                fx.on_detections(f, &moved);
+            }
+            fx.speed()
+        };
+
+        let dense = speed_at_gap(1);
+        let sparse = speed_at_gap(gap);
+        let expect = (vx * vx + vy * vy).sqrt() / diag;
+        (dense - expect).abs() < 1e-9 && (sparse - expect).abs() < 1e-9
+    });
+}
+
+#[test]
+fn mbbs_is_monotone_under_uniform_box_scaling() {
+    // scaling every box by s >= 1 must not shrink the MBBS channel —
+    // the monotonicity Algorithm 1's thresholds assume
+    PropConfig::default().run("mbbs monotone in scale", |g| {
+        let dets = random_dets(g, g.usize_in(1, 15));
+        let s = g.f64_in(1.0, 3.0);
+        let scaled: Vec<Detection> = dets
+            .iter()
+            .map(|d| det(d.bbox.x, d.bbox.y, d.bbox.w * s, d.bbox.h * s))
+            .collect();
+        let fx = FeatureExtractor::new(W, H);
+        let base = fx.features(&dets);
+        let grown = fx.features(&scaled);
+        // areas scale by s^2 exactly, so the median does too
+        (grown.mbbs - base.mbbs * s * s).abs() < 1e-12
+            && grown.mbbs >= base.mbbs - 1e-12
+            && (grown.density - base.density * s * s).abs() < 1e-9
+    });
+}
+
+#[test]
+fn empty_and_single_frame_extraction_is_defined() {
+    PropConfig::with_cases(64).run("empty/single defined", |g| {
+        // no snapshots at all: every channel is at its neutral value
+        let fx = FeatureExtractor::new(W, H);
+        let none = fx.features(&[]);
+        if none
+            != (FrameFeatures { mbbs: 0.0, count: 0, density: 0.0, speed: 0.0 })
+        {
+            return false;
+        }
+
+        // exactly one snapshot: features are defined, speed stays 0
+        // (two distinct snapshots are needed for motion)
+        let mut fx = raw_extractor();
+        let dets = random_dets(g, g.usize_in(0, 8));
+        fx.on_detections(1, &dets);
+        let f = fx.features(&dets);
+        f.speed == 0.0
+            && f.count == dets.len()
+            && f.mbbs.is_finite()
+            && f.density.is_finite()
+    });
+}
+
+#[test]
+fn speed_resets_with_the_stream() {
+    PropConfig::with_cases(32).run("reset clears speed", |g| {
+        let mut fx = raw_extractor();
+        // one large box, shifted well inside the IoU gate, so the
+        // match (and hence a non-zero speed) is guaranteed
+        let a = vec![det(
+            g.f64_in(50.0, W - 200.0),
+            g.f64_in(50.0, H - 200.0),
+            g.f64_in(60.0, 120.0),
+            g.f64_in(80.0, 160.0),
+        )];
+        fx.on_detections(1, &a);
+        let shifted: Vec<Detection> = a
+            .iter()
+            .map(|d| det(d.bbox.x + 6.0, d.bbox.y, d.bbox.w, d.bbox.h))
+            .collect();
+        fx.on_detections(2, &shifted);
+        let moving = fx.speed() > 0.0;
+        fx.reset();
+        moving && fx.speed() == 0.0
+    });
+}

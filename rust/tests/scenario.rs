@@ -1,0 +1,134 @@
+//! Scenario-matrix conformance suite (ISSUE 5 acceptance):
+//!
+//! * the full 8-scenario matrix replays bit-identically against the
+//!   goldens under `tests/goldens/` (bootstrapping them on a fresh
+//!   checkout — commit the files to pin them; see the README there);
+//! * the differential layer holds on every scenario: projected (and
+//!   watts-budgeted) adaptive selection never loses to the best
+//!   (budget-feasible) fixed DNN, with the margins recorded per
+//!   scenario in the golden;
+//! * every recorded run document round-trips losslessly through the
+//!   versioned `tod-scenario-run` schema;
+//! * the harness is a conservative extension: a single-stream, single-
+//!   phase, clean scenario reproduces `run_realtime` bit for bit.
+
+use std::path::PathBuf;
+
+use tod::scenario::conformance::{
+    self, golden_path, CheckVerdict, MATRIX_FPS,
+};
+use tod::scenario::matrix::ScenarioId;
+use tod::scenario::{record, scenario_spec};
+use tod::util::json::Json;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens")
+}
+
+/// The acceptance run: record-or-verify the whole matrix, then read
+/// the (now byte-verified) goldens back for the differential margins
+/// and the schema round-trip. One test so the matrix replays once.
+#[test]
+fn matrix_conformance_differential_and_schema() {
+    let dir = goldens_dir();
+    let bootstrapped =
+        conformance::bootstrap_goldens_if_missing(&dir).expect("record");
+    if bootstrapped {
+        eprintln!(
+            "note: no goldens were committed under {} — recorded them; \
+             the following check independently re-runs the matrix and \
+             verifies byte-identical replay",
+            dir.display()
+        );
+    }
+
+    // byte-exact conformance: re-runs every scenario x config from its
+    // seed and compares against the files on disk
+    let results = conformance::check_goldens(&dir).expect("check");
+    assert_eq!(results.len(), ScenarioId::ALL.len());
+    for (name, verdict) in &results {
+        match verdict {
+            CheckVerdict::Match => {}
+            CheckVerdict::Missing => {
+                panic!("{name}: golden missing (run `tod scenario record`)")
+            }
+            CheckVerdict::Mismatch { line, golden, observed } => panic!(
+                "{name}: replay diverged from the golden at line {line}\n  \
+                 golden:   {golden}\n  observed: {observed}"
+            ),
+        }
+    }
+
+    // the goldens now provably equal current behaviour: read the
+    // differential margins and the run documents back from disk
+    for id in ScenarioId::ALL {
+        let path = golden_path(&dir, id.name());
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let doc = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(conformance::SCHEMA_TAG),
+            "{id}"
+        );
+
+        let d = doc.get("differential").expect("differential section");
+        let margin = |key: &str| {
+            d.get(key)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("{id}: missing {key}"))
+        };
+        // ISSUE 5 acceptance: adaptive selection must not lose to the
+        // best fixed DNN on ANY scenario of the matrix (budgeted runs
+        // compare against the best budget-feasible fixed DNN)
+        assert!(
+            margin("projected_margin") >= -1e-9,
+            "{id}: projected lost to {} by {}",
+            d.get("best_fixed").and_then(Json::as_str).unwrap_or("?"),
+            margin("projected_margin")
+        );
+        assert!(
+            margin("budgeted_margin") >= -1e-9,
+            "{id}: budgeted lost to {} by {}",
+            d.get("best_feasible_fixed")
+                .and_then(Json::as_str)
+                .unwrap_or("?"),
+            margin("budgeted_margin")
+        );
+
+        // every embedded run document round-trips losslessly through
+        // the versioned schema (golden-stability satellite)
+        let runs = doc.get("runs").and_then(Json::as_arr).expect("runs");
+        assert_eq!(runs.len(), 3 + tod::DnnKind::COUNT, "{id}");
+        for run in runs {
+            let parsed = record::from_json(run)
+                .unwrap_or_else(|e| panic!("{id}: bad run record: {e}"));
+            assert_eq!(
+                record::to_json(&parsed),
+                *run,
+                "{id}: run record round-trip lost information"
+            );
+            assert_eq!(parsed.scenario, id.name());
+            // conservation inside the canonical record
+            let a = &parsed.aggregate;
+            assert_eq!(a.inferred + a.dropped, a.frames, "{id}");
+        }
+    }
+}
+
+/// Determinism without any files: replaying one scenario twice from
+/// its seed yields byte-identical canonical records.
+#[test]
+fn same_seed_reproduces_the_record_byte_for_byte() {
+    use tod::scenario::{run_scenario, HarnessConfig, RunRecord};
+    let spec = scenario_spec(ScenarioId::CameraHandoff);
+    assert_eq!(spec.base_fps, MATRIX_FPS);
+    let streams = spec.compile().expect("compile");
+    let text_of = || {
+        let run = run_scenario(&spec.name, &streams, &HarnessConfig::tod())
+            .expect("run");
+        RunRecord::from_run(&run, spec.seed).canonical_text()
+    };
+    assert_eq!(text_of(), text_of());
+}
