@@ -1,0 +1,270 @@
+//! Dispatch-order bookkeeping for the multi-stream scheduler.
+//!
+//! [`super::multistream::MultiStreamScheduler::run`] used to rebuild a
+//! `Vec` of `(idx, ready, deadline)` candidates from scratch every
+//! dispatch epoch — an allocation plus two O(N) scans per inference,
+//! even though only the stream that was just stepped can have changed.
+//! [`DispatchQueue`] keeps that information incrementally:
+//!
+//! * earliest-deadline-first selection through a lazily-invalidated
+//!   binary min-heap (per-stream version stamps; stale entries are
+//!   skipped on pop),
+//! * round-robin selection through an ordered set of live stream
+//!   indices,
+//! * contention occupancy by an exact allocation-free scan. The scan is
+//!   deliberate: a chosen stream can run out of frames while its doomed
+//!   frames drain, without dispatching, so the occupancy threshold is
+//!   *not* monotone across epochs and a drained-counter shortcut would
+//!   over-count.
+//!
+//! Selection semantics are pinned to the naive per-epoch scan by
+//! `queue_matches_naive_scan_model` below, and end to end by the
+//! scheduler's bit-identity tests.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// `f64` heap key under the IEEE total order (NaN-safe, `Ord`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct F64Ord(f64);
+
+impl Eq for F64Ord {}
+
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Incremental candidate set for N streams sharing one accelerator.
+///
+/// Each stream is either *live* — it has a next inferable frame, with a
+/// `(ready, deadline)` pair — or absent. [`update`](Self::update) after
+/// every step of a stream; query via [`peek_edf`](Self::peek_edf),
+/// [`next_round_robin`](Self::next_round_robin) and
+/// [`occupancy`](Self::occupancy).
+#[derive(Debug)]
+pub struct DispatchQueue {
+    /// Live candidate per stream: `(ready, deadline)` in stream seconds.
+    state: Vec<Option<(f64, f64)>>,
+    /// Bumped on every update; heap entries carrying an older stamp are
+    /// stale and skipped on pop.
+    version: Vec<u64>,
+    /// Min-heap on `(deadline, idx, version)`.
+    edf: BinaryHeap<Reverse<(F64Ord, usize, u64)>>,
+    /// Live stream indices in ascending order (round-robin order).
+    live: BTreeSet<usize>,
+}
+
+impl DispatchQueue {
+    pub fn new(n_streams: usize) -> Self {
+        DispatchQueue {
+            state: vec![None; n_streams],
+            version: vec![0; n_streams],
+            edf: BinaryHeap::with_capacity(n_streams + 1),
+            live: BTreeSet::new(),
+        }
+    }
+
+    /// Number of live candidates.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Record stream `idx`'s next dispatch candidate (`None` once
+    /// nothing inferable remains). Must be called after every sequence
+    /// of steps applied to the stream.
+    pub fn update(&mut self, idx: usize, cand: Option<(f64, f64)>) {
+        self.state[idx] = cand;
+        self.version[idx] = self.version[idx].wrapping_add(1);
+        match cand {
+            Some((_, deadline)) => {
+                self.live.insert(idx);
+                self.edf.push(Reverse((
+                    F64Ord(deadline),
+                    idx,
+                    self.version[idx],
+                )));
+            }
+            None => {
+                self.live.remove(&idx);
+            }
+        }
+    }
+
+    /// The live candidate whose deadline is earliest, ties broken by
+    /// lowest stream index — `(idx, ready, deadline)`. Pops stale heap
+    /// entries lazily; amortised O(log N).
+    pub fn peek_edf(&mut self) -> Option<(usize, f64, f64)> {
+        while let Some(&Reverse((F64Ord(deadline), idx, ver))) =
+            self.edf.peek()
+        {
+            if ver != self.version[idx] {
+                self.edf.pop();
+                continue;
+            }
+            // a current-version entry implies a live state
+            let ready = match self.state[idx] {
+                Some((r, _)) => r,
+                None => {
+                    self.edf.pop();
+                    continue;
+                }
+            };
+            return Some((idx, ready, deadline));
+        }
+        None
+    }
+
+    /// The first live candidate with index >= `cursor`, wrapping to the
+    /// lowest live index — `(idx, ready, deadline)`.
+    pub fn next_round_robin(
+        &self,
+        cursor: usize,
+    ) -> Option<(usize, f64, f64)> {
+        let idx = self
+            .live
+            .range(cursor..)
+            .next()
+            .or_else(|| self.live.iter().next())
+            .copied()?;
+        let (ready, deadline) = self.state[idx]?;
+        Some((idx, ready, deadline))
+    }
+
+    /// Number of live candidates whose pending frame is already waiting
+    /// when an inference starts at `start_est` (the contention
+    /// occupancy). Exact and allocation-free.
+    pub fn occupancy(&self, start_est: f64) -> usize {
+        self.live
+            .iter()
+            .filter(|&&i| {
+                self.state[i]
+                    .map(|(r, _)| r <= start_est + 1e-12)
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{Gen, PropConfig};
+
+    /// The per-epoch scan `MultiStreamScheduler::run` performed before
+    /// the queue existed: the oracle the queue is pinned against.
+    struct NaiveModel {
+        state: Vec<Option<(f64, f64)>>,
+    }
+
+    impl NaiveModel {
+        fn candidates(&self) -> Vec<(usize, f64, f64)> {
+            self.state
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| c.map(|(r, d)| (i, r, d)))
+                .collect()
+        }
+
+        fn edf(&self) -> Option<(usize, f64, f64)> {
+            self.candidates()
+                .into_iter()
+                .min_by(|a, b| a.2.total_cmp(&b.2).then(a.0.cmp(&b.0)))
+        }
+
+        fn round_robin(&self, cursor: usize) -> Option<(usize, f64, f64)> {
+            let c = self.candidates();
+            c.iter()
+                .find(|(i, _, _)| *i >= cursor)
+                .or_else(|| c.first())
+                .copied()
+        }
+
+        fn occupancy(&self, start_est: f64) -> usize {
+            self.candidates()
+                .iter()
+                .filter(|(_, r, _)| *r <= start_est + 1e-12)
+                .count()
+        }
+    }
+
+    #[test]
+    fn queue_matches_naive_scan_model() {
+        PropConfig::default().run("queue_matches_naive_scan_model", |g| {
+            let n = g.usize_in(1, 8);
+            let mut q = DispatchQueue::new(n);
+            let mut model = NaiveModel { state: vec![None; n] };
+            for _ in 0..g.usize_in(1, 50) {
+                if g.bool() {
+                    let idx = g.usize_in(0, n - 1);
+                    // quantised deadlines force ties, exercising the
+                    // lowest-index tie-break
+                    let cand = if g.bool() {
+                        Some((
+                            g.f64_in(0.0, 10.0),
+                            g.usize_in(0, 4) as f64,
+                        ))
+                    } else {
+                        None
+                    };
+                    q.update(idx, cand);
+                    model.state[idx] = cand;
+                } else {
+                    if q.peek_edf() != model.edf() {
+                        return false;
+                    }
+                    let cursor = g.usize_in(0, n);
+                    if q.next_round_robin(cursor) != model.round_robin(cursor)
+                    {
+                        return false;
+                    }
+                    let x = g.f64_in(0.0, 10.0);
+                    if q.occupancy(x) != model.occupancy(x) {
+                        return false;
+                    }
+                    if q.len() != model.candidates().len()
+                        || q.is_empty() != model.candidates().is_empty()
+                    {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn empty_queue_yields_nothing() {
+        let mut q = DispatchQueue::new(3);
+        assert!(q.is_empty());
+        assert_eq!(q.peek_edf(), None);
+        assert_eq!(q.next_round_robin(0), None);
+        assert_eq!(q.occupancy(5.0), 0);
+    }
+
+    #[test]
+    fn stale_entries_are_skipped() {
+        let mut q = DispatchQueue::new(2);
+        q.update(0, Some((0.0, 1.0)));
+        q.update(1, Some((0.0, 2.0)));
+        // stream 0 re-updates to a later deadline; its old heap entry
+        // (deadline 1.0) must not win
+        q.update(0, Some((0.0, 3.0)));
+        assert_eq!(q.peek_edf(), Some((1, 0.0, 2.0)));
+        // stream 1 leaves entirely
+        q.update(1, None);
+        assert_eq!(q.peek_edf(), Some((0, 0.0, 3.0)));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -8,11 +8,13 @@
 //! accounting, carried detections and eval state, [`scheduler`] drives a
 //! session over a sequence under the Algorithm 2 drop-frame accounting,
 //! [`multistream`] interleaves many sessions over one shared accelerator
-//! with contention-aware latency, [`search`] is the Table I
+//! with contention-aware latency ([`dispatch`] holds its incremental
+//! candidate queue), [`search`] is the Table I
 //! hyperparameter grid search, and [`baselines`] provides the comparison
 //! points (fixed single DNN, and a Chameleon-style periodic re-profiler).
 
 pub mod baselines;
+pub mod dispatch;
 pub mod multistream;
 pub mod policy;
 pub mod projected;
@@ -20,6 +22,7 @@ pub mod scheduler;
 pub mod search;
 pub mod session;
 
+pub use dispatch::DispatchQueue;
 pub use multistream::{
     DispatchPolicy, MultiStreamResult, MultiStreamScheduler,
 };

@@ -34,8 +34,14 @@ use crate::sim::latency::{BatchLatencyModel, ContentionModel, LatencyModel};
 use crate::telemetry::utilisation::UtilisationSummary;
 use crate::DnnKind;
 
+use super::dispatch::DispatchQueue;
 use super::scheduler::{Detector, RunResult};
 use super::session::{SessionEvent, StreamSession};
+
+/// The stream's next dispatch candidate as the queue stores it.
+fn candidate_of(session: &StreamSession<'_>) -> Option<(f64, f64)> {
+    Some((session.next_infer_ready()?, session.next_infer_deadline()?))
+}
 
 /// Cross-stream micro-batching for the virtual-time scheduler.
 ///
@@ -236,44 +242,28 @@ impl<'a> MultiStreamScheduler<'a> {
         let mut batch_stats =
             batching.as_ref().map(|_| BatchStats::default());
 
+        // incremental candidate set: only the stream just stepped can
+        // change between epochs, so the per-epoch rebuild-and-scan is
+        // replaced by queue updates (see [`DispatchQueue`])
+        let mut queue = DispatchQueue::new(streams.len());
+        for (i, s) in streams.iter().enumerate() {
+            queue.update(i, candidate_of(&s.session));
+        }
+
         loop {
-            // streams that still have a frame the accelerator will run
-            let candidates: Vec<(usize, f64, f64)> = streams
-                .iter()
-                .enumerate()
-                .filter_map(|(i, s)| {
-                    let ready = s.session.next_infer_ready()?;
-                    let deadline = s.session.next_infer_deadline()?;
-                    Some((i, ready, deadline))
-                })
-                .collect();
-            if candidates.is_empty() {
-                break;
-            }
             let chosen = match dispatch {
-                DispatchPolicy::RoundRobin => candidates
-                    .iter()
-                    .find(|(i, _, _)| *i >= rr_cursor)
-                    .or_else(|| candidates.first())
-                    .copied()
-                    .unwrap(),
-                DispatchPolicy::EarliestDeadlineFirst => candidates
-                    .iter()
-                    .copied()
-                    .min_by(|a, b| {
-                        a.2.total_cmp(&b.2).then(a.0.cmp(&b.0))
-                    })
-                    .unwrap(),
+                DispatchPolicy::RoundRobin => {
+                    queue.next_round_robin(rr_cursor)
+                }
+                DispatchPolicy::EarliestDeadlineFirst => queue.peek_edf(),
             };
-            let (idx, ready, _) = chosen;
+            let Some((idx, ready, _)) = chosen else {
+                break;
+            };
             // contention: streams whose pending frame is waiting when
             // this inference starts (the dispatched one included)
             let start_est = gpu_free.max(ready);
-            let occupancy = candidates
-                .iter()
-                .filter(|(_, r, _)| *r <= start_est + 1e-12)
-                .count()
-                .max(1);
+            let occupancy = queue.occupancy(start_est).max(1);
             let inflation = contention.factor(occupancy);
 
             // drain the stream's doomed frames, then run its inference
@@ -352,6 +342,7 @@ impl<'a> MultiStreamScheduler<'a> {
                 }
             }
             rr_cursor = (idx + 1) % streams.len();
+            queue.update(idx, candidate_of(&streams[idx].session));
         }
 
         // drain streams whose remaining frames are all destined to drop

@@ -56,6 +56,23 @@ pub trait Detector {
         gt: &[GtEntry],
         dnn: DnnKind,
     ) -> Result<Vec<Detection>, DetectError>;
+
+    /// [`detect`](Self::detect) into a caller-owned buffer (cleared
+    /// first, even on error) — the zero-alloc steady-state form the
+    /// serving loop uses. The default delegates to `detect`; backends
+    /// that can fill a buffer natively override it.
+    fn detect_into(
+        &mut self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+        out: &mut Vec<Detection>,
+    ) -> Result<(), DetectError> {
+        out.clear();
+        let dets = self.detect(frame, gt, dnn)?;
+        out.extend_from_slice(&dets);
+        Ok(())
+    }
 }
 
 /// The oracle-backed detector (accuracy experiments; never fails).
@@ -69,6 +86,17 @@ impl Detector for OracleBackend {
         dnn: DnnKind,
     ) -> Result<Vec<Detection>, DetectError> {
         Ok(self.0.detect(frame, gt, dnn))
+    }
+
+    fn detect_into(
+        &mut self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+        out: &mut Vec<Detection>,
+    ) -> Result<(), DetectError> {
+        self.0.detect_into(frame, gt, dnn, out);
+        Ok(())
     }
 }
 

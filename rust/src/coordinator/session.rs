@@ -18,9 +18,9 @@
 //! latency inflation factor.
 
 use crate::dataset::synth::Sequence;
-use crate::detection::{Detection, FrameDetections};
+use crate::detection::{filter_detections_into, Detection};
 use crate::eval::ap::{ApMethod, SequenceEval};
-use crate::eval::matching::{match_frame, IOU_THRESHOLD};
+use crate::eval::matching::{FrameMatcher, IOU_THRESHOLD};
 use crate::features::FeatureExtractor;
 use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::LatencyModel;
@@ -80,6 +80,12 @@ pub struct StreamSession<'a> {
     n_failed: u64,
     /// 1-based id of the next frame to present.
     next_frame: u64,
+    /// Raw-detection scratch the backend fills each inference; with the
+    /// matcher below it makes the steady-state [`step`](Self::step)
+    /// allocation-free (see `tests/perf_alloc.rs`).
+    detect_buf: Vec<Detection>,
+    /// Reusable greedy-matching scratch for per-frame evaluation.
+    matcher: FrameMatcher,
 }
 
 impl<'a> StreamSession<'a> {
@@ -89,14 +95,23 @@ impl<'a> StreamSession<'a> {
         P: SelectionPolicy + 'a,
     {
         let n = seq.n_frames() as usize;
+        // Pre-size the run-long accumulators so steady-state stepping
+        // never grows them: scored pairs are bounded by the ground
+        // truth the detector can hit plus a false-positive margin, and
+        // the trace holds at most one busy interval per frame.
+        let mut eval = SequenceEval::new();
+        let total_gt: usize = (1..=seq.n_frames()).map(|f| seq.gt(f).len()).sum();
+        eval.reserve(total_gt + n * 8);
+        let mut trace = ScheduleTrace::default();
+        trace.busy.reserve(n);
         StreamSession {
             seq,
             policy: Box::new(policy),
             eval_fps,
             clock: FrameClock::new(eval_fps),
             acc: DropFrameAccounting::new(eval_fps),
-            eval: SequenceEval::new(),
-            trace: ScheduleTrace::default(),
+            eval,
+            trace,
             deploy: [0; DnnKind::COUNT],
             switches: 0,
             last_dnn: None,
@@ -110,6 +125,8 @@ impl<'a> StreamSession<'a> {
             meter: EnergyMeter::new(),
             n_failed: 0,
             next_frame: 1,
+            detect_buf: Vec::new(),
+            matcher: FrameMatcher::new(),
         }
     }
 
@@ -287,10 +304,13 @@ impl<'a> StreamSession<'a> {
                 }
                 self.last_dnn = Some(dnn);
                 self.dnn_series.push(Some(dnn));
-                match detector.detect(frame, gt, dnn) {
-                    Ok(raw) => {
-                        let fd = FrameDetections { frame, detections: raw };
-                        self.carried = fd.filtered().detections;
+                match detector.detect_into(frame, gt, dnn, &mut self.detect_buf)
+                {
+                    Ok(()) => {
+                        filter_detections_into(
+                            &self.detect_buf,
+                            &mut self.carried,
+                        );
                         // speed advances only on fresh snapshots: a
                         // carried set matched against itself would read
                         // as zero motion
@@ -313,7 +333,7 @@ impl<'a> StreamSession<'a> {
         };
         // evaluate whatever detections the application would see at this
         // frame (fresh or carried) against this frame's ground truth
-        self.eval.push(&match_frame(&self.carried, gt, IOU_THRESHOLD));
+        self.matcher.match_into(&self.carried, gt, IOU_THRESHOLD, &mut self.eval);
         event
     }
 

@@ -38,18 +38,25 @@ impl FrameDetections {
 
     /// Keep only 'person' detections above the paper's 0.35 threshold.
     pub fn filtered(&self) -> FrameDetections {
-        FrameDetections {
-            frame: self.frame,
-            detections: self
-                .detections
-                .iter()
-                .copied()
-                .filter(|d| {
-                    d.class_id == PERSON_CLASS && d.score > SCORE_THRESHOLD
-                })
-                .collect(),
-        }
+        let mut out = Vec::with_capacity(self.detections.len());
+        filter_detections_into(&self.detections, &mut out);
+        FrameDetections { frame: self.frame, detections: out }
     }
+}
+
+/// The paper's §III.B.1 keep predicate ('person' above 0.35), shared by
+/// every filter path so the threshold semantics live in one place.
+#[inline]
+pub fn passes_score_filter(d: &Detection) -> bool {
+    d.class_id == PERSON_CLASS && d.score > SCORE_THRESHOLD
+}
+
+/// Filter `src` into `out` (cleared first). The steady-state form of
+/// [`FrameDetections::filtered`]: with a warm `out` buffer this never
+/// touches the allocator.
+pub fn filter_detections_into(src: &[Detection], out: &mut Vec<Detection>) {
+    out.clear();
+    out.extend(src.iter().copied().filter(passes_score_filter));
 }
 
 /// Descending-confidence ordering with NaN ranked *last*.
@@ -74,13 +81,24 @@ pub fn by_score_desc_nan_last(a: f32, b: f32) -> std::cmp::Ordering {
 /// boxes, which routes Algorithm 1 to the heaviest DNN (its `else`
 /// branch), matching the paper's `median(bboxes)_0 = 0` initialisation.
 pub fn mbbs(dets: &[Detection], frame_w: f64, frame_h: f64) -> f64 {
+    let mut areas = Vec::with_capacity(dets.len());
+    mbbs_with_scratch(dets, frame_w, frame_h, &mut areas)
+}
+
+/// [`mbbs`] writing its area working set into a caller-owned buffer —
+/// the steady-state form used by the per-frame feature path (zero
+/// allocations once the scratch has warmed to the stream's density).
+pub fn mbbs_with_scratch(
+    dets: &[Detection],
+    frame_w: f64,
+    frame_h: f64,
+    areas: &mut Vec<f64>,
+) -> f64 {
     if dets.is_empty() {
         return 0.0;
     }
-    let mut areas: Vec<f64> = dets
-        .iter()
-        .map(|d| d.bbox.area_frac(frame_w, frame_h))
-        .collect();
+    areas.clear();
+    areas.extend(dets.iter().map(|d| d.bbox.area_frac(frame_w, frame_h)));
     // In-place O(n) selection; no allocation beyond the areas scratch.
     // total_cmp: a NaN area (degenerate box from a broken decode) must
     // not abort the serving loop — it sorts above +inf deterministically.
@@ -102,27 +120,59 @@ pub fn mbbs(dets: &[Detection], frame_w: f64, frame_h: f64) -> f64 {
 /// Greedy non-maximum suppression: keep the highest-scoring box, drop
 /// everything overlapping it above `iou_thresh`, repeat. Detections with
 /// different class ids never suppress each other.
+///
+/// Implementation: sort-once by score, then test each candidate against
+/// the *kept* set only (O(n·k) instead of the textbook O(n²) suppressed-
+/// flag sweep) with a struct-of-arrays x-interval prefilter that rejects
+/// most pairs on a single compare before paying for a full IoU. Both
+/// formulations keep a candidate iff no earlier-kept same-class box
+/// overlaps it above the threshold, so the keep set and its order are
+/// bit-identical — pinned by `nms_matches_reference_on_random_inputs`.
 pub fn nms(dets: &[Detection], iou_thresh: f64) -> Vec<Detection> {
     let mut order: Vec<usize> = (0..dets.len()).collect();
     // NaN-safe descending score order; NaN ranks last so it can never
-    // suppress a genuinely confident box
-    order.sort_by(|&a, &b| {
+    // suppress a genuinely confident box. Unstable sort with an index
+    // tie-break: allocation-free, same order as the reference's stable
+    // sort on equal scores.
+    order.sort_unstable_by(|&a, &b| {
         by_score_desc_nan_last(dets[a].score, dets[b].score)
+            .then(a.cmp(&b))
     });
     let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
-    let mut suppressed = vec![false; dets.len()];
-    for (rank, &i) in order.iter().enumerate() {
-        if suppressed[i] {
-            continue;
-        }
-        keep.push(dets[i]);
-        for &j in &order[rank + 1..] {
-            if suppressed[j] || dets[j].class_id != dets[i].class_id {
+    // Flat kept-set arrays for the prefilter: original index plus the
+    // x-interval (kept in sync with `keep`).
+    let mut kept_idx: Vec<usize> = Vec::with_capacity(dets.len());
+    let mut kept_x1: Vec<f64> = Vec::with_capacity(dets.len());
+    let mut kept_x2: Vec<f64> = Vec::with_capacity(dets.len());
+    // Disjoint x-intervals force intersection = 0 and hence iou == 0.0
+    // exactly, which only fails to suppress when the threshold is
+    // non-negative — with a (nonsensical) negative threshold every pair
+    // suppresses, so take the exact path.
+    let can_prefilter = iou_thresh >= 0.0;
+    for &i in &order {
+        let cand = &dets[i].bbox;
+        let (x1, x2) = (cand.x, cand.right());
+        let mut suppressed = false;
+        for k in 0..keep.len() {
+            if keep[k].class_id != dets[i].class_id {
                 continue;
             }
-            if dets[i].bbox.iou(&dets[j].bbox) > iou_thresh {
-                suppressed[j] = true;
+            // NaN coordinates fail both compares and fall through to
+            // the exact IoU, so the fast path never changes behaviour.
+            if can_prefilter && (kept_x2[k] <= x1 || kept_x1[k] >= x2) {
+                continue;
             }
+            // kept.iou(candidate): the reference's operand order.
+            if dets[kept_idx[k]].bbox.iou(cand) > iou_thresh {
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            keep.push(dets[i]);
+            kept_idx.push(i);
+            kept_x1.push(x1);
+            kept_x2.push(x2);
         }
     }
     keep
@@ -131,9 +181,97 @@ pub fn nms(dets: &[Detection], iou_thresh: f64) -> Vec<Detection> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::prop::{Gen, PropConfig};
 
     fn det(x: f64, y: f64, w: f64, h: f64, score: f32) -> Detection {
         Detection::new(BBox::new(x, y, w, h), score, PERSON_CLASS)
+    }
+
+    /// The pre-optimisation suppressed-flag NMS, kept verbatim as the
+    /// equivalence oracle for the SoA keep-list implementation.
+    fn nms_reference(dets: &[Detection], iou_thresh: f64) -> Vec<Detection> {
+        let mut order: Vec<usize> = (0..dets.len()).collect();
+        order.sort_by(|&a, &b| {
+            by_score_desc_nan_last(dets[a].score, dets[b].score)
+        });
+        let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
+        let mut suppressed = vec![false; dets.len()];
+        for (rank, &i) in order.iter().enumerate() {
+            if suppressed[i] {
+                continue;
+            }
+            keep.push(dets[i]);
+            for &j in &order[rank + 1..] {
+                if suppressed[j] || dets[j].class_id != dets[i].class_id {
+                    continue;
+                }
+                if dets[i].bbox.iou(&dets[j].bbox) > iou_thresh {
+                    suppressed[j] = true;
+                }
+            }
+        }
+        keep
+    }
+
+    /// Random detection set with NaN scores, NaN coordinates, negative
+    /// (degenerate) extents and mixed classes.
+    fn gen_dets(g: &mut Gen, max_n: usize) -> Vec<Detection> {
+        let n = g.usize_in(0, max_n);
+        (0..n)
+            .map(|_| {
+                let mut x = g.f64_in(-20.0, 100.0);
+                let y = g.f64_in(-20.0, 100.0);
+                let w = g.f64_in(-5.0, 40.0);
+                let h = g.f64_in(-5.0, 40.0);
+                if g.usize_in(0, 19) == 0 {
+                    x = f64::NAN;
+                }
+                let score = if g.usize_in(0, 9) == 0 {
+                    f32::NAN
+                } else {
+                    g.f64_in(0.0, 1.0) as f32
+                };
+                let class = g.usize_in(0, 2) as u32;
+                Detection::new(BBox::new(x, y, w, h), score, class)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nms_matches_reference_on_random_inputs() {
+        PropConfig::default().run("nms == nms_reference", |g| {
+            let dets = gen_dets(g, 40);
+            // include a (nonsensical) negative threshold so the
+            // prefilter-disabled branch is exercised too
+            let thresh = g.f64_in(-0.2, 1.1);
+            nms(&dets, thresh) == nms_reference(&dets, thresh)
+        });
+    }
+
+    #[test]
+    fn mbbs_scratch_matches_allocating_form() {
+        PropConfig::default().run("mbbs_with_scratch == mbbs", |g| {
+            let dets = gen_dets(g, 30);
+            let mut scratch = Vec::new();
+            // reuse the scratch across both calls: stale contents from
+            // the first call must not leak into the second
+            let a = mbbs_with_scratch(&dets, 1920.0, 1080.0, &mut scratch);
+            let b = mbbs_with_scratch(&dets, 1920.0, 1080.0, &mut scratch);
+            let c = mbbs(&dets, 1920.0, 1080.0);
+            (a.is_nan() && b.is_nan() && c.is_nan())
+                || (a == b && b == c)
+        });
+    }
+
+    #[test]
+    fn filter_into_matches_filtered() {
+        PropConfig::default().run("filter_into == filtered", |g| {
+            let dets = gen_dets(g, 30);
+            let fd = FrameDetections { frame: 1, detections: dets };
+            let mut out = vec![det(0.0, 0.0, 1.0, 1.0, 0.9)]; // stale
+            filter_detections_into(&fd.detections, &mut out);
+            out == fd.filtered().detections
+        });
     }
 
     #[test]

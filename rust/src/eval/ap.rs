@@ -38,6 +38,37 @@ impl SequenceEval {
         self.n_gt += m.n_gt;
     }
 
+    /// Fold in a single scored detection — the streaming form of
+    /// [`push`](Self::push) used by
+    /// [`FrameMatcher::match_into`](crate::eval::matching::FrameMatcher::match_into)
+    /// to skip the intermediate `FrameMatch`.
+    pub fn push_scored(&mut self, score: f32, is_tp: bool) {
+        self.scored.push((score, is_tp));
+    }
+
+    /// Add considered ground-truth boxes without scored detections
+    /// (companion to [`push_scored`](Self::push_scored)).
+    pub fn add_gt(&mut self, n: usize) {
+        self.n_gt += n;
+    }
+
+    /// Pre-size the pooled buffer so steady-state folding never grows
+    /// it mid-sequence.
+    pub fn reserve(&mut self, additional: usize) {
+        self.scored.reserve(additional);
+    }
+
+    /// Reset to empty, keeping the pooled buffer's capacity.
+    pub fn clear(&mut self) {
+        self.scored.clear();
+        self.n_gt = 0;
+    }
+
+    /// The pooled (score, is_tp) pairs, in fold order.
+    pub fn scored(&self) -> &[(f32, bool)] {
+        &self.scored
+    }
+
     pub fn n_gt(&self) -> usize {
         self.n_gt
     }
@@ -104,8 +135,10 @@ pub fn average_precision(
     }
     match method {
         ApMethod::AllPoint => {
-            // monotone envelope, integrate dr * p
-            let mut env: Vec<(f64, f64)> = curve.clone();
+            // monotone envelope, integrate dr * p. The curve is owned
+            // here, so the envelope is computed in place — the old
+            // `curve.clone()` doubled the allocation for nothing.
+            let mut env = curve;
             let mut best = 0.0f64;
             for i in (0..env.len()).rev() {
                 best = best.max(env[i].1);
@@ -246,6 +279,36 @@ mod tests {
         // the NaN FP ranks below both TPs, so full recall is reached
         // at precision 1 before the FP appears: AP = 1
         assert!((ap - 1.0).abs() < 1e-12, "ap={ap}");
+    }
+
+    #[test]
+    fn streaming_fold_matches_push_and_clear_resets() {
+        let m = FrameMatch {
+            scored: vec![(0.9, true), (0.4, false)],
+            n_gt: 3,
+            n_ignored: 1,
+        };
+        let mut batch = SequenceEval::new();
+        batch.push(&m);
+
+        let mut streamed = SequenceEval::new();
+        streamed.reserve(2);
+        for &(s, tp) in &m.scored {
+            streamed.push_scored(s, tp);
+        }
+        streamed.add_gt(m.n_gt);
+
+        assert_eq!(streamed.scored(), batch.scored());
+        assert_eq!(streamed.n_gt(), batch.n_gt());
+        assert_eq!(
+            streamed.ap(ApMethod::AllPoint),
+            batch.ap(ApMethod::AllPoint)
+        );
+
+        streamed.clear();
+        assert_eq!(streamed.n_scored(), 0);
+        assert_eq!(streamed.n_gt(), 0);
+        assert_eq!(streamed.ap(ApMethod::AllPoint), 1.0);
     }
 
     #[test]

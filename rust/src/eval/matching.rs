@@ -12,6 +12,7 @@
 
 use crate::dataset::mot::GtEntry;
 use crate::detection::Detection;
+use crate::eval::ap::SequenceEval;
 
 /// Standard MOT detection-evaluation IoU threshold.
 pub const IOU_THRESHOLD: f64 = 0.5;
@@ -28,66 +29,156 @@ pub struct FrameMatch {
 }
 
 /// Match one frame's detections against its ground truth.
+///
+/// One-shot convenience over [`FrameMatcher`]; per-frame callers on the
+/// serving path hold a matcher and use
+/// [`FrameMatcher::match_frame_into`] / [`FrameMatcher::match_into`]
+/// instead, which reuse every working buffer across frames.
 pub fn match_frame(
     dets: &[Detection],
     gt: &[GtEntry],
     iou_threshold: f64,
 ) -> FrameMatch {
-    let considered: Vec<&GtEntry> =
-        gt.iter().filter(|g| g.is_considered()).collect();
-    let ignore: Vec<&GtEntry> =
-        gt.iter().filter(|g| !g.is_considered()).collect();
+    let mut matcher = FrameMatcher::new();
+    let mut out = FrameMatch::default();
+    matcher.match_frame_into(dets, gt, iou_threshold, &mut out);
+    out
+}
 
-    let mut order: Vec<usize> = (0..dets.len()).collect();
-    // NaN-safe descending score order with NaN ranked last: a
-    // NaN-scored detection must neither panic the frame's evaluation
-    // nor steal a ground-truth match from a confident detection
-    order.sort_by(|&a, &b| {
-        crate::detection::by_score_desc_nan_last(
-            dets[a].score,
-            dets[b].score,
-        )
-    });
+/// Greedy frame matching with reusable scratch: the considered/ignore
+/// ground-truth partitions, the score order and the taken flags live in
+/// the matcher and are re-filled (never re-allocated, once warm) each
+/// frame. Pinned bit-identical to the straightforward per-call
+/// implementation by `matcher_matches_reference_on_random_frames`.
+#[derive(Debug, Default)]
+pub struct FrameMatcher {
+    /// Indices into `gt` with `is_considered()`, in gt order.
+    considered: Vec<usize>,
+    /// The complementary ignore-region indices, in gt order.
+    ignore: Vec<usize>,
+    /// Detection indices in NaN-safe descending score order.
+    order: Vec<usize>,
+    /// Claim flags, parallel to `considered`.
+    gt_taken: Vec<bool>,
+}
 
-    let mut gt_taken = vec![false; considered.len()];
-    let mut out = FrameMatch {
-        scored: Vec::with_capacity(dets.len()),
-        n_gt: considered.len(),
-        n_ignored: 0,
-    };
+impl FrameMatcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
 
-    for &di in &order {
-        let d = &dets[di];
-        // best unmatched considered gt
-        let mut best: Option<(usize, f64)> = None;
-        for (gi, g) in considered.iter().enumerate() {
-            if gt_taken[gi] {
+    /// Match one frame into a caller-owned [`FrameMatch`] (its `scored`
+    /// buffer is cleared and refilled, keeping its capacity).
+    pub fn match_frame_into(
+        &mut self,
+        dets: &[Detection],
+        gt: &[GtEntry],
+        iou_threshold: f64,
+        out: &mut FrameMatch,
+    ) {
+        out.scored.clear();
+        let scored = &mut out.scored;
+        let (n_gt, n_ignored) = self.run(dets, gt, iou_threshold, |s, tp| {
+            scored.push((s, tp));
+        });
+        out.n_gt = n_gt;
+        out.n_ignored = n_ignored;
+    }
+
+    /// Match one frame and fold it straight into a [`SequenceEval`] —
+    /// the steady-state path of the per-frame serving loop (no
+    /// intermediate `FrameMatch`, no allocation once warm).
+    ///
+    /// Returns the number of ignored detections (informational; the
+    /// accumulator does not track them).
+    pub fn match_into(
+        &mut self,
+        dets: &[Detection],
+        gt: &[GtEntry],
+        iou_threshold: f64,
+        eval: &mut SequenceEval,
+    ) -> usize {
+        let (n_gt, n_ignored) = self.run(dets, gt, iou_threshold, |s, tp| {
+            eval.push_scored(s, tp);
+        });
+        eval.add_gt(n_gt);
+        n_ignored
+    }
+
+    /// The greedy core: emit `(score, is_tp)` per scored detection in
+    /// match order; returns `(n_gt, n_ignored)`.
+    fn run(
+        &mut self,
+        dets: &[Detection],
+        gt: &[GtEntry],
+        iou_threshold: f64,
+        mut emit: impl FnMut(f32, bool),
+    ) -> (usize, usize) {
+        self.considered.clear();
+        self.ignore.clear();
+        for (gi, g) in gt.iter().enumerate() {
+            if g.is_considered() {
+                self.considered.push(gi);
+            } else {
+                self.ignore.push(gi);
+            }
+        }
+
+        self.order.clear();
+        self.order.extend(0..dets.len());
+        // NaN-safe descending score order with NaN ranked last: a
+        // NaN-scored detection must neither panic the frame's evaluation
+        // nor steal a ground-truth match from a confident detection
+        // `sort_unstable_by` never touches the allocator (stable sort
+        // buffers above ~20 elements); the index tie-break reproduces
+        // the stable order bit for bit on equal scores
+        self.order.sort_unstable_by(|&a, &b| {
+            crate::detection::by_score_desc_nan_last(
+                dets[a].score,
+                dets[b].score,
+            )
+            .then(a.cmp(&b))
+        });
+
+        self.gt_taken.clear();
+        self.gt_taken.resize(self.considered.len(), false);
+
+        let mut n_ignored = 0usize;
+        for oi in 0..self.order.len() {
+            let d = &dets[self.order[oi]];
+            // best unmatched considered gt
+            let mut best: Option<(usize, f64)> = None;
+            for ci in 0..self.considered.len() {
+                if self.gt_taken[ci] {
+                    continue;
+                }
+                let g = &gt[self.considered[ci]];
+                let iou = d.bbox.iou(&g.bbox);
+                if iou >= iou_threshold
+                    && best.map(|(_, b)| iou > b).unwrap_or(true)
+                {
+                    best = Some((ci, iou));
+                }
+            }
+            if let Some((ci, _)) = best {
+                self.gt_taken[ci] = true;
+                emit(d.score, true);
                 continue;
             }
-            let iou = d.bbox.iou(&g.bbox);
-            if iou >= iou_threshold
-                && best.map(|(_, b)| iou > b).unwrap_or(true)
-            {
-                best = Some((gi, iou));
+            // no considered match: ignore-region overlap removes it from
+            // scoring, otherwise it is a false positive
+            let ignored = self
+                .ignore
+                .iter()
+                .any(|&gi| d.bbox.iou(&gt[gi].bbox) >= iou_threshold);
+            if ignored {
+                n_ignored += 1;
+            } else {
+                emit(d.score, false);
             }
         }
-        if let Some((gi, _)) = best {
-            gt_taken[gi] = true;
-            out.scored.push((d.score, true));
-            continue;
-        }
-        // no considered match: ignore-region overlap removes it from
-        // scoring, otherwise it is a false positive
-        let ignored = ignore
-            .iter()
-            .any(|g| d.bbox.iou(&g.bbox) >= iou_threshold);
-        if ignored {
-            out.n_ignored += 1;
-        } else {
-            out.scored.push((d.score, false));
-        }
+        (self.considered.len(), n_ignored)
     }
-    out
 }
 
 #[cfg(test)]
@@ -205,6 +296,140 @@ mod tests {
         assert_eq!(m.scored.len(), 2);
         let tp = m.scored.iter().filter(|(_, t)| *t).count();
         assert_eq!(tp, 1);
+    }
+
+    /// The straightforward per-call implementation `match_frame`
+    /// delegated through before the scratch-reusing [`FrameMatcher`]
+    /// existed; the oracle for the equivalence property test below.
+    fn match_frame_reference(
+        dets: &[Detection],
+        gt: &[GtEntry],
+        iou_threshold: f64,
+    ) -> FrameMatch {
+        let considered: Vec<&GtEntry> =
+            gt.iter().filter(|g| g.is_considered()).collect();
+        let ignore: Vec<&GtEntry> =
+            gt.iter().filter(|g| !g.is_considered()).collect();
+
+        let mut order: Vec<usize> = (0..dets.len()).collect();
+        order.sort_by(|&a, &b| {
+            crate::detection::by_score_desc_nan_last(
+                dets[a].score,
+                dets[b].score,
+            )
+        });
+
+        let mut gt_taken = vec![false; considered.len()];
+        let mut out = FrameMatch {
+            scored: Vec::with_capacity(dets.len()),
+            n_gt: considered.len(),
+            n_ignored: 0,
+        };
+
+        for &di in &order {
+            let d = &dets[di];
+            let mut best: Option<(usize, f64)> = None;
+            for (gi, g) in considered.iter().enumerate() {
+                if gt_taken[gi] {
+                    continue;
+                }
+                let iou = d.bbox.iou(&g.bbox);
+                if iou >= iou_threshold
+                    && best.map(|(_, b)| iou > b).unwrap_or(true)
+                {
+                    best = Some((gi, iou));
+                }
+            }
+            if let Some((gi, _)) = best {
+                gt_taken[gi] = true;
+                out.scored.push((d.score, true));
+                continue;
+            }
+            let ignored = ignore
+                .iter()
+                .any(|g| d.bbox.iou(&g.bbox) >= iou_threshold);
+            if ignored {
+                out.n_ignored += 1;
+            } else {
+                out.scored.push((d.score, false));
+            }
+        }
+        out
+    }
+
+    /// Bitwise (score, tp) equality — NaN scores compare equal to
+    /// themselves via `to_bits`, which plain `==` would reject.
+    fn scored_eq(a: &[(f32, bool)], b: &[(f32, bool)]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|((sa, ta), (sb, tb))| {
+                sa.to_bits() == sb.to_bits() && ta == tb
+            })
+    }
+
+    #[test]
+    fn matcher_matches_reference_on_random_frames() {
+        use crate::testing::prop::{Gen, PropConfig};
+        // one matcher reused across every case: stale scratch from a
+        // previous (larger) frame must not leak into the next
+        let mut matcher = FrameMatcher::new();
+        let mut out = FrameMatch::default();
+        PropConfig::default().run(
+            "matcher_matches_reference_on_random_frames",
+            |g: &mut Gen| {
+                let n_det = g.usize_in(0, 24);
+                let n_gt = g.usize_in(0, 16);
+                let dets: Vec<Detection> = (0..n_det)
+                    .map(|_| {
+                        let score = if g.usize_in(0, 9) == 0 {
+                            f32::NAN
+                        } else {
+                            g.f64_in(0.0, 1.0) as f32
+                        };
+                        det(
+                            g.f64_in(-5.0, 40.0),
+                            g.f64_in(-5.0, 40.0),
+                            g.f64_in(0.0, 25.0),
+                            g.f64_in(0.0, 25.0),
+                            score,
+                        )
+                    })
+                    .collect();
+                let gts: Vec<GtEntry> = (0..n_gt)
+                    .map(|_| {
+                        // mix considered pedestrians with ignore rows
+                        let (conf, class) = if g.bool() {
+                            (1.0, 1)
+                        } else {
+                            (0.0, 3)
+                        };
+                        gt(
+                            g.f64_in(-5.0, 40.0),
+                            g.f64_in(-5.0, 40.0),
+                            g.f64_in(0.0, 25.0),
+                            g.f64_in(0.0, 25.0),
+                            conf,
+                            class,
+                        )
+                    })
+                    .collect();
+                let thr = g.f64_in(0.05, 0.95);
+
+                let reference = match_frame_reference(&dets, &gts, thr);
+                matcher.match_frame_into(&dets, &gts, thr, &mut out);
+                let frame_ok = scored_eq(&out.scored, &reference.scored)
+                    && out.n_gt == reference.n_gt
+                    && out.n_ignored == reference.n_ignored;
+
+                let mut eval = SequenceEval::default();
+                let n_ignored =
+                    matcher.match_into(&dets, &gts, thr, &mut eval);
+                let fold_ok = scored_eq(eval.scored(), &reference.scored)
+                    && eval.n_gt() == reference.n_gt
+                    && n_ignored == reference.n_ignored;
+
+                frame_ok && fold_ok
+            },
+        );
     }
 
     #[test]

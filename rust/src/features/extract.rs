@@ -25,8 +25,10 @@
 //! densities, comfortably inside the paper's "negligible overhead"
 //! envelope (see `benches/selection.rs`).
 
-use crate::detection::{mbbs, Detection};
-use crate::util::stats::median;
+use std::cell::RefCell;
+
+use crate::detection::{mbbs_with_scratch, Detection};
+use crate::util::stats::median_mut;
 
 use super::ewma::Ewma;
 
@@ -94,6 +96,25 @@ pub struct FeatureExtractor {
     /// Last distinct detection snapshot and the frame it came from.
     prev: Vec<Detection>,
     prev_frame: Option<u64>,
+    /// Reusable matching/median scratch for the speed update — per-frame
+    /// extraction allocates nothing once these buffers are warm.
+    scratch: MatchScratch,
+    /// Area scratch for the MBBS median; interior-mutable because
+    /// [`features`](Self::features) reads through `&self`.
+    areas: RefCell<Vec<f64>>,
+}
+
+/// Working buffers for [`match_displacements_into`], reused across
+/// frames by the extractor.
+#[derive(Debug, Clone, Default)]
+struct MatchScratch {
+    iou_pairs: Vec<(f64, usize, usize)>,
+    dist_pairs: Vec<(f64, usize, usize)>,
+    prev_used: Vec<bool>,
+    cur_used: Vec<bool>,
+    disp: Vec<(f64, f64)>,
+    dxs: Vec<f64>,
+    dys: Vec<f64>,
 }
 
 impl FeatureExtractor {
@@ -112,6 +133,8 @@ impl FeatureExtractor {
             speed: Ewma::new(alpha),
             prev: Vec::new(),
             prev_frame: None,
+            scratch: MatchScratch::default(),
+            areas: RefCell::new(Vec::new()),
         }
     }
 
@@ -123,8 +146,12 @@ impl FeatureExtractor {
             .iter()
             .map(|d| d.bbox.area_frac(self.frame_w, self.frame_h))
             .sum();
+        let mbbs = {
+            let mut areas = self.areas.borrow_mut();
+            mbbs_with_scratch(dets, self.frame_w, self.frame_h, &mut areas)
+        };
         FrameFeatures {
-            mbbs: mbbs(dets, self.frame_w, self.frame_h),
+            mbbs,
             count: dets.len(),
             density,
             speed: self.speed.value(),
@@ -144,18 +171,21 @@ impl FeatureExtractor {
         if let Some(prev_frame) = self.prev_frame {
             let gap = frame.saturating_sub(prev_frame);
             if gap > 0 {
-                let disp = match_displacements(
+                match_displacements_into(
                     &self.prev,
                     dets,
                     self.cfg.iou_gate,
                     self.cfg.centroid_gate,
+                    &mut self.scratch,
                 );
-                if !disp.is_empty() {
-                    let dxs: Vec<f64> =
-                        disp.iter().map(|&(dx, _)| dx).collect();
-                    let dys: Vec<f64> =
-                        disp.iter().map(|&(_, dy)| dy).collect();
-                    let (mx, my) = (median(&dxs), median(&dys));
+                if !self.scratch.disp.is_empty() {
+                    let s = &mut self.scratch;
+                    s.dxs.clear();
+                    s.dxs.extend(s.disp.iter().map(|&(dx, _)| dx));
+                    s.dys.clear();
+                    s.dys.extend(s.disp.iter().map(|&(_, dy)| dy));
+                    let (mx, my) =
+                        (median_mut(&mut s.dxs), median_mut(&mut s.dys));
                     let px_per_frame =
                         (mx * mx + my * my).sqrt() / gap as f64;
                     self.speed.update(px_per_frame / self.diag);
@@ -190,63 +220,88 @@ fn match_displacements(
     iou_gate: f64,
     centroid_gate: f64,
 ) -> Vec<(f64, f64)> {
+    let mut scratch = MatchScratch::default();
+    match_displacements_into(prev, cur, iou_gate, centroid_gate, &mut scratch);
+    scratch.disp
+}
+
+/// Scratch-buffer core of [`match_displacements`]: fills `s.disp` with
+/// the matched displacements, reusing every working buffer. Pinned
+/// bit-identical to the per-call reference implementation by
+/// `scratch_matching_matches_reference_on_random_snapshots`.
+fn match_displacements_into(
+    prev: &[Detection],
+    cur: &[Detection],
+    iou_gate: f64,
+    centroid_gate: f64,
+    s: &mut MatchScratch,
+) {
+    s.disp.clear();
     if prev.is_empty() || cur.is_empty() {
-        return Vec::new();
+        return;
     }
-    let mut prev_used = vec![false; prev.len()];
-    let mut cur_used = vec![false; cur.len()];
-    let mut out = Vec::new();
+    s.prev_used.clear();
+    s.prev_used.resize(prev.len(), false);
+    s.cur_used.clear();
+    s.cur_used.resize(cur.len(), false);
 
     // stage 1: IoU pairs, best overlap first
-    let mut iou_pairs: Vec<(f64, usize, usize)> = Vec::new();
+    s.iou_pairs.clear();
     for (i, p) in prev.iter().enumerate() {
         for (j, c) in cur.iter().enumerate() {
             let iou = p.bbox.iou(&c.bbox);
             if iou >= iou_gate {
-                iou_pairs.push((iou, i, j));
+                s.iou_pairs.push((iou, i, j));
             }
         }
     }
     // NaN-safe: a degenerate box can yield a NaN IoU; it must sort
-    // deterministically, not panic the per-frame feature update
-    iou_pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
-    for &(_, i, j) in &iou_pairs {
-        if prev_used[i] || cur_used[j] {
+    // deterministically, not panic the per-frame feature update.
+    // Unstable sort keeps the hot path allocation-free; the (i, j)
+    // tie-break reproduces stable push order bit for bit.
+    s.iou_pairs.sort_unstable_by(|a, b| {
+        b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    for k in 0..s.iou_pairs.len() {
+        let (_, i, j) = s.iou_pairs[k];
+        if s.prev_used[i] || s.cur_used[j] {
             continue;
         }
-        prev_used[i] = true;
-        cur_used[j] = true;
-        out.push(displacement(&prev[i], &cur[j]));
+        s.prev_used[i] = true;
+        s.cur_used[j] = true;
+        s.disp.push(displacement(&prev[i], &cur[j]));
     }
 
     // stage 2: nearest-centroid pairs among the unmatched
-    let mut dist_pairs: Vec<(f64, usize, usize)> = Vec::new();
+    s.dist_pairs.clear();
     for (i, p) in prev.iter().enumerate() {
-        if prev_used[i] {
+        if s.prev_used[i] {
             continue;
         }
         for (j, c) in cur.iter().enumerate() {
-            if cur_used[j] {
+            if s.cur_used[j] {
                 continue;
             }
             let (dx, dy) = displacement(p, c);
             let dist = (dx * dx + dy * dy).sqrt();
             let gate = centroid_gate * 0.5 * (diagonal(p) + diagonal(c));
             if dist <= gate {
-                dist_pairs.push((dist, i, j));
+                s.dist_pairs.push((dist, i, j));
             }
         }
     }
-    dist_pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
-    for &(_, i, j) in &dist_pairs {
-        if prev_used[i] || cur_used[j] {
+    s.dist_pairs.sort_unstable_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    for k in 0..s.dist_pairs.len() {
+        let (_, i, j) = s.dist_pairs[k];
+        if s.prev_used[i] || s.cur_used[j] {
             continue;
         }
-        prev_used[i] = true;
-        cur_used[j] = true;
-        out.push(displacement(&prev[i], &cur[j]));
+        s.prev_used[i] = true;
+        s.cur_used[j] = true;
+        s.disp.push(displacement(&prev[i], &cur[j]));
     }
-    out
 }
 
 /// Signed centroid displacement `cur - prev`, px.
@@ -413,6 +468,119 @@ mod tests {
         fx.on_detections(3, &[det(10.0, 0.0, 50.0, 100.0)]);
         // no pairs were ever matched -> speed stays at its neutral 0
         assert_eq!(fx.speed(), 0.0);
+    }
+
+    /// The straightforward per-call matcher `match_displacements`
+    /// delegated through before the scratch-reusing form existed; the
+    /// oracle for the equivalence property test below.
+    fn match_displacements_reference(
+        prev: &[Detection],
+        cur: &[Detection],
+        iou_gate: f64,
+        centroid_gate: f64,
+    ) -> Vec<(f64, f64)> {
+        if prev.is_empty() || cur.is_empty() {
+            return Vec::new();
+        }
+        let mut prev_used = vec![false; prev.len()];
+        let mut cur_used = vec![false; cur.len()];
+        let mut out = Vec::new();
+
+        let mut iou_pairs: Vec<(f64, usize, usize)> = Vec::new();
+        for (i, p) in prev.iter().enumerate() {
+            for (j, c) in cur.iter().enumerate() {
+                let iou = p.bbox.iou(&c.bbox);
+                if iou >= iou_gate {
+                    iou_pairs.push((iou, i, j));
+                }
+            }
+        }
+        iou_pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for &(_, i, j) in &iou_pairs {
+            if prev_used[i] || cur_used[j] {
+                continue;
+            }
+            prev_used[i] = true;
+            cur_used[j] = true;
+            out.push(displacement(&prev[i], &cur[j]));
+        }
+
+        let mut dist_pairs: Vec<(f64, usize, usize)> = Vec::new();
+        for (i, p) in prev.iter().enumerate() {
+            if prev_used[i] {
+                continue;
+            }
+            for (j, c) in cur.iter().enumerate() {
+                if cur_used[j] {
+                    continue;
+                }
+                let (dx, dy) = displacement(p, c);
+                let dist = (dx * dx + dy * dy).sqrt();
+                let gate =
+                    centroid_gate * 0.5 * (diagonal(p) + diagonal(c));
+                if dist <= gate {
+                    dist_pairs.push((dist, i, j));
+                }
+            }
+        }
+        dist_pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for &(_, i, j) in &dist_pairs {
+            if prev_used[i] || cur_used[j] {
+                continue;
+            }
+            prev_used[i] = true;
+            cur_used[j] = true;
+            out.push(displacement(&prev[i], &cur[j]));
+        }
+        out
+    }
+
+    #[test]
+    fn scratch_matching_matches_reference_on_random_snapshots() {
+        use crate::testing::prop::{Gen, PropConfig};
+        // one scratch reused across cases: stale pair lists from a
+        // previous (larger) snapshot must not leak into the next
+        let mut scratch = MatchScratch::default();
+        let gen_snap = |g: &mut Gen, n: usize| -> Vec<Detection> {
+            (0..n)
+                .map(|_| {
+                    // degenerate (zero/negative-extent) boxes included:
+                    // they exercise the NaN-IoU sort path
+                    det(
+                        g.f64_in(-10.0, 60.0),
+                        g.f64_in(-10.0, 60.0),
+                        g.f64_in(-2.0, 30.0),
+                        g.f64_in(-2.0, 30.0),
+                    )
+                })
+                .collect()
+        };
+        PropConfig::default().run(
+            "scratch_matching_matches_reference_on_random_snapshots",
+            |g: &mut Gen| {
+                let prev = gen_snap(g, g.usize_in(0, 12));
+                let cur = gen_snap(g, g.usize_in(0, 12));
+                let iou_gate = g.f64_in(0.0, 0.6);
+                let centroid_gate = g.f64_in(0.0, 3.0);
+                let reference = match_displacements_reference(
+                    &prev, &cur, iou_gate, centroid_gate,
+                );
+                match_displacements_into(
+                    &prev,
+                    &cur,
+                    iou_gate,
+                    centroid_gate,
+                    &mut scratch,
+                );
+                scratch.disp.len() == reference.len()
+                    && scratch.disp.iter().zip(&reference).all(
+                        |((ax, ay), (bx, by))| {
+                            ax.to_bits() == bx.to_bits()
+                                && ay.to_bits() == by.to_bits()
+                        },
+                    )
+            },
+        );
     }
 
     #[test]

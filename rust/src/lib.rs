@@ -109,10 +109,27 @@
 //! projected and watts-budgeted selection never lose to the best
 //! (budget-feasible) fixed DNN on any scenario.
 //!
+//! ## Performance model and bench trajectory
+//!
+//! Selection must stay in the paper's "negligible overhead" envelope,
+//! and that is now *measured*, not asserted: the [`perf`] layer owns a
+//! counting `#[global_allocator]` ([`perf::alloc`], allocs/op as a
+//! deterministic metric), the canonical hot-path bench suite
+//! ([`perf::suite`], run by `tod bench`), and the versioned
+//! `BENCH_<n>.json` report + regression gate ([`perf::report`]; CI
+//! fails on >15% `min_ns` regression or any allocs/op increase against
+//! the committed baseline). The hot paths themselves — NMS, greedy
+//! matching, AP pooling, feature extraction, table lookup, the
+//! per-frame [`coordinator::session::StreamSession::step`] and the
+//! multi-stream dispatch queue — run allocation-free in steady state on
+//! reusable scratch, each pinned bit-identical to its straightforward
+//! reference implementation by property tests (DESIGN.md §13).
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
 //! the multi-stream architecture (§8), the power subsystem (§10),
-//! the batching server (§11) and the scenario matrix + conformance
-//! harness (§12), and `EXPERIMENTS.md` for paper-vs-measured results.
+//! the batching server (§11), the scenario matrix + conformance
+//! harness (§12) and the performance model (§13), and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
 
 pub mod app;
 pub mod bench;
@@ -125,6 +142,7 @@ pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod geometry;
+pub mod perf;
 pub mod power;
 pub mod predictor;
 pub mod runtime;
@@ -134,6 +152,13 @@ pub mod telemetry;
 pub mod testing;
 pub mod util;
 pub mod video;
+
+/// Every heap allocation in the process routes through the counting
+/// allocator so `tod bench` can report allocs/op and the zero-alloc
+/// steady-state tests can gate scratch reuse (see [`perf::alloc`]).
+#[global_allocator]
+static GLOBAL_ALLOC: perf::alloc::CountingAllocator =
+    perf::alloc::CountingAllocator;
 
 /// The four DNN operating points the paper serves, ordered from the
 /// lightest to the heaviest weight (the order Algorithm 1 indexes them).

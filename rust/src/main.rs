@@ -32,6 +32,7 @@ use tod::coordinator::projected::ProjectedAccuracyPolicy;
 use tod::coordinator::scheduler::{run_realtime, OracleBackend, RunResult};
 use tod::coordinator::session::StreamSession;
 use tod::dataset::catalog::{generate, SequenceId};
+use tod::perf::{run_suite, BenchReport, SuiteOptions, DEFAULT_TOLERANCE};
 use tod::power::{
     BudgetConfig, BudgetedPolicy, EnergyMeter, PowerBudget, RateCap,
 };
@@ -54,6 +55,7 @@ fn main() {
         Some("dataset") => cmd_dataset(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("bench-report") => cmd_bench_report(),
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
@@ -72,7 +74,7 @@ fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
          usage: tod <figures|search|run|calibrate|multistream|power|\
-         dataset|scenario|serve|bench-report> [flags]\n\
+         dataset|scenario|serve|bench|bench-report> [flags]\n\
          \n\
          figures --all | --id <table1|fig4..fig15|multistream|predictor|\
          power|scenario> [--out results]\n\
@@ -137,6 +139,12 @@ fn usage() {
          batching server (per-DNN batches, bounded queue, panic-free \
          per-request\n  \
          results); --shed rejects on overload instead of blocking\n\
+         bench [--json] [--out BENCH_6.json] [--quick] [--filter SUBSTR]\n  \
+         [--check [--baseline ../BENCH_6.json] [--tolerance 0.15]]  runs \
+         the\n  \
+         hot-path micro-bench suite (see DESIGN.md s13); --check diffs \
+         against\n  \
+         the committed baseline and exits 1 on a pinned-metric regression\n\
          bench-report"
     );
 }
@@ -1293,6 +1301,76 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    use std::path::Path;
+    let opts = SuiteOptions {
+        quick: args.has("quick"),
+        filter: args.get("filter").map(String::from),
+    };
+    let tolerance = match args.get_parse("tolerance", DEFAULT_TOLERANCE) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let check = args.has("check");
+    if check && opts.filter.is_some() {
+        eprintln!(
+            "--filter cannot be combined with --check: skipped cases would \
+             count as missing from the baseline"
+        );
+        return 2;
+    }
+
+    let report = run_suite(&opts);
+
+    if args.has("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        for c in &report.cases {
+            match (c.min_ns, c.mean_ns, c.allocs_per_op) {
+                (Some(min), Some(mean), Some(allocs)) => println!(
+                    "{:<34} min {:>12.1} ns  mean {:>12.1} ns  \
+                     {:>8.2} allocs/op  ({} iters)",
+                    c.name, min, mean, allocs, c.iters
+                ),
+                _ => println!("{:<34} (no samples)", c.name),
+            }
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        if let Err(e) = report.save(Path::new(out)) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {out}");
+    }
+
+    if check {
+        let path = args.get("baseline").unwrap_or("../BENCH_6.json");
+        let baseline = match BenchReport::load(Path::new(path)) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let diff = report.diff(&baseline, tolerance);
+        print!("{}", diff.render());
+        if diff.is_regression() {
+            eprintln!(
+                "bench regression against {path} (tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+            return 1;
+        }
+        println!("no regression against {path}");
+    }
+    0
 }
 
 fn cmd_bench_report() -> i32 {

@@ -1,0 +1,125 @@
+//! Counting global allocator: allocs/op and bytes/op measurement.
+//!
+//! The crate installs [`CountingAllocator`] as the `#[global_allocator]`
+//! (see `lib.rs`), so every heap allocation made by the process bumps a
+//! thread-local counter on its way to the system allocator. The counters
+//! are per-thread, which makes [`count_allocs`] deterministic even when
+//! other threads (e.g. the exec thread pool) allocate concurrently:
+//! a span only observes its own thread's allocations.
+//!
+//! Deallocations are deliberately *not* tracked — the bench suite gates
+//! on "new allocations per operation" (a steady-state hot path must not
+//! touch the allocator at all), not on net live bytes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Thin wrapper around [`System`] that counts allocations per thread.
+///
+/// `realloc` counts as one allocation (growing a `Vec` in place still
+/// round-trips through the allocator), `dealloc` counts as none.
+pub struct CountingAllocator;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump(bytes: usize) {
+    // try_with: allocations during TLS teardown must not abort.
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations made by the current thread since it started.
+pub fn thread_allocs() -> u64 {
+    ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+/// Total bytes requested by the current thread since it started.
+pub fn thread_alloc_bytes() -> u64 {
+    BYTES.try_with(Cell::get).unwrap_or(0)
+}
+
+/// Allocation counts over one closure call on the current thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocDelta {
+    pub allocs: u64,
+    pub bytes: u64,
+}
+
+/// Run `f` and report how many allocations it performed on this thread.
+pub fn count_allocs<R>(f: impl FnOnce() -> R) -> (AllocDelta, R) {
+    let a0 = thread_allocs();
+    let b0 = thread_alloc_bytes();
+    let out = f();
+    let delta = AllocDelta {
+        allocs: thread_allocs() - a0,
+        bytes: thread_alloc_bytes() - b0,
+    };
+    (delta, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_growth_is_counted() {
+        let (d, v) = count_allocs(|| {
+            let mut v: Vec<u64> = Vec::with_capacity(4);
+            v.extend_from_slice(&[1, 2, 3]);
+            v
+        });
+        assert!(d.allocs >= 1, "with_capacity must hit the allocator");
+        assert!(d.bytes >= 32);
+        drop(v);
+    }
+
+    #[test]
+    fn pure_arithmetic_is_alloc_free() {
+        let (d, s) = count_allocs(|| (0..1000u64).map(|x| x * x).sum::<u64>());
+        assert_eq!(d.allocs, 0, "closure must not allocate");
+        assert_eq!(s, 332_833_500);
+    }
+
+    #[test]
+    fn reused_buffer_is_alloc_free_after_warmup() {
+        let mut buf: Vec<f64> = Vec::new();
+        // warm the buffer up to its steady-state capacity
+        buf.extend((0..256).map(|i| i as f64));
+        let (d, _) = count_allocs(|| {
+            buf.clear();
+            buf.extend((0..256).map(|i| i as f64 * 2.0));
+            buf.len()
+        });
+        assert_eq!(d.allocs, 0, "clear+refill within capacity allocates");
+    }
+}

@@ -1,0 +1,25 @@
+//! Performance measurement layer: the counting allocator, the canonical
+//! bench suite and the versioned `BENCH_<n>.json` regression gate.
+//!
+//! Three pieces (see DESIGN.md §13):
+//!
+//! * [`alloc`] — a [`alloc::CountingAllocator`] installed as the crate's
+//!   `#[global_allocator]`; thread-local counters make allocs/op a
+//!   deterministic, noise-free metric.
+//! * [`suite`] — [`suite::run_suite`] executes every hot-path scenario
+//!   (NMS, matching, AP, features, selection, session step, multi-stream
+//!   schedules) under the [`crate::bench`] harness.
+//! * [`report`] — [`report::BenchReport`] serialises a run, loads the
+//!   committed baseline and gates regressions: `min_ns` within 15%,
+//!   allocs/op never up. `null` baseline metrics are record-only
+//!   (bootstrap semantics for baselines authored without a toolchain).
+//!
+//! Driven by `tod bench [--json] [--out PATH] [--baseline PATH] [--check]`.
+
+pub mod alloc;
+pub mod report;
+pub mod suite;
+
+pub use alloc::{count_allocs, AllocDelta, CountingAllocator};
+pub use report::{BenchDiff, BenchReport, CaseReport, DEFAULT_TOLERANCE};
+pub use suite::{run_suite, SuiteOptions, SUITE_GENERATION};

@@ -1,0 +1,389 @@
+//! Versioned bench reports (`BENCH_<n>.json`) and the regression gate.
+//!
+//! A report is a flat list of named cases, each with timing percentiles
+//! (from [`crate::bench::Bench`]) and an allocs/op figure (from
+//! [`crate::perf::alloc`]). Reports serialise through [`crate::util::json`]
+//! so the on-disk form is deterministic (sorted keys, stable float
+//! formatting) and diffs cleanly between PRs.
+//!
+//! ## Bootstrap semantics
+//!
+//! A committed baseline may carry `null` metrics for some or all cases.
+//! Such entries are *record-only*: they pin the suite's shape (every
+//! baseline case must still exist in the current run) without gating its
+//! numbers — the state a baseline is in when it was authored on a machine
+//! without a toolchain, or when a new case has not had numbers pinned
+//! yet. Once a case has real numbers committed, [`diff`](BenchReport::diff)
+//! gates it: `min_ns` may not regress by more than the tolerance
+//! (default [`DEFAULT_TOLERANCE`] = 15%), and `allocs_per_op` may not
+//! increase at all (allocation counts are deterministic, so any increase
+//! is a real regression, not noise). `min_ns` is the gated statistic
+//! because the minimum over hundreds of iterations is far more stable
+//! than the mean on shared CI runners.
+
+use std::io;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Schema identifier written into every report.
+pub const BENCH_SCHEMA: &str = "tod-bench";
+
+/// Schema version (bump when the case format changes shape).
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// Default regression tolerance on `min_ns` (fractional: 0.15 = 15%).
+pub const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// One measured bench case. `None` metrics mean "not pinned" (see the
+/// module docs on bootstrap semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseReport {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: Option<f64>,
+    pub p50_ns: Option<f64>,
+    pub min_ns: Option<f64>,
+    pub allocs_per_op: Option<f64>,
+    /// Operations per second derived from `mean_ns`.
+    pub ops_per_s: Option<f64>,
+}
+
+impl CaseReport {
+    /// A record-only placeholder (all metrics unpinned).
+    pub fn unpinned(name: &str) -> Self {
+        CaseReport {
+            name: name.to_string(),
+            iters: 0,
+            mean_ns: None,
+            p50_ns: None,
+            min_ns: None,
+            allocs_per_op: None,
+            ops_per_s: None,
+        }
+    }
+}
+
+/// A full suite run: schema header plus one entry per case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Report generation in the repo's `BENCH_<n>.json` trajectory.
+    pub generation: u32,
+    /// `"quick"` or `"full"` (target time per case).
+    pub mode: String,
+    pub cases: Vec<CaseReport>,
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) if x.is_finite() => Json::num(x),
+        _ => Json::Null,
+    }
+}
+
+fn read_opt_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        let cases = self.cases.iter().map(|c| {
+            Json::obj(vec![
+                ("name", Json::str(&c.name)),
+                ("iters", Json::num(c.iters as f64)),
+                ("mean_ns", opt_num(c.mean_ns)),
+                ("p50_ns", opt_num(c.p50_ns)),
+                ("min_ns", opt_num(c.min_ns)),
+                ("allocs_per_op", opt_num(c.allocs_per_op)),
+                ("ops_per_s", opt_num(c.ops_per_s)),
+            ])
+        });
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("schema_version", Json::num(BENCH_SCHEMA_VERSION as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("mode", Json::str(&self.mode)),
+            ("cases", Json::arr(cases)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("missing \"schema\"")?;
+        if schema != BENCH_SCHEMA {
+            return Err(format!("unknown schema {schema:?}"));
+        }
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or("missing \"schema_version\"")?;
+        if version as u32 > BENCH_SCHEMA_VERSION {
+            return Err(format!(
+                "schema version {version} is newer than this binary \
+                 ({BENCH_SCHEMA_VERSION})"
+            ));
+        }
+        let generation = j
+            .get("generation")
+            .and_then(Json::as_usize)
+            .ok_or("missing \"generation\"")? as u32;
+        let mode = j
+            .get("mode")
+            .and_then(Json::as_str)
+            .unwrap_or("full")
+            .to_string();
+        let raw = j
+            .get("cases")
+            .and_then(Json::as_arr)
+            .ok_or("missing \"cases\" array")?;
+        let mut cases = Vec::with_capacity(raw.len());
+        for c in raw {
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("case missing \"name\"")?
+                .to_string();
+            cases.push(CaseReport {
+                name,
+                iters: c
+                    .get("iters")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
+                mean_ns: read_opt_num(c, "mean_ns"),
+                p50_ns: read_opt_num(c, "p50_ns"),
+                min_ns: read_opt_num(c, "min_ns"),
+                allocs_per_op: read_opt_num(c, "allocs_per_op"),
+                ops_per_s: read_opt_num(c, "ops_per_s"),
+            });
+        }
+        Ok(BenchReport { generation, mode, cases })
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    fn case(&self, name: &str) -> Option<&CaseReport> {
+        self.cases.iter().find(|c| c.name == name)
+    }
+
+    /// Compare `self` (the current run) against a committed baseline.
+    pub fn diff(&self, baseline: &BenchReport, tolerance: f64) -> BenchDiff {
+        let mut d = BenchDiff::default();
+        for base in &baseline.cases {
+            let Some(cur) = self.case(&base.name) else {
+                d.missing.push(base.name.clone());
+                continue;
+            };
+            let pinned_time = base.min_ns.is_some();
+            let pinned_allocs = base.allocs_per_op.is_some();
+            if !pinned_time && !pinned_allocs {
+                d.unpinned.push(base.name.clone());
+                continue;
+            }
+            if let (Some(b), Some(c)) = (base.min_ns, cur.min_ns) {
+                d.lines.push(DiffLine {
+                    name: base.name.clone(),
+                    metric: "min_ns",
+                    base: b,
+                    cur: c,
+                    regressed: c > b * (1.0 + tolerance),
+                });
+            } else if pinned_time {
+                // pinned in the baseline but absent from the run
+                d.missing.push(format!("{} (min_ns)", base.name));
+            }
+            if let (Some(b), Some(c)) = (base.allocs_per_op, cur.allocs_per_op)
+            {
+                d.lines.push(DiffLine {
+                    name: base.name.clone(),
+                    metric: "allocs_per_op",
+                    base: b,
+                    cur: c,
+                    // allocation counts are deterministic: no tolerance
+                    regressed: c > b,
+                });
+            } else if pinned_allocs {
+                d.missing.push(format!("{} (allocs_per_op)", base.name));
+            }
+        }
+        for cur in &self.cases {
+            if baseline.case(&cur.name).is_none() {
+                d.new_cases.push(cur.name.clone());
+            }
+        }
+        d
+    }
+}
+
+/// One gated metric comparison.
+#[derive(Debug, Clone)]
+pub struct DiffLine {
+    pub name: String,
+    pub metric: &'static str,
+    pub base: f64,
+    pub cur: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of a baseline diff; `is_regression()` drives the CI exit code.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    pub lines: Vec<DiffLine>,
+    /// Baseline cases with no pinned metrics (record-only).
+    pub unpinned: Vec<String>,
+    /// Baseline cases (or pinned metrics) absent from the current run.
+    pub missing: Vec<String>,
+    /// Current cases the baseline does not know about.
+    pub new_cases: Vec<String>,
+}
+
+impl BenchDiff {
+    /// True when any pinned metric regressed or a baseline case vanished.
+    pub fn is_regression(&self) -> bool {
+        !self.missing.is_empty() || self.lines.iter().any(|l| l.regressed)
+    }
+
+    /// Human-readable summary (one line per comparison).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            let delta = if l.base > 0.0 {
+                (l.cur / l.base - 1.0) * 100.0
+            } else {
+                f64::INFINITY
+            };
+            out.push_str(&format!(
+                "{} {:<34} {:>13}: {:>12.1} -> {:>12.1}  ({:+.1}%)\n",
+                if l.regressed { "FAIL" } else { " ok " },
+                l.name,
+                l.metric,
+                l.base,
+                l.cur,
+                delta,
+            ));
+        }
+        for n in &self.unpinned {
+            out.push_str(&format!("note {n:<34} baseline unpinned (record-only)\n"));
+        }
+        for n in &self.missing {
+            out.push_str(&format!("FAIL {n:<34} missing from current run\n"));
+        }
+        for n in &self.new_cases {
+            out.push_str(&format!("note {n:<34} new case (not in baseline)\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(name: &str, min_ns: f64, allocs: f64) -> CaseReport {
+        CaseReport {
+            name: name.to_string(),
+            iters: 100,
+            mean_ns: Some(min_ns * 1.1),
+            p50_ns: Some(min_ns * 1.05),
+            min_ns: Some(min_ns),
+            allocs_per_op: Some(allocs),
+            ops_per_s: Some(1e9 / (min_ns * 1.1)),
+        }
+    }
+
+    fn report(cases: Vec<CaseReport>) -> BenchReport {
+        BenchReport { generation: 6, mode: "full".to_string(), cases }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let r = report(vec![case("nms/dense", 1234.5, 0.0)]);
+        let j = r.to_json();
+        let back = BenchReport::from_json(&j).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn null_metrics_roundtrip_as_unpinned() {
+        let r = report(vec![CaseReport::unpinned("step/session")]);
+        let text = r.to_json().to_pretty();
+        assert!(text.contains("\"min_ns\": null"));
+        let back =
+            BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cases[0].min_ns, None);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report(vec![case("a", 1000.0, 2.0)]);
+        let cur = report(vec![case("a", 1100.0, 2.0)]);
+        let d = cur.diff(&base, 0.15);
+        assert!(!d.is_regression(), "{}", d.render());
+    }
+
+    #[test]
+    fn slow_regression_fails() {
+        let base = report(vec![case("a", 1000.0, 2.0)]);
+        let cur = report(vec![case("a", 1200.0, 2.0)]);
+        let d = cur.diff(&base, 0.15);
+        assert!(d.is_regression());
+        assert!(d.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn alloc_increase_fails_without_tolerance() {
+        let base = report(vec![case("a", 1000.0, 0.0)]);
+        let mut faster = case("a", 500.0, 1.0);
+        faster.allocs_per_op = Some(1.0);
+        let cur = report(vec![faster]);
+        let d = cur.diff(&base, 0.15);
+        assert!(d.is_regression(), "one new alloc/op must gate");
+    }
+
+    #[test]
+    fn unpinned_baseline_records_only() {
+        let base = report(vec![
+            CaseReport::unpinned("a"),
+            CaseReport::unpinned("b"),
+        ]);
+        let cur = report(vec![case("a", 999.0, 3.0), case("b", 1.0, 0.0)]);
+        let d = cur.diff(&base, 0.15);
+        assert!(!d.is_regression());
+        assert_eq!(d.unpinned.len(), 2);
+    }
+
+    #[test]
+    fn missing_case_fails_even_when_unpinned_elsewhere() {
+        let base = report(vec![case("a", 1000.0, 0.0)]);
+        let cur = report(vec![case("other", 10.0, 0.0)]);
+        let d = cur.diff(&base, 0.15);
+        assert!(d.is_regression());
+        assert_eq!(d.missing, vec!["a".to_string()]);
+        assert_eq!(d.new_cases, vec!["other".to_string()]);
+    }
+
+    #[test]
+    fn newer_schema_is_rejected() {
+        let mut j = report(vec![]).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".to_string(), Json::num(999.0));
+        }
+        assert!(BenchReport::from_json(&j).is_err());
+    }
+}

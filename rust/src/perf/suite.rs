@@ -1,0 +1,367 @@
+//! The canonical bench suite behind `tod bench`.
+//!
+//! One function, [`run_suite`], executes every hot-path scenario the
+//! standalone `rust/benches/*` binaries cover — NMS, IoU, greedy
+//! matching, AP pooling, feature extraction, selection, the per-frame
+//! session step and a whole multi-stream schedule — under the
+//! deterministic [`crate::bench`] harness, and returns a
+//! [`BenchReport`] ready to diff against the committed `BENCH_<n>.json`
+//! baseline. Case names are a contract: the baseline pins the suite's
+//! shape, so renaming a case is a schema change (record a new baseline
+//! in the same PR).
+//!
+//! allocs/op is measured per case by running the closure under
+//! [`crate::perf::alloc::count_allocs`] *after* a short warmup, so
+//! steady-state scratch reuse shows up as 0 even when first-call setup
+//! allocates.
+
+use crate::bench::{black_box, Bench};
+use crate::coordinator::policy::MbbsPolicy;
+use crate::coordinator::projected::ProjectedAccuracyPolicy;
+use crate::coordinator::multistream::{
+    DispatchPolicy, MultiStreamScheduler,
+};
+use crate::coordinator::scheduler::OracleBackend;
+use crate::coordinator::session::{SessionEvent, StreamSession};
+use crate::dataset::catalog::{generate, SequenceId};
+use crate::detection::{nms, Detection, PERSON_CLASS};
+use crate::eval::ap::{ApMethod, SequenceEval};
+use crate::eval::matching::{match_frame, FrameMatcher, IOU_THRESHOLD};
+use crate::features::FeatureExtractor;
+use crate::geometry::BBox;
+use crate::perf::alloc::count_allocs;
+use crate::perf::report::{BenchReport, CaseReport};
+use crate::predictor::{calibrate, CalibrationConfig};
+use crate::sim::latency::{ContentionModel, LatencyModel};
+use crate::sim::oracle::OracleDetector;
+use crate::util::rng::Rng;
+use crate::DnnKind;
+
+/// Current report generation: the `<n>` of the committed `BENCH_<n>.json`.
+pub const SUITE_GENERATION: u32 = 6;
+
+/// Iterations measured under the allocation counter per case.
+const ALLOC_ITERS: u64 = 64;
+
+/// Suite configuration (CLI flags map 1:1).
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOptions {
+    /// Short target per case (~8x faster, noisier): CI and smoke runs.
+    pub quick: bool,
+    /// Only run cases whose name contains this substring. A filtered
+    /// report fails a full-baseline diff (missing cases) by design.
+    pub filter: Option<String>,
+}
+
+struct Suite {
+    bench: Bench,
+    filter: Option<String>,
+    cases: Vec<CaseReport>,
+}
+
+impl Suite {
+    fn new(opts: &SuiteOptions) -> Self {
+        let mut bench = Bench::new();
+        if opts.quick {
+            bench.target = std::time::Duration::from_millis(90);
+            bench.warmup = std::time::Duration::from_millis(20);
+        }
+        Suite { bench, filter: opts.filter.clone(), cases: Vec::new() }
+    }
+
+    /// Register + run one case: allocs/op first (doubles as scratch
+    /// warmup), then the timing loop.
+    fn case(&mut self, name: &str, mut f: impl FnMut()) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..16 {
+            f();
+        }
+        let (d, _) = count_allocs(|| {
+            for _ in 0..ALLOC_ITERS {
+                f();
+            }
+        });
+        let allocs = d.allocs as f64 / ALLOC_ITERS as f64;
+        let r = self.bench.case(name, f).clone();
+        self.cases.push(CaseReport {
+            name: r.name,
+            iters: r.iters as u64,
+            mean_ns: Some(r.mean_ns),
+            p50_ns: Some(r.p50_ns),
+            min_ns: Some(r.min_ns),
+            allocs_per_op: Some(allocs),
+            ops_per_s: if r.mean_ns > 0.0 {
+                Some(1e9 / r.mean_ns)
+            } else {
+                None
+            },
+        });
+    }
+
+    fn finish(self, mode: &str) -> BenchReport {
+        BenchReport {
+            generation: SUITE_GENERATION,
+            mode: mode.to_string(),
+            cases: self.cases,
+        }
+    }
+}
+
+/// Mixed-class detection set with MOT-like box geometry.
+fn synth_dets(n: usize, seed: u64) -> Vec<Detection> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            Detection::new(
+                BBox::new(
+                    rng.uniform(0.0, 1800.0),
+                    rng.uniform(0.0, 1000.0),
+                    rng.uniform(10.0, 120.0),
+                    rng.uniform(20.0, 280.0),
+                ),
+                rng.uniform(0.2, 1.0) as f32,
+                if i % 7 == 0 { 2 } else { PERSON_CLASS },
+            )
+        })
+        .collect()
+}
+
+fn shifted(dets: &[Detection], dx: f64, dy: f64) -> Vec<Detection> {
+    dets.iter()
+        .map(|d| Detection::new(d.bbox.shifted(dx, dy), d.score, d.class_id))
+        .collect()
+}
+
+/// Run the full suite and collect a report.
+pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
+    let mut s = Suite::new(opts);
+
+    // -- detection: NMS + pairwise IoU -----------------------------------
+    for n in [16usize, 64] {
+        let dets = synth_dets(n, 11 + n as u64);
+        s.case(&format!("detection/nms/n={n}"), || {
+            black_box(nms(black_box(&dets), 0.5));
+        });
+    }
+    {
+        let dets = synth_dets(32, 7);
+        s.case("detection/iou_matrix/n=32", || {
+            let mut acc = 0.0f64;
+            for a in &dets {
+                for b in &dets {
+                    acc += a.bbox.iou(&b.bbox);
+                }
+            }
+            black_box(acc);
+        });
+    }
+
+    // -- eval: greedy matching + AP pooling ------------------------------
+    let seq = generate(SequenceId::Mot04);
+    let oracle = OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    );
+    {
+        let gt = seq.gt(10);
+        let dets = oracle.detect(10, gt, DnnKind::Y416);
+        s.case("eval/match_frame", || {
+            black_box(match_frame(
+                black_box(&dets),
+                black_box(gt),
+                IOU_THRESHOLD,
+            ));
+        });
+        let mut matcher = FrameMatcher::new();
+        let mut eval = SequenceEval::new();
+        s.case("eval/matcher_steady", || {
+            eval.clear();
+            matcher.match_into(
+                black_box(&dets),
+                black_box(gt),
+                IOU_THRESHOLD,
+                &mut eval,
+            );
+            black_box(eval.n_scored());
+        });
+    }
+    {
+        let mut eval = SequenceEval::new();
+        for f in 1..=60u64 {
+            let gt = seq.gt(f);
+            let dets = oracle.detect(f, gt, DnnKind::TinyY416);
+            eval.push(&match_frame(&dets, gt, IOU_THRESHOLD));
+        }
+        s.case("eval/ap_all_point", || {
+            black_box(eval.ap(ApMethod::AllPoint));
+        });
+    }
+
+    // -- features: extraction + per-frame decision -----------------------
+    {
+        let dets = synth_dets(42, 42);
+        let snap = shifted(&dets, 6.0, 1.0);
+        let mut fx = FeatureExtractor::new(1920.0, 1080.0);
+        let mut frame = 0u64;
+        s.case("features/on_detections/n=42", || {
+            frame += 1;
+            let cur = if frame % 2 == 0 { &dets } else { &snap };
+            fx.on_detections(frame, black_box(cur));
+        });
+        let policy = MbbsPolicy::tod_default();
+        s.case("features/frame_decision/n=42", || {
+            let f = fx.features(black_box(&dets));
+            black_box(policy.select_pure(f.mbbs));
+        });
+    }
+
+    // -- predictor: table projection -------------------------------------
+    {
+        let table = calibrate(&CalibrationConfig::quick(30.0));
+        let projected = ProjectedAccuracyPolicy::new(
+            table.clone(),
+            &LatencyModel::deterministic(),
+        );
+        s.case("predictor/project", || {
+            black_box(table.project(
+                black_box(DnnKind::Y416),
+                black_box(0.012),
+                black_box(0.008),
+            ));
+        });
+        let f = crate::features::FrameFeatures {
+            mbbs: 0.012,
+            count: 20,
+            density: 0.2,
+            speed: 0.008,
+        };
+        s.case("predictor/select", || {
+            black_box(projected.select_pure(black_box(&f)));
+        });
+    }
+
+    // -- coordinator: the per-frame session step -------------------------
+    {
+        let step_seq = generate(SequenceId::Mot02);
+        let mut det = OracleBackend(OracleDetector::new(
+            step_seq.spec.seed,
+            step_seq.spec.width as f64,
+            step_seq.spec.height as f64,
+        ));
+        let mut lat = LatencyModel::deterministic();
+        let mut sess =
+            StreamSession::new(&step_seq, MbbsPolicy::tod_default(), 30.0);
+        s.case("session/step", || {
+            if matches!(
+                sess.step(&mut det, &mut lat),
+                SessionEvent::Finished
+            ) {
+                // stream exhausted mid-measurement: reopen (allocates,
+                // but only once per full sequence of steps)
+                sess = StreamSession::new(
+                    &step_seq,
+                    MbbsPolicy::tod_default(),
+                    30.0,
+                );
+                black_box(sess.step(&mut det, &mut lat));
+            }
+        });
+    }
+
+    // -- coordinator: whole multi-stream schedules -----------------------
+    {
+        let seqs: Vec<(SequenceId, crate::dataset::synth::Sequence)> =
+            SequenceId::ALL.iter().map(|&id| (id, generate(id))).collect();
+        for (label, dispatch) in [
+            ("rr", DispatchPolicy::RoundRobin),
+            ("edf", DispatchPolicy::EarliestDeadlineFirst),
+        ] {
+            s.case(&format!("multistream/{label}_4stream"), || {
+                let mut sched = MultiStreamScheduler::new(
+                    dispatch,
+                    ContentionModel::jetson_nano(),
+                    LatencyModel::deterministic(),
+                );
+                for i in 0..4 {
+                    let (id, sq) = &seqs[i % seqs.len()];
+                    let backend = OracleBackend(OracleDetector::new(
+                        sq.spec.seed,
+                        sq.spec.width as f64,
+                        sq.spec.height as f64,
+                    ));
+                    sched.add_stream(
+                        StreamSession::new(
+                            sq,
+                            MbbsPolicy::tod_default(),
+                            id.eval_fps(),
+                        ),
+                        Box::new(backend),
+                    );
+                }
+                black_box(sched.run());
+            });
+        }
+    }
+
+    s.finish(if opts.quick { "quick" } else { "full" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The suite must run end to end and report every case with finite
+    /// numbers; keep this fast by filtering to the cheapest case.
+    #[test]
+    fn filtered_suite_reports_pinnable_numbers() {
+        let opts = SuiteOptions {
+            quick: true,
+            filter: Some("predictor/select".to_string()),
+        };
+        let r = run_suite(&opts);
+        assert_eq!(r.cases.len(), 1);
+        let c = &r.cases[0];
+        assert_eq!(c.name, "predictor/select");
+        assert!(c.mean_ns.unwrap() > 0.0);
+        assert!(c.min_ns.unwrap() <= c.mean_ns.unwrap());
+        assert!(c.allocs_per_op.unwrap() >= 0.0);
+    }
+
+    /// Case names are a contract with the committed baseline.
+    #[test]
+    fn suite_shape_is_stable() {
+        // cheap structural check: the names the baseline pins must all
+        // be produced by a full (unfiltered) suite. We don't run the
+        // timing loops here — just assert the name list below matches
+        // the one `run_suite` registers (kept in one place on purpose).
+        assert_eq!(SUITE_CASE_NAMES.len(), 13);
+        let mut sorted = SUITE_CASE_NAMES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), SUITE_CASE_NAMES.len(), "duplicate names");
+    }
+}
+
+/// Every case name `run_suite` registers, in registration order — the
+/// shape contract `BENCH_<n>.json` pins (see `report.rs` bootstrap
+/// semantics).
+pub const SUITE_CASE_NAMES: [&str; 13] = [
+    "detection/nms/n=16",
+    "detection/nms/n=64",
+    "detection/iou_matrix/n=32",
+    "eval/match_frame",
+    "eval/matcher_steady",
+    "eval/ap_all_point",
+    "features/on_detections/n=42",
+    "features/frame_decision/n=42",
+    "predictor/project",
+    "predictor/select",
+    "session/step",
+    "multistream/rr_4stream",
+    "multistream/edf_4stream",
+];

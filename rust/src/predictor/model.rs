@@ -184,11 +184,17 @@ fn bracket(axis: &[f64], x: f64) -> (usize, usize, f64) {
     if x >= axis[n - 1] {
         return (n - 1, n - 1, 0.0);
     }
-    // linear scan: axes are tiny (≤ ~10 cells), branch-predictable
-    let mut i = 0;
-    while axis[i + 1] < x {
-        i += 1;
-    }
+    // Monotone bin lookup via binary search. With the edge clamps above,
+    // a finite x is strictly inside (axis[0], axis[n-1]), so the
+    // partition point of `v < x` lies in [1, n-1] and `i` reproduces the
+    // reference linear scan's "last cell with axis[i+1] >= x not yet
+    // passed" exactly (pinned by `bracket_matches_reference_scan`).
+    // A NaN x makes every compare false (partition point 0); .max(1)
+    // lands on the scan's i = 0 / t = NaN result instead of
+    // underflowing. Calibration axes today are tiny, but AyE-Edge-style
+    // deployment search sweeps dense tables where the per-lookup O(n)
+    // scan was measurable.
+    let i = axis.partition_point(|v| *v < x).max(1) - 1;
     let t = (x - axis[i]) / (axis[i + 1] - axis[i]);
     (i, i + 1, t)
 }
@@ -208,6 +214,53 @@ mod tests {
             vec![0.0, 0.01],
             ap,
         )
+    }
+
+    /// The pre-optimisation linear scan, kept as the equivalence oracle
+    /// for the `partition_point` lookup.
+    fn bracket_reference(axis: &[f64], x: f64) -> (usize, usize, f64) {
+        let n = axis.len();
+        if n == 1 || x <= axis[0] {
+            return (0, 0, 0.0);
+        }
+        if x >= axis[n - 1] {
+            return (n - 1, n - 1, 0.0);
+        }
+        let mut i = 0;
+        while axis[i + 1] < x {
+            i += 1;
+        }
+        let t = (x - axis[i]) / (axis[i + 1] - axis[i]);
+        (i, i + 1, t)
+    }
+
+    #[test]
+    fn bracket_matches_reference_scan() {
+        use crate::testing::prop::PropConfig;
+        PropConfig::default().run("bracket == linear scan", |g| {
+            // strictly ascending axis of 1..12 cells
+            let n = g.usize_in(1, 12);
+            let mut axis = Vec::with_capacity(n);
+            let mut v = g.f64_in(0.0, 0.01);
+            for _ in 0..n {
+                axis.push(v);
+                v += g.f64_in(1e-9, 0.05);
+            }
+            // probe inside, outside, and exactly on cell centers
+            let x = match g.usize_in(0, 3) {
+                0 => g.f64_in(-0.05, 0.6),
+                1 => axis[g.usize_in(0, n - 1)],
+                2 => f64::NAN,
+                _ => g.f64_in(0.0, 0.3),
+            };
+            let got = bracket(&axis, x);
+            let want = bracket_reference(&axis, x);
+            // NaN t values compare equal only via bits
+            got.0 == want.0
+                && got.1 == want.1
+                && (got.2 == want.2
+                    || (got.2.is_nan() && want.2.is_nan()))
+        });
     }
 
     #[test]

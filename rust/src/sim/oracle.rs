@@ -56,6 +56,22 @@ impl OracleDetector {
         gt: &[GtEntry],
         dnn: DnnKind,
     ) -> Vec<Detection> {
+        let mut out = Vec::with_capacity(gt.len() + 2);
+        self.detect_into(frame, gt, dnn, &mut out);
+        out
+    }
+
+    /// [`detect`](Self::detect) into a caller-owned buffer (cleared
+    /// first) — the zero-alloc steady-state form used by the serving
+    /// loop. Identical RNG stream, identical detections.
+    pub fn detect_into(
+        &self,
+        frame: u64,
+        gt: &[GtEntry],
+        dnn: DnnKind,
+        out: &mut Vec<Detection>,
+    ) {
+        out.clear();
         let p = self.profile(dnn);
         // Independent stream per (frame, dnn): mix both into the seed.
         let mut rng = Rng::new(
@@ -63,7 +79,6 @@ impl OracleDetector {
                 ^ frame.wrapping_mul(0x9e3779b97f4a7c15)
                 ^ ((dnn.index() as u64 + 1) << 56),
         );
-        let mut out = Vec::with_capacity(gt.len() + 2);
         for g in gt {
             // The detector sees persons only (the paper filters classes).
             if !g.class.is_person() {
@@ -113,7 +128,6 @@ impl OracleDetector {
                 PERSON_CLASS,
             ));
         }
-        out
     }
 }
 
@@ -165,6 +179,22 @@ mod tests {
         let c = o.detect(11, &gt, DnnKind::Y416);
         let d = o.detect(10, &gt, DnnKind::Y288);
         assert!(a != c || a != d); // different streams
+    }
+
+    #[test]
+    fn detect_into_matches_detect_with_stale_buffer() {
+        let o = OracleDetector::new(1, 1920.0, 1080.0);
+        let gt = large_gt(5);
+        let mut buf = vec![
+            Detection::new(BBox::new(0.0, 0.0, 1.0, 1.0), 0.5, 99);
+            32
+        ];
+        for f in 0..50u64 {
+            for dnn in [DnnKind::TinyY288, DnnKind::Y416] {
+                o.detect_into(f, &gt, dnn, &mut buf);
+                assert_eq!(buf, o.detect(f, &gt, dnn));
+            }
+        }
     }
 
     #[test]

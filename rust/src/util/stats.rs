@@ -101,10 +101,20 @@ pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
-    if xs.len() == 1 {
-        return xs[0];
-    }
     let mut v: Vec<f64> = xs.to_vec();
+    median_mut(&mut v)
+}
+
+/// In-place form of [`median`] for hot paths that own a reusable scratch
+/// buffer: same selection arithmetic, no clone. The slice is partially
+/// reordered.
+pub fn median_mut(v: &mut [f64]) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    if v.len() == 1 {
+        return v[0];
+    }
     let mid = v.len() / 2;
     let (_, m, _) = v.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
     let hi = *m;
@@ -286,6 +296,26 @@ mod tests {
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
         assert_eq!(median(&[5.0]), 5.0);
         assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn median_mut_matches_median() {
+        for xs in [
+            vec![],
+            vec![5.0],
+            vec![3.0, 1.0, 2.0],
+            vec![4.0, 1.0, 2.0, 3.0],
+            vec![f64::NAN, 1.0, 2.0],
+            vec![f64::INFINITY, f64::NEG_INFINITY, 0.0, 1.0],
+        ] {
+            let by_ref = median(&xs);
+            let mut scratch = xs.clone();
+            let in_place = median_mut(&mut scratch);
+            assert!(
+                by_ref.to_bits() == in_place.to_bits(),
+                "{xs:?}: {by_ref} vs {in_place}"
+            );
+        }
     }
 
     #[test]

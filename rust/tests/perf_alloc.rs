@@ -1,0 +1,138 @@
+//! Steady-state allocation discipline of the per-frame hot path.
+//!
+//! `StreamSession::step` carries reusable buffers (detection scratch,
+//! carried detections, greedy-matching scratch, feature-extractor
+//! scratch) plus run-long accumulators pre-sized in `StreamSession::new`.
+//! Once every elastic buffer has grown to fit the largest frame it has
+//! seen, a step must not touch the allocator at all — that is the
+//! "steady-state allocs/frame == 0" acceptance bound, measured here
+//! through the crate's counting global allocator.
+//!
+//! A step is classified *steady* from the sequence itself: its frame
+//! presents no more work (ground-truth partition sizes, worst-case
+//! detection count over every DNN the policy could pick) than the
+//! maximum already absorbed by an earlier step, and the previous step
+//! did not raise any of those maxima (scratch sized from the carried
+//! set lags the step that grew it by one). Steps that raise a maximum
+//! are legitimate growth, not a regression, and are exempt.
+
+use tod::coordinator::{
+    MbbsPolicy, OracleBackend, SessionEvent, StreamSession,
+};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::detection::passes_score_filter;
+use tod::perf::count_allocs;
+use tod::sim::latency::LatencyModel;
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+#[test]
+fn session_step_is_alloc_free_in_steady_state() {
+    let seq = generate(SequenceId::Mot02);
+    let n = seq.n_frames() as usize;
+    let oracle = OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    );
+
+    // Worst-case per-frame demand over every DNN (the oracle is a pure
+    // function of (seed, frame, dnn), so this is exact, not sampled).
+    let raw_demand = |f: u64| -> usize {
+        DnnKind::ALL
+            .iter()
+            .map(|&d| oracle.detect(f, seq.gt(f), d).len())
+            .max()
+            .unwrap_or(0)
+    };
+    let filt_demand = |f: u64| -> usize {
+        DnnKind::ALL
+            .iter()
+            .map(|&d| {
+                oracle
+                    .detect(f, seq.gt(f), d)
+                    .iter()
+                    .filter(|d| passes_score_filter(d))
+                    .count()
+            })
+            .max()
+            .unwrap_or(0)
+    };
+    let gt_parts = |f: u64| -> (usize, usize) {
+        let c = seq.gt(f).iter().filter(|g| g.is_considered()).count();
+        (c, seq.gt(f).len() - c)
+    };
+
+    let mut det = OracleBackend(oracle.clone());
+    let mut lat = LatencyModel::deterministic();
+    let mut sess = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
+
+    // Absorbed maxima: raw/filtered counts realised on inferred frames
+    // (for the chosen DNN), gt partition sizes on every frame.
+    let (mut cap_raw, mut cap_filt) = (0usize, 0usize);
+    let (mut cap_cons, mut cap_ign) = (0usize, 0usize);
+    let mut prev_raised = true;
+    let mut steady_steps = 0usize;
+
+    for i in 0..n {
+        let f = (i + 1) as u64;
+        let (cons, ign) = gt_parts(f);
+        let steady = i >= n / 4
+            && !prev_raised
+            && raw_demand(f) <= cap_raw
+            && filt_demand(f) <= cap_filt
+            && cons <= cap_cons
+            && ign <= cap_ign;
+
+        let (delta, ev) = count_allocs(|| sess.step(&mut det, &mut lat));
+        assert!(
+            !matches!(ev, SessionEvent::Finished),
+            "sequence exhausted early at step {i}"
+        );
+
+        if steady {
+            assert_eq!(
+                delta.allocs, 0,
+                "steady-state step {i} (frame {f}) made {} allocations \
+                 ({} bytes)",
+                delta.allocs, delta.bytes
+            );
+            steady_steps += 1;
+        }
+
+        // update absorbed maxima from what the step actually did
+        prev_raised = false;
+        if let SessionEvent::Inferred { dnn, .. }
+        | SessionEvent::InferenceFailed { dnn, .. } = ev
+        {
+            let dets = oracle.detect(f, seq.gt(f), dnn);
+            let raw = dets.len();
+            let filt =
+                dets.iter().filter(|d| passes_score_filter(d)).count();
+            if raw > cap_raw {
+                cap_raw = raw;
+                prev_raised = true;
+            }
+            if filt > cap_filt {
+                cap_filt = filt;
+                prev_raised = true;
+            }
+        }
+        if cons > cap_cons {
+            cap_cons = cons;
+            prev_raised = true;
+        }
+        if ign > cap_ign {
+            cap_ign = ign;
+            prev_raised = true;
+        }
+    }
+
+    // The guard must not be vacuous: on MOT17-02 (600 frames, stable
+    // density) the bulk of the back three-quarters is steady.
+    assert!(
+        steady_steps >= n / 10,
+        "only {steady_steps}/{n} steps classified steady — demand guard \
+         too strict to certify the zero-alloc bound"
+    );
+}
