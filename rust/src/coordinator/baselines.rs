@@ -95,6 +95,7 @@ pub fn run_chameleon_lite(
     let mut dnn_series = Vec::with_capacity(seq.n_frames() as usize);
     let (fw, fh) = (seq.spec.width as f64, seq.spec.height as f64);
     let mut n_failed = 0u64;
+    let mut failed_busy_s = 0.0f64;
     // a failed backend call marks the *frame* failed (n_failed counts
     // frames, matching RunResult::n_failed semantics — one profiling
     // frame issues several calls) and contributes an empty candidate
@@ -188,6 +189,9 @@ pub fn run_chameleon_lite(
                 }
                 if frame_failed {
                     n_failed += 1;
+                    if let Some((s, e)) = interval {
+                        failed_busy_s += e - s;
+                    }
                 }
                 if let Some((s, e)) = interval {
                     trace.push(s, e, if profile_now { DnnKind::Y416 } else { dnn });
@@ -217,6 +221,7 @@ pub fn run_chameleon_lite(
         n_inferred: acc.n_inferred(),
         n_dropped: acc.n_dropped(),
         n_failed,
+        failed_busy_s,
         deploy_counts: deploy,
         switches,
         power: crate::power::EnergyMeter::from_trace(&trace).summary(),

@@ -30,6 +30,9 @@ pub use policy::{
     FixedPolicy, MbbsPolicy, SelectionPolicy, ThresholdError, Thresholds,
 };
 pub use projected::ProjectedAccuracyPolicy;
-pub use scheduler::{run_offline, run_realtime, Detector, OracleBackend, RunResult};
+pub use scheduler::{
+    run_offline, run_realtime, run_realtime_observed, Detector, OracleBackend,
+    RunResult,
+};
 pub use search::{grid_search, GridSearchResult, SearchSpace};
 pub use session::{SessionEvent, StreamSession};

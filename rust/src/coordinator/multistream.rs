@@ -363,7 +363,10 @@ impl<'a> MultiStreamScheduler<'a> {
             .collect();
         let traces: Vec<&crate::telemetry::tegrastats::ScheduleTrace> =
             per_stream.iter().map(|r| &r.trace).collect();
-        let utilisation = UtilisationSummary::from_traces(&traces);
+        let failed_busy: f64 =
+            per_stream.iter().map(|r| r.failed_busy_s).sum();
+        let utilisation = UtilisationSummary::from_traces(&traces)
+            .with_failed_busy(failed_busy);
         let power = EnergyMeter::from_trace(&utilisation.merged).summary();
         MultiStreamResult {
             per_stream,

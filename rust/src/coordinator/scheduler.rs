@@ -117,6 +117,10 @@ pub struct RunResult {
     /// the backend reported an error; their previous detections were
     /// carried forward. Always 0 for simulated backends.
     pub n_failed: u64,
+    /// Accelerator-busy seconds spent on those failed inferences —
+    /// busy time that bought no fresh detections (surfaced in
+    /// [`crate::telemetry::utilisation::UtilisationSummary`]).
+    pub failed_busy_s: f64,
     /// Inference count per DNN (Fig. 10's deployment frequency).
     pub deploy_counts: [u64; DnnKind::COUNT],
     /// Number of DNN switches between consecutive inferences.
@@ -166,7 +170,23 @@ pub fn run_realtime(
     latency: &mut LatencyModel,
     eval_fps: f64,
 ) -> RunResult {
+    run_realtime_observed(seq, policy, detector, latency, eval_fps, None)
+}
+
+/// [`run_realtime`] with an optional observability recorder attached as
+/// `(recorder, stream_id)` — the trace spine of `tod run --trace`.
+pub fn run_realtime_observed(
+    seq: &Sequence,
+    policy: &mut dyn SelectionPolicy,
+    detector: &mut dyn Detector,
+    latency: &mut LatencyModel,
+    eval_fps: f64,
+    recorder: Option<(crate::obs::SharedRecorder, u32)>,
+) -> RunResult {
     let mut session = StreamSession::new(seq, policy, eval_fps);
+    if let Some((rec, stream)) = recorder {
+        session = session.with_recorder(rec, stream, 0.0);
+    }
     while session.step(detector, latency) != SessionEvent::Finished {}
     session.finish()
 }
@@ -215,6 +235,9 @@ pub fn run_offline(
         n_inferred: seq.n_frames(),
         n_dropped: 0,
         n_failed,
+        // offline failures spend virtual accelerator time too, but the
+        // mode exists only for AP ceilings; attribute nothing
+        failed_busy_s: 0.0,
         deploy_counts: {
             let mut d = [0u64; DnnKind::COUNT];
             d[dnn.index()] = seq.n_frames();

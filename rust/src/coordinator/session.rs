@@ -22,6 +22,7 @@ use crate::detection::{filter_detections_into, Detection};
 use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{FrameMatcher, IOU_THRESHOLD};
 use crate::features::FeatureExtractor;
+use crate::obs::{Event as ObsEvent, SharedRecorder};
 use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::LatencyModel;
 use crate::telemetry::tegrastats::ScheduleTrace;
@@ -86,6 +87,16 @@ pub struct StreamSession<'a> {
     detect_buf: Vec<Detection>,
     /// Reusable greedy-matching scratch for per-frame evaluation.
     matcher: FrameMatcher,
+    /// Observability sink; `None` (the default) keeps the hot path at
+    /// a single branch per emission site.
+    recorder: Option<SharedRecorder>,
+    /// Stream id stamped on emitted events.
+    obs_stream: u32,
+    /// Board-time offset added to every emitted timestamp, so epoch-
+    /// shifted streams share one timeline in multi-stream traces.
+    obs_epoch: f64,
+    /// Accelerator-busy seconds spent on inferences that then failed.
+    failed_busy_s: f64,
 }
 
 impl<'a> StreamSession<'a> {
@@ -127,6 +138,37 @@ impl<'a> StreamSession<'a> {
             next_frame: 1,
             detect_buf: Vec::new(),
             matcher: FrameMatcher::new(),
+            recorder: None,
+            obs_stream: 0,
+            obs_epoch: 0.0,
+            failed_busy_s: 0.0,
+        }
+    }
+
+    /// Attach an observability recorder: events are stamped with
+    /// `stream` and shifted by `epoch` (the stream's join time on the
+    /// board clock; 0.0 for single-stream runs). Emits
+    /// [`ObsEvent::StreamJoined`] immediately.
+    pub fn with_recorder(
+        mut self,
+        recorder: SharedRecorder,
+        stream: u32,
+        epoch: f64,
+    ) -> Self {
+        recorder
+            .borrow_mut()
+            .record(&ObsEvent::StreamJoined { stream, t: epoch });
+        self.recorder = Some(recorder);
+        self.obs_stream = stream;
+        self.obs_epoch = epoch;
+        self
+    }
+
+    /// Record `ev` if a recorder is attached (one branch otherwise).
+    #[inline]
+    fn emit(&self, ev: ObsEvent) {
+        if let Some(rec) = &self.recorder {
+            rec.borrow_mut().record(&ev);
         }
     }
 
@@ -273,6 +315,11 @@ impl<'a> StreamSession<'a> {
         let t_capture = self.clock.arrival(frame) - self.clock.period();
         self.meter.advance_to(t_capture);
         self.policy.on_frame(t_capture);
+        self.emit(ObsEvent::FramePresented {
+            stream: self.obs_stream,
+            frame,
+            t: t_capture + self.obs_epoch,
+        });
 
         // Select from the *previous* frame's detections: the extractor
         // turns the carried set into the stream-feature vector (its
@@ -280,7 +327,14 @@ impl<'a> StreamSession<'a> {
         // Algorithm 1 policies are unaffected by the widening)
         let feats = self.features.features(&self.carried);
         self.mbbs_series.push(feats.mbbs);
+        // a budget governor emits its own BudgetClamp from inside select()
         let dnn = self.policy.select(&feats);
+        self.emit(ObsEvent::DnnSelected {
+            stream: self.obs_stream,
+            frame,
+            t: t_capture + self.obs_epoch,
+            dnn,
+        });
 
         let (outcome, interval) = self
             .acc
@@ -315,6 +369,13 @@ impl<'a> StreamSession<'a> {
                         // carried set matched against itself would read
                         // as zero motion
                         self.features.on_detections(frame, &self.carried);
+                        self.emit(ObsEvent::FrameInferred {
+                            stream: self.obs_stream,
+                            frame,
+                            dnn,
+                            start: s + self.obs_epoch,
+                            end: e + self.obs_epoch,
+                        });
                         SessionEvent::Inferred { frame, dnn, interval }
                     }
                     Err(_) => {
@@ -322,12 +383,28 @@ impl<'a> StreamSession<'a> {
                         // carried detections; the stream (and process)
                         // keep running
                         self.n_failed += 1;
+                        self.failed_busy_s += e - s;
+                        self.emit(ObsEvent::InferenceFailed {
+                            stream: self.obs_stream,
+                            frame,
+                            dnn,
+                            start: s + self.obs_epoch,
+                            end: e + self.obs_epoch,
+                        });
                         SessionEvent::InferenceFailed { frame, dnn, interval }
                     }
                 }
             }
             FrameOutcome::Dropped => {
                 self.dnn_series.push(None);
+                // acc.now() is when the blocking inference frees the
+                // device — the cause anchor for `tod trace explain-drop`
+                self.emit(ObsEvent::FrameDropped {
+                    stream: self.obs_stream,
+                    frame,
+                    t: t_capture + self.obs_epoch,
+                    busy_until: self.acc.now() + self.obs_epoch,
+                });
                 SessionEvent::Dropped { frame }
             }
         };
@@ -353,6 +430,14 @@ impl<'a> StreamSession<'a> {
             .duration
             .max(self.seq.n_frames() as f64 / self.eval_fps);
         self.meter.advance_to(self.trace.duration);
+        self.emit(ObsEvent::StreamLeft {
+            stream: self.obs_stream,
+            t: self.trace.duration + self.obs_epoch,
+            frames: self.seq.n_frames(),
+            inferred: self.acc.n_inferred(),
+            dropped: self.acc.n_dropped(),
+            failed: self.n_failed,
+        });
         RunResult {
             policy: self.policy.label(),
             sequence: self.seq.spec.name.clone(),
@@ -362,6 +447,7 @@ impl<'a> StreamSession<'a> {
             n_inferred: self.acc.n_inferred(),
             n_dropped: self.acc.n_dropped(),
             n_failed: self.n_failed,
+            failed_busy_s: self.failed_busy_s,
             deploy_counts: self.deploy,
             switches: self.switches,
             power: self.meter.summary(),

@@ -125,11 +125,28 @@
 //! reusable scratch, each pinned bit-identical to its straightforward
 //! reference implementation by property tests (DESIGN.md §13).
 //!
+//! ## Observability
+//!
+//! Every scheduling decision the system makes — frame presented /
+//! inferred / dropped / failed, DNN selected, budget clamp engaged,
+//! batch formed / flushed / shed, stream join / leave — is emitted as a
+//! structured, versioned [`obs::Event`] through the [`obs::Recorder`]
+//! trait: no recorder attached costs one branch on the hot path (the
+//! zero-alloc steady-state bound is unchanged), the bounded
+//! [`obs::FlightRecorder`] ring retains the last N events without
+//! allocating (dumped by the scenario harness on conformance failures),
+//! and the [`obs::JsonlSink`] captures full traces that are
+//! byte-identical under the same seed (`tod run --trace`,
+//! `tod trace summarize/grep/explain-drop`). [`obs::MetricsRegistry`]
+//! aggregates the same events plus the siloed summaries into monotone
+//! counters and fixed-bucket histograms with Prometheus-style
+//! exposition (`tod metrics`). See DESIGN.md §14.
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
 //! the multi-stream architecture (§8), the power subsystem (§10),
 //! the batching server (§11), the scenario matrix + conformance
-//! harness (§12) and the performance model (§13), and `EXPERIMENTS.md`
-//! for paper-vs-measured results.
+//! harness (§12), the performance model (§13) and the observability
+//! layer (§14), and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod app;
 pub mod bench;
@@ -142,6 +159,7 @@ pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod geometry;
+pub mod obs;
 pub mod perf;
 pub mod power;
 pub mod predictor;

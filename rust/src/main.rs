@@ -15,9 +15,15 @@
 //!   golden-trace conformance harness (DESIGN.md §12).
 //! * `serve [--frames N] [--artifacts dir]` — end-to-end PJRT serving
 //!   demo on the request path (requires `make artifacts`).
+//! * `trace {summarize,grep,explain-drop} --in out.jsonl` — inspect a
+//!   structured trace written by `run --trace` (DESIGN.md §14).
+//! * `metrics [--prom|--json]` — run the canonical workload with the
+//!   metrics registry attached and print the exposition.
 //! * `bench-report` — one-line summary of key performance counters.
 
+use std::cell::RefCell;
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use tod::app::Campaign;
 use tod::cli::Args;
@@ -29,9 +35,12 @@ use tod::coordinator::policy::{
     FixedPolicy, MbbsPolicy, SelectionPolicy, Thresholds,
 };
 use tod::coordinator::projected::ProjectedAccuracyPolicy;
-use tod::coordinator::scheduler::{run_realtime, OracleBackend, RunResult};
+use tod::coordinator::scheduler::{
+    run_realtime, run_realtime_observed, OracleBackend, RunResult,
+};
 use tod::coordinator::session::StreamSession;
 use tod::dataset::catalog::{generate, SequenceId};
+use tod::obs::{JsonlSink, MetricsRegistry, SharedRecorder};
 use tod::perf::{run_suite, BenchReport, SuiteOptions, DEFAULT_TOLERANCE};
 use tod::power::{
     BudgetConfig, BudgetedPolicy, EnergyMeter, PowerBudget, RateCap,
@@ -55,6 +64,8 @@ fn main() {
         Some("dataset") => cmd_dataset(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("bench") => cmd_bench(&args),
         Some("bench-report") => cmd_bench_report(),
         Some(other) => {
@@ -74,14 +85,14 @@ fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
          usage: tod <figures|search|run|calibrate|multistream|power|\
-         dataset|scenario|serve|bench|bench-report> [flags]\n\
+         dataset|scenario|serve|trace|metrics|bench|bench-report> [flags]\n\
          \n\
          figures --all | --id <table1|fig4..fig15|multistream|predictor|\
          power|scenario> [--out results]\n\
          search\n\
          run --seq MOT17-05 [--policy <spec>] [--fps 14] \
          [--watts-budget W]\n  \
-         [--gpu-budget PCT] [--budget-window 1.0]\n  \
+         [--gpu-budget PCT] [--budget-window 1.0] [--trace out.jsonl]\n  \
          policy specs: tod (Algorithm 1 with H_opt), tod:<h1,h2,h3> \
          (custom\n  \
          ascending thresholds), fixed:<dnn> (e.g. fixed:yolov4-416), \
@@ -93,7 +104,9 @@ fn usage() {
          / GPU\n  \
          utilisation by masking infeasible DNNs (projected policies \
          switch to\n  \
-         the energy-aware argmax)\n\
+         the energy-aware argmax); --trace writes the structured \
+         observability\n  \
+         event log (deterministic JSON lines, DESIGN.md s14)\n\
          calibrate [--out calibration.json] [--fps 30] [--frames 180] \
          [--quick]\n  \
          fits the per-DNN size x speed projected-accuracy table on \
@@ -126,11 +139,17 @@ fn usage() {
          scenario record [--goldens DIR]  re-runs the 8-scenario matrix \
          and\n  \
          writes the golden reports (default DIR: rust/tests/goldens)\n\
-         scenario check [--goldens DIR] [--bootstrap]  re-runs the \
-         matrix and\n  \
-         byte-compares against the committed goldens; --bootstrap \
-         records\n  \
-         them first when the directory holds none\n\
+         scenario check [--goldens DIR] [--bootstrap] [--dump-dir DIR]  \
+         re-runs\n  \
+         the matrix and byte-compares against the committed goldens; \
+         --bootstrap\n  \
+         records them first when the directory holds none; --dump-dir \
+         re-runs\n  \
+         each failing scenario with the flight recorder + metrics \
+         registry\n  \
+         attached and writes <scenario>.flight.jsonl / \
+         <scenario>.metrics.json\n  \
+         there for post-mortem\n\
          serve [--frames 60] [--artifacts artifacts] [--policy tod]\n  \
          [--batch [--streams 4] [--max-batch 4] [--max-wait-ms 2] \
          [--shed]]\n  \
@@ -139,6 +158,20 @@ fn usage() {
          batching server (per-DNN batches, bounded queue, panic-free \
          per-request\n  \
          results); --shed rejects on overload instead of blocking\n\
+         trace summarize --in out.jsonl  per-type / per-stream digest of \
+         a trace\n\
+         trace grep --in out.jsonl [--type TAG] [--stream N] \
+         [--frame N]\n  \
+         prints the matching raw event lines (byte-exact)\n\
+         trace explain-drop --in out.jsonl  reconstructs the cause chain \
+         of\n  \
+         every dropped frame: busy accelerator, busy-after-budget-clamp, \
+         or shed\n\
+         metrics [--seq MOT17-05] [--policy <spec>] [--prom|--json]  \
+         runs one\n  \
+         sequence with the metrics registry attached and prints the \
+         Prometheus\n  \
+         text exposition (default) or the versioned JSON snapshot\n\
          bench [--json] [--out BENCH_6.json] [--quick] [--filter SUBSTR]\n  \
          [--check [--baseline ../BENCH_6.json] [--tolerance 0.15]]  runs \
          the\n  \
@@ -382,6 +415,24 @@ fn cmd_run(args: &Args) -> i32 {
             return 2;
         }
     };
+    // --trace: attach the JSON-lines event sink to the session (and,
+    // when a budget governor runs, to the governor so clamps land in
+    // the same stream). Same seed + flags => byte-identical file.
+    let trace_path = args.get("trace").map(PathBuf::from);
+    if trace_path.is_some() && policy_spec == "chameleon" {
+        eprintln!(
+            "--trace is not supported with the chameleon baseline (its \
+             loop bypasses the session event spine)"
+        );
+        return 2;
+    }
+    let sink = trace_path.as_ref().map(|_| {
+        Rc::new(RefCell::new(JsonlSink::new(&format!(
+            "run seq={seq_name} policy={policy_spec} fps={fps}"
+        ))))
+    });
+    let obs_rec: Option<SharedRecorder> =
+        sink.as_ref().map(|s| -> SharedRecorder { s.clone() });
     let r = if policy_spec == "chameleon" {
         if power_budget.is_some() {
             eprintln!(
@@ -423,11 +474,28 @@ fn cmd_run(args: &Args) -> i32 {
                 return 2;
             }
             let mut policy = BudgetedPolicy::argmax(table, budget);
-            run_realtime(&seq, &mut policy, &mut det, &mut lat, fps)
+            if let Some(rec) = &obs_rec {
+                policy = policy.with_recorder(rec.clone(), 0);
+            }
+            run_realtime_observed(
+                &seq,
+                &mut policy,
+                &mut det,
+                &mut lat,
+                fps,
+                obs_rec.clone().map(|r| (r, 0)),
+            )
         } else {
             let mut policy =
                 ProjectedAccuracyPolicy::with_budget(table, &lat, budget_s);
-            run_realtime(&seq, &mut policy, &mut det, &mut lat, fps)
+            run_realtime_observed(
+                &seq,
+                &mut policy,
+                &mut det,
+                &mut lat,
+                fps,
+                obs_rec.clone().map(|r| (r, 0)),
+            )
         }
     } else {
         let mut policy = match parse_policy(policy_spec) {
@@ -440,14 +508,37 @@ fn cmd_run(args: &Args) -> i32 {
         match power_budget {
             Some(budget) => {
                 let mut policy = BudgetedPolicy::masking(policy, budget);
-                run_realtime(&seq, &mut policy, &mut det, &mut lat, fps)
+                if let Some(rec) = &obs_rec {
+                    policy = policy.with_recorder(rec.clone(), 0);
+                }
+                run_realtime_observed(
+                    &seq,
+                    &mut policy,
+                    &mut det,
+                    &mut lat,
+                    fps,
+                    obs_rec.clone().map(|r| (r, 0)),
+                )
             }
-            None => {
-                run_realtime(&seq, policy.as_mut(), &mut det, &mut lat, fps)
-            }
+            None => run_realtime_observed(
+                &seq,
+                policy.as_mut(),
+                &mut det,
+                &mut lat,
+                fps,
+                obs_rec.clone().map(|r| (r, 0)),
+            ),
         }
     };
     print_run(&r);
+    if let (Some(path), Some(s)) = (&trace_path, &sink) {
+        let s = s.borrow();
+        if let Err(e) = s.save(path) {
+            eprintln!("{e}");
+            return 1;
+        }
+        eprintln!("trace: {} events -> {}", s.events(), path.display());
+    }
     0
 }
 
@@ -1206,6 +1297,37 @@ fn cmd_scenario(args: &Args) -> i32 {
                 }
             }
             if failed > 0 {
+                // post-mortem: re-run each failing scenario with the
+                // flight recorder + metrics registry attached and keep
+                // the dumps (CI uploads them as artifacts)
+                if let Some(dump) = args.get("dump-dir") {
+                    let dump_dir = PathBuf::from(dump);
+                    for (name, verdict) in &results {
+                        if matches!(
+                            verdict,
+                            conformance::CheckVerdict::Match
+                        ) {
+                            continue;
+                        }
+                        let dumped = name
+                            .parse::<matrix::ScenarioId>()
+                            .map_err(|e| e.to_string())
+                            .and_then(|id| {
+                                conformance::dump_failure_artifacts(
+                                    &matrix::scenario_spec(id),
+                                    &dump_dir,
+                                )
+                            });
+                        match dumped {
+                            Ok(paths) => {
+                                for p in paths {
+                                    eprintln!("dumped {}", p.display());
+                                }
+                            }
+                            Err(e) => eprintln!("dump {name}: {e}"),
+                        }
+                    }
+                }
                 eprintln!(
                     "{failed}/{} scenarios failed conformance",
                     results.len()
@@ -1301,6 +1423,215 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `tod trace` — inspect a structured observability trace written by
+/// `tod run --trace` (DESIGN.md §14).
+fn cmd_trace(args: &Args) -> i32 {
+    use tod::obs::{explain_drops, parse_trace, DropCause};
+
+    let verb = args.positional.first().map(String::as_str);
+    let Some(path) = args.get("in") else {
+        eprintln!(
+            "trace needs --in <file.jsonl> (write one with \
+             `tod run --trace out.jsonl`)"
+        );
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let (header, events) = match parse_trace(&text) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    match verb {
+        Some("summarize") => {
+            if let Some(label) = header
+                .as_ref()
+                .and_then(|h| h.get("label"))
+                .and_then(|l| l.as_str())
+            {
+                println!("label: {label}");
+            }
+            print!("{}", tod::obs::replay::summarize(&events));
+            0
+        }
+        Some("grep") => {
+            let want_type = args.get("type");
+            let want_stream: Option<u32> = if args.has("stream") {
+                match args.get_parse("stream", 0u32) {
+                    Ok(v) => Some(v),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            } else {
+                None
+            };
+            let want_frame: Option<u64> = if args.has("frame") {
+                match args.get_parse("frame", 0u64) {
+                    Ok(v) => Some(v),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            } else {
+                None
+            };
+            let mut shown = 0usize;
+            for ev in &events {
+                if let Some(t) = want_type {
+                    if t != ev.type_tag() {
+                        continue;
+                    }
+                }
+                if let Some(s) = want_stream {
+                    if ev.stream() != Some(s) {
+                        continue;
+                    }
+                }
+                if let Some(f) = want_frame {
+                    if ev.frame() != Some(f) {
+                        continue;
+                    }
+                }
+                // re-serialization is byte-identical to the sink line
+                // (sorted keys, shortest-roundtrip floats)
+                println!("{}", ev.to_json().to_string());
+                shown += 1;
+            }
+            eprintln!("{shown}/{} events matched", events.len());
+            0
+        }
+        Some("explain-drop") => {
+            let explanations = explain_drops(&events);
+            if explanations.is_empty() {
+                println!("no dropped frames in this trace");
+                return 0;
+            }
+            let (mut busy, mut clamped, mut shed, mut unknown) =
+                (0u64, 0u64, 0u64, 0u64);
+            for ex in &explanations {
+                println!("{ex}");
+                match ex.cause {
+                    DropCause::BusyAccelerator => busy += 1,
+                    DropCause::BusyAfterClamp { .. } => clamped += 1,
+                    DropCause::Shed => shed += 1,
+                    DropCause::Unknown => unknown += 1,
+                }
+            }
+            println!(
+                "{} drops: {busy} busy accelerator | {clamped} busy \
+                 after budget clamp | {shed} shed | {unknown} unexplained",
+                explanations.len()
+            );
+            // a drop the trace cannot explain is itself a finding
+            if unknown > 0 {
+                1
+            } else {
+                0
+            }
+        }
+        other => {
+            eprintln!(
+                "trace needs a verb: summarize|grep|explain-drop \
+                 (got {:?})",
+                other.unwrap_or("none")
+            );
+            2
+        }
+    }
+}
+
+/// `tod metrics` — run one sequence with the metrics registry attached
+/// to the observability spine and print the exposition.
+fn cmd_metrics(args: &Args) -> i32 {
+    let seq_name = args.get("seq").unwrap_or("MOT17-05");
+    let id: SequenceId = match seq_name.parse() {
+        Ok(id) => id,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seq = generate(id);
+    let fps = id.eval_fps();
+    let mut det = OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ));
+    let mut lat = LatencyModel::deterministic();
+    let policy_spec = args.get("policy").unwrap_or("tod");
+    if matches!(policy_spec, "chameleon" | "projected") {
+        eprintln!(
+            "tod metrics supports tod|tod:<h..>|fixed:<dnn> (drive the \
+             {policy_spec} path through `tod run`)"
+        );
+        return 2;
+    }
+    let power_budget = match budget_from_args(args, &lat) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let registry = Rc::new(RefCell::new(MetricsRegistry::new()));
+    let rec: SharedRecorder = registry.clone();
+    let mut policy = match parse_policy(policy_spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let r = match power_budget {
+        Some(budget) => {
+            let mut policy = BudgetedPolicy::masking(policy, budget)
+                .with_recorder(rec.clone(), 0);
+            run_realtime_observed(
+                &seq,
+                &mut policy,
+                &mut det,
+                &mut lat,
+                fps,
+                Some((rec.clone(), 0)),
+            )
+        }
+        None => run_realtime_observed(
+            &seq,
+            policy.as_mut(),
+            &mut det,
+            &mut lat,
+            fps,
+            Some((rec.clone(), 0)),
+        ),
+    };
+    {
+        // switches and the metered power summary are not on the event
+        // stream; fold them in before rendering
+        let mut reg = registry.borrow_mut();
+        reg.switches += r.switches;
+        reg.observe_power(&r.power);
+    }
+    let reg = registry.borrow();
+    if args.has("json") {
+        print!("{}", reg.to_json().to_pretty());
+    } else {
+        print!("{}", reg.to_prometheus());
+    }
+    0
 }
 
 fn cmd_bench(args: &Args) -> i32 {

@@ -1,0 +1,811 @@
+//! Metrics registry: monotone counters, fixed-bucket histograms and
+//! gauges over the unified event stream (DESIGN.md §14).
+//!
+//! A [`MetricsRegistry`] fills two ways:
+//!
+//! * **event-driven** — it implements [`Recorder`], so attaching it to
+//!   a session/harness run counts frames, drops, clamps and batch
+//!   activity as they happen (all field updates on pre-allocated
+//!   storage: recording never allocates);
+//! * **summary-driven** — `observe_run` / `observe_batch` /
+//!   `observe_power` / `observe_utilisation` fold the existing siloed
+//!   aggregates ([`RunResult`], [`BatchStats`], [`PowerSummary`],
+//!   [`UtilisationSummary`]) into the same registry, which is how the
+//!   wall-clock batching server (whose threads cannot hold the
+//!   single-threaded [`SharedRecorder`]) and already-finished runs
+//!   report in.
+//!
+//! Export is Prometheus-style text exposition ([`MetricsRegistry::
+//! to_prometheus`], `tod metrics --prom`) or a versioned JSON snapshot
+//! ([`MetricsRegistry::to_json`] / [`MetricsRegistry::from_json`],
+//! round-trip pinned by tests) that the scenario harness dumps next to
+//! the flight recorder on conformance failures.
+
+use crate::coordinator::scheduler::RunResult;
+use crate::obs::{Event, Recorder};
+use crate::power::PowerSummary;
+use crate::runtime::batch::BatchStats;
+use crate::telemetry::utilisation::UtilisationSummary;
+use crate::util::json::Json;
+use crate::DnnKind;
+
+/// Version of the metrics snapshot schema.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Schema tag of the snapshot JSON.
+pub const SNAPSHOT_TAG: &str = "tod-metrics";
+
+/// Inference-latency bucket upper bounds, seconds. Spans the ladder
+/// from TinyYOLO-288 (~7 ms) through contention-inflated YOLO-416
+/// (hundreds of ms).
+pub const LATENCY_BUCKETS_S: [f64; 8] =
+    [0.005, 0.01, 0.02, 0.04, 0.08, 0.16, 0.32, 0.64];
+
+/// Batch-size bucket upper bounds (items per flushed batch).
+pub const BATCH_BUCKETS: [f64; 5] = [1.0, 2.0, 4.0, 8.0, 16.0];
+
+/// Fixed-bucket histogram: cumulative-friendly counts, pre-allocated at
+/// construction so `record` is a pure field update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    /// Observations above the last bound.
+    overflow: u64,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// A histogram over the given strictly-increasing upper bounds.
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len()],
+            overflow: 0,
+            sum: 0.0,
+            n: 0,
+        }
+    }
+
+    /// Record one observation (allocation-free).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        if let Some(c) = self.counts.get_mut(idx) {
+            *c += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.sum += v;
+        self.n += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// `(upper_bound, cumulative_count)` per bucket, Prometheus-style;
+    /// the `+Inf` bucket is implied by [`Histogram::count`].
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        self.bounds
+            .iter()
+            .zip(&self.counts)
+            .map(|(&b, &c)| {
+                acc += c;
+                (b, acc)
+            })
+            .collect()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bounds", Json::arr(self.bounds.iter().map(|&b| Json::num(b)).collect())),
+            (
+                "counts",
+                Json::arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("overflow", Json::num(self.overflow as f64)),
+            ("sum", Json::num(self.sum)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Histogram, String> {
+        let arr = |k: &str| -> Result<Vec<f64>, String> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("histogram: missing array {k:?}"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| format!("histogram: bad {k:?}")))
+                .collect()
+        };
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("histogram: missing number {k:?}"))
+        };
+        let bounds = arr("bounds")?;
+        let counts: Vec<u64> =
+            arr("counts")?.into_iter().map(|c| c as u64).collect();
+        if counts.len() != bounds.len() {
+            return Err("histogram: counts/bounds length mismatch".into());
+        }
+        Ok(Histogram {
+            bounds,
+            counts,
+            overflow: num("overflow")? as u64,
+            sum: num("sum")?,
+            n: num("n")? as u64,
+        })
+    }
+}
+
+/// The unified metrics registry. All counters are monotone; gauges hold
+/// the latest observed value; histograms use the fixed buckets above.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRegistry {
+    // ---- frame lifecycle counters ----
+    pub frames_presented: u64,
+    pub frames_inferred: u64,
+    pub frames_dropped: u64,
+    pub frames_failed: u64,
+    pub frames_shed: u64,
+    // ---- decision counters ----
+    pub budget_clamps: u64,
+    pub streams_joined: u64,
+    pub streams_left: u64,
+    /// Inferences per DNN variant (deployment frequency numerator).
+    pub deploy: [u64; DnnKind::COUNT],
+    pub switches: u64,
+    // ---- batching counters ----
+    pub batches_formed: u64,
+    pub batches_flushed: u64,
+    pub batch_items: u64,
+    // ---- busy-time accumulators (virtual seconds) ----
+    pub busy_per_dnn_s: [f64; DnnKind::COUNT],
+    /// Accelerator-busy seconds spent on inferences that then failed.
+    pub busy_failed_s: f64,
+    // ---- gauges (latest observation wins) ----
+    pub queue_depth_high_water: u64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub gpu_busy_frac: f64,
+    pub makespan_s: f64,
+    // ---- histograms ----
+    pub infer_latency_s: Histogram,
+    pub batch_size: Histogram,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            frames_presented: 0,
+            frames_inferred: 0,
+            frames_dropped: 0,
+            frames_failed: 0,
+            frames_shed: 0,
+            budget_clamps: 0,
+            streams_joined: 0,
+            streams_left: 0,
+            deploy: [0; DnnKind::COUNT],
+            switches: 0,
+            batches_formed: 0,
+            batches_flushed: 0,
+            batch_items: 0,
+            busy_per_dnn_s: [0.0; DnnKind::COUNT],
+            busy_failed_s: 0.0,
+            queue_depth_high_water: 0,
+            energy_j: 0.0,
+            avg_power_w: 0.0,
+            gpu_busy_frac: 0.0,
+            makespan_s: 0.0,
+            infer_latency_s: Histogram::new(&LATENCY_BUCKETS_S),
+            batch_size: Histogram::new(&BATCH_BUCKETS),
+        }
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Dropped + shed fraction of presented frames.
+    pub fn loss_rate(&self) -> f64 {
+        if self.frames_presented == 0 {
+            0.0
+        } else {
+            (self.frames_dropped + self.frames_shed) as f64
+                / self.frames_presented as f64
+        }
+    }
+
+    /// Fold a finished run's aggregates into the registry (for paths
+    /// that ran without an attached recorder).
+    pub fn observe_run(&mut self, r: &RunResult) {
+        self.frames_presented += r.n_frames;
+        self.frames_inferred += r.n_inferred;
+        self.frames_dropped += r.n_dropped;
+        self.frames_failed += r.n_failed;
+        self.switches += r.switches;
+        for i in 0..DnnKind::COUNT {
+            self.deploy[i] += r.deploy_counts[i];
+        }
+        for &(s, e, d) in &r.trace.busy {
+            self.busy_per_dnn_s[d.index()] += e - s;
+            self.infer_latency_s.record(e - s);
+        }
+        self.busy_failed_s += r.failed_busy_s;
+        self.makespan_s = self.makespan_s.max(r.trace.duration);
+        self.observe_power(&r.power);
+    }
+
+    /// Fold a batching server/sim summary into the registry.
+    pub fn observe_batch(&mut self, b: &BatchStats) {
+        for v in &b.per_dnn {
+            self.batches_flushed += v.batches;
+            self.batch_items += v.items;
+            for _ in 0..v.batches {
+                // per-batch sizes are not retained by BatchStats; spread
+                // the mean so histogram mass matches the dispatch count
+                self.batch_size.record(v.mean_batch());
+            }
+        }
+        self.frames_shed += b.shed;
+    }
+
+    /// Fold a power/energy summary into the registry.
+    pub fn observe_power(&mut self, p: &PowerSummary) {
+        self.energy_j += p.energy_j;
+        self.avg_power_w = p.avg_power_w;
+        self.gpu_busy_frac = p.gpu_busy_frac;
+    }
+
+    /// Fold a multi-stream utilisation summary into the registry.
+    pub fn observe_utilisation(&mut self, u: &UtilisationSummary) {
+        self.makespan_s = self.makespan_s.max(u.makespan);
+        self.busy_failed_s += u.busy_failed;
+    }
+
+    /// Note a queue-depth high-water mark (keeps the maximum).
+    pub fn observe_queue_depth(&mut self, depth: u64) {
+        self.queue_depth_high_water = self.queue_depth_high_water.max(depth);
+    }
+
+    /// Prometheus-style text exposition (deterministic ordering).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        fn counter_into(out: &mut String, name: &str, help: &str, v: u64) {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        fn gauge_into(out: &mut String, name: &str, help: &str, v: f64) {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        fn histo_into(out: &mut String, name: &str, help: &str, h: &Histogram) {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (bound, cum) in h.cumulative() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        let mut out = String::with_capacity(2048);
+        let counters: [(&str, &str, u64); 12] = [
+            (
+                "tod_frames_presented_total",
+                "Frames presented to the selector.",
+                self.frames_presented,
+            ),
+            (
+                "tod_frames_inferred_total",
+                "Frames whose inference succeeded.",
+                self.frames_inferred,
+            ),
+            (
+                "tod_frames_dropped_total",
+                "Frames dropped on arrival (accelerator busy).",
+                self.frames_dropped,
+            ),
+            (
+                "tod_frames_failed_total",
+                "Frames whose inference ran but failed.",
+                self.frames_failed,
+            ),
+            (
+                "tod_frames_shed_total",
+                "Frames rejected by batch admission control.",
+                self.frames_shed,
+            ),
+            (
+                "tod_budget_clamps_total",
+                "Selections demoted by a power budget.",
+                self.budget_clamps,
+            ),
+            (
+                "tod_streams_joined_total",
+                "Streams registered.",
+                self.streams_joined,
+            ),
+            ("tod_streams_left_total", "Streams finished.", self.streams_left),
+            (
+                "tod_dnn_switches_total",
+                "DNN switches between consecutive inferences.",
+                self.switches,
+            ),
+            (
+                "tod_batches_formed_total",
+                "Micro-batch runs opened (full setup paid).",
+                self.batches_formed,
+            ),
+            (
+                "tod_batches_flushed_total",
+                "Micro-batches dispatched.",
+                self.batches_flushed,
+            ),
+            (
+                "tod_batch_items_total",
+                "Requests carried by dispatched batches.",
+                self.batch_items,
+            ),
+        ];
+        for (name, help, v) in counters {
+            counter_into(&mut out, name, help, v);
+        }
+
+        let _ = writeln!(
+            out,
+            "# HELP tod_dnn_deploy_total Inferences per DNN variant."
+        );
+        let _ = writeln!(out, "# TYPE tod_dnn_deploy_total counter");
+        for d in DnnKind::ALL {
+            let _ = writeln!(
+                out,
+                "tod_dnn_deploy_total{{dnn=\"{}\"}} {}",
+                d.artifact_name(),
+                self.deploy[d.index()]
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP tod_dnn_busy_seconds Accelerator-busy seconds per DNN."
+        );
+        let _ = writeln!(out, "# TYPE tod_dnn_busy_seconds counter");
+        for d in DnnKind::ALL {
+            let _ = writeln!(
+                out,
+                "tod_dnn_busy_seconds{{dnn=\"{}\"}} {}",
+                d.artifact_name(),
+                self.busy_per_dnn_s[d.index()]
+            );
+        }
+
+        let gauges: [(&str, &str, f64); 6] = [
+            (
+                "tod_busy_failed_seconds",
+                "Busy seconds spent on failed inferences.",
+                self.busy_failed_s,
+            ),
+            (
+                "tod_queue_depth_high_water",
+                "Deepest batch queue observed.",
+                self.queue_depth_high_water as f64,
+            ),
+            ("tod_energy_joules", "Metered energy.", self.energy_j),
+            (
+                "tod_avg_power_watts",
+                "Average metered power.",
+                self.avg_power_w,
+            ),
+            (
+                "tod_gpu_busy_frac",
+                "Accelerator busy fraction.",
+                self.gpu_busy_frac,
+            ),
+            (
+                "tod_makespan_seconds",
+                "Latest run makespan.",
+                self.makespan_s,
+            ),
+        ];
+        for (name, help, v) in gauges {
+            gauge_into(&mut out, name, help, v);
+        }
+
+        histo_into(
+            &mut out,
+            "tod_infer_latency_seconds",
+            "Per-inference accelerator latency.",
+            &self.infer_latency_s,
+        );
+        histo_into(
+            &mut out,
+            "tod_batch_size_items",
+            "Items per dispatched micro-batch.",
+            &self.batch_size,
+        );
+        out
+    }
+
+    /// Versioned JSON snapshot (sorted keys → byte-stable).
+    pub fn to_json(&self) -> Json {
+        let dnn_arr = |xs: &[f64; DnnKind::COUNT]| {
+            Json::arr(xs.iter().map(|&x| Json::num(x)).collect())
+        };
+        let dnn_arr_u = |xs: &[u64; DnnKind::COUNT]| {
+            Json::arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+        };
+        Json::obj(vec![
+            ("schema", Json::str(SNAPSHOT_TAG)),
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("frames_presented", Json::num(self.frames_presented as f64)),
+            ("frames_inferred", Json::num(self.frames_inferred as f64)),
+            ("frames_dropped", Json::num(self.frames_dropped as f64)),
+            ("frames_failed", Json::num(self.frames_failed as f64)),
+            ("frames_shed", Json::num(self.frames_shed as f64)),
+            ("budget_clamps", Json::num(self.budget_clamps as f64)),
+            ("streams_joined", Json::num(self.streams_joined as f64)),
+            ("streams_left", Json::num(self.streams_left as f64)),
+            ("deploy", dnn_arr_u(&self.deploy)),
+            ("switches", Json::num(self.switches as f64)),
+            ("batches_formed", Json::num(self.batches_formed as f64)),
+            ("batches_flushed", Json::num(self.batches_flushed as f64)),
+            ("batch_items", Json::num(self.batch_items as f64)),
+            ("busy_per_dnn_s", dnn_arr(&self.busy_per_dnn_s)),
+            ("busy_failed_s", Json::num(self.busy_failed_s)),
+            (
+                "queue_depth_high_water",
+                Json::num(self.queue_depth_high_water as f64),
+            ),
+            ("energy_j", Json::num(self.energy_j)),
+            ("avg_power_w", Json::num(self.avg_power_w)),
+            ("gpu_busy_frac", Json::num(self.gpu_busy_frac)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("infer_latency_s", self.infer_latency_s.to_json()),
+            ("batch_size", self.batch_size.to_json()),
+        ])
+    }
+
+    /// Parse a snapshot produced by [`MetricsRegistry::to_json`].
+    pub fn from_json(v: &Json) -> Result<MetricsRegistry, String> {
+        let tag = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if tag != SNAPSHOT_TAG {
+            return Err(format!("not a {SNAPSHOT_TAG} snapshot: {tag:?}"));
+        }
+        let version =
+            v.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        if version != SNAPSHOT_VERSION {
+            return Err(format!(
+                "snapshot version {version} != supported {SNAPSHOT_VERSION}"
+            ));
+        }
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("snapshot: missing number {k:?}"))
+        };
+        let uint = |k: &str| -> Result<u64, String> { Ok(num(k)? as u64) };
+        let dnn_f = |k: &str| -> Result<[f64; DnnKind::COUNT], String> {
+            let a = v
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("snapshot: missing array {k:?}"))?;
+            if a.len() != DnnKind::COUNT {
+                return Err(format!("snapshot: {k:?} has wrong arity"));
+            }
+            let mut out = [0.0; DnnKind::COUNT];
+            for (slot, x) in out.iter_mut().zip(a) {
+                *slot = x
+                    .as_f64()
+                    .ok_or_else(|| format!("snapshot: bad entry in {k:?}"))?;
+            }
+            Ok(out)
+        };
+        let hist = |k: &str| -> Result<Histogram, String> {
+            Histogram::from_json(
+                v.get(k)
+                    .ok_or_else(|| format!("snapshot: missing {k:?}"))?,
+            )
+        };
+        let deploy_f = dnn_f("deploy")?;
+        let mut deploy = [0u64; DnnKind::COUNT];
+        for (d, &f) in deploy.iter_mut().zip(&deploy_f) {
+            *d = f as u64;
+        }
+        Ok(MetricsRegistry {
+            frames_presented: uint("frames_presented")?,
+            frames_inferred: uint("frames_inferred")?,
+            frames_dropped: uint("frames_dropped")?,
+            frames_failed: uint("frames_failed")?,
+            frames_shed: uint("frames_shed")?,
+            budget_clamps: uint("budget_clamps")?,
+            streams_joined: uint("streams_joined")?,
+            streams_left: uint("streams_left")?,
+            deploy,
+            switches: uint("switches")?,
+            batches_formed: uint("batches_formed")?,
+            batches_flushed: uint("batches_flushed")?,
+            batch_items: uint("batch_items")?,
+            busy_per_dnn_s: dnn_f("busy_per_dnn_s")?,
+            busy_failed_s: num("busy_failed_s")?,
+            queue_depth_high_water: uint("queue_depth_high_water")?,
+            energy_j: num("energy_j")?,
+            avg_power_w: num("avg_power_w")?,
+            gpu_busy_frac: num("gpu_busy_frac")?,
+            makespan_s: num("makespan_s")?,
+            infer_latency_s: hist("infer_latency_s")?,
+            batch_size: hist("batch_size")?,
+        })
+    }
+}
+
+impl Recorder for MetricsRegistry {
+    #[inline]
+    fn record(&mut self, ev: &Event) {
+        match *ev {
+            Event::StreamJoined { .. } => self.streams_joined += 1,
+            Event::StreamLeft { .. } => self.streams_left += 1,
+            Event::FramePresented { .. } => self.frames_presented += 1,
+            Event::DnnSelected { .. } => {}
+            Event::BudgetClamp { .. } => self.budget_clamps += 1,
+            Event::FrameInferred { dnn, start, end, .. } => {
+                self.frames_inferred += 1;
+                self.deploy[dnn.index()] += 1;
+                self.busy_per_dnn_s[dnn.index()] += end - start;
+                self.infer_latency_s.record(end - start);
+                self.makespan_s = self.makespan_s.max(end);
+            }
+            Event::InferenceFailed { dnn, start, end, .. } => {
+                self.frames_failed += 1;
+                self.busy_per_dnn_s[dnn.index()] += end - start;
+                self.busy_failed_s += end - start;
+                self.infer_latency_s.record(end - start);
+                self.makespan_s = self.makespan_s.max(end);
+            }
+            Event::FrameDropped { .. } => self.frames_dropped += 1,
+            Event::BatchFormed { .. } => self.batches_formed += 1,
+            Event::BatchExtended { .. } => {}
+            Event::BatchFlushed { len, .. } => {
+                self.batches_flushed += 1;
+                self.batch_items += len as u64;
+                self.batch_size.record(len as f64);
+            }
+            Event::BatchShed { .. } => self.frames_shed += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::count_allocs;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[0.01, 0.02, 0.04]);
+        for v in [0.005, 0.01, 0.015, 0.03, 0.05, 1.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        // bounds are inclusive upper edges: 0.01 lands in the first bucket
+        assert_eq!(h.cumulative(), vec![(0.01, 2), (0.02, 3), (0.04, 4)]);
+        assert!((h.sum() - 1.11).abs() < 1e-12);
+        assert!((h.mean() - 0.185).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_counts_events() {
+        let mut m = MetricsRegistry::new();
+        let evs = [
+            Event::StreamJoined { stream: 0, t: 0.0 },
+            Event::FramePresented { stream: 0, frame: 1, t: 0.0 },
+            Event::BudgetClamp {
+                stream: 0,
+                t: 0.0,
+                requested: DnnKind::Y416,
+                granted: DnnKind::TinyY416,
+                mask: 0b0011,
+            },
+            Event::DnnSelected {
+                stream: 0,
+                frame: 1,
+                t: 0.0,
+                dnn: DnnKind::TinyY416,
+            },
+            Event::FrameInferred {
+                stream: 0,
+                frame: 1,
+                dnn: DnnKind::TinyY416,
+                start: 0.0,
+                end: 0.018,
+            },
+            Event::FramePresented { stream: 0, frame: 2, t: 0.033 },
+            Event::FrameDropped {
+                stream: 0,
+                frame: 2,
+                t: 0.033,
+                busy_until: 0.05,
+            },
+            Event::InferenceFailed {
+                stream: 0,
+                frame: 3,
+                dnn: DnnKind::Y288,
+                start: 0.07,
+                end: 0.12,
+            },
+            Event::BatchFormed { stream: 0, dnn: DnnKind::TinyY416, t: 0.0 },
+            Event::BatchFlushed { dnn: DnnKind::TinyY416, len: 3, t: 0.2 },
+            Event::BatchShed { stream: 1, frame: 9, t: 0.3 },
+            Event::StreamLeft {
+                stream: 0,
+                t: 1.0,
+                frames: 3,
+                inferred: 1,
+                dropped: 1,
+                failed: 1,
+            },
+        ];
+        for ev in &evs {
+            m.record(ev);
+        }
+        assert_eq!(m.frames_presented, 2);
+        assert_eq!(m.frames_inferred, 1);
+        assert_eq!(m.frames_dropped, 1);
+        assert_eq!(m.frames_failed, 1);
+        assert_eq!(m.frames_shed, 1);
+        assert_eq!(m.budget_clamps, 1);
+        assert_eq!(m.streams_joined, 1);
+        assert_eq!(m.streams_left, 1);
+        assert_eq!(m.deploy[DnnKind::TinyY416.index()], 1);
+        assert_eq!(m.batches_formed, 1);
+        assert_eq!(m.batches_flushed, 1);
+        assert_eq!(m.batch_items, 3);
+        assert!((m.busy_failed_s - 0.05).abs() < 1e-12);
+        assert!(
+            (m.busy_per_dnn_s[DnnKind::Y288.index()] - 0.05).abs() < 1e-12
+        );
+        assert_eq!(m.infer_latency_s.count(), 2);
+        assert!((m.loss_rate() - 1.0).abs() < 1e-12);
+        assert!((m.makespan_s - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recording_is_allocation_free() {
+        let mut m = MetricsRegistry::new();
+        let evs = [
+            Event::FramePresented { stream: 0, frame: 1, t: 0.0 },
+            Event::FrameInferred {
+                stream: 0,
+                frame: 1,
+                dnn: DnnKind::Y416,
+                start: 0.0,
+                end: 0.1,
+            },
+            Event::FrameDropped {
+                stream: 0,
+                frame: 2,
+                t: 0.03,
+                busy_until: 0.1,
+            },
+            Event::BatchFlushed { dnn: DnnKind::Y416, len: 2, t: 0.2 },
+        ];
+        let (delta, ()) = count_allocs(|| {
+            for _ in 0..256 {
+                for ev in &evs {
+                    m.record(ev);
+                }
+            }
+        });
+        assert_eq!(
+            delta.allocs, 0,
+            "metrics recording allocated {} times",
+            delta.allocs
+        );
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let mut m = MetricsRegistry::new();
+        m.record(&Event::FramePresented { stream: 0, frame: 1, t: 0.0 });
+        m.record(&Event::FrameInferred {
+            stream: 0,
+            frame: 1,
+            dnn: DnnKind::Y288,
+            start: 0.0,
+            end: 0.041,
+        });
+        m.record(&Event::BatchFlushed { dnn: DnnKind::Y288, len: 4, t: 0.5 });
+        m.observe_queue_depth(17);
+        m.busy_failed_s = 0.25;
+        m.energy_j = 12.5;
+
+        let snap = m.to_json();
+        let back = MetricsRegistry::from_json(&snap).unwrap();
+        assert_eq!(back, m);
+        // and the serialised text is stable
+        assert_eq!(back.to_json().to_string(), snap.to_string());
+    }
+
+    #[test]
+    fn snapshot_rejects_wrong_schema_or_version() {
+        assert!(MetricsRegistry::from_json(&Json::Null).is_err());
+        assert!(MetricsRegistry::from_json(&Json::obj(vec![(
+            "schema",
+            Json::str("bogus")
+        )]))
+        .is_err());
+        let mut snap = MetricsRegistry::new().to_json();
+        if let Json::Obj(map) = &mut snap {
+            map.insert("version".into(), Json::num(99.0));
+        }
+        assert!(MetricsRegistry::from_json(&snap).is_err());
+    }
+
+    #[test]
+    fn prometheus_exposition_is_deterministic_and_well_formed() {
+        let mut m = MetricsRegistry::new();
+        m.record(&Event::FramePresented { stream: 0, frame: 1, t: 0.0 });
+        m.record(&Event::FrameInferred {
+            stream: 0,
+            frame: 1,
+            dnn: DnnKind::Y416,
+            start: 0.0,
+            end: 0.1,
+        });
+        let a = m.to_prometheus();
+        let b = m.to_prometheus();
+        assert_eq!(a, b);
+        assert!(a.contains("tod_frames_presented_total 1"));
+        assert!(a.contains("tod_dnn_deploy_total{dnn=\"yolov4-416\"} 1"));
+        assert!(a.contains("tod_infer_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(a.contains("tod_infer_latency_seconds_count 1"));
+        // every non-comment line is "name[{labels}] value"
+        for line in a.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(
+                line.split_whitespace().count(),
+                2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn observe_batch_folds_summary_counts() {
+        let mut stats = BatchStats::default();
+        stats.record(DnnKind::Y288, 3);
+        stats.record(DnnKind::Y288, 1);
+        stats.shed = 2;
+        let mut m = MetricsRegistry::new();
+        m.observe_batch(&stats);
+        assert_eq!(m.batches_flushed, 2);
+        assert_eq!(m.batch_items, 4);
+        assert_eq!(m.frames_shed, 2);
+        assert_eq!(m.batch_size.count(), 2);
+    }
+}

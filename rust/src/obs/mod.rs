@@ -1,0 +1,795 @@
+//! Unified deterministic observability: structured events, recorder
+//! tiers and the flight recorder (DESIGN.md §14).
+//!
+//! Every subsystem that makes or prices a scheduling decision — the
+//! per-stream session, the multi-stream dispatcher, the scenario
+//! harness, the budget governor and the micro-batching simulator —
+//! emits the same versioned [`Event`] vocabulary through one
+//! [`Recorder`] trait, so "why did stream 3 drop frames 210–260?" is a
+//! query over one timeline instead of a join across four siloed
+//! summaries ([`crate::coordinator::session::SessionEvent`],
+//! [`crate::telemetry::utilisation::UtilisationSummary`],
+//! [`crate::power::PowerSummary`],
+//! [`crate::runtime::batch::BatchStats`]).
+//!
+//! Three recorder tiers trade fidelity for overhead:
+//!
+//! * **null** — no recorder attached (`Option::None` on the emitting
+//!   side). The hot path pays one branch; the steady-state zero-alloc
+//!   bound of `tests/perf_alloc.rs` is unchanged.
+//! * **[`FlightRecorder`]** — a bounded ring buffer pre-allocated at
+//!   construction. Recording overwrites the oldest event and never
+//!   touches the allocator, so it can stay attached in production and
+//!   be dumped post-mortem (the scenario conformance harness dumps it
+//!   on golden mismatches).
+//! * **[`JsonlSink`]** — the full trace as JSON lines. Timestamps come
+//!   from the deterministic virtual clocks, object keys are sorted and
+//!   floats print shortest-roundtrip, so the same seed produces a
+//!   byte-identical file (`tod run --trace`, pinned in
+//!   `rust/tests/obs.rs`).
+//!
+//! [`metrics`] aggregates the same events (plus the existing summary
+//! types) into a registry of monotone counters and fixed-bucket
+//! histograms with Prometheus-style exposition; [`replay`] parses
+//! traces back and reconstructs drop cause chains
+//! (`tod trace explain-drop`).
+
+// Observability is on the serving path: failures must surface as
+// values, never panics.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod metrics;
+pub mod replay;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::util::json::Json;
+use crate::DnnKind;
+
+pub use metrics::MetricsRegistry;
+pub use replay::{explain_drops, parse_trace, DropCause, DropExplanation};
+
+/// Version of the event schema emitted into trace files. Bump when an
+/// event variant or field changes meaning; `tod trace` refuses files
+/// from a different major version.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Schema tag of the trace-file header line.
+pub const SCHEMA_TAG: &str = "tod-trace";
+
+/// Compact feasibility mask: bit `i` set means `DnnKind::from_index(i)`
+/// is budget-feasible. [`DnnKind::COUNT`] ≤ 8 is asserted at
+/// construction sites via [`mask_to_bits`].
+pub type MaskBits = u8;
+
+/// Pack a per-DNN feasibility array into [`MaskBits`].
+pub fn mask_to_bits(mask: &[bool; DnnKind::COUNT]) -> MaskBits {
+    let mut bits = 0u8;
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            bits |= 1 << i;
+        }
+    }
+    bits
+}
+
+/// Unpack [`MaskBits`] into the per-DNN feasibility array.
+pub fn bits_to_mask(bits: MaskBits) -> [bool; DnnKind::COUNT] {
+    let mut mask = [false; DnnKind::COUNT];
+    for (i, m) in mask.iter_mut().enumerate() {
+        *m = bits & (1 << i) != 0;
+    }
+    mask
+}
+
+/// One structured observability event. `Copy` with no heap-reaching
+/// fields, so the flight recorder can store events in a pre-allocated
+/// ring without ever touching the allocator.
+///
+/// Timestamps are **virtual stream/board seconds** from the
+/// deterministic sim clocks — never wall-clock — which is what makes a
+/// trace byte-identical under a fixed seed. Multi-stream emitters add
+/// each stream's join epoch so every event of a run shares one board
+/// timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A stream was registered (its join epoch, board time).
+    StreamJoined { stream: u32, t: f64 },
+    /// A stream presented its last frame and closed, with final counts.
+    StreamLeft { stream: u32, t: f64, frames: u64, inferred: u64, dropped: u64, failed: u64 },
+    /// A frame's capture window opened (the decision clock).
+    FramePresented { stream: u32, frame: u64, t: f64 },
+    /// The selection policy committed to a DNN for this frame.
+    DnnSelected { stream: u32, frame: u64, t: f64, dnn: DnnKind },
+    /// A budget governor overrode the inner policy's choice:
+    /// `requested` was infeasible under `mask` and `granted` ran
+    /// instead. Emitted at selection time (`t` = the frame's capture
+    /// start), before the matching [`Event::DnnSelected`].
+    BudgetClamp { stream: u32, t: f64, requested: DnnKind, granted: DnnKind, mask: MaskBits },
+    /// The DNN ran over `[start, end]` and the backend succeeded.
+    FrameInferred { stream: u32, frame: u64, dnn: DnnKind, start: f64, end: f64 },
+    /// The DNN ran (accelerator time was spent) but the backend failed;
+    /// detections carried forward.
+    InferenceFailed { stream: u32, frame: u64, dnn: DnnKind, start: f64, end: f64 },
+    /// The frame arrived while the accelerator was busy; `busy_until`
+    /// is when the blocking work frees the device (the drop's cause
+    /// anchor for `tod trace explain-drop`).
+    FrameDropped { stream: u32, frame: u64, t: f64, busy_until: f64 },
+    /// A micro-batch run started: this dispatch paid full setup.
+    BatchFormed { stream: u32, dnn: DnnKind, t: f64 },
+    /// A dispatch continued the current same-DNN run at marginal cost;
+    /// `len` is the run length including this item.
+    BatchExtended { stream: u32, dnn: DnnKind, len: u32, t: f64 },
+    /// A same-DNN run closed (next dispatch broke it, or the schedule
+    /// ended) carrying `len` items.
+    BatchFlushed { dnn: DnnKind, len: u32, t: f64 },
+    /// Admission control rejected the request (queue full, shed mode).
+    BatchShed { stream: u32, frame: u64, t: f64 },
+}
+
+impl Event {
+    /// Stable type tag used in the JSONL encoding and `tod trace grep`.
+    pub fn type_tag(&self) -> &'static str {
+        match self {
+            Event::StreamJoined { .. } => "stream_joined",
+            Event::StreamLeft { .. } => "stream_left",
+            Event::FramePresented { .. } => "frame_presented",
+            Event::DnnSelected { .. } => "dnn_selected",
+            Event::BudgetClamp { .. } => "budget_clamp",
+            Event::FrameInferred { .. } => "frame_inferred",
+            Event::InferenceFailed { .. } => "inference_failed",
+            Event::FrameDropped { .. } => "frame_dropped",
+            Event::BatchFormed { .. } => "batch_formed",
+            Event::BatchExtended { .. } => "batch_extended",
+            Event::BatchFlushed { .. } => "batch_flushed",
+            Event::BatchShed { .. } => "batch_shed",
+        }
+    }
+
+    /// Stream the event belongs to, when it has one.
+    pub fn stream(&self) -> Option<u32> {
+        match *self {
+            Event::StreamJoined { stream, .. }
+            | Event::StreamLeft { stream, .. }
+            | Event::FramePresented { stream, .. }
+            | Event::DnnSelected { stream, .. }
+            | Event::BudgetClamp { stream, .. }
+            | Event::FrameInferred { stream, .. }
+            | Event::InferenceFailed { stream, .. }
+            | Event::FrameDropped { stream, .. }
+            | Event::BatchFormed { stream, .. }
+            | Event::BatchExtended { stream, .. }
+            | Event::BatchShed { stream, .. } => Some(stream),
+            Event::BatchFlushed { .. } => None,
+        }
+    }
+
+    /// Frame the event refers to, when it has one.
+    pub fn frame(&self) -> Option<u64> {
+        match *self {
+            Event::FramePresented { frame, .. }
+            | Event::DnnSelected { frame, .. }
+            | Event::FrameInferred { frame, .. }
+            | Event::InferenceFailed { frame, .. }
+            | Event::FrameDropped { frame, .. }
+            | Event::BatchShed { frame, .. } => Some(frame),
+            _ => None,
+        }
+    }
+
+    /// Primary timestamp of the event (interval events use their start).
+    pub fn time(&self) -> f64 {
+        match *self {
+            Event::StreamJoined { t, .. }
+            | Event::StreamLeft { t, .. }
+            | Event::FramePresented { t, .. }
+            | Event::DnnSelected { t, .. }
+            | Event::BudgetClamp { t, .. }
+            | Event::FrameDropped { t, .. }
+            | Event::BatchFormed { t, .. }
+            | Event::BatchExtended { t, .. }
+            | Event::BatchFlushed { t, .. }
+            | Event::BatchShed { t, .. } => t,
+            Event::FrameInferred { start, .. }
+            | Event::InferenceFailed { start, .. } => start,
+        }
+    }
+
+    /// JSON encoding of the event (sorted keys; used for JSONL lines).
+    pub fn to_json(&self) -> Json {
+        let tag = Json::str(self.type_tag());
+        match *self {
+            Event::StreamJoined { stream, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("t", Json::num(t)),
+            ]),
+            Event::StreamLeft { stream, t, frames, inferred, dropped, failed } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("t", Json::num(t)),
+                    ("frames", Json::num(frames as f64)),
+                    ("inferred", Json::num(inferred as f64)),
+                    ("dropped", Json::num(dropped as f64)),
+                    ("failed", Json::num(failed as f64)),
+                ])
+            }
+            Event::FramePresented { stream, frame, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("frame", Json::num(frame as f64)),
+                ("t", Json::num(t)),
+            ]),
+            Event::DnnSelected { stream, frame, t, dnn } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("frame", Json::num(frame as f64)),
+                ("t", Json::num(t)),
+                ("dnn", Json::str(dnn.artifact_name())),
+            ]),
+            Event::BudgetClamp { stream, t, requested, granted, mask } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("t", Json::num(t)),
+                    ("requested", Json::str(requested.artifact_name())),
+                    ("granted", Json::str(granted.artifact_name())),
+                    ("mask", Json::num(mask as f64)),
+                ])
+            }
+            Event::FrameInferred { stream, frame, dnn, start, end } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("frame", Json::num(frame as f64)),
+                    ("dnn", Json::str(dnn.artifact_name())),
+                    ("start", Json::num(start)),
+                    ("end", Json::num(end)),
+                ])
+            }
+            Event::InferenceFailed { stream, frame, dnn, start, end } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("frame", Json::num(frame as f64)),
+                    ("dnn", Json::str(dnn.artifact_name())),
+                    ("start", Json::num(start)),
+                    ("end", Json::num(end)),
+                ])
+            }
+            Event::FrameDropped { stream, frame, t, busy_until } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("frame", Json::num(frame as f64)),
+                    ("t", Json::num(t)),
+                    ("busy_until", Json::num(busy_until)),
+                ])
+            }
+            Event::BatchFormed { stream, dnn, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("dnn", Json::str(dnn.artifact_name())),
+                ("t", Json::num(t)),
+            ]),
+            Event::BatchExtended { stream, dnn, len, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("dnn", Json::str(dnn.artifact_name())),
+                ("len", Json::num(len as f64)),
+                ("t", Json::num(t)),
+            ]),
+            Event::BatchFlushed { dnn, len, t } => Json::obj(vec![
+                ("type", tag),
+                ("dnn", Json::str(dnn.artifact_name())),
+                ("len", Json::num(len as f64)),
+                ("t", Json::num(t)),
+            ]),
+            Event::BatchShed { stream, frame, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("frame", Json::num(frame as f64)),
+                ("t", Json::num(t)),
+            ]),
+        }
+    }
+
+    /// Decode one event from its JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Event, String> {
+        let tag = v
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or("event has no \"type\" field")?;
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{tag}: missing number {k:?}"))
+        };
+        let uint = |k: &str| -> Result<u64, String> {
+            let n = num(k)?;
+            if n >= 0.0 && n.fract() == 0.0 {
+                Ok(n as u64)
+            } else {
+                Err(format!("{tag}: {k:?} is not a non-negative integer"))
+            }
+        };
+        let dnn = |k: &str| -> Result<DnnKind, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{tag}: missing dnn {k:?}"))?
+                .parse()
+        };
+        let stream = || uint("stream").map(|s| s as u32);
+        Ok(match tag {
+            "stream_joined" => {
+                Event::StreamJoined { stream: stream()?, t: num("t")? }
+            }
+            "stream_left" => Event::StreamLeft {
+                stream: stream()?,
+                t: num("t")?,
+                frames: uint("frames")?,
+                inferred: uint("inferred")?,
+                dropped: uint("dropped")?,
+                failed: uint("failed")?,
+            },
+            "frame_presented" => Event::FramePresented {
+                stream: stream()?,
+                frame: uint("frame")?,
+                t: num("t")?,
+            },
+            "dnn_selected" => Event::DnnSelected {
+                stream: stream()?,
+                frame: uint("frame")?,
+                t: num("t")?,
+                dnn: dnn("dnn")?,
+            },
+            "budget_clamp" => Event::BudgetClamp {
+                stream: stream()?,
+                t: num("t")?,
+                requested: dnn("requested")?,
+                granted: dnn("granted")?,
+                mask: uint("mask")? as MaskBits,
+            },
+            "frame_inferred" => Event::FrameInferred {
+                stream: stream()?,
+                frame: uint("frame")?,
+                dnn: dnn("dnn")?,
+                start: num("start")?,
+                end: num("end")?,
+            },
+            "inference_failed" => Event::InferenceFailed {
+                stream: stream()?,
+                frame: uint("frame")?,
+                dnn: dnn("dnn")?,
+                start: num("start")?,
+                end: num("end")?,
+            },
+            "frame_dropped" => Event::FrameDropped {
+                stream: stream()?,
+                frame: uint("frame")?,
+                t: num("t")?,
+                busy_until: num("busy_until")?,
+            },
+            "batch_formed" => Event::BatchFormed {
+                stream: stream()?,
+                dnn: dnn("dnn")?,
+                t: num("t")?,
+            },
+            "batch_extended" => Event::BatchExtended {
+                stream: stream()?,
+                dnn: dnn("dnn")?,
+                len: uint("len")? as u32,
+                t: num("t")?,
+            },
+            "batch_flushed" => Event::BatchFlushed {
+                dnn: dnn("dnn")?,
+                len: uint("len")? as u32,
+                t: num("t")?,
+            },
+            "batch_shed" => Event::BatchShed {
+                stream: stream()?,
+                frame: uint("frame")?,
+                t: num("t")?,
+            },
+            other => return Err(format!("unknown event type: {other:?}")),
+        })
+    }
+}
+
+/// Consumer of observability events. `record` must be cheap: the
+/// session calls it on every frame of every stream.
+pub trait Recorder {
+    fn record(&mut self, ev: &Event);
+}
+
+/// Shared recorder handle the emitters hold. Single-threaded by design:
+/// the deterministic schedulers all run on one thread (the wall-clock
+/// server aggregates through [`MetricsRegistry`] snapshots instead).
+pub type SharedRecorder = Rc<RefCell<dyn Recorder>>;
+
+/// Wrap a recorder into the [`SharedRecorder`] handle emitters take.
+pub fn shared<R: Recorder + 'static>(recorder: R) -> SharedRecorder {
+    Rc::new(RefCell::new(recorder))
+}
+
+/// The no-op tier: every `record` compiles to nothing. Exists mostly
+/// for tests and as the explicit "tracing off" spelling; emitters use
+/// `Option::None` on the hot path so not even a dynamic call is paid.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    #[inline]
+    fn record(&mut self, _ev: &Event) {}
+}
+
+/// Bounded ring-buffer recorder: keeps the last `capacity` events,
+/// allocation-free after construction. The black box you leave attached
+/// and dump when something goes wrong.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    buf: Vec<Event>,
+    /// Ring size — `Vec::with_capacity` may over-reserve, so the
+    /// requested bound is tracked explicitly.
+    cap: usize,
+    /// Next write slot once the ring is full.
+    head: usize,
+    /// Events overwritten after the ring filled.
+    overwritten: u64,
+}
+
+impl FlightRecorder {
+    /// A ring holding the last `capacity` events (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "flight recorder capacity must be >= 1");
+        FlightRecorder {
+            buf: Vec::with_capacity(capacity),
+            cap: capacity,
+            head: 0,
+            overwritten: 0,
+        }
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events that were overwritten after the ring filled.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        let (newer, older) = self.buf.split_at(self.head);
+        older.iter().chain(newer.iter())
+    }
+
+    /// Dump the retained window as trace JSONL (header line first, with
+    /// an `overwritten` count so a truncated window is self-describing).
+    pub fn to_jsonl(&self, label: &str) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &Json::obj(vec![
+                ("schema", Json::str(SCHEMA_TAG)),
+                ("version", Json::num(SCHEMA_VERSION as f64)),
+                ("label", Json::str(label)),
+                ("overwritten", Json::num(self.overwritten as f64)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+        for ev in self.events() {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Recorder for FlightRecorder {
+    #[inline]
+    fn record(&mut self, ev: &Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(*ev);
+        } else {
+            // cap >= 1 and buf.len() == cap, so head is always in range
+            if let Some(slot) = self.buf.get_mut(self.head) {
+                *slot = *ev;
+            }
+            self.head = (self.head + 1) % self.cap;
+            self.overwritten += 1;
+        }
+    }
+}
+
+/// Full-fidelity JSON-lines sink. Buffers the trace in memory; the
+/// caller writes it out ([`JsonlSink::save`]) after the run. Lines are
+/// byte-stable under a fixed seed: sorted keys, shortest-roundtrip
+/// floats, virtual-clock timestamps only.
+#[derive(Debug, Clone)]
+pub struct JsonlSink {
+    out: String,
+    events: u64,
+}
+
+impl JsonlSink {
+    /// A sink whose header line carries `label` (e.g. the run's policy
+    /// and sequence descriptor).
+    pub fn new(label: &str) -> Self {
+        let mut out = String::new();
+        out.push_str(
+            &Json::obj(vec![
+                ("schema", Json::str(SCHEMA_TAG)),
+                ("version", Json::num(SCHEMA_VERSION as f64)),
+                ("label", Json::str(label)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+        JsonlSink { out, events: 0 }
+    }
+
+    /// Events recorded so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The trace text (header line + one JSON object per event).
+    pub fn contents(&self) -> &str {
+        &self.out
+    }
+
+    /// Write the trace to `path`.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, &self.out)
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+impl Recorder for JsonlSink {
+    fn record(&mut self, ev: &Event) {
+        self.out.push_str(&ev.to_json().to_string());
+        self.out.push('\n');
+        self.events += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::count_allocs;
+
+    fn sample_events(n: u64) -> Vec<Event> {
+        (0..n)
+            .map(|i| Event::FramePresented {
+                stream: (i % 3) as u32,
+                frame: i + 1,
+                t: i as f64 / 30.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mask_bits_roundtrip() {
+        for bits in 0..(1u16 << DnnKind::COUNT) {
+            let bits = bits as MaskBits;
+            assert_eq!(mask_to_bits(&bits_to_mask(bits)), bits);
+        }
+        assert_eq!(mask_to_bits(&[true; DnnKind::COUNT]), 0b1111);
+        assert_eq!(bits_to_mask(0b0101), [true, false, true, false]);
+    }
+
+    #[test]
+    fn every_event_variant_roundtrips_through_json() {
+        let events = [
+            Event::StreamJoined { stream: 2, t: 1.5 },
+            Event::StreamLeft {
+                stream: 2,
+                t: 9.0,
+                frames: 90,
+                inferred: 70,
+                dropped: 19,
+                failed: 1,
+            },
+            Event::FramePresented { stream: 0, frame: 7, t: 0.2 },
+            Event::DnnSelected {
+                stream: 0,
+                frame: 7,
+                t: 0.2,
+                dnn: DnnKind::Y288,
+            },
+            Event::BudgetClamp {
+                stream: 1,
+                t: 0.25,
+                requested: DnnKind::Y416,
+                granted: DnnKind::TinyY416,
+                mask: 0b0011,
+            },
+            Event::FrameInferred {
+                stream: 0,
+                frame: 7,
+                dnn: DnnKind::Y288,
+                start: 0.2,
+                end: 0.29,
+            },
+            Event::InferenceFailed {
+                stream: 0,
+                frame: 8,
+                dnn: DnnKind::Y288,
+                start: 0.3,
+                end: 0.39,
+            },
+            Event::FrameDropped {
+                stream: 0,
+                frame: 9,
+                t: 0.266,
+                busy_until: 0.39,
+            },
+            Event::BatchFormed { stream: 1, dnn: DnnKind::TinyY288, t: 0.4 },
+            Event::BatchExtended {
+                stream: 2,
+                dnn: DnnKind::TinyY288,
+                len: 2,
+                t: 0.43,
+            },
+            Event::BatchFlushed { dnn: DnnKind::TinyY288, len: 2, t: 0.46 },
+            Event::BatchShed { stream: 1, frame: 12, t: 0.5 },
+        ];
+        for ev in events {
+            let back = Event::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back, ev, "roundtrip of {}", ev.type_tag());
+            // the encoding is stable text too
+            assert_eq!(back.to_json().to_string(), ev.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_events() {
+        assert!(Event::from_json(&Json::Null).is_err());
+        assert!(Event::from_json(&Json::obj(vec![(
+            "type",
+            Json::str("no_such_event")
+        )]))
+        .is_err());
+        // missing field
+        let v = Json::obj(vec![
+            ("type", Json::str("frame_presented")),
+            ("stream", Json::num(0.0)),
+        ]);
+        assert!(Event::from_json(&v).is_err());
+        // non-integer frame
+        let v = Json::obj(vec![
+            ("type", Json::str("frame_presented")),
+            ("stream", Json::num(0.0)),
+            ("frame", Json::num(1.5)),
+            ("t", Json::num(0.0)),
+        ]);
+        assert!(Event::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn flight_recorder_keeps_the_last_capacity_events() {
+        let mut fr = FlightRecorder::new(4);
+        for ev in sample_events(10) {
+            fr.record(&ev);
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.overwritten(), 6);
+        let frames: Vec<u64> =
+            fr.events().filter_map(|e| e.frame()).collect();
+        // oldest-first window over the 10 recorded frames
+        assert_eq!(frames, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn flight_recorder_below_capacity_keeps_everything_in_order() {
+        let mut fr = FlightRecorder::new(8);
+        for ev in sample_events(5) {
+            fr.record(&ev);
+        }
+        assert_eq!(fr.len(), 5);
+        assert_eq!(fr.overwritten(), 0);
+        let frames: Vec<u64> =
+            fr.events().filter_map(|e| e.frame()).collect();
+        assert_eq!(frames, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn flight_recorder_wraparound_is_exact_at_multiples() {
+        // exactly 2x capacity: the ring must hold the second half
+        let mut fr = FlightRecorder::new(5);
+        for ev in sample_events(10) {
+            fr.record(&ev);
+        }
+        let frames: Vec<u64> =
+            fr.events().filter_map(|e| e.frame()).collect();
+        assert_eq!(frames, vec![6, 7, 8, 9, 10]);
+        assert_eq!(fr.overwritten(), 5);
+    }
+
+    #[test]
+    fn flight_recorder_records_without_allocating() {
+        let mut fr = FlightRecorder::new(64);
+        let events = sample_events(256);
+        // warm: nothing to warm, the ring is pre-allocated
+        let (delta, ()) = count_allocs(|| {
+            for ev in &events {
+                fr.record(ev);
+            }
+        });
+        assert_eq!(
+            delta.allocs, 0,
+            "flight recording allocated {} times",
+            delta.allocs
+        );
+        assert_eq!(fr.len(), 64);
+    }
+
+    #[test]
+    fn flight_recorder_dump_has_header_and_events() {
+        let mut fr = FlightRecorder::new(4);
+        for ev in sample_events(6) {
+            fr.record(&ev);
+        }
+        let dump = fr.to_jsonl("unit");
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 5);
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("schema").unwrap().as_str(), Some(SCHEMA_TAG));
+        assert_eq!(header.get("overwritten").unwrap().as_f64(), Some(2.0));
+        for line in &lines[1..] {
+            let ev = Event::from_json(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(ev.type_tag(), "frame_presented");
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_is_deterministic_text() {
+        let mut a = JsonlSink::new("run");
+        let mut b = JsonlSink::new("run");
+        for ev in sample_events(20) {
+            a.record(&ev);
+            b.record(&ev);
+        }
+        assert_eq!(a.contents(), b.contents());
+        assert_eq!(a.events(), 20);
+        assert!(a.contents().starts_with('{'));
+        assert_eq!(a.contents().lines().count(), 21);
+    }
+
+    #[test]
+    fn null_recorder_is_a_no_op() {
+        let mut n = NullRecorder;
+        for ev in sample_events(3) {
+            n.record(&ev);
+        }
+        // and through the shared handle
+        let rec = shared(NullRecorder);
+        rec.borrow_mut().record(&sample_events(1)[0]);
+    }
+
+    #[test]
+    fn event_accessors_are_consistent() {
+        let ev = Event::FrameInferred {
+            stream: 3,
+            frame: 9,
+            dnn: DnnKind::Y416,
+            start: 1.0,
+            end: 1.2,
+        };
+        assert_eq!(ev.stream(), Some(3));
+        assert_eq!(ev.frame(), Some(9));
+        assert_eq!(ev.time(), 1.0);
+        let flush = Event::BatchFlushed { dnn: DnnKind::Y288, len: 3, t: 2.0 };
+        assert_eq!(flush.stream(), None);
+        assert_eq!(flush.frame(), None);
+    }
+}

@@ -1,0 +1,443 @@
+//! Trace replay and analysis: parse a JSONL trace back into events,
+//! summarise it, and reconstruct *why* each frame was dropped
+//! (`tod trace summarize/grep/explain-drop`).
+//!
+//! Drop causation works backwards from the drop anchor: a
+//! [`Event::FrameDropped`] carries `busy_until`, the instant the
+//! blocking accelerator work would free the device. The inference whose
+//! `end` equals that instant *is* the blocking work; if that
+//! inference's selection was demoted by a power budget (a
+//! [`Event::BudgetClamp`] at its selection time), the drop chain is
+//! budget → clamp → busy, otherwise plain busy-accelerator. Frames
+//! rejected by batch admission control are shed, not dropped, and chain
+//! to their [`Event::BatchShed`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::obs::{Event, SCHEMA_TAG, SCHEMA_VERSION};
+use crate::util::json::Json;
+use crate::DnnKind;
+
+/// Timestamp-equality slop. Trace floats are shortest-roundtrip
+/// serialised so re-parsed values are bit-exact; the epsilon only papers
+/// over summed-epoch arithmetic done before emission.
+const T_EPS: f64 = 1e-9;
+
+/// Parse a JSONL trace: optional header line (schema-checked), then one
+/// event per line. Blank lines are ignored.
+pub fn parse_trace(text: &str) -> Result<(Option<Json>, Vec<Event>), String> {
+    let mut header = None;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("line {}: {e:?}", i + 1))?;
+        if i == 0 {
+            if let Some(tag) = v.get("schema").and_then(Json::as_str) {
+                if tag != SCHEMA_TAG {
+                    return Err(format!(
+                        "line 1: schema {tag:?} is not {SCHEMA_TAG:?}"
+                    ));
+                }
+                let version =
+                    v.get("version").and_then(Json::as_f64).unwrap_or(0.0)
+                        as u64;
+                if version != SCHEMA_VERSION {
+                    return Err(format!(
+                        "line 1: trace version {version} != supported \
+                         {SCHEMA_VERSION}"
+                    ));
+                }
+                header = Some(v);
+                continue;
+            }
+        }
+        events.push(
+            Event::from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?,
+        );
+    }
+    Ok((header, events))
+}
+
+/// Why a frame was not inferred.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DropCause {
+    /// Batch admission control rejected it (queue full, shed mode).
+    Shed,
+    /// The accelerator was busy with work whose selection had been
+    /// demoted by a power budget: the drop chains back to the clamp.
+    BusyAfterClamp { requested: DnnKind, granted: DnnKind },
+    /// The accelerator was simply busy with the blocking inference.
+    BusyAccelerator,
+    /// No blocking work found in the trace (e.g. flight-recorder window
+    /// truncated before the blocking inference).
+    Unknown,
+}
+
+/// One dropped frame with its reconstructed cause chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DropExplanation {
+    pub stream: u32,
+    pub frame: u64,
+    /// Arrival (capture) time of the dropped frame.
+    pub t: f64,
+    /// When the blocking work frees the accelerator.
+    pub busy_until: f64,
+    pub cause: DropCause,
+    /// The blocking inference `(frame, dnn, start, end)`, when found.
+    pub blocking: Option<(u64, DnnKind, f64, f64)>,
+}
+
+impl fmt::Display for DropExplanation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "stream {} frame {} @ {:.3}s: ",
+            self.stream, self.frame, self.t
+        )?;
+        match self.cause {
+            DropCause::Shed => write!(f, "shed by batch admission control"),
+            DropCause::BusyAfterClamp { requested, granted } => {
+                let (bf, _, s, e) = match self.blocking {
+                    Some(b) => b,
+                    None => (0, granted, 0.0, self.busy_until),
+                };
+                write!(
+                    f,
+                    "budget clamp {} -> {} on frame {bf}, which held the \
+                     accelerator [{s:.3}, {e:.3}]s past this arrival",
+                    requested.artifact_name(),
+                    granted.artifact_name(),
+                )
+            }
+            DropCause::BusyAccelerator => match self.blocking {
+                Some((bf, dnn, s, e)) => write!(
+                    f,
+                    "accelerator busy with frame {bf} ({}) over \
+                     [{s:.3}, {e:.3}]s",
+                    dnn.artifact_name()
+                ),
+                None => write!(f, "accelerator busy until {:.3}s", self.busy_until),
+            },
+            DropCause::Unknown => write!(
+                f,
+                "no blocking work found before busy_until {:.3}s \
+                 (trace window truncated?)",
+                self.busy_until
+            ),
+        }
+    }
+}
+
+/// Reconstruct the cause chain for every dropped frame in the trace.
+pub fn explain_drops(events: &[Event]) -> Vec<DropExplanation> {
+    let mut out = Vec::new();
+    for ev in events {
+        let (stream, frame, t, busy_until) = match *ev {
+            Event::FrameDropped { stream, frame, t, busy_until } => {
+                (stream, frame, t, busy_until)
+            }
+            _ => continue,
+        };
+
+        // (1) shed, not a capacity drop?
+        let shed = events.iter().any(|e| {
+            matches!(*e, Event::BatchShed { stream: s, frame: f, .. }
+                if s == stream && f == frame)
+        });
+        if shed {
+            out.push(DropExplanation {
+                stream,
+                frame,
+                t,
+                busy_until,
+                cause: DropCause::Shed,
+                blocking: None,
+            });
+            continue;
+        }
+
+        // (2) the blocking inference: same stream, ends exactly when the
+        // accelerator frees; fall back to the latest inference ending at
+        // or before busy_until (clock-clamped starts).
+        let infer_of = |e: &Event| match *e {
+            Event::FrameInferred { stream: s, frame: f, dnn, start, end }
+            | Event::InferenceFailed { stream: s, frame: f, dnn, start, end }
+                if s == stream =>
+            {
+                Some((f, dnn, start, end))
+            }
+            _ => None,
+        };
+        let blocking = events
+            .iter()
+            .filter_map(infer_of)
+            .find(|&(_, _, _, end)| (end - busy_until).abs() < T_EPS)
+            .or_else(|| {
+                events
+                    .iter()
+                    .filter_map(infer_of)
+                    .filter(|&(_, _, _, end)| end <= busy_until + T_EPS)
+                    .max_by(|a, b| a.3.total_cmp(&b.3))
+            });
+
+        let cause = match blocking {
+            None => DropCause::Unknown,
+            Some((bframe, _, _, _)) => {
+                // (3) was the blocking inference's selection clamped?
+                // The clamp fires inside select() at the frame's capture
+                // time, immediately before its DnnSelected.
+                let t_sel = events.iter().find_map(|e| match *e {
+                    Event::DnnSelected { stream: s, frame: f, t, .. }
+                        if s == stream && f == bframe =>
+                    {
+                        Some(t)
+                    }
+                    _ => None,
+                });
+                let clamp = t_sel.and_then(|ts| {
+                    events.iter().find_map(|e| match *e {
+                        Event::BudgetClamp { stream: s, t, requested, granted, .. }
+                            if s == stream && (t - ts).abs() < T_EPS =>
+                        {
+                            Some((requested, granted))
+                        }
+                        _ => None,
+                    })
+                });
+                match clamp {
+                    Some((requested, granted)) => {
+                        DropCause::BusyAfterClamp { requested, granted }
+                    }
+                    None => DropCause::BusyAccelerator,
+                }
+            }
+        };
+        out.push(DropExplanation { stream, frame, t, busy_until, cause, blocking });
+    }
+    out
+}
+
+/// Human-readable multi-line trace summary (deterministic ordering).
+pub fn summarize(events: &[Event]) -> String {
+    use std::fmt::Write as _;
+
+    #[derive(Default)]
+    struct StreamAgg {
+        presented: u64,
+        inferred: u64,
+        dropped: u64,
+        failed: u64,
+        shed: u64,
+        clamps: u64,
+    }
+
+    let mut by_type: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut by_stream: BTreeMap<u32, StreamAgg> = BTreeMap::new();
+    let mut deploy = [0u64; DnnKind::COUNT];
+    let mut t_max = 0.0f64;
+    for ev in events {
+        *by_type.entry(ev.type_tag()).or_insert(0) += 1;
+        t_max = t_max.max(match *ev {
+            Event::FrameInferred { end, .. }
+            | Event::InferenceFailed { end, .. } => end,
+            _ => ev.time(),
+        });
+        if let Some(s) = ev.stream() {
+            let agg = by_stream.entry(s).or_default();
+            match *ev {
+                Event::FramePresented { .. } => agg.presented += 1,
+                Event::FrameInferred { dnn, .. } => {
+                    agg.inferred += 1;
+                    deploy[dnn.index()] += 1;
+                }
+                Event::InferenceFailed { .. } => agg.failed += 1,
+                Event::FrameDropped { .. } => agg.dropped += 1,
+                Event::BatchShed { .. } => agg.shed += 1,
+                Event::BudgetClamp { .. } => agg.clamps += 1,
+                _ => {}
+            }
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} events | {} streams | span {:.3}s",
+        events.len(),
+        by_stream.len(),
+        t_max
+    );
+    let _ = writeln!(out, "by type:");
+    for (tag, n) in &by_type {
+        let _ = writeln!(out, "  {tag:<18} {n}");
+    }
+    let _ = writeln!(out, "per stream:");
+    for (s, a) in &by_stream {
+        let _ = writeln!(
+            out,
+            "  stream {s}: presented {} | inferred {} | dropped {} | \
+             failed {} | shed {} | clamps {}",
+            a.presented, a.inferred, a.dropped, a.failed, a.shed, a.clamps
+        );
+    }
+    let per: Vec<String> = DnnKind::ALL
+        .iter()
+        .map(|d| format!("{} {}", d.short_label(), deploy[d.index()]))
+        .collect();
+    let _ = writeln!(out, "deploys: {}", per.join(" "));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::JsonlSink;
+    use crate::obs::Recorder;
+
+    fn busy_drop_trace() -> Vec<Event> {
+        vec![
+            Event::StreamJoined { stream: 0, t: 0.0 },
+            Event::FramePresented { stream: 0, frame: 1, t: 0.0 },
+            Event::DnnSelected { stream: 0, frame: 1, t: 0.0, dnn: DnnKind::Y416 },
+            Event::FrameInferred {
+                stream: 0,
+                frame: 1,
+                dnn: DnnKind::Y416,
+                start: 0.0,
+                end: 0.1,
+            },
+            Event::FramePresented { stream: 0, frame: 2, t: 0.033 },
+            Event::FrameDropped {
+                stream: 0,
+                frame: 2,
+                t: 0.033,
+                busy_until: 0.1,
+            },
+        ]
+    }
+
+    #[test]
+    fn parse_trace_roundtrips_a_sink() {
+        let mut sink = JsonlSink::new("unit");
+        let evs = busy_drop_trace();
+        for ev in &evs {
+            sink.record(ev);
+        }
+        let (header, parsed) = parse_trace(sink.contents()).unwrap();
+        assert_eq!(
+            header.unwrap().get("label").unwrap().as_str(),
+            Some("unit")
+        );
+        assert_eq!(parsed, evs);
+    }
+
+    #[test]
+    fn parse_trace_rejects_bad_versions_and_lines() {
+        assert!(parse_trace("{\"schema\":\"tod-trace\",\"version\":99}\n")
+            .is_err());
+        assert!(parse_trace("{\"schema\":\"bogus\",\"version\":1}\n").is_err());
+        assert!(parse_trace("not json\n").is_err());
+        // headerless traces are accepted
+        let line = Event::StreamJoined { stream: 0, t: 0.0 }
+            .to_json()
+            .to_string();
+        let (h, evs) = parse_trace(&line).unwrap();
+        assert!(h.is_none());
+        assert_eq!(evs.len(), 1);
+    }
+
+    #[test]
+    fn explains_plain_busy_drop() {
+        let ex = explain_drops(&busy_drop_trace());
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].cause, DropCause::BusyAccelerator);
+        assert_eq!(ex[0].blocking, Some((1, DnnKind::Y416, 0.0, 0.1)));
+        assert!(ex[0].to_string().contains("accelerator busy with frame 1"));
+    }
+
+    #[test]
+    fn explains_clamped_busy_drop() {
+        let mut evs = busy_drop_trace();
+        // the blocking inference's selection was demoted at its capture time
+        evs.insert(
+            2,
+            Event::BudgetClamp {
+                stream: 0,
+                t: 0.0,
+                requested: DnnKind::Y416,
+                granted: DnnKind::TinyY416,
+                mask: 0b0011,
+            },
+        );
+        let ex = explain_drops(&evs);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(
+            ex[0].cause,
+            DropCause::BusyAfterClamp {
+                requested: DnnKind::Y416,
+                granted: DnnKind::TinyY416
+            }
+        );
+        assert!(ex[0].to_string().contains("budget clamp"));
+    }
+
+    #[test]
+    fn explains_shed_frames() {
+        let evs = vec![
+            Event::FramePresented { stream: 1, frame: 5, t: 0.1 },
+            Event::BatchShed { stream: 1, frame: 5, t: 0.1 },
+            Event::FrameDropped {
+                stream: 1,
+                frame: 5,
+                t: 0.1,
+                busy_until: 0.2,
+            },
+        ];
+        let ex = explain_drops(&evs);
+        assert_eq!(ex[0].cause, DropCause::Shed);
+    }
+
+    #[test]
+    fn unknown_when_blocking_work_is_outside_the_window() {
+        let evs = vec![Event::FrameDropped {
+            stream: 0,
+            frame: 9,
+            t: 1.0,
+            busy_until: 1.05,
+        }];
+        let ex = explain_drops(&evs);
+        assert_eq!(ex[0].cause, DropCause::Unknown);
+        assert!(ex[0].to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn clamp_on_another_frame_does_not_leak() {
+        let mut evs = busy_drop_trace();
+        // a clamp on a *later* selection must not explain this drop
+        evs.push(Event::BudgetClamp {
+            stream: 0,
+            t: 0.2,
+            requested: DnnKind::Y416,
+            granted: DnnKind::Y288,
+            mask: 0b0111,
+        });
+        let ex = explain_drops(&evs);
+        assert_eq!(ex[0].cause, DropCause::BusyAccelerator);
+    }
+
+    #[test]
+    fn summarize_is_deterministic_and_complete() {
+        let evs = busy_drop_trace();
+        let a = summarize(&evs);
+        assert_eq!(a, summarize(&evs));
+        assert!(a.contains("6 events"));
+        assert!(a.contains("frame_dropped"));
+        assert!(a.contains("stream 0: presented 2 | inferred 1 | dropped 1"));
+        assert!(a.contains("span 0.100s"));
+    }
+}

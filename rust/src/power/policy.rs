@@ -22,6 +22,7 @@
 
 use crate::coordinator::policy::SelectionPolicy;
 use crate::features::FrameFeatures;
+use crate::obs::{mask_to_bits, Event as ObsEvent, SharedRecorder};
 use crate::predictor::CalibrationTable;
 use crate::DnnKind;
 
@@ -47,6 +48,10 @@ pub struct BudgetedPolicy {
     budget: SharedBudget,
     /// Capture start of the frame being decided (set by `on_frame`).
     now: f64,
+    /// Observability sink for [`ObsEvent::BudgetClamp`] emissions.
+    recorder: Option<SharedRecorder>,
+    /// Stream id stamped on emitted clamps.
+    obs_stream: u32,
 }
 
 impl BudgetedPolicy {
@@ -63,7 +68,13 @@ impl BudgetedPolicy {
         inner: Box<dyn SelectionPolicy>,
         budget: SharedBudget,
     ) -> Self {
-        BudgetedPolicy { mode: Mode::Mask(inner), budget, now: 0.0 }
+        BudgetedPolicy {
+            mode: Mode::Mask(inner),
+            budget,
+            now: 0.0,
+            recorder: None,
+            obs_stream: 0,
+        }
     }
 
     /// Energy-aware argmax mode over a privately owned governor.
@@ -76,7 +87,43 @@ impl BudgetedPolicy {
         table: CalibrationTable,
         budget: SharedBudget,
     ) -> Self {
-        BudgetedPolicy { mode: Mode::Argmax { table }, budget, now: 0.0 }
+        BudgetedPolicy {
+            mode: Mode::Argmax { table },
+            budget,
+            now: 0.0,
+            recorder: None,
+            obs_stream: 0,
+        }
+    }
+
+    /// Attach an observability recorder: every demotion the governor
+    /// forces is emitted as [`ObsEvent::BudgetClamp`] stamped with
+    /// `stream`, at the deciding frame's capture time (the same `t` as
+    /// the session's matching `DnnSelected`, which is what lets
+    /// `tod trace explain-drop` join the two).
+    pub fn with_recorder(
+        mut self,
+        recorder: SharedRecorder,
+        stream: u32,
+    ) -> Self {
+        self.recorder = Some(recorder);
+        self.obs_stream = stream;
+        self
+    }
+
+    /// Emit a clamp if a recorder is attached. `now` is stream time;
+    /// epoch-shifting adapters move `on_frame` to board time before it
+    /// reaches this policy, so the timestamp is already board-global.
+    fn emit_clamp(&self, requested: DnnKind, granted: DnnKind, mask: &DnnMask) {
+        if let Some(rec) = &self.recorder {
+            rec.borrow_mut().record(&ObsEvent::BudgetClamp {
+                stream: self.obs_stream,
+                t: self.now,
+                requested,
+                granted,
+                mask: mask_to_bits(mask),
+            });
+        }
     }
 
     /// Handle to the governor (e.g. to share it with another stream).
@@ -135,11 +182,38 @@ impl SelectionPolicy for BudgetedPolicy {
                 if mask[chosen.index()] {
                     chosen
                 } else {
-                    Self::demote(chosen, &mask)
+                    let granted = Self::demote(chosen, &mask);
+                    let (recorder, stream, now) =
+                        (&self.recorder, self.obs_stream, self.now);
+                    if let Some(rec) = recorder {
+                        rec.borrow_mut().record(&ObsEvent::BudgetClamp {
+                            stream,
+                            t: now,
+                            requested: chosen,
+                            granted,
+                            mask: mask_to_bits(&mask),
+                        });
+                    }
+                    granted
                 }
             }
             Mode::Argmax { table } => {
-                Self::argmax_select(table, &budget, &mask, features)
+                let granted =
+                    Self::argmax_select(table, &budget, &mask, features);
+                // clamp = the pick the table *wanted* was masked off;
+                // only worth computing when someone is listening
+                if self.recorder.is_some() && mask != [true; DnnKind::COUNT] {
+                    let unconstrained = Self::argmax_select(
+                        table,
+                        &budget,
+                        &[true; DnnKind::COUNT],
+                        features,
+                    );
+                    if unconstrained != granted {
+                        self.emit_clamp(unconstrained, granted, &mask);
+                    }
+                }
+                granted
             }
         }
     }

@@ -197,19 +197,41 @@ pub struct MicroBatcher<T> {
     max_wait: Duration,
     queues: Vec<VecDeque<Pending<T>>>,
     queued: usize,
+    high_water: usize,
 }
 
 impl<T> MicroBatcher<T> {
     /// `max_batch >= 1`; a zero `max_wait` makes every request due
     /// immediately (degenerates to per-request dispatch when paired
-    /// with `max_batch == 1`).
+    /// with `max_batch == 1`). Each per-variant queue pre-reserves
+    /// `max_batch` slots; use
+    /// [`with_queue_capacity`](Self::with_queue_capacity) to reserve
+    /// more up front.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self::with_queue_capacity(max_batch, max_wait, max_batch)
+    }
+
+    /// Like [`new`](Self::new) but pre-reserves `reserve` slots in
+    /// every per-variant queue, so a dispatch loop that never exceeds
+    /// that occupancy performs no queue reallocation in steady state
+    /// (pair with [`pop_due_into`](Self::pop_due_into) /
+    /// [`pop_any_into`](Self::pop_any_into) for a fully alloc-free hot
+    /// path). The server passes its admission bound
+    /// [`BatchConfig::queue_cap`] here.
+    pub fn with_queue_capacity(
+        max_batch: usize,
+        max_wait: Duration,
+        reserve: usize,
+    ) -> Self {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         MicroBatcher {
             max_batch,
             max_wait,
-            queues: (0..DnnKind::COUNT).map(|_| VecDeque::new()).collect(),
+            queues: (0..DnnKind::COUNT)
+                .map(|_| VecDeque::with_capacity(reserve.max(max_batch)))
+                .collect(),
             queued: 0,
+            high_water: 0,
         }
     }
 
@@ -222,10 +244,16 @@ impl<T> MicroBatcher<T> {
         self.queued == 0
     }
 
+    /// Peak simultaneous occupancy since construction (all variants).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
     /// Enqueue one request for `dnn` at time `now`.
     pub fn push(&mut self, dnn: DnnKind, item: T, now: Instant) {
         self.queues[dnn.index()].push_back(Pending { since: now, item });
         self.queued += 1;
+        self.high_water = self.high_water.max(self.queued);
     }
 
     /// Earliest deadline-flush instant over the non-empty queues, or
@@ -247,10 +275,10 @@ impl<T> MicroBatcher<T> {
         earliest
     }
 
-    /// Pop the most urgent due batch at time `now`: full queues first
-    /// (largest wins), then expired queues by oldest head; ties break
-    /// on the lower variant index. Returns up to `max_batch` items.
-    pub fn pop_due(&mut self, now: Instant) -> Option<(DnnKind, Vec<T>)> {
+    /// Queue index and batch size of the most urgent due batch at time
+    /// `now`: full queues first (largest wins), then expired queues by
+    /// oldest head; ties break on the lower variant index.
+    fn due_index(&self, now: Instant) -> Option<(usize, usize)> {
         let mut best: Option<(usize, usize, Instant)> = None;
         for (i, q) in self.queues.iter().enumerate() {
             let Some(head) = q.front() else { continue };
@@ -270,8 +298,31 @@ impl<T> MicroBatcher<T> {
                 _ => candidate,
             });
         }
-        let (idx, take, _) = best?;
+        best.map(|(idx, take, _)| (idx, take))
+    }
+
+    /// Pop the most urgent due batch at time `now` (see
+    /// [`due_index`](Self::due_index) for the ordering). Returns up to
+    /// `max_batch` items in a fresh `Vec`; the dispatch loop should
+    /// prefer [`pop_due_into`](Self::pop_due_into), which reuses one.
+    pub fn pop_due(&mut self, now: Instant) -> Option<(DnnKind, Vec<T>)> {
+        let (idx, take) = self.due_index(now)?;
         Some((variant_at(idx), self.drain(idx, take)))
+    }
+
+    /// Allocation-free [`pop_due`](Self::pop_due): drains the due batch
+    /// into the caller-owned `out` (cleared first) and returns its
+    /// variant. With `out.capacity() >= max_batch` and queues sized via
+    /// [`with_queue_capacity`](Self::with_queue_capacity), the steady
+    /// dispatch loop touches the allocator zero times.
+    pub fn pop_due_into(
+        &mut self,
+        now: Instant,
+        out: &mut Vec<T>,
+    ) -> Option<DnnKind> {
+        let (idx, take) = self.due_index(now)?;
+        self.drain_into(idx, take, out);
+        Some(variant_at(idx))
     }
 
     /// Pop any pending batch regardless of deadlines (shutdown drain).
@@ -281,11 +332,26 @@ impl<T> MicroBatcher<T> {
         Some((variant_at(idx), self.drain(idx, take)))
     }
 
+    /// Allocation-free [`pop_any`](Self::pop_any) (shutdown drain into
+    /// a reused buffer).
+    pub fn pop_any_into(&mut self, out: &mut Vec<T>) -> Option<DnnKind> {
+        let idx = self.queues.iter().position(|q| !q.is_empty())?;
+        let take = self.queues[idx].len().min(self.max_batch);
+        self.drain_into(idx, take, out);
+        Some(variant_at(idx))
+    }
+
     fn drain(&mut self, idx: usize, n: usize) -> Vec<T> {
-        let q = &mut self.queues[idx];
-        let out: Vec<T> = q.drain(..n).map(|p| p.item).collect();
-        self.queued -= out.len();
+        let mut out = Vec::with_capacity(n);
+        self.drain_into(idx, n, &mut out);
         out
+    }
+
+    fn drain_into(&mut self, idx: usize, n: usize, out: &mut Vec<T>) {
+        out.clear();
+        let q = &mut self.queues[idx];
+        out.extend(q.drain(..n).map(|p| p.item));
+        self.queued -= n;
     }
 }
 
@@ -408,5 +474,85 @@ mod tests {
         assert_eq!(b.next_deadline(), None);
         assert!(b.is_empty());
         assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let now = t0();
+        let mk = || {
+            let mut b = MicroBatcher::new(2, Duration::ZERO);
+            b.push(DnnKind::Y416, 1u32, now);
+            b.push(DnnKind::Y416, 2, now);
+            b.push(DnnKind::TinyY288, 3, now);
+            b
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut out = Vec::new();
+        while let Some((dnn, items)) = a.pop_due(now) {
+            assert_eq!(b.pop_due_into(now, &mut out), Some(dnn));
+            assert_eq!(out, items);
+        }
+        assert_eq!(b.pop_due_into(now, &mut out), None);
+        let mut a = mk();
+        let mut b = mk();
+        while let Some((dnn, items)) = a.pop_any() {
+            assert_eq!(b.pop_any_into(&mut out), Some(dnn));
+            assert_eq!(out, items);
+        }
+        assert_eq!(b.pop_any_into(&mut out), None);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn high_water_tracks_peak_occupancy() {
+        let mut b = MicroBatcher::new(2, Duration::ZERO);
+        let now = t0();
+        assert_eq!(b.high_water(), 0);
+        b.push(DnnKind::Y416, 1u32, now);
+        b.push(DnnKind::Y288, 2, now);
+        b.push(DnnKind::Y288, 3, now);
+        assert_eq!(b.high_water(), 3);
+        while b.pop_any().is_some() {}
+        // draining never lowers the recorded peak
+        assert!(b.is_empty());
+        assert_eq!(b.high_water(), 3);
+        b.push(DnnKind::Y416, 4, now);
+        assert_eq!(b.high_water(), 3);
+    }
+
+    #[test]
+    fn steady_state_dispatch_is_alloc_free() {
+        let now = t0();
+        let mut b = MicroBatcher::with_queue_capacity(
+            4,
+            Duration::from_millis(2),
+            16,
+        );
+        let mut out: Vec<u32> = Vec::with_capacity(4);
+        // warm-up: touch every queue and the out buffer once
+        for k in DnnKind::ALL {
+            b.push(k, 0u32, now);
+        }
+        while b.pop_any_into(&mut out).is_some() {}
+        let (delta, flushed) = crate::perf::count_allocs(|| {
+            let mut flushed = 0usize;
+            for round in 0..8u32 {
+                for i in 0..4u32 {
+                    b.push(DnnKind::Y288, round * 4 + i, now);
+                }
+                while b.pop_due_into(now, &mut out).is_some() {
+                    flushed += out.len();
+                }
+            }
+            flushed
+        });
+        assert_eq!(flushed, 32, "every pushed request must flush");
+        assert_eq!(
+            delta.allocs, 0,
+            "steady-state push/pop_due_into must not allocate \
+             ({} allocs, {} bytes)",
+            delta.allocs, delta.bytes
+        );
     }
 }

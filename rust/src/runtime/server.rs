@@ -339,7 +339,13 @@ impl ServerCore {
         if let Err(e) = cfg.validate() {
             panic!("invalid batch config: {e}");
         }
-        let batcher = MicroBatcher::new(cfg.max_batch, cfg.max_wait);
+        // reserve the admission bound up front: once every variant has
+        // warmed to its peak occupancy the queues never reallocate
+        let batcher = MicroBatcher::with_queue_capacity(
+            cfg.max_batch,
+            cfg.max_wait,
+            cfg.queue_cap,
+        );
         ServerCore {
             shared: Arc::new(CoreShared {
                 state: Mutex::new(CoreState { batcher, closed: false }),
@@ -410,6 +416,12 @@ impl ServerCore {
     /// Pending (admitted, undispatched) requests.
     pub fn pending(&self) -> usize {
         lock_unpoisoned(&self.shared.state).batcher.len()
+    }
+
+    /// Peak simultaneous queue occupancy since start (all variants) —
+    /// feed to [`crate::obs::MetricsRegistry::observe_queue_depth`].
+    pub fn queue_high_water(&self) -> usize {
+        lock_unpoisoned(&self.shared.state).batcher.high_water()
     }
 
     /// Snapshot of the batch/admission statistics.
@@ -526,6 +538,11 @@ impl InferenceServer {
     /// Pending (admitted, undispatched) requests.
     pub fn pending(&self) -> usize {
         self.core.pending()
+    }
+
+    /// Peak simultaneous queue occupancy since start (all variants).
+    pub fn queue_high_water(&self) -> usize {
+        self.core.queue_high_water()
     }
 
     /// Graceful shutdown: stop intake, flush pending batches, wait for

@@ -296,6 +296,69 @@ pub fn check_goldens(
     Ok(out)
 }
 
+/// Event window the failure flight recorder retains per scenario — the
+/// tail of the run, with the header's `overwritten` count making any
+/// truncation self-describing.
+pub const FLIGHT_CAPACITY: usize = 4096;
+
+/// Post-mortem artifacts for one failing scenario: re-run every
+/// canonical configuration with the flight recorder and the metrics
+/// registry attached to the observability spine, then write
+/// `<scenario>.flight.jsonl` (the retained event window) and
+/// `<scenario>.metrics.json` (the versioned counters snapshot) under
+/// `dir`. Returns the written paths.
+pub fn dump_failure_artifacts(
+    spec: &ScenarioSpec,
+    dir: &Path,
+) -> Result<Vec<PathBuf>, String> {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::obs::{
+        Event, FlightRecorder, MetricsRegistry, Recorder, SharedRecorder,
+    };
+
+    use super::harness::run_scenario_observed;
+
+    /// Feed both post-mortem consumers from the one event stream.
+    struct Tee {
+        flight: FlightRecorder,
+        metrics: MetricsRegistry,
+    }
+    impl Recorder for Tee {
+        fn record(&mut self, ev: &Event) {
+            self.flight.record(ev);
+            self.metrics.record(ev);
+        }
+    }
+
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    let streams = spec.compile()?;
+    let tee = Rc::new(RefCell::new(Tee {
+        flight: FlightRecorder::new(FLIGHT_CAPACITY),
+        metrics: MetricsRegistry::new(),
+    }));
+    let rec: SharedRecorder = tee.clone();
+    for cfg in canonical_configs(spec) {
+        let run = run_scenario_observed(&spec.name, &streams, &cfg, Some(&rec))?;
+        // board-level aggregates are not on the event stream
+        let mut t = tee.borrow_mut();
+        t.metrics.observe_utilisation(&run.utilisation);
+        t.metrics.observe_power(&run.power);
+    }
+    let t = tee.borrow();
+    let flight_path = dir.join(format!("{}.flight.jsonl", spec.name));
+    std::fs::write(&flight_path, t.flight.to_jsonl(&spec.name))
+        .map_err(|e| format!("cannot write {}: {e}", flight_path.display()))?;
+    let metrics_path = dir.join(format!("{}.metrics.json", spec.name));
+    std::fs::write(&metrics_path, t.metrics.to_json().to_pretty())
+        .map_err(|e| {
+            format!("cannot write {}: {e}", metrics_path.display())
+        })?;
+    Ok(vec![flight_path, metrics_path])
+}
+
 /// First differing line of two texts (1-based), with both lines.
 fn first_diff(a: &str, b: &str) -> (usize, String, String) {
     for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {

@@ -42,6 +42,7 @@ use crate::coordinator::scheduler::{DetectError, Detector, OracleBackend, RunRes
 use crate::coordinator::session::{SessionEvent, StreamSession};
 use crate::dataset::mot::GtEntry;
 use crate::detection::Detection;
+use crate::obs::{Event as ObsEvent, SharedRecorder};
 use crate::power::{BudgetedPolicy, EnergyMeter, PowerBudget, PowerSummary};
 use crate::predictor::CalibrationTable;
 use crate::sim::latency::{ContentionModel, LatencyModel};
@@ -156,12 +157,23 @@ impl HarnessConfig {
     }
 
     /// Build the per-stream policy stack (base policy, optional shared
-    /// watts governor, epoch shift).
+    /// watts governor with optional clamp recorder, epoch shift).
     fn build_policy(
         &self,
         epoch: f64,
         shared: &Option<crate::power::SharedBudget>,
+        obs: Option<(&SharedRecorder, u32)>,
     ) -> Result<Box<dyn SelectionPolicy>, String> {
+        // attach the recorder *inside* the epoch shift: the governor's
+        // hooks already see board time, so its clamps stamp correctly
+        let budgeted = |p: BudgetedPolicy| -> Box<dyn SelectionPolicy> {
+            match obs {
+                Some((rec, stream)) => {
+                    Box::new(p.with_recorder(rec.clone(), stream))
+                }
+                None => Box::new(p),
+            }
+        };
         let base: Box<dyn SelectionPolicy> = match (&self.policy, shared) {
             (PolicyKind::Tod, None) => Box::new(MbbsPolicy::tod_default()),
             (PolicyKind::Fixed(k), None) => Box::new(FixedPolicy(*k)),
@@ -172,24 +184,24 @@ impl HarnessConfig {
                 )?;
                 Box::new(ProjectedAccuracyPolicy::new(table, &self.latency))
             }
-            (PolicyKind::Tod, Some(b)) => Box::new(
-                BudgetedPolicy::masking_shared(
+            (PolicyKind::Tod, Some(b)) => {
+                budgeted(BudgetedPolicy::masking_shared(
                     Box::new(MbbsPolicy::tod_default()),
                     b.clone(),
-                ),
-            ),
-            (PolicyKind::Fixed(k), Some(b)) => Box::new(
-                BudgetedPolicy::masking_shared(
+                ))
+            }
+            (PolicyKind::Fixed(k), Some(b)) => {
+                budgeted(BudgetedPolicy::masking_shared(
                     Box::new(FixedPolicy(*k)),
                     b.clone(),
-                ),
-            ),
+                ))
+            }
             (PolicyKind::Projected, Some(b)) => {
                 let table = self.table.clone().ok_or(
                     "projected policy needs a calibration table \
                      (HarnessConfig::projected)",
                 )?;
-                Box::new(BudgetedPolicy::argmax_shared(table, b.clone()))
+                budgeted(BudgetedPolicy::argmax_shared(table, b.clone()))
             }
         };
         Ok(if epoch == 0.0 {
@@ -375,15 +387,40 @@ pub fn run_scenario(
     streams: &[CompiledStream],
     config: &HarnessConfig,
 ) -> Result<ScenarioRun, String> {
+    run_scenario_observed(scenario_name, streams, config, None)
+}
+
+/// [`run_scenario`] with an optional observability recorder: every
+/// session event, budget clamp and batch formation/flush of the run is
+/// emitted on the board timeline (stream ids follow `streams` order).
+/// The conformance harness attaches a flight recorder here to dump the
+/// tail of a failing run; `run_scenario` itself stays recorder-free so
+/// golden byte-stability is untouched.
+pub fn run_scenario_observed(
+    scenario_name: &str,
+    streams: &[CompiledStream],
+    config: &HarnessConfig,
+    recorder: Option<&SharedRecorder>,
+) -> Result<ScenarioRun, String> {
+    let emit = |ev: ObsEvent| {
+        if let Some(rec) = recorder {
+            rec.borrow_mut().record(&ev);
+        }
+    };
     let shared = config
         .watts_budget
         .map(|w| PowerBudget::watts(w, &config.latency).shared());
     let mut latency = config.latency.clone();
     let mut slots: Vec<Slot> = Vec::with_capacity(streams.len());
-    for c in streams {
-        let policy = config.build_policy(c.join_s, &shared)?;
+    for (i, c) in streams.iter().enumerate() {
+        let obs = recorder.map(|rec| (rec, i as u32));
+        let policy = config.build_policy(c.join_s, &shared, obs)?;
+        let mut session = StreamSession::new(&c.seq, policy, c.eval_fps);
+        if let Some(rec) = recorder {
+            session = session.with_recorder(rec.clone(), i as u32, c.join_s);
+        }
         slots.push(Slot {
-            session: StreamSession::new(&c.seq, policy, c.eval_fps),
+            session,
             detector: NoisyDetector::for_stream(c),
             compiled: c,
         });
@@ -491,19 +528,39 @@ pub fn run_scenario(
                 gpu_free - epoch,
             );
             match event {
-                SessionEvent::Inferred { dnn, interval: (_, end), .. }
+                SessionEvent::Inferred { dnn, interval: (start, end), .. }
                 | SessionEvent::InferenceFailed {
                     dnn,
-                    interval: (_, end),
+                    interval: (start, end),
                     ..
                 } => {
+                    let start_global = epoch + start;
                     let end_global = epoch + end;
                     if config.batching.is_some() {
                         if was_cont.get() {
                             run_len += 1;
+                            emit(ObsEvent::BatchExtended {
+                                stream: idx as u32,
+                                dnn,
+                                len: run_len as u32,
+                                t: start_global,
+                            });
                         } else {
+                            // a new run closes the previous one
+                            if let Some(prev) = run_dnn {
+                                emit(ObsEvent::BatchFlushed {
+                                    dnn: prev,
+                                    len: run_len as u32,
+                                    t: run_end,
+                                });
+                            }
                             run_dnn = Some(dnn);
                             run_len = 1;
+                            emit(ObsEvent::BatchFormed {
+                                stream: idx as u32,
+                                dnn,
+                                t: start_global,
+                            });
                         }
                         run_end = end_global;
                     }
@@ -515,6 +572,14 @@ pub fn run_scenario(
             }
         }
         rr_cursor = (idx + 1) % slots.len();
+    }
+    // the accelerator's last micro-batch run never sees a successor
+    if let Some(dnn) = run_dnn {
+        emit(ObsEvent::BatchFlushed {
+            dnn,
+            len: run_len as u32,
+            t: run_end,
+        });
     }
 
     // drain streams whose remaining frames are all destined to drop
@@ -565,7 +630,10 @@ pub fn run_scenario(
         })
         .collect();
     let refs: Vec<&ScheduleTrace> = shifted.iter().collect();
-    let utilisation = UtilisationSummary::from_traces(&refs);
+    let failed_busy: f64 =
+        per_stream.iter().map(|s| s.result.failed_busy_s).sum();
+    let utilisation = UtilisationSummary::from_traces(&refs)
+        .with_failed_busy(failed_busy);
     let power = EnergyMeter::from_trace(&utilisation.merged).summary();
 
     Ok(ScenarioRun {

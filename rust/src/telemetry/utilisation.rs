@@ -25,6 +25,12 @@ pub struct UtilisationSummary {
     pub busy_per_dnn: [f64; DnnKind::COUNT],
     /// Total inferences across all streams.
     pub inferences: u64,
+    /// Busy seconds spent on inferences whose backend *failed* — the
+    /// accelerator was held but no fresh detections came back. A subset
+    /// of [`busy`](Self::busy); traces alone can't distinguish it, so
+    /// drivers fold it in via [`with_failed_busy`](Self::with_failed_busy)
+    /// from per-stream [`crate::coordinator::RunResult::failed_busy_s`].
+    pub busy_failed: f64,
     /// All busy intervals on one timeline, sorted by start — feed this
     /// to [`crate::telemetry::TegrastatsSim`] for multi-stream power /
     /// GPU figures.
@@ -60,8 +66,15 @@ impl UtilisationSummary {
             busy,
             busy_per_dnn,
             inferences,
+            busy_failed: 0.0,
             merged,
         }
+    }
+
+    /// Attribute `seconds` of the busy time to failed inferences.
+    pub fn with_failed_busy(mut self, seconds: f64) -> Self {
+        self.busy_failed = seconds;
+        self
     }
 
     /// Busy fraction of the accelerator over the makespan.
@@ -109,16 +122,22 @@ impl UtilisationSummary {
                 )
             })
             .collect();
+        let failed = if self.busy_failed > 0.0 {
+            format!(" | failed busy {:.1}s", self.busy_failed)
+        } else {
+            String::new()
+        };
         format!(
             "{} streams | makespan {:.1}s | busy {:.1}s ({:.1}% util) | \
-             {} inferences ({:.1}/s) | per-DNN: {}",
+             {} inferences ({:.1}/s) | per-DNN: {}{}",
             self.n_streams,
             self.makespan,
             self.busy,
             self.utilisation() * 100.0,
             self.inferences,
             self.throughput_ips(),
-            per.join(" ")
+            per.join(" "),
+            failed
         )
     }
 }
@@ -166,6 +185,21 @@ mod tests {
         let b = trace(&[(0.5, 1.0, DnnKind::Y288)], 2.0);
         let s = UtilisationSummary::from_traces(&[&a, &b]);
         assert!((s.overlap_seconds() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_busy_is_surfaced_only_when_present() {
+        let a = trace(&[(0.0, 0.1, DnnKind::Y416)], 2.0);
+        let clean = UtilisationSummary::from_traces(&[&a]);
+        assert_eq!(clean.busy_failed, 0.0);
+        assert!(!clean.report().contains("failed busy"));
+
+        let failing = UtilisationSummary::from_traces(&[&a])
+            .with_failed_busy(0.05);
+        assert!((failing.busy_failed - 0.05).abs() < 1e-12);
+        assert!(failing.report().contains("failed busy 0.1s"));
+        // the rest of the line is unchanged
+        assert!(failing.report().starts_with(&clean.report()));
     }
 
     #[test]

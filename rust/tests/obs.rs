@@ -1,0 +1,204 @@
+//! End-to-end checks of the observability layer (ISSUE 7 acceptance).
+//!
+//! Covers the four contract points the unit tests inside `obs/` cannot
+//! reach on their own:
+//!
+//! 1. two runs under the same seed produce **byte-identical** JSONL
+//!    traces (determinism is a property of the whole emit path, not
+//!    just the serializer);
+//! 2. `explain_drops` reconstructs a non-`Unknown` cause for **every**
+//!    dropped frame of a real budget-clamped run;
+//! 3. attaching a `NullRecorder` leaves the per-step event stream and
+//!    allocation profile of `StreamSession::step` unchanged;
+//! 4. a `MetricsRegistry` driven purely by the event stream agrees
+//!    with the `RunResult` the scheduler computes independently.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use tod::app::DEFAULT_WATTS_BUDGET;
+use tod::coordinator::{
+    run_realtime_observed, FixedPolicy, MbbsPolicy, OracleBackend,
+    RunResult, SessionEvent, StreamSession,
+};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::obs::replay::{explain_drops, parse_trace, DropCause};
+use tod::obs::{
+    shared, Event, JsonlSink, MetricsRegistry, NullRecorder, SharedRecorder,
+};
+use tod::perf::count_allocs;
+use tod::power::{BudgetConfig, BudgetedPolicy, PowerBudget};
+use tod::sim::latency::LatencyModel;
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+fn oracle_backend(seq: &tod::dataset::Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+/// A fixed-Y416 run under the default 6.5 W cap: the heavy variant is
+/// documented infeasible at saturation (`app::campaign`), so the
+/// governor must clamp — giving the trace both `budget_clamp` events
+/// and capacity drops to explain.
+fn budgeted_y416_trace() -> (String, RunResult) {
+    let id = SequenceId::Mot05;
+    let seq = generate(id);
+    let mut det = oracle_backend(&seq);
+    let mut lat = LatencyModel::deterministic();
+    let budget = PowerBudget::try_new(
+        BudgetConfig {
+            watts_cap: Some(DEFAULT_WATTS_BUDGET),
+            gpu_cap_pct: None,
+            window_s: 1.0,
+            rate_cap: None,
+        },
+        &lat,
+    )
+    .expect("default watts cap is a valid budget");
+
+    let sink = Rc::new(RefCell::new(JsonlSink::new("obs-integration")));
+    let rec: SharedRecorder = sink.clone();
+    let mut policy =
+        BudgetedPolicy::masking(Box::new(FixedPolicy(DnnKind::Y416)), budget)
+            .with_recorder(rec.clone(), 0);
+    let r = run_realtime_observed(
+        &seq,
+        &mut policy,
+        &mut det,
+        &mut lat,
+        id.eval_fps(),
+        Some((rec.clone(), 0)),
+    );
+    let text = sink.borrow().contents().to_string();
+    (text, r)
+}
+
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    let (a, ra) = budgeted_y416_trace();
+    let (b, rb) = budgeted_y416_trace();
+    assert_eq!(ra.n_inferred, rb.n_inferred);
+    assert_eq!(a, b, "same-seed traces differ");
+    assert!(
+        a.lines().count() > 10,
+        "trace suspiciously short: {} lines",
+        a.lines().count()
+    );
+    assert!(
+        a.contains("\"frame_inferred\""),
+        "trace carries no inference events"
+    );
+}
+
+#[test]
+fn budgeted_trace_explains_every_drop() {
+    let (text, r) = budgeted_y416_trace();
+    let (header, events) = parse_trace(&text).expect("trace parses");
+    assert!(header.is_some(), "sink writes a schema header line");
+
+    let clamps = events
+        .iter()
+        .filter(|e| matches!(e, Event::BudgetClamp { .. }))
+        .count();
+    assert!(
+        clamps > 0,
+        "6.5 W cap on a saturated Y416 run must clamp at least once"
+    );
+
+    let dropped = events
+        .iter()
+        .filter(|e| matches!(e, Event::FrameDropped { .. }))
+        .count();
+    assert_eq!(dropped as u64, r.n_dropped, "trace misses dropped frames");
+    assert!(dropped > 0, "expected capacity drops in a saturated run");
+
+    let explained = explain_drops(&events);
+    assert_eq!(explained.len(), dropped);
+    for ex in &explained {
+        assert!(
+            ex.cause != DropCause::Unknown,
+            "frame {} drop has no reconstructed cause",
+            ex.frame
+        );
+        assert!(
+            ex.blocking.is_some(),
+            "frame {} drop lacks its blocking inference",
+            ex.frame
+        );
+    }
+}
+
+#[test]
+fn null_recorder_keeps_steps_alloc_identical() {
+    let seq = generate(SequenceId::Mot02);
+    let n = seq.n_frames() as usize;
+
+    let mut det_a = oracle_backend(&seq);
+    let mut det_b = oracle_backend(&seq);
+    let mut lat_a = LatencyModel::deterministic();
+    let mut lat_b = LatencyModel::deterministic();
+    let mut plain =
+        StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
+    let mut observed =
+        StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0)
+            .with_recorder(shared(NullRecorder), 0, 0.0);
+
+    for i in 0..n {
+        let (da, ea) = count_allocs(|| plain.step(&mut det_a, &mut lat_a));
+        let (db, eb) =
+            count_allocs(|| observed.step(&mut det_b, &mut lat_b));
+        assert!(!matches!(ea, SessionEvent::Finished));
+        assert_eq!(ea, eb, "recorder changed behaviour at step {i}");
+        // transient growth steps are allowed to allocate, but they must
+        // allocate the *same* amount — the null recorder is invisible
+        if i >= n / 4 {
+            assert_eq!(
+                da.allocs, db.allocs,
+                "null recorder changed alloc count at step {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn metrics_registry_matches_run_counts() {
+    let seq = generate(SequenceId::Mot02);
+    let mut det = oracle_backend(&seq);
+    let mut lat = LatencyModel::deterministic();
+    let registry = Rc::new(RefCell::new(MetricsRegistry::new()));
+    let rec: SharedRecorder = registry.clone();
+    let mut policy = MbbsPolicy::tod_default();
+    let r = run_realtime_observed(
+        &seq,
+        &mut policy,
+        &mut det,
+        &mut lat,
+        30.0,
+        Some((rec.clone(), 0)),
+    );
+
+    let reg = registry.borrow();
+    assert_eq!(reg.frames_presented, r.n_frames);
+    assert_eq!(reg.frames_inferred, r.n_inferred);
+    assert_eq!(reg.frames_dropped, r.n_dropped);
+    assert_eq!(reg.frames_failed, r.n_failed);
+    assert_eq!(reg.deploy, r.deploy_counts);
+    assert_eq!(reg.streams_joined, 1);
+    assert_eq!(reg.streams_left, 1);
+    assert_eq!(reg.infer_latency_s.count(), r.n_inferred + r.n_failed);
+
+    let prom = reg.to_prometheus();
+    assert!(
+        prom.contains(&format!("tod_frames_inferred_total {}", r.n_inferred)),
+        "prometheus exposition disagrees with the run"
+    );
+
+    // snapshot round-trip reproduces the exposition byte-for-byte
+    let back = MetricsRegistry::from_json(&reg.to_json())
+        .expect("snapshot round-trips");
+    assert_eq!(back.to_prometheus(), prom);
+}
