@@ -28,6 +28,7 @@
 //! ([`crate::sim::latency::BatchLatencyModel`]), which is the
 //! deterministic counterpart of the wall-clock batching win.
 
+use crate::obs::SharedRecorder;
 use crate::power::{EnergyMeter, PowerSummary};
 use crate::runtime::batch::BatchStats;
 use crate::sim::latency::{BatchLatencyModel, ContentionModel, LatencyModel};
@@ -185,6 +186,10 @@ pub struct MultiStreamScheduler<'a> {
     contention: ContentionModel,
     dispatch: DispatchPolicy,
     batching: Option<BatchingSim>,
+    /// Observability sink handed to every subsequently added stream's
+    /// session (sessions emit the events and spans; the scheduler adds
+    /// nothing of its own, so unobserved runs stay bit-identical).
+    recorder: Option<SharedRecorder>,
 }
 
 impl<'a> MultiStreamScheduler<'a> {
@@ -199,6 +204,7 @@ impl<'a> MultiStreamScheduler<'a> {
             contention,
             dispatch,
             batching: None,
+            recorder: None,
         }
     }
 
@@ -209,12 +215,29 @@ impl<'a> MultiStreamScheduler<'a> {
         self
     }
 
+    /// Attach an observability recorder. Streams registered *after*
+    /// this call join it (stream ids follow `add_stream` order; all
+    /// scheduler streams share epoch 0 — churn lives in the scenario
+    /// harness), emitting the full event + span vocabulary.
+    pub fn with_recorder(mut self, recorder: SharedRecorder) -> Self {
+        self.recorder = Some(recorder);
+        self
+    }
+
     /// Register a stream (its session plus detector backend).
     pub fn add_stream(
         &mut self,
         session: StreamSession<'a>,
         detector: Box<dyn Detector + 'a>,
     ) {
+        let session = match &self.recorder {
+            Some(rec) => session.with_recorder(
+                rec.clone(),
+                self.streams.len() as u32,
+                0.0,
+            ),
+            None => session,
+        };
         self.streams.push(StreamSlot { session, detector });
     }
 
@@ -231,6 +254,9 @@ impl<'a> MultiStreamScheduler<'a> {
             contention,
             dispatch,
             batching,
+            // Sessions already hold their recorder clones; the
+            // scheduler keeps none of its own emission state.
+            recorder: _,
         } = self;
         let mut gpu_free = 0.0f64;
         let mut rr_cursor = 0usize;

@@ -112,6 +112,14 @@ pub trait SelectionPolicy {
     fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
         let _ = (start_s, end_s, dnn);
     }
+
+    /// Whether this policy runs a budget governor pass inside its
+    /// selection. Span-emitting callers use it to attribute a
+    /// `budget_govern` stage span (DESIGN.md §15); plain policies keep
+    /// the default `false`.
+    fn governs(&self) -> bool {
+        false
+    }
 }
 
 /// Mutable references forward the policy, so callers can hand a
@@ -133,6 +141,10 @@ impl<P: SelectionPolicy + ?Sized> SelectionPolicy for &mut P {
     fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
         (**self).on_inferred(start_s, end_s, dnn)
     }
+
+    fn governs(&self) -> bool {
+        (**self).governs()
+    }
 }
 
 /// Boxed policies forward too (CLI policy parsing produces
@@ -152,6 +164,10 @@ impl<P: SelectionPolicy + ?Sized> SelectionPolicy for Box<P> {
 
     fn on_inferred(&mut self, start_s: f64, end_s: f64, dnn: DnnKind) {
         (**self).on_inferred(start_s, end_s, dnn)
+    }
+
+    fn governs(&self) -> bool {
+        (**self).governs()
     }
 }
 
@@ -357,5 +373,18 @@ mod tests {
     fn labels_identify_config() {
         let p = MbbsPolicy::tod_default();
         assert_eq!(p.label(), "TOD{0.007,0.03,0.04}");
+    }
+
+    #[test]
+    fn plain_policies_do_not_govern_and_wrappers_forward_it() {
+        // the forwarding impls must pass governs() through, or a boxed
+        // governor would silently lose its budget_govern span
+        let mut p = MbbsPolicy::tod_default();
+        assert!(!p.governs());
+        let by_ref: &mut dyn SelectionPolicy = &mut p;
+        assert!(!by_ref.governs());
+        let boxed: Box<dyn SelectionPolicy> =
+            Box::new(FixedPolicy(DnnKind::Y288));
+        assert!(!boxed.governs());
     }
 }

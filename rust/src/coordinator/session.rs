@@ -22,7 +22,7 @@ use crate::detection::{filter_detections_into, Detection};
 use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{FrameMatcher, IOU_THRESHOLD};
 use crate::features::FeatureExtractor;
-use crate::obs::{Event as ObsEvent, SharedRecorder};
+use crate::obs::{Event as ObsEvent, SharedRecorder, SpanArena, SpanKind};
 use crate::power::{EnergyMeter, PowerSummary};
 use crate::sim::latency::LatencyModel;
 use crate::telemetry::tegrastats::ScheduleTrace;
@@ -95,6 +95,10 @@ pub struct StreamSession<'a> {
     /// Board-time offset added to every emitted timestamp, so epoch-
     /// shifted streams share one timeline in multi-stream traces.
     obs_epoch: f64,
+    /// Per-stream span ids + open-span stack (DESIGN.md §15). Only
+    /// touched when a recorder is attached, so the unobserved hot path
+    /// pays nothing beyond the existing branch.
+    spans: SpanArena,
     /// Accelerator-busy seconds spent on inferences that then failed.
     failed_busy_s: f64,
 }
@@ -141,6 +145,7 @@ impl<'a> StreamSession<'a> {
             recorder: None,
             obs_stream: 0,
             obs_epoch: 0.0,
+            spans: SpanArena::new(),
             failed_busy_s: 0.0,
         }
     }
@@ -148,7 +153,8 @@ impl<'a> StreamSession<'a> {
     /// Attach an observability recorder: events are stamped with
     /// `stream` and shifted by `epoch` (the stream's join time on the
     /// board clock; 0.0 for single-stream runs). Emits
-    /// [`ObsEvent::StreamJoined`] immediately.
+    /// [`ObsEvent::StreamJoined`] immediately, then opens the stream's
+    /// root span (span id 1; closed by [`StreamSession::finish`]).
     pub fn with_recorder(
         mut self,
         recorder: SharedRecorder,
@@ -161,6 +167,7 @@ impl<'a> StreamSession<'a> {
         self.recorder = Some(recorder);
         self.obs_stream = stream;
         self.obs_epoch = epoch;
+        self.span_open(0, SpanKind::Stream, 0.0);
         self
     }
 
@@ -169,6 +176,62 @@ impl<'a> StreamSession<'a> {
     fn emit(&self, ev: ObsEvent) {
         if let Some(rec) = &self.recorder {
             rec.borrow_mut().record(&ev);
+        }
+    }
+
+    /// Open a span at stream time `t` (frame 0 = not frame-scoped).
+    /// No-op without a recorder, so the arena only moves when someone
+    /// is listening.
+    #[inline]
+    fn span_open(&mut self, frame: u64, kind: SpanKind, t: f64) {
+        if self.recorder.is_some() {
+            let (span, parent) = self.spans.open();
+            self.emit(ObsEvent::SpanOpen {
+                stream: self.obs_stream,
+                frame,
+                span,
+                parent,
+                kind,
+                t: t + self.obs_epoch,
+            });
+        }
+    }
+
+    /// Close the innermost open span at stream time `t`.
+    #[inline]
+    fn span_close(&mut self, t: f64) {
+        if self.recorder.is_some() {
+            let span = self.spans.close();
+            self.emit(ObsEvent::SpanClose {
+                stream: self.obs_stream,
+                span,
+                t: t + self.obs_epoch,
+            });
+        }
+    }
+
+    /// Emit a zero-width stage span (open + close at `t`). Selector-side
+    /// stages cost the simulation no virtual time — the paper's
+    /// "negligible overhead" — so they appear as instants whose
+    /// self-time is exactly 0.
+    #[inline]
+    fn span_instant(&mut self, frame: u64, kind: SpanKind, t: f64) {
+        if self.recorder.is_some() {
+            let (span, parent) = self.spans.instant();
+            let t = t + self.obs_epoch;
+            self.emit(ObsEvent::SpanOpen {
+                stream: self.obs_stream,
+                frame,
+                span,
+                parent,
+                kind,
+                t,
+            });
+            self.emit(ObsEvent::SpanClose {
+                stream: self.obs_stream,
+                span,
+                t,
+            });
         }
     }
 
@@ -320,6 +383,7 @@ impl<'a> StreamSession<'a> {
             frame,
             t: t_capture + self.obs_epoch,
         });
+        self.span_open(frame, SpanKind::Frame, t_capture);
 
         // Select from the *previous* frame's detections: the extractor
         // turns the carried set into the stream-feature vector (its
@@ -327,7 +391,14 @@ impl<'a> StreamSession<'a> {
         // Algorithm 1 policies are unaffected by the widening)
         let feats = self.features.features(&self.carried);
         self.mbbs_series.push(feats.mbbs);
-        // a budget governor emits its own BudgetClamp from inside select()
+        self.span_instant(frame, SpanKind::FeatureExtract, t_capture);
+        self.span_open(frame, SpanKind::PredictSelect, t_capture);
+        if self.policy.governs() {
+            // the governor's feasibility pass runs inside select();
+            // any BudgetClamp it emits lands between this instant and
+            // the DnnSelected below, all at the same decision time
+            self.span_instant(frame, SpanKind::BudgetGovern, t_capture);
+        }
         let dnn = self.policy.select(&feats);
         self.emit(ObsEvent::DnnSelected {
             stream: self.obs_stream,
@@ -335,6 +406,7 @@ impl<'a> StreamSession<'a> {
             t: t_capture + self.obs_epoch,
             dnn,
         });
+        self.span_close(t_capture);
 
         let (outcome, interval) = self
             .acc
@@ -347,6 +419,11 @@ impl<'a> StreamSession<'a> {
                 let interval =
                     interval.expect("inferred frame has a busy interval");
                 let (s, e) = interval;
+                // queueing/contention wait is capture → accelerator
+                // start; the inference span carries the busy interval
+                self.span_open(frame, SpanKind::DispatchWait, t_capture);
+                self.span_close(s);
+                self.span_open(frame, SpanKind::Inference, s);
                 self.trace.push(s, e, dnn);
                 self.meter.on_interval(s, e, dnn);
                 self.policy.on_inferred(s, e, dnn);
@@ -358,8 +435,12 @@ impl<'a> StreamSession<'a> {
                 }
                 self.last_dnn = Some(dnn);
                 self.dnn_series.push(Some(dnn));
-                match detector.detect_into(frame, gt, dnn, &mut self.detect_buf)
-                {
+                let session_ev = match detector.detect_into(
+                    frame,
+                    gt,
+                    dnn,
+                    &mut self.detect_buf,
+                ) {
                     Ok(()) => {
                         filter_detections_into(
                             &self.detect_buf,
@@ -393,7 +474,14 @@ impl<'a> StreamSession<'a> {
                         });
                         SessionEvent::InferenceFailed { frame, dnn, interval }
                     }
-                }
+                };
+                // the inference span ends when the accelerator frees;
+                // postprocess (filter + eval bookkeeping) is a
+                // zero-width instant; then the frame span closes
+                self.span_close(e);
+                self.span_instant(frame, SpanKind::Postprocess, e);
+                self.span_close(e);
+                session_ev
             }
             FrameOutcome::Dropped => {
                 self.dnn_series.push(None);
@@ -405,6 +493,9 @@ impl<'a> StreamSession<'a> {
                     t: t_capture + self.obs_epoch,
                     busy_until: self.acc.now() + self.obs_epoch,
                 });
+                // a dropped frame exits the pipeline at capture: its
+                // frame span is zero-width with no stage children
+                self.span_close(t_capture);
                 SessionEvent::Dropped { frame }
             }
         };
@@ -430,6 +521,8 @@ impl<'a> StreamSession<'a> {
             .duration
             .max(self.seq.n_frames() as f64 / self.eval_fps);
         self.meter.advance_to(self.trace.duration);
+        // close the stream root span opened by with_recorder
+        self.span_close(self.trace.duration);
         self.emit(ObsEvent::StreamLeft {
             stream: self.obs_stream,
             t: self.trace.duration + self.obs_epoch,

@@ -142,11 +142,27 @@
 //! counters and fixed-bucket histograms with Prometheus-style
 //! exposition (`tod metrics`). See DESIGN.md §14.
 //!
+//! On top of the spine sits the profiling/health tier (DESIGN.md §15):
+//! [`coordinator::session::StreamSession`] emits hierarchical,
+//! deterministic **spans** (stream ▸ frame ▸ pipeline stages, virtual
+//! time, allocation-free via [`obs::SpanArena`]);
+//! [`obs::profile`] attributes self- vs child-time per stage offline
+//! (`tod trace profile`, stage histograms in the registry, the
+//! invariant that stage self-times sum to each frame span);
+//! [`obs::export`] renders byte-deterministic Chrome traces and
+//! collapsed-stack flamegraphs (`tod trace export --chrome`,
+//! `tod trace flame`); and [`obs::slo`] evaluates rolling-window SLOs
+//! (p99 latency, drop rate, freshness-decay AP proxy, watts cap) over
+//! any trace, emitting latched [`obs::Event::SloBreach`] /
+//! [`obs::Event::SloRecovered`] transitions — `tod slo check` turns a
+//! scenario run into a CI health gate.
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
 //! the multi-stream architecture (§8), the power subsystem (§10),
 //! the batching server (§11), the scenario matrix + conformance
 //! harness (§12), the performance model (§13) and the observability
-//! layer (§14), and `EXPERIMENTS.md` for paper-vs-measured results.
+//! layers (§14–§15), and `EXPERIMENTS.md` for paper-vs-measured
+//! results.
 
 pub mod app;
 pub mod bench;

@@ -65,6 +65,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
+        Some("slo") => cmd_slo(&args),
         Some("metrics") => cmd_metrics(&args),
         Some("bench") => cmd_bench(&args),
         Some("bench-report") => cmd_bench_report(),
@@ -85,7 +86,8 @@ fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
          usage: tod <figures|search|run|calibrate|multistream|power|\
-         dataset|scenario|serve|trace|metrics|bench|bench-report> [flags]\n\
+         dataset|scenario|serve|trace|slo|metrics|bench|bench-report> \
+         [flags]\n\
          \n\
          figures --all | --id <table1|fig4..fig15|multistream|predictor|\
          power|scenario> [--out results]\n\
@@ -167,6 +169,26 @@ fn usage() {
          of\n  \
          every dropped frame: busy accelerator, busy-after-budget-clamp, \
          or shed\n\
+         trace export --chrome --in out.jsonl [--out trace.json]  \
+         renders the\n  \
+         span trace as Chrome trace-event JSON (chrome://tracing / \
+         Perfetto);\n  \
+         byte-identical for the same seed\n\
+         trace flame --in out.jsonl [--out folded.txt]  collapsed \
+         flamegraph\n  \
+         stacks weighted by span self-time microseconds\n\
+         trace profile --in out.jsonl  per-stage self-time attribution \
+         (the\n  \
+         versioned tod-profile JSON report)\n\
+         slo check --scenario <name> [--expect-breach] \
+         [--chrome-out PATH]\n  \
+         replays the scenario's canonical ladder run and evaluates the\n  \
+         rolling-window SLOs (p99 latency, drop rate, AP proxy, watts \
+         cap);\n  \
+         exits 1 on breach (--expect-breach inverts: exits 1 when \
+         nothing\n  \
+         breaches); --chrome-out writes the Chrome trace with SLO \
+         instants\n\
          metrics [--seq MOT17-05] [--policy <spec>] [--prom|--json]  \
          runs one\n  \
          sequence with the metrics registry attached and prints the \
@@ -1542,13 +1564,142 @@ fn cmd_trace(args: &Args) -> i32 {
                 0
             }
         }
+        Some("export") => {
+            if !args.has("chrome") {
+                eprintln!(
+                    "trace export needs a format: --chrome (Chrome \
+                     trace-event JSON)"
+                );
+                return 2;
+            }
+            let rendered = tod::obs::chrome_trace(&events).to_string();
+            write_or_print(args.get("out"), &rendered, "chrome trace")
+        }
+        Some("flame") => {
+            let rendered = tod::obs::flamegraph(&events);
+            if rendered.is_empty() {
+                eprintln!(
+                    "no spans in this trace (span events need a \
+                     recorder-attached run)"
+                );
+                return 1;
+            }
+            write_or_print(args.get("out"), &rendered, "folded stacks")
+        }
+        Some("profile") => {
+            if let Err(e) = tod::obs::validate_spans(&events) {
+                eprintln!("{path}: invalid span structure: {e}");
+                return 1;
+            }
+            let report = tod::obs::profile::profile(&events);
+            println!("{}", report.to_json().to_pretty());
+            0
+        }
         other => {
             eprintln!(
-                "trace needs a verb: summarize|grep|explain-drop \
-                 (got {:?})",
+                "trace needs a verb: summarize|grep|explain-drop|\
+                 export|flame|profile (got {:?})",
                 other.unwrap_or("none")
             );
             2
+        }
+    }
+}
+
+/// Write `text` to `--out` when given, else print it to stdout.
+fn write_or_print(out: Option<&str>, text: &str, what: &str) -> i32 {
+    match out {
+        Some(path) => match std::fs::write(path, text) {
+            Ok(()) => {
+                eprintln!("{what} written to {path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("write {path}: {e}");
+                1
+            }
+        },
+        None => {
+            print!("{text}");
+            if !text.ends_with('\n') {
+                println!();
+            }
+            0
+        }
+    }
+}
+
+/// `tod slo check` — replay one matrix scenario's canonical ladder run
+/// and evaluate the rolling-window SLO watchdog over its trace
+/// (DESIGN.md §15). Exit code 1 signals an unexpected health state:
+/// any breach normally, *no* breach under `--expect-breach` (the CI
+/// spelling for scenarios that exist to trip the watchdog).
+fn cmd_slo(args: &Args) -> i32 {
+    use tod::scenario::{conformance, matrix};
+
+    let verb = args.positional.first().map(String::as_str);
+    if verb != Some("check") {
+        eprintln!(
+            "slo needs a verb: check (got {:?})",
+            verb.unwrap_or("none")
+        );
+        return 2;
+    }
+    let Some(name) = args.get("scenario") else {
+        eprintln!("slo check needs --scenario <name> (see `tod scenario list`)");
+        return 2;
+    };
+    let id: matrix::ScenarioId = match name.parse() {
+        Ok(id) => id,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let spec = matrix::scenario_spec(id);
+    let events = match conformance::scenario_slo_events(&spec) {
+        Ok(evs) => evs,
+        Err(e) => {
+            eprintln!("{name}: {e}");
+            return 1;
+        }
+    };
+    let slo_spec = conformance::scenario_slo_spec(&spec);
+    let report = tod::obs::slo::check_events(&events, &slo_spec);
+    for ev in &report.events {
+        println!("{}", ev.to_json().to_string());
+    }
+    println!(
+        "{name}: {} breach(es) over {} checks (window {} s)",
+        report.breaches, report.checks, slo_spec.window_s
+    );
+    if let Some(path) = args.get("chrome-out") {
+        // the exported trace carries the SLO transitions as instants
+        let mut all = events;
+        all.extend(report.events.iter().copied());
+        let rendered = tod::obs::chrome_trace(&all).to_string();
+        if let Err(e) = std::fs::write(path, rendered) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        eprintln!("chrome trace written to {path}");
+    }
+    match (report.breached(), args.has("expect-breach")) {
+        (true, true) => {
+            println!("{name}: breach expected and observed — ok");
+            0
+        }
+        (false, false) => {
+            println!("{name}: all SLOs held");
+            0
+        }
+        (true, false) => {
+            eprintln!("{name}: SLO breach");
+            1
+        }
+        (false, true) => {
+            eprintln!("{name}: expected an SLO breach but none fired");
+            1
         }
     }
 }

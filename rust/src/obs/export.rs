@@ -1,0 +1,284 @@
+//! Trace rendering for external viewers (DESIGN.md §15).
+//!
+//! [`chrome_trace`] converts a recorded event stream into Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto): each matched
+//! span open/close pair becomes a complete (`"X"`) slice on its
+//! stream's track, and the point events that explain behaviour —
+//! drops, sheds, budget clamps, SLO transitions — become thread-scoped
+//! instants (`"i"`). [`flamegraph`] renders the same spans as
+//! collapsed stacks (`stream_0;frame;inference 25000`) for standard
+//! flamegraph tooling, weighted by self-time microseconds.
+//!
+//! Both renderings are pure functions of the event stream with
+//! deterministic iteration order, so a fixed seed produces
+//! byte-identical output (`tod trace export --chrome`,
+//! `tod trace flame`) — pinned by tests.
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::SpanKind;
+use crate::obs::Event;
+use crate::util::json::Json;
+
+/// Virtual seconds → Chrome trace microseconds.
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Render events as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...]}`). Spans become `"X"` complete slices in
+/// close order; explanatory point events become `"i"` instants in
+/// emission order. `pid` is always 0; `tid` is the stream id.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    // (stream, span id) -> (open time, kind, frame)
+    let mut open: BTreeMap<(u32, u32), (f64, SpanKind, u64)> =
+        BTreeMap::new();
+    let mut slices: Vec<Json> = Vec::new();
+    for ev in events {
+        match *ev {
+            Event::SpanOpen { stream, frame, span, kind, t, .. } => {
+                open.insert((stream, span), (t, kind, frame));
+            }
+            Event::SpanClose { stream, span, t } => {
+                let Some((t0, kind, frame)) = open.remove(&(stream, span))
+                else {
+                    continue;
+                };
+                slices.push(Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("name", Json::str(kind.label())),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(stream as f64)),
+                    ("ts", Json::num(us(t0))),
+                    ("dur", Json::num(us((t - t0).max(0.0)))),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("frame", Json::num(frame as f64)),
+                            ("span", Json::num(span as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+            Event::FrameDropped { stream, frame, t, busy_until } => {
+                slices.push(instant(
+                    "frame_dropped",
+                    stream,
+                    t,
+                    vec![
+                        ("busy_until", Json::num(us(busy_until))),
+                        ("frame", Json::num(frame as f64)),
+                    ],
+                ));
+            }
+            Event::BatchShed { stream, frame, t } => {
+                slices.push(instant(
+                    "batch_shed",
+                    stream,
+                    t,
+                    vec![("frame", Json::num(frame as f64))],
+                ));
+            }
+            Event::BudgetClamp { stream, t, requested, granted, .. } => {
+                slices.push(instant(
+                    "budget_clamp",
+                    stream,
+                    t,
+                    vec![
+                        ("granted", Json::str(granted.artifact_name())),
+                        ("requested", Json::str(requested.artifact_name())),
+                    ],
+                ));
+            }
+            Event::SloBreach { stream, t, signal, value, limit }
+            | Event::SloRecovered { stream, t, signal, value, limit } => {
+                slices.push(instant(
+                    ev.type_tag(),
+                    stream,
+                    t,
+                    vec![
+                        ("limit", Json::num(limit)),
+                        ("signal", Json::str(signal.label())),
+                        ("value", Json::num(value)),
+                    ],
+                ));
+            }
+            _ => {}
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::arr(slices))])
+}
+
+fn instant(name: &str, stream: u32, t: f64, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(stream as f64)),
+        ("ts", Json::num(us(t))),
+        ("s", Json::str("t")),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Render spans as collapsed flamegraph stacks: one line per unique
+/// stack path, `stream_<id>;<kind>;...;<kind> <self µs>`, sorted by
+/// path. Weights are self-time microseconds (children subtracted),
+/// rounded to whole µs; zero-weight paths are kept so zero-width
+/// instants (the selector stages) still show up in the graph.
+pub fn flamegraph(events: &[Event]) -> String {
+    // per stream: stack of (span id, kind, open t, child seconds)
+    let mut stacks: BTreeMap<u32, Vec<(u32, SpanKind, f64, f64)>> =
+        BTreeMap::new();
+    let mut folded: BTreeMap<String, f64> = BTreeMap::new();
+    for ev in events {
+        match *ev {
+            Event::SpanOpen { stream, span, kind, t, .. } => {
+                stacks.entry(stream).or_default().push((span, kind, t, 0.0));
+            }
+            Event::SpanClose { stream, span, t } => {
+                let Some(stack) = stacks.get_mut(&stream) else {
+                    continue;
+                };
+                // mismatched closes are a validate_spans error; the
+                // export just skips them
+                if stack.last().map(|&(id, ..)| id) != Some(span) {
+                    continue;
+                }
+                let Some((_, kind, t0, child_s)) = stack.pop() else {
+                    continue;
+                };
+                let total = (t - t0).max(0.0);
+                if let Some(parent) = stack.last_mut() {
+                    parent.3 += total;
+                }
+                let mut path = format!("stream_{stream}");
+                for &(_, k, ..) in stack.iter() {
+                    path.push(';');
+                    path.push_str(k.label());
+                }
+                path.push(';');
+                path.push_str(kind.label());
+                *folded.entry(path).or_insert(0.0) +=
+                    (total - child_s).max(0.0);
+            }
+            _ => {}
+        }
+    }
+    let mut out = String::new();
+    for (path, self_s) in &folded {
+        out.push_str(path);
+        out.push(' ');
+        out.push_str(&format!("{}", (self_s * 1e6).round() as u64));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open(
+        stream: u32,
+        frame: u64,
+        span: u32,
+        parent: u32,
+        kind: SpanKind,
+        t: f64,
+    ) -> Event {
+        Event::SpanOpen { stream, frame, span, parent, kind, t }
+    }
+
+    fn close(stream: u32, span: u32, t: f64) -> Event {
+        Event::SpanClose { stream, span, t }
+    }
+
+    fn sample_trace() -> Vec<Event> {
+        vec![
+            open(0, 0, 1, 0, SpanKind::Stream, 0.0),
+            open(0, 3, 2, 1, SpanKind::Frame, 0.1),
+            open(0, 3, 3, 2, SpanKind::Inference, 0.1),
+            close(0, 3, 0.35),
+            close(0, 2, 0.35),
+            Event::FrameDropped {
+                stream: 0,
+                frame: 4,
+                t: 0.4,
+                busy_until: 0.5,
+            },
+            close(0, 1, 1.0),
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_emits_slices_and_instants() {
+        let v = chrome_trace(&sample_trace());
+        let evs = v.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 3 spans + 1 drop instant
+        assert_eq!(evs.len(), 4);
+        // slices appear in close order: inference first
+        let first = &evs[0];
+        assert_eq!(first.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(
+            first.get("name").and_then(Json::as_str),
+            Some("inference")
+        );
+        assert_eq!(first.get("ts").and_then(Json::as_f64), Some(100000.0));
+        assert_eq!(first.get("dur").and_then(Json::as_f64), Some(250000.0));
+        assert_eq!(first.get("tid").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(
+            first.at(&["args", "frame"]).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        let drop = &evs[2];
+        assert_eq!(drop.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(
+            drop.get("name").and_then(Json::as_str),
+            Some("frame_dropped")
+        );
+        // stream envelope closes last
+        let last = &evs[3];
+        assert_eq!(last.get("name").and_then(Json::as_str), Some("stream"));
+        assert_eq!(last.get("dur").and_then(Json::as_f64), Some(1e6));
+    }
+
+    #[test]
+    fn chrome_trace_is_byte_identical_for_the_same_events() {
+        let a = chrome_trace(&sample_trace()).to_string();
+        let b = chrome_trace(&sample_trace()).to_string();
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\"traceEvents\":["));
+    }
+
+    #[test]
+    fn flamegraph_folds_self_time_by_stack_path() {
+        let out = flamegraph(&sample_trace());
+        let lines: Vec<&str> = out.lines().collect();
+        // sorted by path: stream < stream;frame < stream;frame;inference
+        assert_eq!(
+            lines,
+            vec![
+                // stream self = 1.0 - 0.25 frame
+                "stream_0;stream 750000",
+                // frame self = 0.25 - 0.25 inference
+                "stream_0;stream;frame 0",
+                "stream_0;stream;frame;inference 250000",
+            ]
+        );
+    }
+
+    #[test]
+    fn exports_skip_unmatched_closes_and_non_span_events() {
+        let evs = vec![
+            close(0, 9, 0.5),
+            Event::FramePresented { stream: 0, frame: 1, t: 0.0 },
+        ];
+        let v = chrome_trace(&evs);
+        assert_eq!(
+            v.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(0)
+        );
+        assert_eq!(flamegraph(&evs), "");
+    }
+}

@@ -22,6 +22,7 @@
 //! the flight recorder on conformance failures.
 
 use crate::coordinator::scheduler::RunResult;
+use crate::obs::span::SpanKind;
 use crate::obs::{Event, Recorder};
 use crate::power::PowerSummary;
 use crate::runtime::batch::BatchStats;
@@ -29,8 +30,9 @@ use crate::telemetry::utilisation::UtilisationSummary;
 use crate::util::json::Json;
 use crate::DnnKind;
 
-/// Version of the metrics snapshot schema.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// Version of the metrics snapshot schema. v2 added span/SLO counters
+/// and the per-stage self-time histograms (DESIGN.md §15).
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 /// Schema tag of the snapshot JSON.
 pub const SNAPSHOT_TAG: &str = "tod-metrics";
@@ -182,6 +184,12 @@ pub struct MetricsRegistry {
     pub batches_formed: u64,
     pub batches_flushed: u64,
     pub batch_items: u64,
+    // ---- span / SLO counters (live recording only counts; stage
+    //      attribution is folded offline by `obs::profile`) ----
+    pub spans_opened: u64,
+    pub spans_closed: u64,
+    pub slo_breaches: u64,
+    pub slo_recoveries: u64,
     // ---- busy-time accumulators (virtual seconds) ----
     pub busy_per_dnn_s: [f64; DnnKind::COUNT],
     /// Accelerator-busy seconds spent on inferences that then failed.
@@ -195,6 +203,10 @@ pub struct MetricsRegistry {
     // ---- histograms ----
     pub infer_latency_s: Histogram,
     pub batch_size: Histogram,
+    /// Per-stage span self-time, indexed by [`SpanKind::index`]. Fed by
+    /// [`MetricsRegistry::observe_stage`] (the offline profile fold),
+    /// not by live `record`, so recording stays a pure counter bump.
+    pub stage_self_s: [Histogram; SpanKind::COUNT],
 }
 
 impl Default for MetricsRegistry {
@@ -213,6 +225,10 @@ impl Default for MetricsRegistry {
             batches_formed: 0,
             batches_flushed: 0,
             batch_items: 0,
+            spans_opened: 0,
+            spans_closed: 0,
+            slo_breaches: 0,
+            slo_recoveries: 0,
             busy_per_dnn_s: [0.0; DnnKind::COUNT],
             busy_failed_s: 0.0,
             queue_depth_high_water: 0,
@@ -222,6 +238,9 @@ impl Default for MetricsRegistry {
             makespan_s: 0.0,
             infer_latency_s: Histogram::new(&LATENCY_BUCKETS_S),
             batch_size: Histogram::new(&BATCH_BUCKETS),
+            stage_self_s: std::array::from_fn(|_| {
+                Histogram::new(&LATENCY_BUCKETS_S)
+            }),
         }
     }
 }
@@ -293,6 +312,12 @@ impl MetricsRegistry {
         self.queue_depth_high_water = self.queue_depth_high_water.max(depth);
     }
 
+    /// Fold one closed span's self-time into the per-stage histogram
+    /// (driven by [`crate::obs::profile::fold_into`] after a run).
+    pub fn observe_stage(&mut self, kind: SpanKind, self_s: f64) {
+        self.stage_self_s[kind.index()].record(self_s);
+    }
+
     /// Prometheus-style text exposition (deterministic ordering).
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
@@ -317,7 +342,7 @@ impl MetricsRegistry {
             let _ = writeln!(out, "{name}_count {}", h.count());
         }
         let mut out = String::with_capacity(2048);
-        let counters: [(&str, &str, u64); 12] = [
+        let counters: [(&str, &str, u64); 16] = [
             (
                 "tod_frames_presented_total",
                 "Frames presented to the selector.",
@@ -373,6 +398,26 @@ impl MetricsRegistry {
                 "tod_batch_items_total",
                 "Requests carried by dispatched batches.",
                 self.batch_items,
+            ),
+            (
+                "tod_spans_opened_total",
+                "Pipeline spans opened.",
+                self.spans_opened,
+            ),
+            (
+                "tod_spans_closed_total",
+                "Pipeline spans closed.",
+                self.spans_closed,
+            ),
+            (
+                "tod_slo_breaches_total",
+                "SLO signals crossing their limit.",
+                self.slo_breaches,
+            ),
+            (
+                "tod_slo_recoveries_total",
+                "SLO signals returning inside their limit.",
+                self.slo_recoveries,
             ),
         ];
         for (name, help, v) in counters {
@@ -450,6 +495,45 @@ impl MetricsRegistry {
             "Items per dispatched micro-batch.",
             &self.batch_size,
         );
+
+        // per-stage self-time histograms, one labelled series per stage
+        // (skipped entirely while empty to keep expositions compact)
+        if self.stage_self_s.iter().any(|h| h.count() > 0) {
+            let name = "tod_stage_self_seconds";
+            let _ = writeln!(
+                out,
+                "# HELP {name} Span self-time per pipeline stage."
+            );
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for k in SpanKind::ALL {
+                let h = &self.stage_self_s[k.index()];
+                if h.count() == 0 {
+                    continue;
+                }
+                let stage = k.label();
+                for (bound, cum) in h.cumulative() {
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{{stage=\"{stage}\",le=\"{bound}\"}} {cum}"
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {}",
+                    h.count()
+                );
+                let _ = writeln!(
+                    out,
+                    "{name}_sum{{stage=\"{stage}\"}} {}",
+                    h.sum()
+                );
+                let _ = writeln!(
+                    out,
+                    "{name}_count{{stage=\"{stage}\"}} {}",
+                    h.count()
+                );
+            }
+        }
         out
     }
 
@@ -477,6 +561,10 @@ impl MetricsRegistry {
             ("batches_formed", Json::num(self.batches_formed as f64)),
             ("batches_flushed", Json::num(self.batches_flushed as f64)),
             ("batch_items", Json::num(self.batch_items as f64)),
+            ("spans_opened", Json::num(self.spans_opened as f64)),
+            ("spans_closed", Json::num(self.spans_closed as f64)),
+            ("slo_breaches", Json::num(self.slo_breaches as f64)),
+            ("slo_recoveries", Json::num(self.slo_recoveries as f64)),
             ("busy_per_dnn_s", dnn_arr(&self.busy_per_dnn_s)),
             ("busy_failed_s", Json::num(self.busy_failed_s)),
             (
@@ -489,6 +577,12 @@ impl MetricsRegistry {
             ("makespan_s", Json::num(self.makespan_s)),
             ("infer_latency_s", self.infer_latency_s.to_json()),
             ("batch_size", self.batch_size.to_json()),
+            (
+                "stage_self_s",
+                Json::arr(
+                    self.stage_self_s.iter().map(|h| h.to_json()).collect(),
+                ),
+            ),
         ])
     }
 
@@ -538,6 +632,18 @@ impl MetricsRegistry {
         for (d, &f) in deploy.iter_mut().zip(&deploy_f) {
             *d = f as u64;
         }
+        let stage_arr = v
+            .get("stage_self_s")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot: missing array \"stage_self_s\"")?;
+        if stage_arr.len() != SpanKind::COUNT {
+            return Err("snapshot: \"stage_self_s\" has wrong arity".into());
+        }
+        let mut stage_self_s: [Histogram; SpanKind::COUNT] =
+            std::array::from_fn(|_| Histogram::new(&LATENCY_BUCKETS_S));
+        for (slot, h) in stage_self_s.iter_mut().zip(stage_arr) {
+            *slot = Histogram::from_json(h)?;
+        }
         Ok(MetricsRegistry {
             frames_presented: uint("frames_presented")?,
             frames_inferred: uint("frames_inferred")?,
@@ -552,6 +658,10 @@ impl MetricsRegistry {
             batches_formed: uint("batches_formed")?,
             batches_flushed: uint("batches_flushed")?,
             batch_items: uint("batch_items")?,
+            spans_opened: uint("spans_opened")?,
+            spans_closed: uint("spans_closed")?,
+            slo_breaches: uint("slo_breaches")?,
+            slo_recoveries: uint("slo_recoveries")?,
             busy_per_dnn_s: dnn_f("busy_per_dnn_s")?,
             busy_failed_s: num("busy_failed_s")?,
             queue_depth_high_water: uint("queue_depth_high_water")?,
@@ -561,6 +671,7 @@ impl MetricsRegistry {
             makespan_s: num("makespan_s")?,
             infer_latency_s: hist("infer_latency_s")?,
             batch_size: hist("batch_size")?,
+            stage_self_s,
         })
     }
 }
@@ -597,6 +708,10 @@ impl Recorder for MetricsRegistry {
                 self.batch_size.record(len as f64);
             }
             Event::BatchShed { .. } => self.frames_shed += 1,
+            Event::SpanOpen { .. } => self.spans_opened += 1,
+            Event::SpanClose { .. } => self.spans_closed += 1,
+            Event::SloBreach { .. } => self.slo_breaches += 1,
+            Event::SloRecovered { .. } => self.slo_recoveries += 1,
         }
     }
 }
@@ -662,6 +777,29 @@ mod tests {
             Event::BatchFormed { stream: 0, dnn: DnnKind::TinyY416, t: 0.0 },
             Event::BatchFlushed { dnn: DnnKind::TinyY416, len: 3, t: 0.2 },
             Event::BatchShed { stream: 1, frame: 9, t: 0.3 },
+            Event::SpanOpen {
+                stream: 0,
+                frame: 1,
+                span: 2,
+                parent: 1,
+                kind: SpanKind::Frame,
+                t: 0.0,
+            },
+            Event::SpanClose { stream: 0, span: 2, t: 0.018 },
+            Event::SloBreach {
+                stream: 0,
+                t: 0.5,
+                signal: crate::obs::SloSignal::Watts,
+                value: 7.0,
+                limit: 5.8,
+            },
+            Event::SloRecovered {
+                stream: 0,
+                t: 0.9,
+                signal: crate::obs::SloSignal::Watts,
+                value: 5.0,
+                limit: 5.8,
+            },
             Event::StreamLeft {
                 stream: 0,
                 t: 1.0,
@@ -693,6 +831,12 @@ mod tests {
         assert_eq!(m.infer_latency_s.count(), 2);
         assert!((m.loss_rate() - 1.0).abs() < 1e-12);
         assert!((m.makespan_s - 0.12).abs() < 1e-12);
+        assert_eq!(m.spans_opened, 1);
+        assert_eq!(m.spans_closed, 1);
+        assert_eq!(m.slo_breaches, 1);
+        assert_eq!(m.slo_recoveries, 1);
+        // live recording never fills the stage histograms (offline fold)
+        assert!(m.stage_self_s.iter().all(|h| h.count() == 0));
     }
 
     #[test]
@@ -742,6 +886,8 @@ mod tests {
         });
         m.record(&Event::BatchFlushed { dnn: DnnKind::Y288, len: 4, t: 0.5 });
         m.observe_queue_depth(17);
+        m.observe_stage(SpanKind::Inference, 0.041);
+        m.observe_stage(SpanKind::DispatchWait, 0.002);
         m.busy_failed_s = 0.25;
         m.energy_j = 12.5;
 
@@ -778,6 +924,7 @@ mod tests {
             start: 0.0,
             end: 0.1,
         });
+        m.observe_stage(SpanKind::Inference, 0.1);
         let a = m.to_prometheus();
         let b = m.to_prometheus();
         assert_eq!(a, b);
@@ -785,6 +932,12 @@ mod tests {
         assert!(a.contains("tod_dnn_deploy_total{dnn=\"yolov4-416\"} 1"));
         assert!(a.contains("tod_infer_latency_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(a.contains("tod_infer_latency_seconds_count 1"));
+        assert!(a.contains(
+            "tod_stage_self_seconds_bucket{stage=\"inference\",le=\"+Inf\"} 1"
+        ));
+        assert!(a.contains("tod_stage_self_seconds_count{stage=\"inference\"} 1"));
+        // stages with no observations emit no series at all
+        assert!(!a.contains("stage=\"postprocess\""));
         // every non-comment line is "name[{labels}] value"
         for line in a.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(

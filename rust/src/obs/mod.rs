@@ -33,13 +33,25 @@
 //! histograms with Prometheus-style exposition; [`replay`] parses
 //! traces back and reconstructs drop cause chains
 //! (`tod trace explain-drop`).
+//!
+//! On top of the event spine (DESIGN.md §15): [`span`] adds nested
+//! stream ▸ frame ▸ stage spans with per-stream id arenas; [`profile`]
+//! folds a span trace into per-stage self-time attribution
+//! (`tod trace profile`); [`export`] renders Chrome trace-event JSON
+//! and collapsed-stack flamegraphs (`tod trace export --chrome`,
+//! `tod trace flame`); [`slo`] evaluates rolling-window health specs
+//! over a trace and backs `tod slo check`.
 
 // Observability is on the serving path: failures must surface as
 // values, never panics.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod export;
 pub mod metrics;
+pub mod profile;
 pub mod replay;
+pub mod slo;
+pub mod span;
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -47,8 +59,12 @@ use std::rc::Rc;
 use crate::util::json::Json;
 use crate::DnnKind;
 
+pub use export::{chrome_trace, flamegraph};
 pub use metrics::MetricsRegistry;
+pub use profile::ProfileReport;
 pub use replay::{explain_drops, parse_trace, DropCause, DropExplanation};
+pub use slo::{SloReport, SloSignal, SloSpec};
+pub use span::{validate_spans, SpanArena, SpanKind};
 
 /// Version of the event schema emitted into trace files. Bump when an
 /// event variant or field changes meaning; `tod trace` refuses files
@@ -126,6 +142,17 @@ pub enum Event {
     BatchFlushed { dnn: DnnKind, len: u32, t: f64 },
     /// Admission control rejected the request (queue full, shed mode).
     BatchShed { stream: u32, frame: u64, t: f64 },
+    /// A pipeline span opened. `span` ids are dense per stream (see
+    /// [`span::SpanArena`]); `parent` is the enclosing open span (0 =
+    /// root); `frame` is 0 for spans not tied to a frame (the stream
+    /// envelope).
+    SpanOpen { stream: u32, frame: u64, span: u32, parent: u32, kind: SpanKind, t: f64 },
+    /// The matching close of [`Event::SpanOpen`] (LIFO per stream).
+    SpanClose { stream: u32, span: u32, t: f64 },
+    /// A rolling-window SLO signal crossed its limit (see [`slo`]).
+    SloBreach { stream: u32, t: f64, signal: SloSignal, value: f64, limit: f64 },
+    /// A previously breached SLO signal returned inside its limit.
+    SloRecovered { stream: u32, t: f64, signal: SloSignal, value: f64, limit: f64 },
 }
 
 impl Event {
@@ -144,6 +171,10 @@ impl Event {
             Event::BatchExtended { .. } => "batch_extended",
             Event::BatchFlushed { .. } => "batch_flushed",
             Event::BatchShed { .. } => "batch_shed",
+            Event::SpanOpen { .. } => "span_open",
+            Event::SpanClose { .. } => "span_close",
+            Event::SloBreach { .. } => "slo_breach",
+            Event::SloRecovered { .. } => "slo_recovered",
         }
     }
 
@@ -160,7 +191,11 @@ impl Event {
             | Event::FrameDropped { stream, .. }
             | Event::BatchFormed { stream, .. }
             | Event::BatchExtended { stream, .. }
-            | Event::BatchShed { stream, .. } => Some(stream),
+            | Event::BatchShed { stream, .. }
+            | Event::SpanOpen { stream, .. }
+            | Event::SpanClose { stream, .. }
+            | Event::SloBreach { stream, .. }
+            | Event::SloRecovered { stream, .. } => Some(stream),
             Event::BatchFlushed { .. } => None,
         }
     }
@@ -174,6 +209,8 @@ impl Event {
             | Event::InferenceFailed { frame, .. }
             | Event::FrameDropped { frame, .. }
             | Event::BatchShed { frame, .. } => Some(frame),
+            // frame 0 marks a span not tied to a frame (stream envelope)
+            Event::SpanOpen { frame, .. } if frame != 0 => Some(frame),
             _ => None,
         }
     }
@@ -190,7 +227,11 @@ impl Event {
             | Event::BatchFormed { t, .. }
             | Event::BatchExtended { t, .. }
             | Event::BatchFlushed { t, .. }
-            | Event::BatchShed { t, .. } => t,
+            | Event::BatchShed { t, .. }
+            | Event::SpanOpen { t, .. }
+            | Event::SpanClose { t, .. }
+            | Event::SloBreach { t, .. }
+            | Event::SloRecovered { t, .. } => t,
             Event::FrameInferred { start, .. }
             | Event::InferenceFailed { start, .. } => start,
         }
@@ -293,6 +334,34 @@ impl Event {
                 ("frame", Json::num(frame as f64)),
                 ("t", Json::num(t)),
             ]),
+            Event::SpanOpen { stream, frame, span, parent, kind, t } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("frame", Json::num(frame as f64)),
+                    ("span", Json::num(span as f64)),
+                    ("parent", Json::num(parent as f64)),
+                    ("kind", Json::str(kind.label())),
+                    ("t", Json::num(t)),
+                ])
+            }
+            Event::SpanClose { stream, span, t } => Json::obj(vec![
+                ("type", tag),
+                ("stream", Json::num(stream as f64)),
+                ("span", Json::num(span as f64)),
+                ("t", Json::num(t)),
+            ]),
+            Event::SloBreach { stream, t, signal, value, limit }
+            | Event::SloRecovered { stream, t, signal, value, limit } => {
+                Json::obj(vec![
+                    ("type", tag),
+                    ("stream", Json::num(stream as f64)),
+                    ("t", Json::num(t)),
+                    ("signal", Json::str(signal.label())),
+                    ("value", Json::num(value)),
+                    ("limit", Json::num(limit)),
+                ])
+            }
         }
     }
 
@@ -393,6 +462,41 @@ impl Event {
                 frame: uint("frame")?,
                 t: num("t")?,
             },
+            "span_open" => Event::SpanOpen {
+                stream: stream()?,
+                frame: uint("frame")?,
+                span: uint("span")? as u32,
+                parent: uint("parent")? as u32,
+                kind: {
+                    let k = v
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("{tag}: missing \"kind\""))?;
+                    SpanKind::from_label(k)
+                        .ok_or_else(|| format!("{tag}: unknown kind {k:?}"))?
+                },
+                t: num("t")?,
+            },
+            "span_close" => Event::SpanClose {
+                stream: stream()?,
+                span: uint("span")? as u32,
+                t: num("t")?,
+            },
+            "slo_breach" | "slo_recovered" => {
+                let s = v
+                    .get("signal")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("{tag}: missing \"signal\""))?;
+                let signal = SloSignal::from_label(s)
+                    .ok_or_else(|| format!("{tag}: unknown signal {s:?}"))?;
+                let (stream, t) = (stream()?, num("t")?);
+                let (value, limit) = (num("value")?, num("limit")?);
+                if tag == "slo_breach" {
+                    Event::SloBreach { stream, t, signal, value, limit }
+                } else {
+                    Event::SloRecovered { stream, t, signal, value, limit }
+                }
+            }
             other => return Err(format!("unknown event type: {other:?}")),
         })
     }
@@ -562,6 +666,47 @@ impl Recorder for JsonlSink {
     }
 }
 
+/// Unbounded in-memory recorder: appends every event to a `Vec`. The
+/// offline-analysis tier — SLO evaluation over a whole run, span
+/// validation in tests, export rendering — where allocation is fine
+/// and nothing may be dropped. Hold an `Rc<RefCell<EventLog>>` and
+/// coerce a clone into [`SharedRecorder`] to read the events back
+/// after the run.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        EventLog::default()
+    }
+
+    /// Recorded events, emission order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Consume the log, yielding its events.
+    pub fn into_events(self) -> Vec<Event> {
+        self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl Recorder for EventLog {
+    fn record(&mut self, ev: &Event) {
+        self.events.push(*ev);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -642,6 +787,29 @@ mod tests {
             },
             Event::BatchFlushed { dnn: DnnKind::TinyY288, len: 2, t: 0.46 },
             Event::BatchShed { stream: 1, frame: 12, t: 0.5 },
+            Event::SpanOpen {
+                stream: 0,
+                frame: 7,
+                span: 14,
+                parent: 1,
+                kind: SpanKind::Inference,
+                t: 0.2,
+            },
+            Event::SpanClose { stream: 0, span: 14, t: 0.29 },
+            Event::SloBreach {
+                stream: 0,
+                t: 4.0,
+                signal: SloSignal::Watts,
+                value: 7.4,
+                limit: 5.8,
+            },
+            Event::SloRecovered {
+                stream: 0,
+                t: 9.5,
+                signal: SloSignal::Watts,
+                value: 5.1,
+                limit: 5.8,
+            },
         ];
         for ev in events {
             let back = Event::from_json(&ev.to_json()).unwrap();
@@ -791,5 +959,40 @@ mod tests {
         let flush = Event::BatchFlushed { dnn: DnnKind::Y288, len: 3, t: 2.0 };
         assert_eq!(flush.stream(), None);
         assert_eq!(flush.frame(), None);
+        // frame 0 on a span marks "no frame" (the stream envelope)
+        let root = Event::SpanOpen {
+            stream: 2,
+            frame: 0,
+            span: 1,
+            parent: 0,
+            kind: SpanKind::Stream,
+            t: 0.0,
+        };
+        assert_eq!(root.frame(), None);
+        assert_eq!(root.stream(), Some(2));
+        let frame_span = Event::SpanOpen {
+            stream: 2,
+            frame: 4,
+            span: 2,
+            parent: 1,
+            kind: SpanKind::Frame,
+            t: 0.1,
+        };
+        assert_eq!(frame_span.frame(), Some(4));
+    }
+
+    #[test]
+    fn event_log_retains_everything_in_order() {
+        let log = Rc::new(RefCell::new(EventLog::new()));
+        let rec: SharedRecorder = log.clone();
+        for ev in sample_events(6) {
+            rec.borrow_mut().record(&ev);
+        }
+        let inner = log.borrow();
+        assert_eq!(inner.len(), 6);
+        assert!(!inner.is_empty());
+        let frames: Vec<u64> =
+            inner.events().iter().filter_map(|e| e.frame()).collect();
+        assert_eq!(frames, vec![1, 2, 3, 4, 5, 6]);
     }
 }

@@ -1,0 +1,323 @@
+//! Offline span-profile fold: self-time vs child-time attribution
+//! (DESIGN.md §15).
+//!
+//! [`fold_into`] replays the [`crate::obs::Event::SpanOpen`] /
+//! [`crate::obs::Event::SpanClose`] pairs of a recorded trace and
+//! attributes each span's *self time* — its duration minus the summed
+//! durations of its direct children — to its [`SpanKind`]. Stage
+//! self-times feed the per-stage histograms of
+//! [`MetricsRegistry::observe_stage`] and aggregate into a versioned
+//! [`ProfileReport`] (`tod trace profile`). [`per_frame`] returns the
+//! same attribution per inferred frame, which is what the conformance
+//! tests use to assert that stage self-times sum exactly to each frame
+//! span.
+//!
+//! This is the offline tier: allocation is fine, nothing here runs on
+//! the stepping path. Events must be in recorder emission order (which
+//! [`crate::obs::EventLog`] and `tod trace` files preserve); spans are
+//! keyed per stream so interleaving across streams is harmless.
+
+use std::collections::BTreeMap;
+
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::span::SpanKind;
+use crate::obs::Event;
+use crate::util::json::Json;
+
+/// Schema tag of the profile-report JSON.
+pub const PROFILE_TAG: &str = "tod-profile";
+
+/// Version of the profile-report JSON. Bump when fields change meaning.
+pub const PROFILE_VERSION: u64 = 1;
+
+/// Aggregate for one [`SpanKind`] across a trace.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageAgg {
+    /// Closed spans of this kind.
+    pub count: u64,
+    /// Summed self time (duration minus direct children), seconds.
+    pub self_s: f64,
+    /// Summed inclusive duration, seconds.
+    pub total_s: f64,
+}
+
+/// Per-stage attribution over a whole trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileReport {
+    /// One aggregate per [`SpanKind`], indexed by [`SpanKind::index`].
+    pub stages: [StageAgg; SpanKind::COUNT],
+    /// Closed frame spans seen.
+    pub frames: u64,
+    /// Summed stream-span duration (total traced stream time), seconds.
+    pub total_s: f64,
+    /// Spans still open when the trace ended (0 for a clean run).
+    pub unclosed: u64,
+}
+
+impl ProfileReport {
+    /// Aggregate for one kind.
+    pub fn stage(&self, kind: SpanKind) -> StageAgg {
+        self.stages[kind.index()]
+    }
+
+    /// Versioned JSON encoding (all stages, fixed arity, sorted keys).
+    pub fn to_json(&self) -> Json {
+        let stages = SpanKind::ALL
+            .iter()
+            .map(|&k| {
+                let agg = self.stage(k);
+                Json::obj(vec![
+                    ("stage", Json::str(k.label())),
+                    ("count", Json::num(agg.count as f64)),
+                    ("self_s", Json::num(agg.self_s)),
+                    ("total_s", Json::num(agg.total_s)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("schema", Json::str(PROFILE_TAG)),
+            ("version", Json::num(PROFILE_VERSION as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("total_s", Json::num(self.total_s)),
+            ("unclosed", Json::num(self.unclosed as f64)),
+            ("stages", Json::arr(stages)),
+        ])
+    }
+}
+
+/// Stage attribution for one frame span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameProfile {
+    pub stream: u32,
+    pub frame: u64,
+    /// Inclusive duration of the frame span, seconds.
+    pub total_s: f64,
+    /// Self time per kind, indexed by [`SpanKind::index`]. The frame
+    /// span's own self time sits at [`SpanKind::Frame`]'s slot and is 0
+    /// exactly when its stage children tile the frame interval.
+    pub stage_self_s: [f64; SpanKind::COUNT],
+}
+
+/// One open span during replay.
+struct OpenSpan {
+    t: f64,
+    kind: SpanKind,
+    parent: u32,
+    frame: u64,
+    child_s: f64,
+}
+
+/// Replay span events, folding stage self-times into `metrics` (via
+/// [`MetricsRegistry::observe_stage`]) and returning the aggregate
+/// [`ProfileReport`]. Non-span events are ignored.
+pub fn fold_into(
+    events: &[Event],
+    metrics: &mut MetricsRegistry,
+) -> ProfileReport {
+    let (report, _) = replay(events, Some(metrics));
+    report
+}
+
+/// Aggregate profile without a metrics registry.
+pub fn profile(events: &[Event]) -> ProfileReport {
+    let (report, _) = replay(events, None);
+    report
+}
+
+/// Per-frame stage attribution, in frame-close order. Only frames whose
+/// frame span closed are included (a trace cut mid-frame drops it).
+pub fn per_frame(events: &[Event]) -> Vec<FrameProfile> {
+    let (_, frames) = replay(events, None);
+    frames
+}
+
+fn replay(
+    events: &[Event],
+    mut metrics: Option<&mut MetricsRegistry>,
+) -> (ProfileReport, Vec<FrameProfile>) {
+    // (stream, span id) -> open span state; parents stay open until
+    // all their children closed, so child attribution lands in the map.
+    let mut open: BTreeMap<(u32, u32), OpenSpan> = BTreeMap::new();
+    // (stream, frame) -> accumulating per-frame attribution
+    let mut by_frame: BTreeMap<(u32, u64), [f64; SpanKind::COUNT]> =
+        BTreeMap::new();
+    let mut frames_done: Vec<FrameProfile> = Vec::new();
+    let mut report = ProfileReport {
+        stages: [StageAgg::default(); SpanKind::COUNT],
+        frames: 0,
+        total_s: 0.0,
+        unclosed: 0,
+    };
+    for ev in events {
+        match *ev {
+            Event::SpanOpen { stream, frame, span, parent, kind, t } => {
+                open.insert(
+                    (stream, span),
+                    OpenSpan { t, kind, parent, frame, child_s: 0.0 },
+                );
+            }
+            Event::SpanClose { stream, span, t } => {
+                let Some(sp) = open.remove(&(stream, span)) else {
+                    // close without an open: validate_spans reports
+                    // this; the profile just skips it
+                    continue;
+                };
+                let total = (t - sp.t).max(0.0);
+                let self_s = (total - sp.child_s).max(0.0);
+                let agg = &mut report.stages[sp.kind.index()];
+                agg.count += 1;
+                agg.self_s += self_s;
+                agg.total_s += total;
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.observe_stage(sp.kind, self_s);
+                }
+                if sp.parent != 0 {
+                    if let Some(parent) = open.get_mut(&(stream, sp.parent))
+                    {
+                        parent.child_s += total;
+                    }
+                }
+                match sp.kind {
+                    SpanKind::Stream => report.total_s += total,
+                    SpanKind::Frame => {
+                        report.frames += 1;
+                        let mut stage_self_s = by_frame
+                            .remove(&(stream, sp.frame))
+                            .unwrap_or([0.0; SpanKind::COUNT]);
+                        stage_self_s[SpanKind::Frame.index()] += self_s;
+                        frames_done.push(FrameProfile {
+                            stream,
+                            frame: sp.frame,
+                            total_s: total,
+                            stage_self_s,
+                        });
+                    }
+                    _ if sp.frame != 0 => {
+                        by_frame
+                            .entry((stream, sp.frame))
+                            .or_insert([0.0; SpanKind::COUNT])
+                            [sp.kind.index()] += self_s;
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+    report.unclosed = open.len() as u64;
+    (report, frames_done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open(
+        stream: u32,
+        frame: u64,
+        span: u32,
+        parent: u32,
+        kind: SpanKind,
+        t: f64,
+    ) -> Event {
+        Event::SpanOpen { stream, frame, span, parent, kind, t }
+    }
+
+    fn close(stream: u32, span: u32, t: f64) -> Event {
+        Event::SpanClose { stream, span, t }
+    }
+
+    /// stream span [0, 1.0] holding one frame [0.1, 0.4] with a
+    /// dispatch_wait [0.1, 0.15] and an inference [0.15, 0.4].
+    fn one_frame_trace() -> Vec<Event> {
+        vec![
+            open(0, 0, 1, 0, SpanKind::Stream, 0.0),
+            open(0, 5, 2, 1, SpanKind::Frame, 0.1),
+            open(0, 5, 3, 2, SpanKind::FeatureExtract, 0.1),
+            close(0, 3, 0.1),
+            open(0, 5, 4, 2, SpanKind::DispatchWait, 0.1),
+            close(0, 4, 0.15),
+            open(0, 5, 5, 2, SpanKind::Inference, 0.15),
+            close(0, 5, 0.4),
+            close(0, 2, 0.4),
+            close(0, 1, 1.0),
+        ]
+    }
+
+    #[test]
+    fn self_time_excludes_children() {
+        let report = profile(&one_frame_trace());
+        assert_eq!(report.frames, 1);
+        assert_eq!(report.unclosed, 0);
+        assert!((report.total_s - 1.0).abs() < 1e-12);
+        let frame = report.stage(SpanKind::Frame);
+        assert_eq!(frame.count, 1);
+        assert!((frame.total_s - 0.3).abs() < 1e-12);
+        // children tile the frame: zero frame self time
+        assert!(frame.self_s.abs() < 1e-12, "self {}", frame.self_s);
+        let infer = report.stage(SpanKind::Inference);
+        assert!((infer.self_s - 0.25).abs() < 1e-12);
+        let wait = report.stage(SpanKind::DispatchWait);
+        assert!((wait.self_s - 0.05).abs() < 1e-12);
+        // the stream span's self time excludes the frame
+        let stream = report.stage(SpanKind::Stream);
+        assert!((stream.self_s - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_frame_attribution_sums_to_the_frame_span() {
+        let frames = per_frame(&one_frame_trace());
+        assert_eq!(frames.len(), 1);
+        let f = &frames[0];
+        assert_eq!((f.stream, f.frame), (0, 5));
+        assert!((f.total_s - 0.3).abs() < 1e-12);
+        let sum: f64 = f.stage_self_s.iter().sum();
+        assert!(
+            (sum - f.total_s).abs() < 1e-9,
+            "stage self-times {sum} != frame total {}",
+            f.total_s
+        );
+    }
+
+    #[test]
+    fn fold_feeds_stage_histograms() {
+        let mut m = MetricsRegistry::default();
+        let report = fold_into(&one_frame_trace(), &mut m);
+        assert_eq!(report.frames, 1);
+        // one observation per closed span
+        let snap = m.to_json().to_string();
+        assert!(snap.contains("stage_self_s"));
+    }
+
+    #[test]
+    fn unclosed_spans_are_counted_not_attributed() {
+        let evs = vec![
+            open(0, 0, 1, 0, SpanKind::Stream, 0.0),
+            open(0, 3, 2, 1, SpanKind::Frame, 0.1),
+            // trace ends mid-frame
+        ];
+        let report = profile(&evs);
+        assert_eq!(report.unclosed, 2);
+        assert_eq!(report.frames, 0);
+        assert!(per_frame(&evs).is_empty());
+    }
+
+    #[test]
+    fn report_json_is_versioned_with_fixed_stage_arity() {
+        let report = profile(&one_frame_trace());
+        let v = report.to_json();
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some(PROFILE_TAG));
+        assert_eq!(
+            v.get("version").and_then(Json::as_f64),
+            Some(PROFILE_VERSION as f64)
+        );
+        let stages = v.get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(stages.len(), SpanKind::COUNT);
+        assert_eq!(
+            stages[0].get("stage").and_then(Json::as_str),
+            Some("stream")
+        );
+        // deterministic text
+        assert_eq!(v.to_string(), profile(&one_frame_trace()).to_json().to_string());
+    }
+}

@@ -403,6 +403,41 @@ mod tests {
     }
 
     #[test]
+    fn shed_takes_precedence_over_a_busy_chain() {
+        // the shed frame *also* has a blocking inference ending at its
+        // busy_until and a clamp on that inference's selection — but
+        // admission control rejected the work before capacity mattered,
+        // so Shed must win over BusyAfterClamp
+        let mut evs = busy_drop_trace();
+        evs.insert(
+            2,
+            Event::BudgetClamp {
+                stream: 0,
+                t: 0.0,
+                requested: DnnKind::Y416,
+                granted: DnnKind::TinyY416,
+                mask: 0b0011,
+            },
+        );
+        evs.push(Event::BatchShed { stream: 0, frame: 2, t: 0.033 });
+        let ex = explain_drops(&evs);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].cause, DropCause::Shed);
+        assert_eq!(ex[0].blocking, None, "shed drops have no blocker");
+    }
+
+    #[test]
+    fn shed_on_another_stream_does_not_leak() {
+        // same frame id, different stream: the shed must not explain
+        // this stream's capacity drop
+        let mut evs = busy_drop_trace();
+        evs.push(Event::BatchShed { stream: 7, frame: 2, t: 0.033 });
+        let ex = explain_drops(&evs);
+        assert_eq!(ex[0].cause, DropCause::BusyAccelerator);
+        assert!(ex[0].blocking.is_some());
+    }
+
+    #[test]
     fn unknown_when_blocking_work_is_outside_the_window() {
         let evs = vec![Event::FrameDropped {
             stream: 0,

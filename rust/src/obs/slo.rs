@@ -1,0 +1,493 @@
+//! Rolling-window SLO watchdog over a recorded event trace
+//! (DESIGN.md §15).
+//!
+//! [`check_events`] replays a trace offline and evaluates a
+//! [`SloSpec`] — windowed p99 end-to-end frame latency, drop rate,
+//! a projected-accuracy proxy and mean board watts — at every
+//! frame-presentation tick once the first full window has elapsed.
+//! Signal transitions are edge-triggered with hysteresis: crossing a
+//! limit emits one [`crate::obs::Event::SloBreach`], and the signal
+//! must come back *inside* the limit by a relative margin before
+//! [`crate::obs::Event::SloRecovered`] fires, so a value oscillating
+//! on the limit does not flap.
+//!
+//! Evaluation is a pure function of the event stream: the same trace
+//! (same seed) yields the same report, which is what lets
+//! `tod slo check` be pinned by golden scenario tests and run as a CI
+//! gate. All timestamps are virtual board seconds.
+
+use crate::obs::Event;
+use crate::sim::profiles::{DnnProfile, POWER_IDLE_W};
+
+/// Which windowed health signal an SLO event refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloSignal {
+    /// p99 of end-to-end frame latency (capture → inference end), s.
+    LatencyP99,
+    /// Dropped + shed frames as a fraction of presented frames.
+    DropRate,
+    /// Detection-freshness proxy for projected AP (higher is better).
+    ApProxy,
+    /// Mean board power over the window, watts.
+    Watts,
+}
+
+impl SloSignal {
+    /// All signals, evaluation order.
+    pub const ALL: [SloSignal; 4] = [
+        SloSignal::LatencyP99,
+        SloSignal::DropRate,
+        SloSignal::ApProxy,
+        SloSignal::Watts,
+    ];
+
+    /// Stable label used in traces and `tod slo check` output.
+    pub fn label(self) -> &'static str {
+        match self {
+            SloSignal::LatencyP99 => "latency_p99",
+            SloSignal::DropRate => "drop_rate",
+            SloSignal::ApProxy => "ap_proxy",
+            SloSignal::Watts => "watts",
+        }
+    }
+
+    /// Inverse of [`SloSignal::label`] (trace parsing).
+    pub fn from_label(s: &str) -> Option<SloSignal> {
+        SloSignal::ALL.iter().copied().find(|k| k.label() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            SloSignal::LatencyP99 => 0,
+            SloSignal::DropRate => 1,
+            SloSignal::ApProxy => 2,
+            SloSignal::Watts => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for SloSignal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Relative hysteresis margin: a breached signal recovers only once it
+/// is back inside its limit by this fraction.
+const HYSTERESIS: f64 = 0.02;
+
+/// Rolling-window health limits. `None` disables a signal. Defaults are
+/// deliberately generous — they flag a pipeline that has fallen over
+/// (saturated device, runaway drops, starved detections), not one that
+/// is merely busy. In particular the drop-rate limit sits at 0.9:
+/// skipping frames while the accelerator is busy is the paper's
+/// operating model (a heavy net at 30 fps legitimately drops ~3 of 4
+/// frames), so only a near-total drop-out is a health failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Rolling window length, virtual seconds.
+    pub window_s: f64,
+    /// Upper bound on windowed p99 end-to-end frame latency, seconds.
+    pub latency_p99_s: Option<f64>,
+    /// Upper bound on windowed drop rate (0..=1).
+    pub max_drop_rate: Option<f64>,
+    /// Lower bound on the windowed detection-freshness AP proxy.
+    pub min_ap_proxy: Option<f64>,
+    /// Upper bound on mean board watts over the window (the scenario's
+    /// power budget, when it has one).
+    pub watts_cap: Option<f64>,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            window_s: 2.0,
+            latency_p99_s: Some(0.5),
+            max_drop_rate: Some(0.9),
+            min_ap_proxy: Some(0.2),
+            watts_cap: None,
+        }
+    }
+}
+
+impl SloSpec {
+    /// Default spec plus a board power cap (scenario budget), watts.
+    pub fn with_watts_cap(mut self, watts: f64) -> Self {
+        self.watts_cap = Some(watts);
+        self
+    }
+}
+
+/// Result of [`check_events`]: the synthesized SLO transition events
+/// plus evaluation counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloReport {
+    /// `SloBreach` / `SloRecovered` transitions, evaluation order.
+    pub events: Vec<Event>,
+    /// Breach transitions (count of `SloBreach` events).
+    pub breaches: u64,
+    /// (tick, signal) evaluations performed.
+    pub checks: u64,
+}
+
+impl SloReport {
+    /// True when at least one signal crossed its limit.
+    pub fn breached(&self) -> bool {
+        self.breaches > 0
+    }
+
+    /// Breach transitions for one signal.
+    pub fn breaches_of(&self, signal: SloSignal) -> u64 {
+        self.events
+            .iter()
+            .filter(|ev| {
+                matches!(ev, Event::SloBreach { signal: s, .. } if *s == signal)
+            })
+            .count() as u64
+    }
+}
+
+/// Mutable per-stream freshness state for the AP proxy.
+#[derive(Default)]
+struct StreamFreshness {
+    /// Presented frames since the last successful inference.
+    age: u64,
+}
+
+/// Evaluate `spec` over a recorded trace. Events are stable-sorted by
+/// timestamp first, so recorder interleaving across streams does not
+/// matter. Returns the transitions and counters; the input events are
+/// not modified.
+pub fn check_events(events: &[Event], spec: &SloSpec) -> SloReport {
+    let mut evs: Vec<Event> = events.to_vec();
+    evs.sort_by(|a, b| a.time().total_cmp(&b.time()));
+
+    let w = spec.window_s.max(1e-6);
+    let t_first = evs.first().map(|e| e.time()).unwrap_or(0.0);
+
+    // Window sample stores, each (timestamp, value). Offline replay:
+    // allocation is fine here.
+    let mut latency: Vec<(f64, f64)> = Vec::new();
+    let mut presented: Vec<f64> = Vec::new();
+    let mut dropped: Vec<f64> = Vec::new();
+    let mut freshness: Vec<(f64, f64)> = Vec::new();
+    // inference intervals (start, end, active watts)
+    let mut busy: Vec<(f64, f64, f64)> = Vec::new();
+    // (stream, frame) -> capture time, for end-to-end latency
+    let mut capture: std::collections::BTreeMap<(u32, u64), f64> =
+        std::collections::BTreeMap::new();
+    let mut fresh: std::collections::BTreeMap<u32, StreamFreshness> =
+        std::collections::BTreeMap::new();
+
+    let mut report =
+        SloReport { events: Vec::new(), breaches: 0, checks: 0 };
+    // per-signal latched breach state
+    let mut in_breach = [false; 4];
+    let mut scratch: Vec<f64> = Vec::new();
+
+    for ev in &evs {
+        match *ev {
+            Event::FramePresented { stream, frame, t } => {
+                presented.push(t);
+                capture.insert((stream, frame), t);
+                let st = fresh.entry(stream).or_default();
+                freshness.push((t, 1.0 / (1.0 + st.age as f64)));
+                st.age += 1;
+            }
+            Event::FrameInferred { stream, frame, dnn, start, end } => {
+                let t0 =
+                    capture.get(&(stream, frame)).copied().unwrap_or(start);
+                latency.push((end, end - t0));
+                busy.push((start, end, DnnProfile::of(dnn).power_active_w));
+                fresh.entry(stream).or_default().age = 0;
+            }
+            Event::InferenceFailed { stream, frame, dnn, start, end } => {
+                // device time was spent and the frame completed its
+                // pipeline pass, but detections did not refresh
+                let t0 =
+                    capture.get(&(stream, frame)).copied().unwrap_or(start);
+                latency.push((end, end - t0));
+                busy.push((start, end, DnnProfile::of(dnn).power_active_w));
+            }
+            Event::FrameDropped { t, .. } | Event::BatchShed { t, .. } => {
+                dropped.push(t);
+            }
+            _ => {}
+        }
+
+        // Evaluate at presentation ticks once the first window is full
+        // (a partial window would report startup transients).
+        let Event::FramePresented { stream, t, .. } = *ev else {
+            continue;
+        };
+        if t - t_first + 1e-9 < w {
+            continue;
+        }
+        let lo = t - w;
+        let win = |ts: f64| ts > lo + 1e-9 && ts <= t + 1e-9;
+
+        let mut observed = [None; 4];
+        if spec.latency_p99_s.is_some() {
+            scratch.clear();
+            scratch.extend(
+                latency.iter().filter(|&&(ts, _)| win(ts)).map(|&(_, v)| v),
+            );
+            if !scratch.is_empty() {
+                scratch.sort_by(f64::total_cmp);
+                let idx = ((scratch.len() as f64) * 0.99).ceil() as usize;
+                let idx = idx.saturating_sub(1).min(scratch.len() - 1);
+                observed[SloSignal::LatencyP99.index()] =
+                    scratch.get(idx).copied();
+            }
+        }
+        if spec.max_drop_rate.is_some() {
+            let shown =
+                presented.iter().filter(|&&ts| win(ts)).count() as f64;
+            let lost = dropped.iter().filter(|&&ts| win(ts)).count() as f64;
+            if shown > 0.0 {
+                observed[SloSignal::DropRate.index()] = Some(lost / shown);
+            }
+        }
+        if spec.min_ap_proxy.is_some() {
+            let (mut sum, mut n) = (0.0, 0u64);
+            for &(ts, v) in &freshness {
+                if win(ts) {
+                    sum += v;
+                    n += 1;
+                }
+            }
+            if n > 0 {
+                observed[SloSignal::ApProxy.index()] = Some(sum / n as f64);
+            }
+        }
+        if spec.watts_cap.is_some() {
+            let mut active_ws = 0.0; // watt-seconds above idle
+            for &(s, e, active_w) in &busy {
+                let overlap = (e.min(t) - s.max(lo)).max(0.0);
+                active_ws += overlap * (active_w - POWER_IDLE_W);
+            }
+            observed[SloSignal::Watts.index()] =
+                Some(POWER_IDLE_W + active_ws / w);
+        }
+
+        for signal in SloSignal::ALL {
+            // (limit, true = value must stay below the limit)
+            let (limit, upper) = match signal {
+                SloSignal::LatencyP99 => (spec.latency_p99_s, true),
+                SloSignal::DropRate => (spec.max_drop_rate, true),
+                SloSignal::ApProxy => (spec.min_ap_proxy, false),
+                SloSignal::Watts => (spec.watts_cap, true),
+            };
+            let (Some(limit), Some(value)) =
+                (limit, observed[signal.index()])
+            else {
+                continue;
+            };
+            report.checks += 1;
+            let latched = &mut in_breach[signal.index()];
+            let (breach_now, recovered_now) = if upper {
+                (value > limit, value <= limit * (1.0 - HYSTERESIS))
+            } else {
+                (value < limit, value >= limit * (1.0 + HYSTERESIS))
+            };
+            if breach_now && !*latched {
+                *latched = true;
+                report.breaches += 1;
+                report.events.push(Event::SloBreach {
+                    stream,
+                    t,
+                    signal,
+                    value,
+                    limit,
+                });
+            } else if recovered_now && *latched {
+                *latched = false;
+                report.events.push(Event::SloRecovered {
+                    stream,
+                    t,
+                    signal,
+                    value,
+                    limit,
+                });
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::DnnKind;
+
+    fn presented(stream: u32, frame: u64, t: f64) -> Event {
+        Event::FramePresented { stream, frame, t }
+    }
+
+    fn inferred(stream: u32, frame: u64, start: f64, end: f64) -> Event {
+        Event::FrameInferred {
+            stream,
+            frame,
+            dnn: DnnKind::Y416,
+            start,
+            end,
+        }
+    }
+
+    /// 30 fps stream, every frame inferred quickly on the big net.
+    fn busy_trace(seconds: f64) -> Vec<Event> {
+        let mut evs = Vec::new();
+        let frames = (seconds * 30.0) as u64;
+        for i in 0..frames {
+            let t = i as f64 / 30.0;
+            evs.push(presented(0, i + 1, t));
+            evs.push(inferred(0, i + 1, t, t + 0.030));
+        }
+        evs
+    }
+
+    #[test]
+    fn signal_labels_roundtrip_and_are_unique() {
+        for s in SloSignal::ALL {
+            assert_eq!(SloSignal::from_label(s.label()), Some(s));
+            assert_eq!(format!("{s}"), s.label());
+        }
+        assert_eq!(SloSignal::from_label("bogus"), None);
+        let mut labels: Vec<&str> =
+            SloSignal::ALL.iter().map(|s| s.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), SloSignal::ALL.len());
+    }
+
+    #[test]
+    fn healthy_trace_passes_default_spec() {
+        let report = check_events(&busy_trace(6.0), &SloSpec::default());
+        assert!(!report.breached(), "events: {:?}", report.events);
+        assert!(report.checks > 0);
+        assert!(report.events.is_empty());
+    }
+
+    #[test]
+    fn watts_cap_breach_fires_once_then_recovers() {
+        // Y416 back to back keeps the device ~100% busy at 7.5 W;
+        // cap it at 5.0 W and the breach must latch exactly once.
+        let mut evs = Vec::new();
+        let mut t = 0.0;
+        let mut frame = 1;
+        while t < 6.0 {
+            evs.push(presented(0, frame, t));
+            evs.push(inferred(0, frame, t, t + 0.153));
+            t += 0.153;
+            frame += 1;
+        }
+        // then a long idle tail: frames presented, nothing dispatched
+        // (no drops either — the comparison here is only about watts)
+        while t < 14.0 {
+            evs.push(presented(0, frame, t));
+            evs.push(inferred(0, frame, t, t + 0.001));
+            t += 1.0 / 30.0;
+            frame += 1;
+        }
+        let spec = SloSpec {
+            latency_p99_s: None,
+            max_drop_rate: None,
+            min_ap_proxy: None,
+            ..SloSpec::default().with_watts_cap(5.0)
+        };
+        let report = check_events(&evs, &spec);
+        assert_eq!(report.breaches, 1, "events: {:?}", report.events);
+        assert_eq!(report.breaches_of(SloSignal::Watts), 1);
+        assert!(report.breached());
+        // the idle tail brings mean watts back under the cap
+        let kinds: Vec<&'static str> =
+            report.events.iter().map(|e| e.type_tag()).collect();
+        assert_eq!(kinds, vec!["slo_breach", "slo_recovered"]);
+    }
+
+    #[test]
+    fn drop_storm_breaches_drop_rate() {
+        let mut evs = Vec::new();
+        for i in 0..120u64 {
+            let t = i as f64 / 30.0;
+            evs.push(presented(0, i + 1, t));
+            // three of four frames dropped
+            if i % 4 == 0 {
+                evs.push(inferred(0, i + 1, t, t + 0.03));
+            } else {
+                evs.push(Event::FrameDropped {
+                    stream: 0,
+                    frame: i + 1,
+                    t,
+                    busy_until: t + 0.1,
+                });
+            }
+        }
+        let spec = SloSpec {
+            latency_p99_s: None,
+            max_drop_rate: Some(0.5),
+            min_ap_proxy: None,
+            ..SloSpec::default()
+        };
+        let report = check_events(&evs, &spec);
+        assert!(report.breaches_of(SloSignal::DropRate) >= 1);
+        // the routine-skipping default (0.9) tolerates the same trace
+        let report = check_events(&evs, &SloSpec::default());
+        assert_eq!(report.breaches_of(SloSignal::DropRate), 0);
+    }
+
+    #[test]
+    fn starved_detections_breach_the_ap_proxy() {
+        // frames keep arriving but nothing ever infers: freshness decays
+        let mut evs = Vec::new();
+        for i in 0..240u64 {
+            evs.push(presented(0, i + 1, i as f64 / 30.0));
+        }
+        let spec = SloSpec {
+            latency_p99_s: None,
+            max_drop_rate: None,
+            ..SloSpec::default()
+        };
+        let report = check_events(&evs, &spec);
+        assert!(report.breaches_of(SloSignal::ApProxy) >= 1);
+    }
+
+    #[test]
+    fn slow_end_to_end_latency_breaches_p99() {
+        // inference ends 0.8 s after capture (dispatch queue backlog)
+        let mut evs = Vec::new();
+        for i in 0..180u64 {
+            let t = i as f64 / 30.0;
+            evs.push(presented(0, i + 1, t));
+            evs.push(inferred(0, i + 1, t + 0.7, t + 0.8));
+        }
+        let spec = SloSpec {
+            max_drop_rate: None,
+            min_ap_proxy: None,
+            ..SloSpec::default()
+        };
+        let report = check_events(&evs, &spec);
+        assert!(report.breaches_of(SloSignal::LatencyP99) >= 1);
+    }
+
+    #[test]
+    fn report_is_deterministic_and_order_insensitive() {
+        let evs = busy_trace(5.0);
+        let spec = SloSpec::default().with_watts_cap(6.0);
+        let a = check_events(&evs, &spec);
+        let b = check_events(&evs, &spec);
+        assert_eq!(a, b);
+        // reversing the input changes nothing: events are re-sorted
+        let mut rev = evs.clone();
+        rev.reverse();
+        assert_eq!(check_events(&rev, &spec), a);
+    }
+
+    #[test]
+    fn empty_trace_yields_an_empty_report() {
+        let report = check_events(&[], &SloSpec::default());
+        assert!(!report.breached());
+        assert_eq!(report.checks, 0);
+        assert!(report.events.is_empty());
+    }
+}

@@ -1,0 +1,347 @@
+//! Hierarchical spans over the per-frame pipeline (DESIGN.md §15).
+//!
+//! A span is an interval of virtual time with a parent: the stream span
+//! (opened when a session joins a recorder, closed by `finish`) holds
+//! one frame span per presented frame, and each frame span holds the
+//! pipeline stages — `feature_extract`, `predict_select` (with a nested
+//! `budget_govern` when the policy is a governor), `dispatch_wait`,
+//! `inference` and `postprocess`. Spans ride the existing
+//! [`crate::obs::Recorder`] plumbing as two `Copy` events
+//! ([`crate::obs::Event::SpanOpen`] / [`crate::obs::Event::SpanClose`])
+//! stamped with ids from a per-stream [`SpanArena`], so:
+//!
+//! * with a [`crate::obs::NullRecorder`] (or no recorder) the span path
+//!   is a single branch — steady-state stepping stays allocation-free
+//!   (asserted in `tests/perf_alloc.rs`);
+//! * all timestamps come from the deterministic sim clock, so the same
+//!   seed produces byte-identical traces, Chrome exports and profiles.
+//!
+//! Stage spans that model pure selector work (feature extraction, the
+//! policy decision, postprocess/eval) are *zero-width instants* in
+//! virtual time: the paper's "negligible computational overhead" claim
+//! means the simulation charges them no latency, and keeping them
+//! zero-width makes per-frame self-times sum exactly to the frame span
+//! (`dispatch_wait + inference` carry all the width). [`validate_spans`]
+//! checks the structural invariants offline; `obs/profile.rs` folds
+//! self-times out of a validated trace.
+
+use std::collections::BTreeMap;
+
+use crate::obs::Event;
+
+/// What a span measures. Order is the per-frame pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Whole-stream envelope (join → leave).
+    Stream,
+    /// One presented frame, capture to pipeline exit.
+    Frame,
+    /// Previous-frame feature extraction (MBBS, density, speed).
+    FeatureExtract,
+    /// Policy decision (threshold walk / projected argmax).
+    PredictSelect,
+    /// Budget governor pass inside the decision (governors only).
+    BudgetGovern,
+    /// Capture → accelerator start (queueing / contention wait).
+    DispatchWait,
+    /// Accelerator-busy interval.
+    Inference,
+    /// Detection filtering + eval bookkeeping after inference.
+    Postprocess,
+}
+
+impl SpanKind {
+    /// Number of span kinds.
+    pub const COUNT: usize = 8;
+
+    /// All kinds, pipeline order.
+    pub const ALL: [SpanKind; SpanKind::COUNT] = [
+        SpanKind::Stream,
+        SpanKind::Frame,
+        SpanKind::FeatureExtract,
+        SpanKind::PredictSelect,
+        SpanKind::BudgetGovern,
+        SpanKind::DispatchWait,
+        SpanKind::Inference,
+        SpanKind::Postprocess,
+    ];
+
+    /// Dense index (array keying for per-stage aggregates).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            SpanKind::Stream => 0,
+            SpanKind::Frame => 1,
+            SpanKind::FeatureExtract => 2,
+            SpanKind::PredictSelect => 3,
+            SpanKind::BudgetGovern => 4,
+            SpanKind::DispatchWait => 5,
+            SpanKind::Inference => 6,
+            SpanKind::Postprocess => 7,
+        }
+    }
+
+    /// Inverse of [`SpanKind::index`].
+    pub fn from_index(i: usize) -> Option<SpanKind> {
+        SpanKind::ALL.get(i).copied()
+    }
+
+    /// Stable label used in traces, exports and metrics names.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Stream => "stream",
+            SpanKind::Frame => "frame",
+            SpanKind::FeatureExtract => "feature_extract",
+            SpanKind::PredictSelect => "predict_select",
+            SpanKind::BudgetGovern => "budget_govern",
+            SpanKind::DispatchWait => "dispatch_wait",
+            SpanKind::Inference => "inference",
+            SpanKind::Postprocess => "postprocess",
+        }
+    }
+
+    /// Inverse of [`SpanKind::label`] (trace parsing).
+    pub fn from_label(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.label() == s)
+    }
+}
+
+impl std::fmt::Display for SpanKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-stream span id allocator and open-span stack.
+///
+/// Ids are dense (1, 2, 3...) per stream — id 0 is reserved for "no
+/// parent" (the root). The stack is pre-sized to the maximum nesting
+/// depth (stream ▸ frame ▸ stage ▸ nested stage), so steady-state
+/// `open`/`close` never allocates.
+#[derive(Debug, Clone)]
+pub struct SpanArena {
+    next_id: u32,
+    stack: Vec<u32>,
+}
+
+impl Default for SpanArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpanArena {
+    pub fn new() -> Self {
+        SpanArena { next_id: 1, stack: Vec::with_capacity(8) }
+    }
+
+    /// Open a span: returns `(id, parent)` where `parent` is the
+    /// innermost open span (0 at the root) and pushes the new span.
+    #[inline]
+    pub fn open(&mut self) -> (u32, u32) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let parent = self.stack.last().copied().unwrap_or(0);
+        self.stack.push(id);
+        (id, parent)
+    }
+
+    /// Allocate a span id without pushing it — for zero-width stage
+    /// instants whose open and close are emitted back to back.
+    #[inline]
+    pub fn instant(&mut self) -> (u32, u32) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let parent = self.stack.last().copied().unwrap_or(0);
+        (id, parent)
+    }
+
+    /// Close the innermost open span, returning its id (0 if the stack
+    /// is empty, which indicates an emitter bug and is caught by
+    /// [`validate_spans`] in tests rather than panicking on the hot
+    /// path).
+    #[inline]
+    pub fn close(&mut self) -> u32 {
+        self.stack.pop().unwrap_or(0)
+    }
+
+    /// Current nesting depth.
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+}
+
+/// Timestamp slack for span-ordering checks: virtual-clock arithmetic
+/// is deterministic, but derived times may differ by float rounding.
+const SPAN_T_EPS: f64 = 1e-9;
+
+/// Check the structural span invariants over a recorded event stream:
+/// every open has a matching close (per stream, LIFO), every open's
+/// `parent` is the innermost open span at that point, timestamps are
+/// monotone non-decreasing per stream, and children close before (and
+/// open after) their parents. Non-span events are ignored.
+pub fn validate_spans(events: &[Event]) -> Result<(), String> {
+    // per-stream: stack of (span id, open time), plus last event time
+    let mut stacks: BTreeMap<u32, (Vec<(u32, f64)>, f64)> = BTreeMap::new();
+    for ev in events {
+        match *ev {
+            Event::SpanOpen { stream, span, parent, t, kind, .. } => {
+                let (stack, last_t) = stacks
+                    .entry(stream)
+                    .or_insert_with(|| (Vec::new(), f64::NEG_INFINITY));
+                if t + SPAN_T_EPS < *last_t {
+                    return Err(format!(
+                        "stream {stream}: span {span} ({kind}) opens at \
+                         {t} after a later event at {last_t}"
+                    ));
+                }
+                let top = stack.last().map(|&(id, _)| id).unwrap_or(0);
+                if parent != top {
+                    return Err(format!(
+                        "stream {stream}: span {span} ({kind}) claims \
+                         parent {parent} but innermost open span is {top}"
+                    ));
+                }
+                stack.push((span, t));
+                *last_t = last_t.max(t);
+            }
+            Event::SpanClose { stream, span, t } => {
+                let (stack, last_t) = stacks
+                    .entry(stream)
+                    .or_insert_with(|| (Vec::new(), f64::NEG_INFINITY));
+                let Some((open_id, open_t)) = stack.pop() else {
+                    return Err(format!(
+                        "stream {stream}: close of span {span} with no \
+                         open span"
+                    ));
+                };
+                if open_id != span {
+                    return Err(format!(
+                        "stream {stream}: close of span {span} but \
+                         innermost open span is {open_id}"
+                    ));
+                }
+                if t + SPAN_T_EPS < open_t {
+                    return Err(format!(
+                        "stream {stream}: span {span} closes at {t} \
+                         before it opened at {open_t}"
+                    ));
+                }
+                if t + SPAN_T_EPS < *last_t {
+                    return Err(format!(
+                        "stream {stream}: span {span} closes at {t} \
+                         after a later event at {last_t}"
+                    ));
+                }
+                *last_t = last_t.max(t);
+            }
+            _ => {}
+        }
+    }
+    for (stream, (stack, _)) in &stacks {
+        if let Some(&(id, t)) = stack.last() {
+            return Err(format!(
+                "stream {stream}: span {id} opened at {t} never closed"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_index_roundtrips_and_labels_are_unique() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert_eq!(SpanKind::from_index(i), Some(*k));
+            assert_eq!(SpanKind::from_label(k.label()), Some(*k));
+        }
+        assert_eq!(SpanKind::from_index(SpanKind::COUNT), None);
+        assert_eq!(SpanKind::from_label("bogus"), None);
+        let mut labels: Vec<&str> =
+            SpanKind::ALL.iter().map(|k| k.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), SpanKind::COUNT);
+    }
+
+    #[test]
+    fn arena_ids_are_dense_and_parents_track_the_stack() {
+        let mut a = SpanArena::new();
+        let (s1, p1) = a.open();
+        assert_eq!((s1, p1), (1, 0));
+        let (s2, p2) = a.open();
+        assert_eq!((s2, p2), (2, 1));
+        let (i3, ip) = a.instant();
+        assert_eq!((i3, ip), (3, 2));
+        assert_eq!(a.depth(), 2);
+        assert_eq!(a.close(), 2);
+        assert_eq!(a.close(), 1);
+        assert_eq!(a.depth(), 0);
+        // underflow reports the reserved root id instead of panicking
+        assert_eq!(a.close(), 0);
+    }
+
+    fn open(stream: u32, span: u32, parent: u32, t: f64) -> Event {
+        Event::SpanOpen {
+            stream,
+            frame: 0,
+            span,
+            parent,
+            kind: SpanKind::Frame,
+            t,
+        }
+    }
+
+    fn close(stream: u32, span: u32, t: f64) -> Event {
+        Event::SpanClose { stream, span, t }
+    }
+
+    #[test]
+    fn validate_accepts_nested_balanced_spans() {
+        let evs = [
+            open(0, 1, 0, 0.0),
+            open(0, 2, 1, 0.0),
+            close(0, 2, 0.5),
+            open(0, 3, 1, 0.5),
+            close(0, 3, 0.5),
+            close(0, 1, 1.0),
+            // interleaved second stream has its own id space
+            open(1, 1, 0, 0.2),
+            close(1, 1, 0.3),
+        ];
+        assert!(validate_spans(&evs).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_structural_violations() {
+        // unbalanced: open without close
+        let e = validate_spans(&[open(0, 1, 0, 0.0)]).unwrap_err();
+        assert!(e.contains("never closed"), "{e}");
+        // close without open
+        let e = validate_spans(&[close(0, 7, 0.0)]).unwrap_err();
+        assert!(e.contains("no open span"), "{e}");
+        // wrong parent
+        let e = validate_spans(&[open(0, 1, 0, 0.0), open(0, 2, 9, 0.1)])
+            .unwrap_err();
+        assert!(e.contains("parent"), "{e}");
+        // non-LIFO close
+        let e = validate_spans(&[
+            open(0, 1, 0, 0.0),
+            open(0, 2, 1, 0.0),
+            close(0, 1, 0.5),
+        ])
+        .unwrap_err();
+        assert!(e.contains("innermost"), "{e}");
+        // time reversal
+        let e = validate_spans(&[
+            open(0, 1, 0, 1.0),
+            close(0, 1, 0.5),
+        ])
+        .unwrap_err();
+        assert!(e.contains("before it opened"), "{e}");
+    }
+}

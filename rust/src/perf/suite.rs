@@ -29,6 +29,7 @@ use crate::eval::ap::{ApMethod, SequenceEval};
 use crate::eval::matching::{match_frame, FrameMatcher, IOU_THRESHOLD};
 use crate::features::FeatureExtractor;
 use crate::geometry::BBox;
+use crate::obs::{shared, FlightRecorder, NullRecorder, SharedRecorder};
 use crate::perf::alloc::count_allocs;
 use crate::perf::report::{BenchReport, CaseReport};
 use crate::predictor::{calibrate, CalibrationConfig};
@@ -273,6 +274,44 @@ pub fn run_suite(opts: &SuiteOptions) -> BenchReport {
         });
     }
 
+    // -- obs: the recorded step (event + span emission overhead) ---------
+    // same step loop as `session/step`, with the emit path live: the
+    // delta against the bare case is the whole observability tax
+    for flight in [false, true] {
+        let label = if flight { "flight" } else { "null" };
+        let make_rec = move || -> SharedRecorder {
+            if flight {
+                shared(FlightRecorder::new(4096))
+            } else {
+                shared(NullRecorder)
+            }
+        };
+        let step_seq = generate(SequenceId::Mot02);
+        let mut det = OracleBackend(OracleDetector::new(
+            step_seq.spec.seed,
+            step_seq.spec.width as f64,
+            step_seq.spec.height as f64,
+        ));
+        let mut lat = LatencyModel::deterministic();
+        let mut sess =
+            StreamSession::new(&step_seq, MbbsPolicy::tod_default(), 30.0)
+                .with_recorder(make_rec(), 0, 0.0);
+        s.case(&format!("session/step_recorded/{label}"), || {
+            if matches!(
+                sess.step(&mut det, &mut lat),
+                SessionEvent::Finished
+            ) {
+                sess = StreamSession::new(
+                    &step_seq,
+                    MbbsPolicy::tod_default(),
+                    30.0,
+                )
+                .with_recorder(make_rec(), 0, 0.0);
+                black_box(sess.step(&mut det, &mut lat));
+            }
+        });
+    }
+
     // -- coordinator: whole multi-stream schedules -----------------------
     {
         let seqs: Vec<(SequenceId, crate::dataset::synth::Sequence)> =
@@ -339,7 +378,7 @@ mod tests {
         // be produced by a full (unfiltered) suite. We don't run the
         // timing loops here — just assert the name list below matches
         // the one `run_suite` registers (kept in one place on purpose).
-        assert_eq!(SUITE_CASE_NAMES.len(), 13);
+        assert_eq!(SUITE_CASE_NAMES.len(), 15);
         let mut sorted = SUITE_CASE_NAMES.to_vec();
         sorted.sort_unstable();
         sorted.dedup();
@@ -350,7 +389,7 @@ mod tests {
 /// Every case name `run_suite` registers, in registration order — the
 /// shape contract `BENCH_<n>.json` pins (see `report.rs` bootstrap
 /// semantics).
-pub const SUITE_CASE_NAMES: [&str; 13] = [
+pub const SUITE_CASE_NAMES: [&str; 15] = [
     "detection/nms/n=16",
     "detection/nms/n=64",
     "detection/iou_matrix/n=32",
@@ -362,6 +401,8 @@ pub const SUITE_CASE_NAMES: [&str; 13] = [
     "predictor/project",
     "predictor/select",
     "session/step",
+    "session/step_recorded/null",
+    "session/step_recorded/flight",
     "multistream/rr_4stream",
     "multistream/edf_4stream",
 ];

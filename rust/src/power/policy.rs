@@ -244,6 +244,10 @@ impl SelectionPolicy for BudgetedPolicy {
             inner.on_inferred(start_s, end_s, dnn);
         }
     }
+
+    fn governs(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -383,6 +387,17 @@ mod tests {
             PowerBudget::unbounded(),
         );
         assert_eq!(a.label(), "budgeted{argmax@30fps|unbounded}");
+    }
+
+    #[test]
+    fn budgeted_policy_governs_even_through_a_box() {
+        let p = BudgetedPolicy::masking(
+            Box::new(MbbsPolicy::tod_default()),
+            PowerBudget::unbounded(),
+        );
+        assert!(p.governs());
+        let boxed: Box<dyn SelectionPolicy> = Box::new(p);
+        assert!(boxed.governs());
     }
 
     #[test]

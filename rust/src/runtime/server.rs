@@ -243,9 +243,17 @@ impl Drop for BatchJob {
 }
 
 /// One flushed micro-batch: same-variant jobs ready to execute.
+///
+/// The job buffer is pooled: once the batch is done (executed, or
+/// dropped unexecuted on shutdown) the emptied `Vec` returns to its
+/// server's spare-buffer pool, so the steady-state dispatch path
+/// flushes batches without allocating.
 pub struct MicroBatch {
     dnn: DnnKind,
     jobs: Vec<BatchJob>,
+    /// Pool to hand the emptied job buffer back to (None only for
+    /// batches detached from a core, which never happens today).
+    recycle: Option<Arc<SparePool>>,
 }
 
 impl MicroBatch {
@@ -265,10 +273,12 @@ impl MicroBatch {
     /// panicking request resolves to [`ServeError::BatchPanicked`] and
     /// the rest of the batch still runs.
     pub fn run_with(
-        self,
+        mut self,
         infer: &mut dyn FnMut(&InferRequest) -> ServeResult,
     ) {
-        for job in self.jobs {
+        // drain in place so the buffer (and its capacity) survives for
+        // the drop-time recycle
+        for job in self.jobs.drain(..) {
             let outcome =
                 catch_unwind(AssertUnwindSafe(|| infer(job.request())));
             match outcome {
@@ -279,7 +289,7 @@ impl MicroBatch {
     }
 
     /// Execute against a [`BatchDetector`] (setup hook + per-item run).
-    pub fn run(self, detector: &dyn BatchDetector) {
+    pub fn run(mut self, detector: &dyn BatchDetector) {
         let n = self.len();
         let dnn = self.dnn;
         if catch_unwind(AssertUnwindSafe(|| {
@@ -289,12 +299,23 @@ impl MicroBatch {
         {
             // a panicking setup poisons the whole batch — but only the
             // batch: each request resolves instead of the process dying
-            for job in self.jobs {
+            for job in self.jobs.drain(..) {
                 job.complete(Err(ServeError::BatchPanicked));
             }
             return;
         }
         self.run_with(&mut |req| detector.infer(req));
+    }
+}
+
+/// Returns the item buffer to the spare pool. Any still-queued jobs
+/// drop first, so their guards fail the waiters with
+/// [`ServeError::Shutdown`] — pooling never changes loss semantics.
+impl Drop for MicroBatch {
+    fn drop(&mut self) {
+        if let Some(pool) = self.recycle.take() {
+            recycle_buf(&pool, std::mem::take(&mut self.jobs));
+        }
     }
 }
 
@@ -314,6 +335,28 @@ struct CoreState {
     closed: bool,
 }
 
+/// Recycled micro-batch item buffers (each retains `max_batch`
+/// capacity after its first use). Separate from the state lock so a
+/// batch finishing on a worker thread never contends with the
+/// dispatcher or submitters.
+type SparePool = Mutex<Vec<Vec<BatchJob>>>;
+
+/// Spare buffers beyond this are dropped rather than hoarded; the pool
+/// only needs to cover the in-flight batch high water (dispatcher +
+/// worker pool), which is far below this.
+const SPARE_CAP: usize = 32;
+
+/// Clear a buffer and return it to the pool (bounded: excess drops).
+/// Jobs are cleared *before* the pool lock is taken — their drop
+/// guards resolve completions, which must not run under the pool lock.
+fn recycle_buf(pool: &SparePool, mut buf: Vec<BatchJob>) {
+    buf.clear();
+    let mut spare = lock_unpoisoned(pool);
+    if spare.len() < SPARE_CAP {
+        spare.push(buf);
+    }
+}
+
 struct CoreShared {
     state: Mutex<CoreState>,
     /// Pump wake-up: new work, a newly due batch, or close.
@@ -322,6 +365,10 @@ struct CoreShared {
     space: Condvar,
     cfg: BatchConfig,
     stats: Mutex<BatchStats>,
+    /// Spare item buffers cycling pool → batch → pool; `Arc` so a
+    /// [`MicroBatch`] can self-recycle without keeping the whole core
+    /// (condvars included) alive.
+    spare: Arc<SparePool>,
 }
 
 /// Engine-agnostic server core: bounded admission, per-DNN
@@ -353,6 +400,7 @@ impl ServerCore {
                 space: Condvar::new(),
                 cfg,
                 stats: Mutex::new(BatchStats::default()),
+                spare: Arc::new(Mutex::new(Vec::new())),
             }),
         }
     }
@@ -439,25 +487,40 @@ impl ServerCore {
     pub fn next_batch(&self, idle_timeout: Duration) -> BatchPoll {
         let sh = &self.shared;
         let started = Instant::now();
+        // take a recycled item buffer up front (the pop fills a
+        // caller-owned Vec in place): early calls pay one allocation
+        // each, then buffers cycle pool → batch → pool and the flush
+        // path allocates nothing — pinned by the alloc-free test below
+        let mut buf = lock_unpoisoned(&sh.spare)
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(sh.cfg.max_batch));
         let mut st = lock_unpoisoned(&sh.state);
         loop {
             let now = Instant::now();
             let popped = if st.closed {
-                st.batcher.pop_any()
+                st.batcher.pop_any_into(&mut buf)
             } else {
-                st.batcher.pop_due(now)
+                st.batcher.pop_due_into(now, &mut buf)
             };
-            if let Some((dnn, jobs)) = popped {
+            if let Some(dnn) = popped {
                 drop(st);
                 sh.space.notify_all();
-                lock_unpoisoned(&sh.stats).record(dnn, jobs.len());
-                return BatchPoll::Batch(MicroBatch { dnn, jobs });
+                lock_unpoisoned(&sh.stats).record(dnn, buf.len());
+                return BatchPoll::Batch(MicroBatch {
+                    dnn,
+                    jobs: buf,
+                    recycle: Some(sh.spare.clone()),
+                });
             }
             if st.closed && st.batcher.is_empty() {
+                drop(st);
+                recycle_buf(&sh.spare, buf);
                 return BatchPoll::Drained;
             }
             let elapsed = started.elapsed();
             if elapsed >= idle_timeout {
+                drop(st);
+                recycle_buf(&sh.spare, buf);
                 return BatchPoll::Idle;
             }
             let mut wait = idle_timeout - elapsed;
@@ -714,6 +777,71 @@ mod tests {
             h.try_wait().is_none(),
             "second poll must not resurrect a result"
         );
+    }
+
+    #[test]
+    fn steady_state_batch_flush_is_alloc_free() {
+        // server-path extension of the batcher's alloc-free test: once
+        // the spare pool is warm, pump → execute → recycle allocates
+        // nothing per batch
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            ..BatchConfig::default()
+        });
+        let mut handles = Vec::with_capacity(40);
+        let mut pump = |core: &ServerCore| {
+            let BatchPoll::Batch(b) =
+                core.next_batch(Duration::from_secs(1))
+            else {
+                panic!("batch due immediately at max_wait zero")
+            };
+            let n = b.len();
+            b.run_with(&mut |_| Ok(Vec::new()));
+            n
+        };
+        // warm-up round: allocates the one pooled buffer + stats
+        for i in 0..4 {
+            handles.push(core.submit(req(i, 1, DnnKind::Y288)).unwrap());
+        }
+        assert_eq!(pump(&core), 4);
+        for round in 0..8u64 {
+            for i in 0..4 {
+                handles.push(
+                    core.submit(req(i, round + 2, DnnKind::Y288)).unwrap(),
+                );
+            }
+            // submits allocate (completion slots); the flush must not
+            let (delta, n) = crate::perf::count_allocs(|| pump(&core));
+            assert_eq!(n, 4);
+            assert_eq!(
+                delta.allocs, 0,
+                "round {round}: steady-state next_batch/run/recycle \
+                 allocated ({} allocs, {} bytes)",
+                delta.allocs, delta.bytes
+            );
+        }
+        for h in handles {
+            assert!(h.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn dropped_batch_recycles_its_buffer() {
+        let core = ServerCore::new(BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            ..BatchConfig::default()
+        });
+        let h = core.submit(req(0, 1, DnnKind::Y416)).unwrap();
+        let BatchPoll::Batch(b) = core.next_batch(Duration::from_secs(1))
+        else {
+            panic!("batch due immediately")
+        };
+        drop(b); // unexecuted: drop guard fails the request...
+        assert_eq!(h.wait(), Err(ServeError::Shutdown));
+        // ...and the buffer still made it back to the pool
+        assert_eq!(lock_unpoisoned(&core.shared.spare).len(), 1);
     }
 
     #[test]

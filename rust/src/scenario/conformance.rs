@@ -359,6 +359,55 @@ pub fn dump_failure_artifacts(
     Ok(vec![flight_path, metrics_path])
 }
 
+/// The SLO spec a scenario is checked against: the default windowed
+/// health limits, plus a board-watts cap when the scenario declares a
+/// bespoke power budget. The matrix-wide default budget is a campaign
+/// parameter, not a per-scenario health promise, so only scenarios
+/// that pin their own cap (e.g. `budget-squeeze` at 5.8 W) get the
+/// watts signal.
+pub fn scenario_slo_spec(spec: &ScenarioSpec) -> crate::obs::SloSpec {
+    let slo = crate::obs::SloSpec::default();
+    if (spec.watts_budget - crate::app::DEFAULT_WATTS_BUDGET).abs() > 1e-9 {
+        slo.with_watts_cap(spec.watts_budget)
+    } else {
+        slo
+    }
+}
+
+/// Run the canonical ungoverned TOD ladder over `spec` with an
+/// [`crate::obs::EventLog`] attached and return the full event trace
+/// (spans included). This is the run `tod slo check` evaluates — and
+/// the one a watts-capped scenario exists to indict: the budgeted
+/// configurations hold the cap, while the ladder runs hot through the
+/// squeeze and must trip the watchdog.
+pub fn scenario_slo_events(
+    spec: &ScenarioSpec,
+) -> Result<Vec<crate::obs::Event>, String> {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::obs::{EventLog, SharedRecorder};
+
+    use super::harness::run_scenario_observed;
+
+    let streams = spec.compile()?;
+    let log = Rc::new(RefCell::new(EventLog::new()));
+    let rec: SharedRecorder = log.clone();
+    let cfg = HarnessConfig::tod();
+    run_scenario_observed(&spec.name, &streams, &cfg, Some(&rec))?;
+    let events = log.borrow().events().to_vec();
+    Ok(events)
+}
+
+/// Evaluate [`scenario_slo_spec`] over the canonical ladder trace of
+/// `spec` — the per-scenario health assertion behind `tod slo check`.
+pub fn check_scenario_slo(
+    spec: &ScenarioSpec,
+) -> Result<crate::obs::SloReport, String> {
+    let events = scenario_slo_events(spec)?;
+    Ok(crate::obs::slo::check_events(&events, &scenario_slo_spec(spec)))
+}
+
 /// First differing line of two texts (1-based), with both lines.
 fn first_diff(a: &str, b: &str) -> (usize, String, String) {
     for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
@@ -485,6 +534,36 @@ mod tests {
         assert!(line >= 1);
         assert_ne!(g, o);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn slo_watchdog_flags_budget_squeeze_and_passes_steady_sparse() {
+        // golden SLO semantics: the ungoverned ladder runs the heavy
+        // nets straight through budget-squeeze's 5.8 W cap...
+        let squeeze = scenario_spec(ScenarioId::BudgetSqueeze);
+        let spec = scenario_slo_spec(&squeeze);
+        assert_eq!(spec.watts_cap, Some(squeeze.watts_budget));
+        let r = check_scenario_slo(&squeeze).unwrap();
+        assert!(r.breached(), "expected a breach, got {:?}", r.events);
+        assert!(
+            r.breaches_of(crate::obs::SloSignal::Watts) >= 1,
+            "expected a watts breach, got {:?}",
+            r.events
+        );
+        // ...while the near-control scenario stays healthy throughout
+        let sparse = scenario_spec(ScenarioId::SteadySparse);
+        assert_eq!(scenario_slo_spec(&sparse).watts_cap, None);
+        let r = check_scenario_slo(&sparse).unwrap();
+        assert!(!r.breached(), "unexpected breaches: {:?}", r.events);
+        assert!(r.checks > 0);
+    }
+
+    #[test]
+    fn scenario_slo_report_is_deterministic() {
+        let spec = scenario_spec(ScenarioId::BudgetSqueeze);
+        let a = check_scenario_slo(&spec).unwrap();
+        let b = check_scenario_slo(&spec).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -237,6 +237,12 @@ impl SelectionPolicy for EpochShift {
         self.inner
             .on_inferred(start_s + self.epoch, end_s + self.epoch, dnn);
     }
+
+    fn governs(&self) -> bool {
+        // forwarded so an epoch-shifted governor still gets its
+        // budget_govern stage span (DESIGN.md §15)
+        self.inner.governs()
+    }
 }
 
 /// Deterministic day/night post-filter over any detector backend.

@@ -1,0 +1,213 @@
+//! End-to-end span / profile / export checks (ISSUE 8 acceptance).
+//!
+//! The unit tests inside `obs/` exercise synthetic event streams; these
+//! cover the properties only a real traced run can break:
+//!
+//! 1. `StreamSession::step` emits **balanced, properly nested,
+//!    time-monotone** spans over a whole budget-clamped run, with one
+//!    frame span per presented frame;
+//! 2. for every closed frame span, stage self-times sum exactly to the
+//!    frame total (attribution loses nothing and invents nothing);
+//! 3. the same seed renders a **byte-identical** Chrome trace — the
+//!    `tod trace export --chrome` determinism contract;
+//! 4. the flamegraph fold roots every stack at the stream span and
+//!    keeps the inference path;
+//! 5. a multi-stream scheduler run interleaves streams without
+//!    breaking per-stream span nesting.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use tod::app::DEFAULT_WATTS_BUDGET;
+use tod::coordinator::multistream::{DispatchPolicy, MultiStreamScheduler};
+use tod::coordinator::{
+    run_realtime_observed, FixedPolicy, MbbsPolicy, OracleBackend,
+    RunResult, StreamSession,
+};
+use tod::dataset::catalog::{generate, SequenceId};
+use tod::obs::{
+    chrome_trace, flamegraph, validate_spans, Event, EventLog,
+    SharedRecorder, SpanKind,
+};
+use tod::power::{BudgetConfig, BudgetedPolicy, PowerBudget};
+use tod::sim::latency::{ContentionModel, LatencyModel};
+use tod::sim::oracle::OracleDetector;
+use tod::DnnKind;
+
+fn oracle_backend(seq: &tod::dataset::Sequence) -> OracleBackend {
+    OracleBackend(OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    ))
+}
+
+/// Fixed-Y416 under the default watts cap: the governor clamps and the
+/// accelerator saturates, so the trace mixes inferred and dropped
+/// frames — the interesting case for attribution.
+fn traced_run() -> (Vec<Event>, RunResult) {
+    let id = SequenceId::Mot05;
+    let seq = generate(id);
+    let mut det = oracle_backend(&seq);
+    let mut lat = LatencyModel::deterministic();
+    let budget = PowerBudget::try_new(
+        BudgetConfig {
+            watts_cap: Some(DEFAULT_WATTS_BUDGET),
+            gpu_cap_pct: None,
+            window_s: 1.0,
+            rate_cap: None,
+        },
+        &lat,
+    )
+    .expect("default watts cap is a valid budget");
+    let log = Rc::new(RefCell::new(EventLog::new()));
+    let rec: SharedRecorder = log.clone();
+    let mut policy =
+        BudgetedPolicy::masking(Box::new(FixedPolicy(DnnKind::Y416)), budget)
+            .with_recorder(rec.clone(), 0);
+    let r = run_realtime_observed(
+        &seq,
+        &mut policy,
+        &mut det,
+        &mut lat,
+        id.eval_fps(),
+        Some((rec.clone(), 0)),
+    );
+    let events = log.borrow().events().to_vec();
+    (events, r)
+}
+
+#[test]
+fn traced_run_has_balanced_nested_monotone_spans() {
+    let (events, r) = traced_run();
+    validate_spans(&events).expect("real trace must validate");
+    let opens = events
+        .iter()
+        .filter(|e| matches!(e, Event::SpanOpen { .. }))
+        .count();
+    let closes = events
+        .iter()
+        .filter(|e| matches!(e, Event::SpanClose { .. }))
+        .count();
+    assert_eq!(opens, closes, "every opened span closes");
+    assert!(opens > 0, "traced run emitted no spans");
+    let frame_spans = events
+        .iter()
+        .filter(|e| {
+            matches!(e, Event::SpanOpen { kind: SpanKind::Frame, .. })
+        })
+        .count();
+    assert_eq!(
+        frame_spans as u64, r.n_frames,
+        "one frame span per presented frame"
+    );
+    let infer_spans = events
+        .iter()
+        .filter(|e| {
+            matches!(e, Event::SpanOpen { kind: SpanKind::Inference, .. })
+        })
+        .count();
+    assert_eq!(
+        infer_spans as u64,
+        r.n_inferred + r.n_failed,
+        "one inference span per dispatched frame"
+    );
+}
+
+#[test]
+fn stage_self_times_sum_to_each_frame_span() {
+    let (events, r) = traced_run();
+    assert!(
+        r.n_inferred > 0 && r.n_dropped > 0,
+        "fixture must mix inferred and dropped frames"
+    );
+    let frames = tod::obs::profile::per_frame(&events);
+    assert_eq!(frames.len() as u64, r.n_frames);
+    for f in &frames {
+        let sum: f64 = f.stage_self_s.iter().sum();
+        assert!(
+            (sum - f.total_s).abs() < 1e-9,
+            "frame {}: stage self-times {} != frame span {}",
+            f.frame,
+            sum,
+            f.total_s
+        );
+    }
+    let report = tod::obs::profile::profile(&events);
+    assert_eq!(report.unclosed, 0, "a clean run leaves nothing open");
+    assert_eq!(report.frames, r.n_frames);
+    // inference is the only stage with real width in virtual time
+    assert!(report.stage(SpanKind::Inference).self_s > 0.0);
+}
+
+#[test]
+fn same_seed_chrome_export_is_byte_identical() {
+    let (a, ra) = traced_run();
+    let (b, rb) = traced_run();
+    assert_eq!(ra.n_inferred, rb.n_inferred);
+    let ja = chrome_trace(&a).to_string();
+    assert_eq!(ja, chrome_trace(&b).to_string(), "same-seed exports differ");
+    assert!(ja.starts_with("{\"traceEvents\":["));
+    assert!(ja.contains("\"name\":\"inference\""));
+    assert!(
+        ja.contains("\"budget_clamp\""),
+        "clamped run must export clamp instants"
+    );
+}
+
+#[test]
+fn flamegraph_folds_the_real_span_stack() {
+    let (events, _) = traced_run();
+    let fg = flamegraph(&events);
+    assert_eq!(fg, flamegraph(&events), "flamegraph must be deterministic");
+    let lines: Vec<&str> = fg.lines().collect();
+    assert!(!lines.is_empty());
+    for l in &lines {
+        assert!(
+            l.starts_with("stream_0;stream"),
+            "stack not rooted at the stream span: {l}"
+        );
+    }
+    assert!(
+        lines
+            .iter()
+            .any(|l| l.starts_with("stream_0;stream;frame;inference ")),
+        "inference path missing:\n{fg}"
+    );
+}
+
+#[test]
+fn multi_stream_spans_stay_nested_per_stream() {
+    let log = Rc::new(RefCell::new(EventLog::new()));
+    let rec: SharedRecorder = log.clone();
+    let mut sched = MultiStreamScheduler::new(
+        DispatchPolicy::EarliestDeadlineFirst,
+        ContentionModel::jetson_nano(),
+        LatencyModel::deterministic(),
+    )
+    .with_recorder(rec);
+    for id in [SequenceId::Mot02, SequenceId::Mot05] {
+        let seq = generate(id);
+        let det = oracle_backend(&seq);
+        sched.add_stream(
+            StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0),
+            Box::new(det),
+        );
+    }
+    let result = sched.run();
+    assert_eq!(result.per_stream.len(), 2);
+    let events = log.borrow().events().to_vec();
+    validate_spans(&events).expect("interleaved trace must validate");
+    let streams: std::collections::BTreeSet<u32> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::SpanOpen { stream, .. } => Some(*stream),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        streams.into_iter().collect::<Vec<_>>(),
+        vec![0, 1],
+        "both streams must emit spans"
+    );
+}

@@ -15,26 +15,32 @@
 //! did not raise any of those maxima (scratch sized from the carried
 //! set lags the step that grew it by one). Steps that raise a maximum
 //! are legitimate growth, not a regression, and are exempt.
+//!
+//! The bound is checked twice: for a bare session, and for a session
+//! with a `NullRecorder` attached — the full emit path (events *and*
+//! the span arena of ISSUE 8) runs and must stay alloc-free too.
 
 use tod::coordinator::{
     MbbsPolicy, OracleBackend, SessionEvent, StreamSession,
 };
 use tod::dataset::catalog::{generate, SequenceId};
+use tod::dataset::Sequence;
 use tod::detection::passes_score_filter;
+use tod::obs::{shared, NullRecorder};
 use tod::perf::count_allocs;
 use tod::sim::latency::LatencyModel;
 use tod::sim::oracle::OracleDetector;
 use tod::DnnKind;
 
-#[test]
-fn session_step_is_alloc_free_in_steady_state() {
-    let seq = generate(SequenceId::Mot02);
+/// Drive `sess` over `seq`, asserting zero allocations on every step
+/// classified steady; returns how many steps qualified.
+fn steady_alloc_audit(
+    seq: &Sequence,
+    oracle: &OracleDetector,
+    mut sess: StreamSession<'_>,
+    label: &str,
+) -> usize {
     let n = seq.n_frames() as usize;
-    let oracle = OracleDetector::new(
-        seq.spec.seed,
-        seq.spec.width as f64,
-        seq.spec.height as f64,
-    );
 
     // Worst-case per-frame demand over every DNN (the oracle is a pure
     // function of (seed, frame, dnn), so this is exact, not sampled).
@@ -65,7 +71,6 @@ fn session_step_is_alloc_free_in_steady_state() {
 
     let mut det = OracleBackend(oracle.clone());
     let mut lat = LatencyModel::deterministic();
-    let mut sess = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
 
     // Absorbed maxima: raw/filtered counts realised on inferred frames
     // (for the chosen DNN), gt partition sizes on every frame.
@@ -87,14 +92,14 @@ fn session_step_is_alloc_free_in_steady_state() {
         let (delta, ev) = count_allocs(|| sess.step(&mut det, &mut lat));
         assert!(
             !matches!(ev, SessionEvent::Finished),
-            "sequence exhausted early at step {i}"
+            "{label}: sequence exhausted early at step {i}"
         );
 
         if steady {
             assert_eq!(
                 delta.allocs, 0,
-                "steady-state step {i} (frame {f}) made {} allocations \
-                 ({} bytes)",
+                "{label}: steady-state step {i} (frame {f}) made {} \
+                 allocations ({} bytes)",
                 delta.allocs, delta.bytes
             );
             steady_steps += 1;
@@ -132,7 +137,36 @@ fn session_step_is_alloc_free_in_steady_state() {
     // density) the bulk of the back three-quarters is steady.
     assert!(
         steady_steps >= n / 10,
-        "only {steady_steps}/{n} steps classified steady — demand guard \
-         too strict to certify the zero-alloc bound"
+        "{label}: only {steady_steps}/{n} steps classified steady — \
+         demand guard too strict to certify the zero-alloc bound"
     );
+    steady_steps
+}
+
+fn fixture() -> (Sequence, OracleDetector) {
+    let seq = generate(SequenceId::Mot02);
+    let oracle = OracleDetector::new(
+        seq.spec.seed,
+        seq.spec.width as f64,
+        seq.spec.height as f64,
+    );
+    (seq, oracle)
+}
+
+#[test]
+fn session_step_is_alloc_free_in_steady_state() {
+    let (seq, oracle) = fixture();
+    let sess = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0);
+    steady_alloc_audit(&seq, &oracle, sess, "bare session");
+}
+
+#[test]
+fn recorded_session_step_is_alloc_free_in_steady_state() {
+    // the NullRecorder runs the whole emit path — event construction,
+    // span arena open/close, recorder dispatch — and must add zero
+    // allocations to a steady step
+    let (seq, oracle) = fixture();
+    let sess = StreamSession::new(&seq, MbbsPolicy::tod_default(), 30.0)
+        .with_recorder(shared(NullRecorder), 0, 0.0);
+    steady_alloc_audit(&seq, &oracle, sess, "null-recorded session");
 }
