@@ -1,0 +1,311 @@
+//! Zone-aware static analysis over the crate's own sources (`tod
+//! lint`, DESIGN.md §16).
+//!
+//! The dynamic suites pin the reproduction's invariants after the
+//! fact: byte-identical traces and goldens (determinism), panic-free
+//! property tests (serving), counting-allocator assertions (hot
+//! path). This subsystem enforces the same three invariants at the
+//! source level, before anything runs — which matters doubly in this
+//! repo, where several PRs were authored on machines without a
+//! toolchain and convention was the only guard.
+//!
+//! * [`scanner`] — two-pass token/AST-lite scan: mask comments and
+//!   string literals (preserving line structure), then annotate each
+//!   line with `#[cfg(test)]` membership and its enclosing-function
+//!   stack. No `syn`, no new dependencies.
+//! * [`zones`] — the zone model and the versioned policy file
+//!   (`rust/lint-policy.json`, schema `tod-lint-policy` v1) mapping
+//!   paths to the determinism/serving zones and enumerating hot-path
+//!   functions. Zones are data: the analyser hardcodes no path.
+//! * [`rules`] — the per-zone rule table and needle matching.
+//! * [`waivers`] — the inline `// tod-lint: allow(<rule>)
+//!   reason="..."` protocol; honoured but always enumerated.
+//! * [`report`] — the versioned `tod-lint` JSON report and its
+//!   human rendering.
+//!
+//! [`run_lint`] is the whole pipeline: walk `rust/src`
+//! deterministically, scan, match rules per zone, resolve waivers,
+//! and return a [`LintReport`] whose [`LintReport::clean`] drives the
+//! `--check` exit code in CI.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+pub mod waivers;
+pub mod zones;
+
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, LintReport, WaivedFinding};
+pub use zones::{Policy, Severity, Zone};
+
+use crate::analysis::rules::{index_sites, needle_matches, Rule, RULES};
+use crate::analysis::scanner::{scan_source, ScannedFile};
+use crate::analysis::waivers::Waiver;
+
+/// Run the full lint pass over every `.rs` file under `src_root`.
+pub fn run_lint(
+    src_root: &Path,
+    policy: &Policy,
+) -> Result<LintReport, String> {
+    let files = collect_rs_files(src_root)?;
+    let mut rep = LintReport {
+        policy_version: policy.version,
+        files_scanned: files.len(),
+        ..Default::default()
+    };
+    for path in &files {
+        let rel = rel_path(src_root, path);
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        lint_file(&scan_source(&rel, &text), policy, &mut rep);
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+/// All `.rs` files under `root`, depth-first, sorted by relative path
+/// so reports are byte-stable across platforms and readdir orders.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| format!("read dir entry: {e}"))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str())
+                == Some("rs")
+            {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// `/`-separated path of `path` relative to `root`.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Lint one scanned file into the report.
+fn lint_file(scanned: &ScannedFile, policy: &Policy, rep: &mut LintReport) {
+    let path_zone = policy.path_zone(&scanned.rel_path);
+    let (waivers, problems) = waivers::collect(scanned);
+    let mut waiver_used = vec![false; waivers.len()];
+
+    for (idx, info) in scanned.lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if info.in_test || info.masked.trim().is_empty() {
+            continue;
+        }
+        let in_hot = info
+            .functions
+            .iter()
+            .any(|f| policy.is_hot_function(f));
+        for rule in RULES {
+            let applies = match rule.zone {
+                Zone::HotPath => in_hot,
+                z => path_zone == Some(z),
+            };
+            if !applies {
+                continue;
+            }
+            let severity =
+                policy.severity_for(rule.id, rule.default_severity);
+            if severity == Severity::Off {
+                continue;
+            }
+            if !rule_hits(rule, &info.masked) {
+                continue;
+            }
+            let finding = Finding {
+                file: scanned.rel_path.clone(),
+                line: lineno,
+                rule: rule.id.to_string(),
+                zone: rule.zone.tag(),
+                severity,
+                message: rule.message.to_string(),
+            };
+            match waiving(&waivers, &mut waiver_used, lineno, rule.id) {
+                Some(reason) => rep.waived.push(WaivedFinding {
+                    finding,
+                    reason: reason.to_string(),
+                }),
+                None => match severity {
+                    Severity::Deny => rep.findings.push(finding),
+                    Severity::Warn => rep.warnings.push(finding),
+                    Severity::Off => {}
+                },
+            }
+        }
+    }
+
+    // malformed / reason-less waivers are deny findings themselves
+    for p in &problems {
+        rep.findings.push(Finding {
+            file: scanned.rel_path.clone(),
+            line: p.line,
+            rule: "waiver-missing-reason".to_string(),
+            zone: "waiver",
+            severity: Severity::Deny,
+            message: p.message.clone(),
+        });
+    }
+    // waivers that matched nothing are advisories (stale exemptions)
+    for (w, used) in waivers.iter().zip(&waiver_used) {
+        if !used {
+            rep.advisories.push(Finding {
+                file: scanned.rel_path.clone(),
+                line: w.decl_line,
+                rule: "unused-waiver".to_string(),
+                zone: "waiver",
+                severity: Severity::Warn,
+                message: format!(
+                    "waiver for {} matches no finding — remove it",
+                    w.rules.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+/// Does the rule fire on this masked line?
+fn rule_hits(rule: &Rule, masked: &str) -> bool {
+    if rule.id == "srv-slice-index" {
+        !index_sites(masked).is_empty()
+    } else {
+        rule.needles.iter().any(|n| needle_matches(masked, n))
+    }
+}
+
+/// First waiver covering (line, rule), marking it used.
+fn waiving<'w>(
+    waivers: &'w [Waiver],
+    used: &mut [bool],
+    lineno: usize,
+    rule_id: &str,
+) -> Option<&'w str> {
+    for (i, w) in waivers.iter().enumerate() {
+        if w.target_line == lineno
+            && w.rules.iter().any(|r| r == rule_id)
+        {
+            used[i] = true;
+            return Some(&w.reason);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_policy() -> Policy {
+        Policy::parse(
+            r#"{
+              "schema": "tod-lint-policy",
+              "schema_version": 1,
+              "version": 1,
+              "zones": {
+                "determinism": {"paths": ["obs/"]},
+                "serving": {"paths": ["runtime/"]},
+                "hot_path": {"functions": ["Core::step"]}
+              },
+              "severity": {"srv-slice-index": "warn"}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn lint_one(rel: &str, src: &str) -> LintReport {
+        let mut rep = LintReport::default();
+        lint_file(&scan_source(rel, src), &test_policy(), &mut rep);
+        rep.sort();
+        rep
+    }
+
+    #[test]
+    fn serving_rules_fire_outside_tests_only() {
+        let rep = lint_one(
+            "runtime/x.rs",
+            concat!(
+                "fn live() { x.unwrap(); }\n",
+                "#[cfg(test)]\n",
+                "mod tests { fn t() { y.unwrap(); } }\n",
+            ),
+        );
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "srv-unwrap");
+        assert_eq!(rep.findings[0].line, 1);
+    }
+
+    #[test]
+    fn hot_rules_scope_to_policy_functions() {
+        let src = concat!(
+            "impl Core {\n",
+            "    fn step(&self) { let v = xs.to_vec(); }\n",
+            "    fn cold(&self) { let v = xs.to_vec(); }\n",
+            "}\n",
+        );
+        let rep = lint_one("other/x.rs", src);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "hot-format");
+        assert_eq!(rep.findings[0].line, 2);
+    }
+
+    #[test]
+    fn waiver_moves_finding_to_waived_and_unused_is_advisory() {
+        let rep = lint_one(
+            "runtime/x.rs",
+            concat!(
+                "fn f() {\n",
+                "    // tod-lint: allow(srv-panic) reason=\"contract\"\n",
+                "    panic!();\n",
+                "    // tod-lint: allow(srv-unwrap) reason=\"stale\"\n",
+                "    ok();\n",
+                "}\n",
+            ),
+        );
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.waived.len(), 1);
+        assert_eq!(rep.waived[0].finding.rule, "srv-panic");
+        assert_eq!(rep.waived[0].reason, "contract");
+        assert_eq!(rep.advisories.len(), 1);
+        assert_eq!(rep.advisories[0].rule, "unused-waiver");
+    }
+
+    #[test]
+    fn slice_index_severity_downgrade_applies() {
+        let rep = lint_one("runtime/x.rs", "fn f() { let x = a[i]; }\n");
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.warnings.len(), 1);
+        assert_eq!(rep.warnings[0].rule, "srv-slice-index");
+    }
+
+    #[test]
+    fn determinism_rules_fire_in_obs() {
+        let rep = lint_one(
+            "obs/x.rs",
+            "fn f() { let t = Instant::now(); }\n",
+        );
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "det-wall-clock");
+        // same construct outside the zone is silent
+        let rep2 = lint_one(
+            "video/x.rs",
+            "fn f() { let t = Instant::now(); }\n",
+        );
+        assert!(rep2.findings.is_empty());
+    }
+}

@@ -1,0 +1,237 @@
+//! Versioned lint report (`tod-lint` schema v1): the JSON artifact
+//! `tod lint --json` emits and CI archives, plus the human rendering.
+//!
+//! Like every other pinned artifact in the crate (traces, goldens,
+//! bench reports) the JSON is byte-deterministic: findings are sorted
+//! by `(file, line, rule)` and serialised through the BTreeMap-backed
+//! [`crate::util::json::Json`].
+
+use crate::analysis::zones::Severity;
+use crate::util::json::Json;
+
+/// Schema tag of the report document.
+pub const REPORT_SCHEMA: &str = "tod-lint";
+/// Current report schema version.
+pub const REPORT_VERSION: u64 = 1;
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule id (`srv-unwrap`, `waiver-missing-reason`, ...).
+    pub rule: String,
+    /// Zone tag (`determinism` | `serving` | `hot-path` | `waiver`).
+    pub zone: &'static str,
+    /// Effective severity after policy overrides.
+    pub severity: Severity,
+    /// One-line rationale.
+    pub message: String,
+}
+
+impl Finding {
+    /// Sort key pinning report order.
+    fn key(&self) -> (String, usize, String) {
+        (self.file.clone(), self.line, self.rule.clone())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::str(&self.file)),
+            ("line", Json::num(self.line as f64)),
+            ("rule", Json::str(&self.rule)),
+            ("zone", Json::str(self.zone)),
+            ("severity", Json::str(self.severity.tag())),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "{} {} {}:{} [{}] {}",
+            self.severity.tag(),
+            self.rule,
+            self.file,
+            self.line,
+            self.zone,
+            self.message
+        )
+    }
+}
+
+/// A finding suppressed by an inline waiver (still enumerated).
+#[derive(Debug, Clone)]
+pub struct WaivedFinding {
+    /// The finding the waiver covers.
+    pub finding: Finding,
+    /// The waiver's mandatory reason.
+    pub reason: String,
+}
+
+/// Full output of one lint run.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// `version` field of the policy that drove the run.
+    pub policy_version: u64,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Unwaived deny findings — any entry fails `--check`.
+    pub findings: Vec<Finding>,
+    /// Unwaived warn findings — reported, never fail the gate.
+    pub warnings: Vec<Finding>,
+    /// Waived findings with their reasons.
+    pub waived: Vec<WaivedFinding>,
+    /// Advisories (unused waivers) — housekeeping, never fail.
+    pub advisories: Vec<Finding>,
+}
+
+impl LintReport {
+    /// No unwaived deny findings.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Pin deterministic ordering (driver calls this once at the end).
+    pub fn sort(&mut self) {
+        self.findings.sort_by_key(Finding::key);
+        self.warnings.sort_by_key(Finding::key);
+        self.waived.sort_by_key(|w| w.finding.key());
+        self.advisories.sort_by_key(Finding::key);
+    }
+
+    /// Serialise to the versioned `tod-lint` JSON document.
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[Finding]| {
+            Json::arr(v.iter().map(Finding::to_json).collect())
+        };
+        Json::obj(vec![
+            ("schema", Json::str(REPORT_SCHEMA)),
+            ("schema_version", Json::num(REPORT_VERSION as f64)),
+            ("policy_version", Json::num(self.policy_version as f64)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("deny", Json::num(self.findings.len() as f64)),
+                    ("warn", Json::num(self.warnings.len() as f64)),
+                    ("waived", Json::num(self.waived.len() as f64)),
+                    (
+                        "advisory",
+                        Json::num(self.advisories.len() as f64),
+                    ),
+                ]),
+            ),
+            ("findings", arr(&self.findings)),
+            ("warnings", arr(&self.warnings)),
+            (
+                "waived",
+                Json::arr(
+                    self.waived
+                        .iter()
+                        .map(|w| {
+                            let mut j = w.finding.to_json();
+                            if let Json::Obj(m) = &mut j {
+                                m.insert(
+                                    "reason".to_string(),
+                                    Json::str(&w.reason),
+                                );
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
+            ("advisories", arr(&self.advisories)),
+        ])
+    }
+
+    /// Human rendering for the terminal / CI log.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        for f in &self.warnings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        for w in &self.waived {
+            out.push_str(&format!(
+                "waived {} {}:{} reason=\"{}\"\n",
+                w.finding.rule, w.finding.file, w.finding.line, w.reason
+            ));
+        }
+        for f in &self.advisories {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "tod-lint: {} file(s), {} deny, {} warn, {} waived, \
+             {} advisory\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.warnings.len(),
+            self.waived.len(),
+            self.advisories.len()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(file: &str, line: usize, rule: &str) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            zone: "serving",
+            severity: Severity::Deny,
+            message: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn json_is_sorted_and_versioned() {
+        let mut r = LintReport {
+            policy_version: 2,
+            files_scanned: 3,
+            findings: vec![
+                finding("b.rs", 1, "srv-unwrap"),
+                finding("a.rs", 9, "srv-panic"),
+                finding("a.rs", 2, "srv-unwrap"),
+            ],
+            ..Default::default()
+        };
+        r.sort();
+        assert_eq!(r.findings[0].file, "a.rs");
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.findings[2].file, "b.rs");
+        let j = r.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(REPORT_SCHEMA));
+        assert_eq!(
+            j.at(&["summary", "deny"]).and_then(Json::as_usize),
+            Some(3)
+        );
+        // byte-determinism: serialising twice is identical
+        assert_eq!(j.to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn clean_and_render() {
+        let mut r = LintReport::default();
+        assert!(r.clean());
+        r.warnings.push(finding("a.rs", 1, "srv-slice-index"));
+        assert!(r.clean()); // warnings never fail the gate
+        r.findings.push(finding("a.rs", 4, "srv-unwrap"));
+        assert!(!r.clean());
+        let text = r.render_text();
+        assert!(text.contains("srv-unwrap a.rs:4"));
+        assert!(text.contains("1 deny, 1 warn"));
+    }
+}

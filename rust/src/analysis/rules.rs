@@ -1,0 +1,297 @@
+//! The rule set: what each zone bans, and how a banned construct is
+//! recognised on a masked source line.
+//!
+//! Matching runs over [`scanner`](crate::analysis::scanner) output, so
+//! comments and string literals are already blanked — a rule needle
+//! only ever matches *code*. Needles are deliberately token-literal
+//! (`.unwrap()`, `Instant::now`, `HashMap`) rather than syntactic:
+//! every needle is the textual fingerprint of exactly the construct
+//! the corresponding dynamic test would catch at run time, and a
+//! false positive is waivable inline with a reason
+//! ([`crate::analysis::waivers`]).
+
+use crate::analysis::zones::{Severity, Zone};
+
+/// How a needle matches within a masked line.
+#[derive(Debug, Clone, Copy)]
+pub enum Needle {
+    /// Literal substring (used for patterns that carry their own
+    /// delimiters, e.g. `.unwrap()`).
+    Exact(&'static str),
+    /// Identifier: substring bounded by non-identifier characters on
+    /// both sides (e.g. `HashMap`, but not `MyHashMapLike`).
+    Ident(&'static str),
+    /// Both substrings on the same line, in order (e.g.
+    /// `partial_cmp` ... `.unwrap()`).
+    Pair(&'static str, &'static str),
+}
+
+/// One lint rule.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable id, `<zone-prefix>-<name>` (carried in findings,
+    /// waivers and the policy's severity table).
+    pub id: &'static str,
+    /// Zone the rule runs in.
+    pub zone: Zone,
+    /// Default severity (the policy may override per id).
+    pub default_severity: Severity,
+    /// Patterns, any of which constitutes a finding.
+    pub needles: &'static [Needle],
+    /// One-line rationale shown with each finding.
+    pub message: &'static str,
+}
+
+/// The shipped rule set, grouped by zone.
+pub const RULES: &[Rule] = &[
+    // -- determinism zone ---------------------------------------------
+    Rule {
+        id: "det-wall-clock",
+        zone: Zone::Determinism,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact("Instant::now"),
+            Needle::Ident("SystemTime"),
+        ],
+        message: "wall-clock read in a byte-stable module: traces and \
+                  goldens must replay identically (use the virtual \
+                  stream clock)",
+    },
+    Rule {
+        id: "det-unordered-iter",
+        zone: Zone::Determinism,
+        default_severity: Severity::Deny,
+        needles: &[Needle::Ident("HashMap"), Needle::Ident("HashSet")],
+        message: "unordered map/set in a serialising module: iteration \
+                  order leaks into pinned output (use BTreeMap/BTreeSet)",
+    },
+    Rule {
+        id: "det-ambient-rng",
+        zone: Zone::Determinism,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Ident("thread_rng"),
+            Needle::Ident("RandomState"),
+            Needle::Exact("rand::random"),
+        ],
+        message: "ambient randomness in a byte-stable module: all \
+                  entropy must flow from the seeded util::rng",
+    },
+    Rule {
+        id: "det-float-cmp-unwrap",
+        zone: Zone::Determinism,
+        default_severity: Severity::Deny,
+        needles: &[Needle::Pair("partial_cmp", ".unwrap()")],
+        message: "partial_cmp().unwrap() panics on NaN and orders \
+                  nothing deterministically (use total_cmp)",
+    },
+    // -- serving zone -------------------------------------------------
+    Rule {
+        id: "srv-unwrap",
+        zone: Zone::Serving,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact(".unwrap()"),
+            Needle::Exact(".unwrap_err()"),
+        ],
+        message: "unwrap on the serving path: a failed request must \
+                  fail itself, not the process (return a Result or \
+                  carry forward)",
+    },
+    Rule {
+        id: "srv-expect",
+        zone: Zone::Serving,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact(".expect("),
+            Needle::Exact(".expect_err("),
+        ],
+        message: "expect on the serving path: same failure mode as \
+                  unwrap, with a nicer epitaph",
+    },
+    Rule {
+        id: "srv-panic",
+        zone: Zone::Serving,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact("panic!"),
+            Needle::Exact("unreachable!"),
+            Needle::Exact("todo!"),
+            Needle::Exact("unimplemented!"),
+        ],
+        message: "explicit panic on the serving path (encode the \
+                  invariant in types, or waive a documented \
+                  construction-time contract)",
+    },
+    Rule {
+        id: "srv-slice-index",
+        zone: Zone::Serving,
+        default_severity: Severity::Deny,
+        needles: &[], // structural: see index_sites()
+        message: "raw slice/array indexing can panic on the serving \
+                  path (prefer get()/iterators; COUNT-bounded DnnKind \
+                  tables are the tolerated idiom)",
+    },
+    // -- hot-path zone ------------------------------------------------
+    Rule {
+        id: "hot-alloc",
+        zone: Zone::HotPath,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact("Vec::new"),
+            Needle::Exact("VecDeque::new"),
+            Needle::Exact("String::new"),
+            Needle::Exact("Box::new"),
+            Needle::Exact("vec!"),
+        ],
+        message: "fresh container/box in a steady-state-alloc-free \
+                  function (reuse caller scratch; the counting \
+                  allocator pins this dynamically)",
+    },
+    Rule {
+        id: "hot-collect",
+        zone: Zone::HotPath,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact(".collect()"),
+            Needle::Exact(".collect::"),
+        ],
+        message: "collect() allocates a fresh container per call in an \
+                  alloc-free function (extend into reused scratch)",
+    },
+    Rule {
+        id: "hot-clone",
+        zone: Zone::HotPath,
+        default_severity: Severity::Deny,
+        needles: &[Needle::Exact(".clone()")],
+        message: "clone in an alloc-free function (borrow, or waive \
+                  refcount bumps like Arc::clone with a reason)",
+    },
+    Rule {
+        id: "hot-format",
+        zone: Zone::HotPath,
+        default_severity: Severity::Deny,
+        needles: &[
+            Needle::Exact("format!"),
+            Needle::Exact(".to_string()"),
+            Needle::Exact(".to_owned()"),
+            Needle::Exact(".to_vec()"),
+        ],
+        message: "string/buffer materialisation in an alloc-free \
+                  function (defer rendering to the reporting layer)",
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule_by_id(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Does `line` (masked code text) contain the needle?
+pub fn needle_matches(line: &str, needle: &Needle) -> bool {
+    match needle {
+        Needle::Exact(s) => line.contains(s),
+        Needle::Ident(s) => ident_matches(line, s),
+        Needle::Pair(a, b) => line
+            .find(a)
+            .map(|i| line[i + a.len()..].contains(b))
+            .unwrap_or(false),
+    }
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn ident_matches(line: &str, ident: &str) -> bool {
+    let lb = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(ident) {
+        let start = from + pos;
+        let end = start + ident.len();
+        let left_ok = start == 0 || !is_ident_char(lb[start - 1]);
+        let right_ok = end == lb.len() || !is_ident_char(lb[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// Column offsets (0-based) of raw index expressions `expr[...]` on a
+/// masked line: a `[` directly preceded by an identifier character,
+/// `)` or `]`. Attribute brackets (`#[...]`), slice types (`&[T]`,
+/// `: [f64; 4]`) and array literals (`= [a, b]`) all have a
+/// non-postfix character before the bracket and never match.
+pub fn index_sites(line: &str) -> Vec<usize> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    for i in 1..b.len() {
+        if b[i] == b'['
+            && (is_ident_char(b[i - 1]) || b[i - 1] == b')' || b[i - 1] == b']')
+        {
+            out.push(i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_and_ident_needles() {
+        assert!(needle_matches("x.unwrap();", &Needle::Exact(".unwrap()")));
+        assert!(!needle_matches(
+            "x.unwrap_or(0);",
+            &Needle::Exact(".unwrap()")
+        ));
+        assert!(needle_matches(
+            "use std::collections::HashMap;",
+            &Needle::Ident("HashMap")
+        ));
+        assert!(!needle_matches(
+            "struct MyHashMapLike;",
+            &Needle::Ident("HashMap")
+        ));
+        assert!(needle_matches(
+            "a.partial_cmp(&b).unwrap()",
+            &Needle::Pair("partial_cmp", ".unwrap()")
+        ));
+        assert!(!needle_matches(
+            "a.unwrap(); b.partial_cmp(&c)",
+            &Needle::Pair("partial_cmp", ".unwrap()")
+        ));
+    }
+
+    #[test]
+    fn index_sites_hit_indexing_only() {
+        assert_eq!(index_sites("let x = arr[i];").len(), 1);
+        assert_eq!(index_sites("m[k.index()][si][vi]").len(), 3);
+        assert!(index_sites("#[cfg(test)]").is_empty());
+        assert!(index_sites("let a: [f64; 4] = [0.0; 4];").is_empty());
+        assert!(index_sites("fn f(x: &[u8]) {}").is_empty());
+        assert_eq!(index_sites("(a + b)[0]").len(), 1);
+    }
+
+    #[test]
+    fn every_rule_id_is_unique_and_prefixed() {
+        for (i, r) in RULES.iter().enumerate() {
+            let prefix = match r.zone {
+                Zone::Determinism => "det-",
+                Zone::Serving => "srv-",
+                Zone::HotPath => "hot-",
+            };
+            assert!(r.id.starts_with(prefix), "{} prefix", r.id);
+            assert!(
+                RULES[i + 1..].iter().all(|o| o.id != r.id),
+                "duplicate rule id {}",
+                r.id
+            );
+        }
+        assert!(rule_by_id("srv-unwrap").is_some());
+        assert!(rule_by_id("nope").is_none());
+    }
+}

@@ -1,0 +1,612 @@
+//! Token/AST-lite scanner over the crate's own Rust sources.
+//!
+//! The lint pass (DESIGN.md §16) needs four facts about every source
+//! line, none of which require a full parse:
+//!
+//! 1. the line's **code text with comments and string literals blanked
+//!    out** (so `"panic!"` inside a usage string never matches a rule
+//!    needle),
+//! 2. whether the line sits inside a `#[cfg(test)]` region (tests may
+//!    unwrap the happy path — `clippy.toml` already says so),
+//! 3. the stack of **enclosing function names**, qualified by their
+//!    `impl` type (`StreamSession::step_with`), so hot-path rules can
+//!    scope to the functions the policy enumerates, and
+//! 4. any inline **waiver comment** (`// tod-lint: allow(<rule>)
+//!    reason="..."`) attached to the line.
+//!
+//! The scanner is two passes over the raw text: a character-level
+//! *masker* that blanks comments/strings while preserving the byte
+//! layout (so `file:line` findings point at real source), then a
+//! token walk over the masked text that tracks brace depth,
+//! `#[cfg(test)]` regions, `impl` blocks and `fn` bodies. It is
+//! deliberately not a parser — no `syn`, no new dependencies — and it
+//! errs on the side of *seeing* code: a construct the walker cannot
+//! classify stays visible to the rules rather than vanishing.
+
+/// A waiver comment parsed from the source (see
+/// [`crate::analysis::waivers`] for matching semantics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaiverComment {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// `true` when the comment shares its line with code (trailing
+    /// waiver — applies to that line); `false` for a standalone
+    /// comment line (applies to the next code line).
+    pub trailing: bool,
+    /// Raw comment text after `//`, untrimmed.
+    pub text: String,
+}
+
+/// Per-line scan output.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// Code text with comments and string/char literals blanked.
+    pub masked: String,
+    /// Line sits inside a `#[cfg(test)]` item or module.
+    pub in_test: bool,
+    /// Qualified names of enclosing functions, outermost first
+    /// (e.g. `["StreamSession::step_with"]`; nested fns append).
+    pub functions: Vec<String>,
+}
+
+/// A fully scanned source file.
+#[derive(Debug, Clone)]
+pub struct ScannedFile {
+    /// Path relative to the scan root, with `/` separators.
+    pub rel_path: String,
+    /// One entry per source line, 0-based index = line - 1.
+    pub lines: Vec<LineInfo>,
+    /// Waiver comments in file order.
+    pub waivers: Vec<WaiverComment>,
+}
+
+/// Scan one file's source text.
+pub fn scan_source(rel_path: &str, source: &str) -> ScannedFile {
+    let (masked, waivers) = mask(source);
+    let lines = annotate(&masked);
+    ScannedFile { rel_path: rel_path.to_string(), lines, waivers }
+}
+
+// ---------------------------------------------------------------------
+// pass 1: masking
+// ---------------------------------------------------------------------
+
+/// Blank comments and string/char literals with spaces, preserving the
+/// exact line structure, and collect `//` comment texts that carry
+/// `tod-lint:` waivers.
+fn mask(source: &str) -> (String, Vec<WaiverComment>) {
+    let b = source.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut waivers = Vec::new();
+    let mut line = 1usize;
+    // whether any code byte has been emitted on the current line
+    // (decides trailing vs standalone for waiver comments)
+    let mut code_on_line = false;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+            code_on_line = false;
+            i += 1;
+            continue;
+        }
+        // line comment — capture text, blank it
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            let text = String::from_utf8_lossy(&b[start + 2..i]).into_owned();
+            // a waiver is a plain `//` comment whose body *starts* with
+            // the marker — doc comments (`///`, `//!`) and prose that
+            // merely mentions the syntax never parse as waivers
+            let is_doc = text.starts_with('/') || text.starts_with('!');
+            if !is_doc && text.trim_start().starts_with("tod-lint:") {
+                waivers.push(WaiverComment {
+                    line,
+                    trailing: code_on_line,
+                    text,
+                });
+            }
+            for _ in start..i {
+                out.push(b' ');
+            }
+            continue;
+        }
+        // block comment (nested, possibly multi-line)
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'\n' {
+                    out.push(b'\n');
+                    line += 1;
+                    code_on_line = false;
+                    i += 1;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string r"..." / r#"..."# (and br variants)
+        if (c == b'r' || c == b'b') && !prev_is_ident(&out) {
+            if let Some(consumed) = raw_string_len(&b[i..]) {
+                for k in 0..consumed {
+                    if b[i + k] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                        code_on_line = false;
+                    } else {
+                        out.push(b' ');
+                    }
+                }
+                i += consumed;
+                continue;
+            }
+        }
+        // ordinary string (or byte string — the b was emitted as code)
+        if c == b'"' {
+            out.push(b' ');
+            i += 1;
+            while i < b.len() {
+                match b[i] {
+                    b'\\' => {
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    }
+                    b'"' => {
+                        out.push(b' ');
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        out.push(b'\n');
+                        line += 1;
+                        code_on_line = false;
+                        i += 1;
+                    }
+                    _ => {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime: 'a' is a literal, 'a (no closing
+        // quote right after) is a lifetime and stays visible
+        if c == b'\'' {
+            if let Some(consumed) = char_literal_len(&b[i..]) {
+                for _ in 0..consumed {
+                    out.push(b' ');
+                }
+                i += consumed;
+                code_on_line = true;
+                continue;
+            }
+        }
+        if !c.is_ascii_whitespace() {
+            code_on_line = true;
+        }
+        out.push(c);
+        i += 1;
+    }
+    // the masker only ever replaces bytes with spaces/newlines, so the
+    // output is valid UTF-8 wherever the input was
+    (String::from_utf8_lossy(&out).into_owned(), waivers)
+}
+
+/// Last emitted byte is an identifier character (so `r` in `for` or
+/// `br` in `abr` is not a raw-string prefix).
+fn prev_is_ident(out: &[u8]) -> bool {
+    matches!(out.last(), Some(c) if c.is_ascii_alphanumeric() || *c == b'_')
+}
+
+/// Length of a raw (byte) string literal starting at `b[0]`, or None.
+fn raw_string_len(b: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    if b.get(i) == Some(&b'b') {
+        i += 1;
+    }
+    if b.get(i) != Some(&b'r') {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return None;
+    }
+    i += 1;
+    loop {
+        match b.get(i) {
+            None => return Some(i), // unterminated: consume to EOF
+            Some(b'"') => {
+                let mut k = 0;
+                while k < hashes && b.get(i + 1 + k) == Some(&b'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    return Some(i + 1 + hashes);
+                }
+                i += 1;
+            }
+            Some(_) => i += 1,
+        }
+    }
+}
+
+/// Length of a char/byte-char literal starting at the `'`, or None
+/// when the quote is a lifetime.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    debug_assert_eq!(b.first(), Some(&b'\''));
+    match b.get(1) {
+        Some(b'\\') => {
+            // escape: consume to the closing quote
+            let mut i = 2;
+            while i < b.len() && b[i] != b'\'' {
+                i += 1;
+            }
+            Some((i + 1).min(b.len()))
+        }
+        Some(c) if *c != b'\'' => {
+            // 'x' is a char literal only when the closing quote follows
+            // the (possibly multi-byte) scalar immediately; otherwise
+            // it's a lifetime and the tick stays in the code stream
+            let mut i = 2;
+            while i < b.len() && i < 6 && (b[i] & 0xC0) == 0x80 {
+                i += 1; // UTF-8 continuation bytes of one scalar
+            }
+            if b.get(i) == Some(&b'\'') {
+                Some(i + 1)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// pass 2: structural annotation
+// ---------------------------------------------------------------------
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Walk the masked text and annotate each line with its `#[cfg(test)]`
+/// / enclosing-function context.
+fn annotate(masked: &str) -> Vec<LineInfo> {
+    let mut out: Vec<LineInfo> = Vec::new();
+    let mut depth = 0usize;
+    // depths at which a #[cfg(test)] region opened
+    let mut test_depths: Vec<usize> = Vec::new();
+    let mut pending_test = false;
+    // (type name, depth at the impl's opening brace)
+    let mut impl_stack: Vec<(String, usize)> = Vec::new();
+    // pending impl header: Some(accumulating type name) until `{`
+    let mut pending_impl: Option<ImplHeader> = None;
+    // (qualified fn name, depth at the body's opening brace)
+    let mut fn_stack: Vec<(String, usize)> = Vec::new();
+    // parsed fn name waiting for its body brace
+    let mut pending_fn: Option<String> = None;
+    let mut expect_fn_name = false;
+
+    for raw_line in masked.split('\n') {
+        let in_test_at_start =
+            !test_depths.is_empty() || pending_test;
+        let functions: Vec<String> =
+            fn_stack.iter().map(|(n, _)| n.clone()).collect();
+        let line_has_cfg_test = raw_line.contains("#[cfg(test)]");
+        if line_has_cfg_test {
+            pending_test = true;
+        }
+
+        let b = raw_line.as_bytes();
+        let mut i = 0;
+        while i < b.len() {
+            let c = b[i];
+            if is_ident_char(c) {
+                let start = i;
+                while i < b.len() && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                let word = &raw_line[start..i];
+                if expect_fn_name {
+                    // `fn` followed by an identifier: a definition
+                    // (a fn-pointer type has `(` here instead)
+                    let qualified = match impl_stack.last() {
+                        Some((ty, _)) => format!("{ty}::{word}"),
+                        None => word.to_string(),
+                    };
+                    pending_fn = Some(qualified);
+                    expect_fn_name = false;
+                    continue;
+                }
+                match word {
+                    "fn" => expect_fn_name = true,
+                    "impl" => {
+                        pending_impl = Some(ImplHeader::default());
+                        pending_fn = None;
+                    }
+                    _ => {
+                        if let Some(h) = pending_impl.as_mut() {
+                            h.push_ident(word);
+                        }
+                    }
+                }
+                continue;
+            }
+            match c {
+                b'<' => {
+                    if let Some(h) = pending_impl.as_mut() {
+                        h.angle += 1;
+                    }
+                }
+                b'>' => {
+                    if let Some(h) = pending_impl.as_mut() {
+                        h.angle = h.angle.saturating_sub(1);
+                    }
+                }
+                b'{' => {
+                    if pending_test {
+                        test_depths.push(depth);
+                        pending_test = false;
+                    }
+                    if let Some(h) = pending_impl.take() {
+                        impl_stack.push((h.name, depth));
+                    } else if let Some(name) = pending_fn.take() {
+                        fn_stack.push((name, depth));
+                    }
+                    expect_fn_name = false;
+                    depth += 1;
+                }
+                b'}' => {
+                    depth = depth.saturating_sub(1);
+                    while matches!(fn_stack.last(), Some((_, d)) if *d >= depth)
+                    {
+                        fn_stack.pop();
+                    }
+                    while matches!(impl_stack.last(), Some((_, d)) if *d >= depth)
+                    {
+                        impl_stack.pop();
+                    }
+                    while matches!(test_depths.last(), Some(d) if *d >= depth)
+                    {
+                        test_depths.pop();
+                    }
+                }
+                b';' => {
+                    // `#[cfg(test)] use ...;` / trait method decls:
+                    // nothing braced follows, clear pending state
+                    if pending_impl.is_none() {
+                        pending_fn = None;
+                        pending_test = false;
+                    }
+                    expect_fn_name = false;
+                }
+                _ => {
+                    // `fn` not followed by an identifier is a
+                    // fn-pointer type (`fn(i32) -> i32`), not a
+                    // definition: only whitespace may separate the
+                    // keyword from the name
+                    if !c.is_ascii_whitespace() {
+                        expect_fn_name = false;
+                    }
+                }
+            }
+            i += 1;
+        }
+
+        out.push(LineInfo {
+            masked: raw_line.to_string(),
+            in_test: in_test_at_start
+                || !test_depths.is_empty()
+                || pending_test,
+            functions,
+        });
+    }
+    out
+}
+
+/// Accumulates the self-type name of an `impl` header: the last
+/// identifier seen at angle-bracket depth 0, with `for` resetting the
+/// capture (so `impl Trait for Type` yields `Type`), `where` ending it
+/// (clause bounds must not overwrite the name), and path/marker
+/// keywords skipped.
+#[derive(Default)]
+struct ImplHeader {
+    name: String,
+    angle: usize,
+    done: bool,
+}
+
+impl ImplHeader {
+    fn push_ident(&mut self, word: &str) {
+        if self.angle > 0 || self.done {
+            return;
+        }
+        match word {
+            "for" => self.name.clear(),
+            "where" => self.done = true,
+            "dyn" | "crate" | "super" | "self" => {}
+            w => {
+                self.name.clear();
+                self.name.push_str(w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> ScannedFile {
+        scan_source("t.rs", src)
+    }
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let f = scan(concat!(
+            "let x = \"panic!()\"; // Instant::now in a comment\n",
+            "/* HashMap in\n   a block */ let y = 2;\n",
+        ));
+        assert!(!f.lines[0].masked.contains("panic"));
+        assert!(!f.lines[0].masked.contains("Instant"));
+        assert!(f.lines[0].masked.contains("let x ="));
+        assert!(!f.lines[1].masked.contains("HashMap"));
+        assert!(f.lines[2].masked.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars() {
+        let f = scan(concat!(
+            "let r = r#\"unwrap() \"quoted\" \"#;\n",
+            "let c = '\\''; let l: &'static str = s;\n",
+        ));
+        assert!(!f.lines[0].masked.contains("unwrap"));
+        assert!(f.lines[1].masked.contains("static")); // lifetime kept
+        assert!(!f.lines[1].masked.contains("\\'"));
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_mod_and_fn() {
+        let f = scan(concat!(
+            "fn live() { x.unwrap(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { y.unwrap(); }\n",
+            "}\n",
+            "fn live2() {}\n",
+        ));
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let f = scan("#[cfg(not(test))]\nfn live() { x.unwrap(); }\n");
+        assert!(!f.lines[1].in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_use_item_does_not_leak() {
+        let f = scan(concat!(
+            "#[cfg(test)]\n",
+            "use std::collections::HashMap;\n",
+            "fn live() {}\n",
+        ));
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn enclosing_functions_are_qualified_by_impl() {
+        let f = scan(concat!(
+            "impl<T: Clone> Foo<T> {\n",
+            "    pub fn bar(&self) -> usize {\n",
+            "        self.x\n",
+            "    }\n",
+            "}\n",
+            "fn free() {\n",
+            "    1\n",
+            "}\n",
+        ));
+        assert!(f.lines[2].functions.contains(&"Foo::bar".to_string()));
+        assert!(f.lines[6].functions.contains(&"free".to_string()));
+        assert!(f.lines[4].functions.is_empty());
+    }
+
+    #[test]
+    fn trait_impl_uses_self_type() {
+        let f = scan(concat!(
+            "impl Display for Wide<'_> {\n",
+            "    fn fmt(&self) -> usize {\n",
+            "        0\n",
+            "    }\n",
+            "}\n",
+        ));
+        assert!(f.lines[2].functions.contains(&"Wide::fmt".to_string()));
+    }
+
+    #[test]
+    fn trait_method_decl_without_body_is_skipped() {
+        let f = scan(concat!(
+            "trait T {\n",
+            "    fn decl(&self) -> usize;\n",
+            "    fn with_default(&self) -> usize {\n",
+            "        2\n",
+            "    }\n",
+            "}\n",
+        ));
+        assert!(f.lines[1].functions.is_empty());
+        assert!(f.lines[3]
+            .functions
+            .contains(&"with_default".to_string()));
+    }
+
+    #[test]
+    fn waiver_comments_are_collected() {
+        let f = scan(concat!(
+            "// tod-lint: allow(srv-unwrap) reason=\"test\"\n",
+            "x.unwrap(); // tod-lint: allow(srv-unwrap) reason=\"y\"\n",
+            "// an ordinary comment\n",
+        ));
+        assert_eq!(f.waivers.len(), 2);
+        assert_eq!(f.waivers[0].line, 1);
+        assert!(!f.waivers[0].trailing);
+        assert_eq!(f.waivers[1].line, 2);
+        assert!(f.waivers[1].trailing);
+    }
+
+    #[test]
+    fn doc_comments_and_prose_mentions_are_not_waivers() {
+        let f = scan(concat!(
+            "//! syntax is `// tod-lint: allow(<rule>) reason=\"..\"`\n",
+            "/// see the tod-lint: allow protocol\n",
+            "// the tod-lint: marker must start the comment\n",
+            "//tod-lint: allow(srv-unwrap) reason=\"no space, ok\"\n",
+        ));
+        assert_eq!(f.waivers.len(), 1);
+        assert_eq!(f.waivers[0].line, 4);
+    }
+
+    #[test]
+    fn nested_fn_stacks() {
+        let f = scan(concat!(
+            "fn outer() {\n",
+            "    fn inner() {\n",
+            "        1\n",
+            "    }\n",
+            "    2\n",
+            "}\n",
+        ));
+        assert_eq!(f.lines[2].functions, vec!["outer", "inner"]);
+        assert_eq!(f.lines[4].functions, vec!["outer"]);
+    }
+}

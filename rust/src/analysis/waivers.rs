@@ -1,0 +1,201 @@
+//! Inline waiver protocol: `// tod-lint: allow(<rule>) reason="..."`.
+//!
+//! A waiver suppresses a finding without hiding it — every honoured
+//! waiver is enumerated in the report with its reason, and a waiver
+//! that stops matching anything becomes an `unused-waiver` advisory so
+//! stale exemptions surface instead of rotting.
+//!
+//! Placement: a **trailing** waiver (sharing its line with code)
+//! covers that line; a **standalone** comment line covers the next
+//! line that carries code. The marker must *start* the comment body
+//! and sit in a plain `//` comment — doc comments and prose mentions
+//! of the syntax are never waivers (the scanner filters them). The `reason="..."` clause is mandatory —
+//! a reason-less waiver is itself a deny finding
+//! (`waiver-missing-reason`), because an unexplained exemption is
+//! exactly the convention-rot this pass exists to stop.
+
+use crate::analysis::scanner::ScannedFile;
+
+/// A successfully parsed waiver, resolved to the line it covers.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// 1-based line of the comment itself.
+    pub decl_line: usize,
+    /// 1-based line findings must sit on to be waived.
+    pub target_line: usize,
+    /// Rule ids the waiver allows.
+    pub rules: Vec<String>,
+    /// Mandatory justification.
+    pub reason: String,
+}
+
+/// A malformed waiver (reported as a finding by the driver).
+#[derive(Debug, Clone)]
+pub struct WaiverProblem {
+    /// 1-based line of the offending comment.
+    pub line: usize,
+    /// What is wrong with it.
+    pub message: String,
+}
+
+/// Parsed `allow(...)` clause of a waiver comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsedWaiver {
+    /// Rule ids listed in `allow(...)`.
+    pub rules: Vec<String>,
+    /// Text of `reason="..."`, when present and non-empty.
+    pub reason: Option<String>,
+}
+
+/// Parse the text of a `tod-lint:` comment (everything after `//`).
+pub fn parse_comment(text: &str) -> Result<ParsedWaiver, String> {
+    let after = text
+        .split("tod-lint:")
+        .nth(1)
+        .ok_or("missing tod-lint: marker")?;
+    let rest = after.trim_start();
+    let rest = rest
+        .strip_prefix("allow")
+        .ok_or("expected allow(<rule>[, <rule>]) after tod-lint:")?;
+    let rest = rest.trim_start();
+    let rest = rest
+        .strip_prefix('(')
+        .ok_or("expected '(' after allow")?;
+    let close = rest.find(')').ok_or("unclosed allow( list")?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Err("empty allow() list".to_string());
+    }
+    let tail = &rest[close + 1..];
+    let reason = tail.find("reason=").and_then(|at| {
+        let q = &tail[at + "reason=".len()..];
+        let q = q.strip_prefix('"')?;
+        let end = q.find('"')?;
+        let r = q[..end].trim();
+        if r.is_empty() {
+            None
+        } else {
+            Some(r.to_string())
+        }
+    });
+    Ok(ParsedWaiver { rules, reason })
+}
+
+/// Resolve every waiver comment in a scanned file: well-formed waivers
+/// come back with their covered line; malformed or reason-less ones
+/// come back as problems.
+pub fn collect(scanned: &ScannedFile) -> (Vec<Waiver>, Vec<WaiverProblem>) {
+    let mut waivers = Vec::new();
+    let mut problems = Vec::new();
+    for c in &scanned.waivers {
+        let parsed = match parse_comment(&c.text) {
+            Ok(p) => p,
+            Err(e) => {
+                problems.push(WaiverProblem {
+                    line: c.line,
+                    message: format!("malformed waiver: {e}"),
+                });
+                continue;
+            }
+        };
+        let reason = match parsed.reason {
+            Some(r) => r,
+            None => {
+                problems.push(WaiverProblem {
+                    line: c.line,
+                    message: format!(
+                        "waiver for {} has no reason=\"...\" — every \
+                         exemption must say why",
+                        parsed.rules.join(", ")
+                    ),
+                });
+                continue;
+            }
+        };
+        let target_line = if c.trailing {
+            c.line
+        } else {
+            // first subsequent line with code on it (comments and
+            // blanks are already masked to whitespace)
+            scanned
+                .lines
+                .iter()
+                .enumerate()
+                .skip(c.line) // 0-based index c.line == 1-based line+1
+                .find(|(_, l)| !l.masked.trim().is_empty())
+                .map(|(idx, _)| idx + 1)
+                .unwrap_or(c.line)
+        };
+        waivers.push(Waiver {
+            decl_line: c.line,
+            target_line,
+            rules: parsed.rules,
+            reason,
+        });
+    }
+    (waivers, problems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan_source;
+
+    #[test]
+    fn parses_single_and_multi_rule() {
+        let p = parse_comment(
+            " tod-lint: allow(srv-unwrap) reason=\"lock can't poison\"",
+        )
+        .unwrap();
+        assert_eq!(p.rules, vec!["srv-unwrap"]);
+        assert_eq!(p.reason.as_deref(), Some("lock can't poison"));
+
+        let p = parse_comment(
+            " tod-lint: allow(hot-clone, hot-alloc) reason=\"Arc bump\"",
+        )
+        .unwrap();
+        assert_eq!(p.rules, vec!["hot-clone", "hot-alloc"]);
+    }
+
+    #[test]
+    fn missing_reason_is_an_error_downstream() {
+        let p = parse_comment(" tod-lint: allow(srv-unwrap)").unwrap();
+        assert!(p.reason.is_none());
+        let p =
+            parse_comment(" tod-lint: allow(srv-unwrap) reason=\"  \"")
+                .unwrap();
+        assert!(p.reason.is_none());
+        assert!(parse_comment(" tod-lint: allow()").is_err());
+        assert!(parse_comment(" tod-lint: deny(x)").is_err());
+    }
+
+    #[test]
+    fn trailing_and_standalone_targets() {
+        let src = concat!(
+            "// tod-lint: allow(srv-panic) reason=\"ctor contract\"\n",
+            "\n",
+            "panic!();\n",
+            "x.unwrap(); // tod-lint: allow(srv-unwrap) reason=\"r\"\n",
+        );
+        let (ws, probs) = collect(&scan_source("t.rs", src));
+        assert!(probs.is_empty());
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].decl_line, 1);
+        assert_eq!(ws[0].target_line, 3); // skips the blank line
+        assert_eq!(ws[1].target_line, 4);
+    }
+
+    #[test]
+    fn reasonless_waiver_becomes_problem() {
+        let src = "x.unwrap(); // tod-lint: allow(srv-unwrap)\n";
+        let (ws, probs) = collect(&scan_source("t.rs", src));
+        assert!(ws.is_empty());
+        assert_eq!(probs.len(), 1);
+        assert_eq!(probs[0].line, 1);
+        assert!(probs[0].message.contains("no reason"));
+    }
+}

@@ -1,0 +1,282 @@
+//! Rule zones and the versioned lint policy (`rust/lint-policy.json`,
+//! schema `tod-lint-policy` v1).
+//!
+//! A *zone* names an invariant the crate's tests enforce dynamically
+//! and maps it onto the source regions where the static pass enforces
+//! it at authoring time (DESIGN.md §16):
+//!
+//! * **determinism** — modules whose output is pinned byte for byte
+//!   (traces, goldens, reports): no wall-clock reads, no unordered-map
+//!   iteration, no ambient RNG, no panicking float compares.
+//! * **serving** — the request path that must never die: no
+//!   `unwrap`/`expect`/`panic!`/`unreachable!` (and, advisorily, no
+//!   raw slice indexing) outside `#[cfg(test)]`.
+//! * **hot-path** — functions the counting-allocator tests pin as
+//!   allocation-free in steady state: no `Vec::new`/`collect`/
+//!   `clone`/`format!`/`to_string`/`Box::new` in their bodies.
+//!
+//! The policy file is data, not code, so a new module enters a zone by
+//! editing JSON — the analyser itself never hardcodes a path.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Schema tag of the policy document.
+pub const POLICY_SCHEMA: &str = "tod-lint-policy";
+/// Current policy schema version.
+pub const POLICY_VERSION: u64 = 1;
+
+/// The three rule zones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zone {
+    /// Byte-stable serialisation/trace modules.
+    Determinism,
+    /// The panic-free request path.
+    Serving,
+    /// Enumerated allocation-free functions.
+    HotPath,
+}
+
+impl Zone {
+    /// Stable tag used in reports and the policy file.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Zone::Determinism => "determinism",
+            Zone::Serving => "serving",
+            Zone::HotPath => "hot-path",
+        }
+    }
+}
+
+/// Finding severity, per rule, policy-overridable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Fails `tod lint --check` unless waived.
+    Deny,
+    /// Reported as an advisory; never fails the gate.
+    Warn,
+    /// Rule disabled.
+    Off,
+}
+
+impl Severity {
+    /// Stable tag used in reports and the policy file.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+            Severity::Off => "off",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Severity, String> {
+        match s {
+            "deny" => Ok(Severity::Deny),
+            "warn" => Ok(Severity::Warn),
+            "off" => Ok(Severity::Off),
+            other => {
+                Err(format!("unknown severity {other:?} (deny|warn|off)"))
+            }
+        }
+    }
+}
+
+/// Parsed lint policy.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Policy document version (distinct from the schema version —
+    /// bumped when the zone contents change).
+    pub version: u64,
+    /// Path prefixes (or exact files) in the determinism zone,
+    /// relative to the scan root, `/`-separated.
+    pub determinism_paths: Vec<String>,
+    /// Path prefixes (or exact files) in the serving zone.
+    pub serving_paths: Vec<String>,
+    /// Qualified (`Type::method`) or bare function names in the
+    /// hot-path zone.
+    pub hot_path_functions: Vec<String>,
+    /// Per-rule severity overrides (rule id -> severity).
+    pub severity: Vec<(String, Severity)>,
+}
+
+impl Policy {
+    /// Effective severity for a rule (the rule's default unless the
+    /// policy overrides it).
+    pub fn severity_for(&self, rule_id: &str, default: Severity) -> Severity {
+        self.severity
+            .iter()
+            .find(|(id, _)| id == rule_id)
+            .map(|(_, s)| *s)
+            .unwrap_or(default)
+    }
+
+    /// Zone of a source file, by longest matching path prefix. A file
+    /// can sit in at most one *path* zone; hot-path membership is per
+    /// function, not per file.
+    pub fn path_zone(&self, rel_path: &str) -> Option<Zone> {
+        let hit = |paths: &[String]| {
+            paths.iter().any(|p| {
+                rel_path == p
+                    || (p.ends_with('/') && rel_path.starts_with(p.as_str()))
+            })
+        };
+        if hit(&self.determinism_paths) {
+            Some(Zone::Determinism)
+        } else if hit(&self.serving_paths) {
+            Some(Zone::Serving)
+        } else {
+            None
+        }
+    }
+
+    /// Whether a function-name stack entry is in the hot-path zone.
+    /// Policy entries match the qualified name exactly, or the bare
+    /// name when the entry carries no `::` (free functions).
+    pub fn is_hot_function(&self, qualified: &str) -> bool {
+        self.hot_path_functions.iter().any(|f| {
+            f == qualified
+                || (!f.contains("::")
+                    && qualified.rsplit("::").next() == Some(f.as_str()))
+        })
+    }
+
+    /// Parse a policy document.
+    pub fn parse(text: &str) -> Result<Policy, String> {
+        let v = Json::parse(text).map_err(|e| format!("policy: {e}"))?;
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("policy: missing \"schema\"")?;
+        if schema != POLICY_SCHEMA {
+            return Err(format!(
+                "policy: schema {schema:?}, want {POLICY_SCHEMA:?}"
+            ));
+        }
+        let schema_version = v
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or("policy: missing \"schema_version\"")?;
+        if schema_version as u64 != POLICY_VERSION {
+            return Err(format!(
+                "policy: schema_version {schema_version}, this binary \
+                 reads v{POLICY_VERSION}"
+            ));
+        }
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("policy: missing \"version\"")? as u64;
+        let strings = |path: &[&str]| -> Result<Vec<String>, String> {
+            let arr = v
+                .at(path)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("policy: missing array {}", path.join("."))
+                })?;
+            arr.iter()
+                .map(|e| {
+                    e.as_str().map(String::from).ok_or_else(|| {
+                        format!(
+                            "policy: non-string entry in {}",
+                            path.join(".")
+                        )
+                    })
+                })
+                .collect()
+        };
+        let determinism_paths =
+            strings(&["zones", "determinism", "paths"])?;
+        let serving_paths = strings(&["zones", "serving", "paths"])?;
+        let hot_path_functions =
+            strings(&["zones", "hot_path", "functions"])?;
+        let mut severity = Vec::new();
+        if let Some(Json::Obj(m)) = v.get("severity") {
+            for (rule, val) in m {
+                let s = val.as_str().ok_or_else(|| {
+                    format!("policy: severity.{rule} must be a string")
+                })?;
+                severity.push((rule.clone(), Severity::parse(s)?));
+            }
+        }
+        Ok(Policy {
+            version,
+            determinism_paths,
+            serving_paths,
+            hot_path_functions,
+            severity,
+        })
+    }
+
+    /// Load a policy file.
+    pub fn load(path: &Path) -> Result<Policy, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Policy::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const POLICY: &str = r#"{
+      "schema": "tod-lint-policy",
+      "schema_version": 1,
+      "version": 3,
+      "zones": {
+        "determinism": {"paths": ["obs/", "util/json.rs"]},
+        "serving": {"paths": ["runtime/", "exec/"]},
+        "hot_path": {"functions": ["Foo::bar", "free_fn"]}
+      },
+      "severity": {"srv-slice-index": "warn"}
+    }"#;
+
+    #[test]
+    fn parses_and_maps_zones() {
+        let p = Policy::parse(POLICY).unwrap();
+        assert_eq!(p.version, 3);
+        assert_eq!(p.path_zone("obs/span.rs"), Some(Zone::Determinism));
+        assert_eq!(p.path_zone("util/json.rs"), Some(Zone::Determinism));
+        assert_eq!(p.path_zone("util/csv.rs"), None);
+        assert_eq!(p.path_zone("runtime/server.rs"), Some(Zone::Serving));
+        assert_eq!(p.path_zone("main.rs"), None);
+        // exact-file entries do not match as prefixes
+        assert_eq!(p.path_zone("util/json.rs.bak"), None);
+    }
+
+    #[test]
+    fn hot_function_matching() {
+        let p = Policy::parse(POLICY).unwrap();
+        assert!(p.is_hot_function("Foo::bar"));
+        assert!(!p.is_hot_function("Baz::bar"));
+        assert!(p.is_hot_function("free_fn"));
+        // bare policy entries also match methods of any impl
+        assert!(p.is_hot_function("Any::free_fn"));
+    }
+
+    #[test]
+    fn severity_overrides() {
+        let p = Policy::parse(POLICY).unwrap();
+        assert_eq!(
+            p.severity_for("srv-slice-index", Severity::Deny),
+            Severity::Warn
+        );
+        assert_eq!(
+            p.severity_for("srv-unwrap", Severity::Deny),
+            Severity::Deny
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        assert!(Policy::parse("{\"schema\":\"x\"}").is_err());
+        assert!(Policy::parse("not json").is_err());
+        let wrong_ver = POLICY.replace(
+            "\"schema_version\": 1",
+            "\"schema_version\": 2",
+        );
+        assert!(Policy::parse(&wrong_ver).is_err());
+    }
+}

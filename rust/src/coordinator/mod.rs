@@ -13,6 +13,11 @@
 //! hyperparameter grid search, and [`baselines`] provides the comparison
 //! points (fixed single DNN, and a Chameleon-style periodic re-profiler).
 
+// Serving zone (lint-policy.json): sessions and schedulers sit on the
+// per-frame request path; a failed selection or inference must degrade
+// the frame, never the process. Tests are exempt via clippy.toml.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod baselines;
 pub mod dispatch;
 pub mod multistream;

@@ -68,8 +68,11 @@ impl Thresholds {
     }
 
     /// The paper's optimum: `H_opt = {0.007, 0.03, 0.04}` (§III.B.4).
+    /// Constructed directly — the literal is strictly ascending and in
+    /// range (asserted by test), so no fallible validation runs on the
+    /// serving path.
     pub fn h_opt() -> Self {
-        Thresholds::new(vec![0.007, 0.03, 0.04]).expect("H_opt is valid")
+        Thresholds(vec![0.007, 0.03, 0.04])
     }
 
     pub fn values(&self) -> &[f64] {
@@ -288,6 +291,15 @@ mod tests {
             );
             prev = idx;
         }
+    }
+
+    #[test]
+    fn h_opt_passes_validation() {
+        // h_opt() constructs directly to stay panic-free; this pins
+        // the literal to the same invariants new() enforces
+        let direct = Thresholds::h_opt();
+        let validated = Thresholds::new(direct.values().to_vec()).unwrap();
+        assert_eq!(direct, validated);
     }
 
     #[test]

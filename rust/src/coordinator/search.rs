@@ -41,6 +41,7 @@ impl SearchSpace {
                     match Thresholds::new(vec![a, b, c]) {
                         Ok(t) => out.push(t),
                         Err(ThresholdError::NotAscending(_)) => {}
+                        // tod-lint: allow(srv-panic) reason="offline grid-search tool rejecting a malformed axis; never on the serving path"
                         Err(e) => panic!("invalid search space: {e}"),
                     }
                 }

@@ -411,13 +411,11 @@ impl<'a> StreamSession<'a> {
         let (outcome, interval) = self
             .acc
             .on_frame_shared(frame, resource_free, || latency_of(dnn));
-        let event = match outcome {
-            FrameOutcome::Inferred => {
+        let event = match (outcome, interval) {
+            (FrameOutcome::Inferred, Some(interval)) => {
                 // the accelerator time is committed whether or not the
                 // backend succeeds: the busy interval, energy and
                 // deploy accounting describe what the hardware did
-                let interval =
-                    interval.expect("inferred frame has a busy interval");
                 let (s, e) = interval;
                 // queueing/contention wait is capture → accelerator
                 // start; the inference span carries the busy interval
@@ -483,7 +481,12 @@ impl<'a> StreamSession<'a> {
                 self.span_close(e);
                 session_ev
             }
-            FrameOutcome::Dropped => {
+            // `(Inferred, None)` cannot be constructed (the frame
+            // clock returns the busy window with every inferred
+            // verdict); treating the pairing as a drop keeps the
+            // serving path panic-free rather than trusting that
+            // invariant with an expect
+            (FrameOutcome::Dropped, _) | (FrameOutcome::Inferred, None) => {
                 self.dnn_series.push(None);
                 // acc.now() is when the blocking inference frees the
                 // device — the cause anchor for `tod trace explain-drop`

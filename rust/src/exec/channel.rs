@@ -2,13 +2,24 @@
 //! `Mutex` + `Condvar`.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 struct Shared<T> {
     queue: Mutex<State<T>>,
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+}
+
+impl<T> Shared<T> {
+    /// Lock the state, recovering from a poisoned mutex: a peer that
+    /// panicked elsewhere must not cascade a panic into every channel
+    /// user. The state stays consistent under poisoning because each
+    /// critical section finishes its counter/queue bookkeeping before
+    /// running any code that can panic.
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.queue.lock().unwrap_or_else(PoisonError::into_inner)
+    }
 }
 
 struct State<T> {
@@ -51,7 +62,7 @@ impl<T> Sender<T> {
     /// Blocking send; applies backpressure when the queue is full.
     /// Fails only when every receiver has been dropped.
     pub fn send(&self, value: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         loop {
             if st.receivers == 0 {
                 return Err(SendError(value));
@@ -61,13 +72,17 @@ impl<T> Sender<T> {
                 self.shared.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.shared.not_full.wait(st).unwrap();
+            st = self
+                .shared
+                .not_full
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Non-blocking send; returns the value back when full/closed.
     pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         if st.receivers == 0 || st.items.len() >= self.shared.capacity {
             return Err(SendError(value));
         }
@@ -78,7 +93,7 @@ impl<T> Sender<T> {
 
     /// Number of queued items (racy; diagnostics only).
     pub fn len(&self) -> usize {
-        self.shared.queue.lock().unwrap().items.len()
+        self.shared.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -88,14 +103,14 @@ impl<T> Sender<T> {
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
-        self.shared.queue.lock().unwrap().senders += 1;
+        self.shared.lock().senders += 1;
         Sender { shared: self.shared.clone() }
     }
 }
 
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         st.senders -= 1;
         if st.senders == 0 {
             // wake receivers so they can observe disconnection
@@ -109,7 +124,7 @@ impl<T> Receiver<T> {
     /// Blocking receive; `None` once the channel is empty and all
     /// senders are gone.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         loop {
             if let Some(v) = st.items.pop_front() {
                 self.shared.not_full.notify_one();
@@ -118,13 +133,17 @@ impl<T> Receiver<T> {
             if st.senders == 0 {
                 return None;
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = self
+                .shared
+                .not_empty
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         let v = st.items.pop_front();
         if v.is_some() {
             self.shared.not_full.notify_one();
@@ -135,14 +154,14 @@ impl<T> Receiver<T> {
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
-        self.shared.queue.lock().unwrap().receivers += 1;
+        self.shared.lock().receivers += 1;
         Receiver { shared: self.shared.clone() }
     }
 }
 
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         st.receivers -= 1;
         if st.receivers == 0 {
             drop(st);

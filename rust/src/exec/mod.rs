@@ -5,6 +5,11 @@
 //! PJRT inference worker while preserving the paper's single-inference-
 //! in-flight discipline.
 
+// Serving zone (lint-policy.json): the pool and channels carry every
+// batched request; poisoning recovery replaces unwrap on lock results.
+// Tests are exempt via clippy.toml.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod channel;
 pub mod pool;
 

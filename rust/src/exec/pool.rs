@@ -30,6 +30,11 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn `n` workers with a task queue of `queue_cap` (backpressure:
     /// `submit` blocks when the queue is full).
+    ///
+    /// Panics when the OS refuses to spawn a thread — a construction-
+    /// time resource failure, not a serving-path state (the pool is
+    /// built once at server start-up, before any request exists).
+    #[allow(clippy::expect_used)]
     pub fn new(n: usize, queue_cap: usize) -> Self {
         assert!(n > 0);
         let (tx, rx) = bounded::<Job>(queue_cap.max(1));
@@ -55,6 +60,7 @@ impl ThreadPool {
                             job();
                         }
                     })
+                    // tod-lint: allow(srv-expect) reason="construction-time OS spawn failure, before any request exists"
                     .expect("spawn worker")
             })
             .collect();
@@ -70,12 +76,14 @@ impl ThreadPool {
         f: F,
     ) -> Result<(), SubmitError> {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        match self
-            .tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-        {
+        // tx is None only after Drop runs, so this arm is unreachable
+        // from safe code — but a closed pool is exactly what
+        // SubmitError describes, so report it instead of panicking
+        let Some(tx) = self.tx.as_ref() else {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError);
+        };
+        match tx.send(Box::new(f)) {
             Ok(()) => Ok(()),
             Err(_) => {
                 self.in_flight.fetch_sub(1, Ordering::SeqCst);

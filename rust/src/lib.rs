@@ -157,13 +157,30 @@
 //! [`obs::Event::SloRecovered`] transitions — `tod slo check` turns a
 //! scenario run into a CI health gate.
 //!
+//! ## Static analysis: the invariants, enforced at the source
+//!
+//! The three invariant families above — byte-stable serialisation,
+//! a panic-free serving path, alloc-free hot loops — are each pinned
+//! dynamically (golden traces, property tests, the counting
+//! allocator). The [`analysis`] subsystem enforces the same three as
+//! **rule zones** at the source level: `tod lint` scans the crate's
+//! own sources with a dependency-free token scanner, maps files and
+//! functions onto zones via the versioned `rust/lint-policy.json`
+//! (schema `tod-lint-policy` v1), and reports every violation as
+//! `file:line` + rule id + zone in a versioned `tod-lint` JSON
+//! report. Exemptions are inline `// tod-lint: allow(<rule>)
+//! reason="..."` waivers — honoured, but enumerated in the report so
+//! they stay visible — and `tod lint --check` gates CI on zero
+//! unwaived findings. See DESIGN.md §16.
+//!
 //! See `DESIGN.md` for the system inventory, the per-experiment index,
 //! the multi-stream architecture (§8), the power subsystem (§10),
 //! the batching server (§11), the scenario matrix + conformance
-//! harness (§12), the performance model (§13) and the observability
-//! layers (§14–§15), and `EXPERIMENTS.md` for paper-vs-measured
-//! results.
+//! harness (§12), the performance model (§13), the observability
+//! layers (§14–§15) and the static-analysis zones (§16), and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod app;
 pub mod bench;
 pub mod cli;

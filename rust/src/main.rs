@@ -19,6 +19,8 @@
 //!   structured trace written by `run --trace` (DESIGN.md §14).
 //! * `metrics [--prom|--json]` — run the canonical workload with the
 //!   metrics registry attached and print the exposition.
+//! * `lint [--check]` — zone-aware static analysis of the crate's own
+//!   sources against `rust/lint-policy.json` (DESIGN.md §16).
 //! * `bench-report` — one-line summary of key performance counters.
 
 use std::cell::RefCell;
@@ -69,6 +71,7 @@ fn main() {
         Some("metrics") => cmd_metrics(&args),
         Some("bench") => cmd_bench(&args),
         Some("bench-report") => cmd_bench_report(),
+        Some("lint") => cmd_lint(&args),
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
             usage();
@@ -86,8 +89,8 @@ fn usage() {
     eprintln!(
         "tod — Transprecise Object Detection (ICFEC 2021 reproduction)\n\
          usage: tod <figures|search|run|calibrate|multistream|power|\
-         dataset|scenario|serve|trace|slo|metrics|bench|bench-report> \
-         [flags]\n\
+         dataset|scenario|serve|trace|slo|metrics|bench|bench-report|\
+         lint> [flags]\n\
          \n\
          figures --all | --id <table1|fig4..fig15|multistream|predictor|\
          power|scenario> [--out results]\n\
@@ -200,6 +203,17 @@ fn usage() {
          hot-path micro-bench suite (see DESIGN.md s13); --check diffs \
          against\n  \
          the committed baseline and exits 1 on a pinned-metric regression\n\
+         lint [--src DIR] [--policy FILE] [--json] [--out report.json] \
+         [--check]\n  \
+         zone-aware static analysis of the crate sources (DESIGN.md s16): \
+         the\n  \
+         determinism / serving / hot-path rule zones come from \
+         rust/lint-policy.json\n  \
+         and findings are waivable inline with `tod-lint: allow(<rule>) \
+         reason=..`;\n  \
+         --json prints the versioned tod-lint report, --check exits 1 on \
+         any\n  \
+         unwaived deny finding (the CI gate)\n\
          bench-report"
     );
 }
@@ -1851,6 +1865,103 @@ fn cmd_bench(args: &Args) -> i32 {
             return 1;
         }
         println!("no regression against {path}");
+    }
+    0
+}
+
+/// Resolve a lint input path: an explicit flag must exist; otherwise
+/// try repo-root-relative then `rust/`-relative candidates (the same
+/// two working directories `default_goldens_dir` serves).
+fn resolve_lint_path(
+    explicit: Option<&str>,
+    flag: &str,
+    candidates: &[&str],
+) -> Result<PathBuf, String> {
+    if let Some(p) = explicit {
+        let pb = PathBuf::from(p);
+        if pb.exists() {
+            return Ok(pb);
+        }
+        return Err(format!("--{flag} {p}: no such path"));
+    }
+    for c in candidates {
+        let pb = PathBuf::from(c);
+        if pb.exists() {
+            return Ok(pb);
+        }
+    }
+    Err(format!(
+        "no default for --{flag} found relative to the current \
+         directory (tried {}); run from the repository root or pass \
+         --{flag} explicitly",
+        candidates.join(", ")
+    ))
+}
+
+/// `tod lint` — zone-aware static analysis of the crate's own sources
+/// (DESIGN.md §16). `--check` is the CI gate: exit 1 on any unwaived
+/// deny finding.
+fn cmd_lint(args: &Args) -> i32 {
+    use tod::analysis::{run_lint, Policy};
+
+    let src = match resolve_lint_path(
+        args.get("src"),
+        "src",
+        &["rust/src", "src"],
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let policy_path = match resolve_lint_path(
+        args.get("policy"),
+        "policy",
+        &["rust/lint-policy.json", "lint-policy.json"],
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let policy = match Policy::load(&policy_path) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let report = match run_lint(&src, &policy) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    if args.has("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if let Some(out) = args.get("out") {
+        let text = report.to_json().to_pretty();
+        if let Err(e) = std::fs::write(out, text) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        eprintln!("lint report written to {out}");
+    }
+    if args.has("check") && !report.clean() {
+        eprintln!(
+            "tod lint --check: {} unwaived deny finding(s) under policy \
+             {} v{}",
+            report.findings.len(),
+            policy_path.display(),
+            policy.version
+        );
+        return 1;
     }
     0
 }

@@ -121,6 +121,7 @@ impl PowerBudget {
     pub fn new(cfg: BudgetConfig, latency: &LatencyModel) -> Self {
         match Self::try_new(cfg, latency) {
             Ok(b) => b,
+            // tod-lint: allow(srv-panic) reason="documented construction-time contract; CLI callers use try_new"
             Err(e) => panic!("invalid power budget: {e}"),
         }
     }

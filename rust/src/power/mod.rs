@@ -27,6 +27,11 @@
 //! `benches/power.rs` and `examples/power_budget.rs`. See DESIGN.md
 //! §10.
 
+// Serving zone (lint-policy.json): the budget governor gates every
+// frame's DNN choice; metering folds into the live session loop.
+// Tests are exempt via clippy.toml.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod budget;
 pub mod meter;
 pub mod policy;

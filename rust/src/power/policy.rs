@@ -132,12 +132,15 @@ impl BudgetedPolicy {
     }
 
     /// Heaviest feasible DNN no heavier than `chosen`; the lightest
-    /// DNN when nothing is feasible.
+    /// DNN when nothing is feasible. Walks the ladder itself rather
+    /// than indexing back through `from_index`, so no unrepresentable
+    /// index can arise.
     fn demote(chosen: DnnKind, mask: &DnnMask) -> DnnKind {
-        for i in (0..=chosen.index()).rev() {
-            if mask[i] {
-                return DnnKind::from_index(i)
-                    .expect("mask index is in range");
+        for (d, feasible) in
+            DnnKind::ALL.iter().zip(mask).take(chosen.index() + 1).rev()
+        {
+            if *feasible {
+                return *d;
             }
         }
         DnnKind::ALL[0]

@@ -12,6 +12,11 @@
 //! into per-DNN micro-batches and [`server`] serves them panic-free
 //! behind bounded admission — see DESIGN.md §11.
 
+// Serving zone (lint-policy.json): the request path must never die.
+// The inner attribute covers every submodule file; tests are exempt
+// via clippy.toml (allow-unwrap-in-tests / allow-expect-in-tests).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod batch;
 pub mod decode;
 pub mod engine;

@@ -384,6 +384,7 @@ impl ServerCore {
     /// [`BatchConfig::validate`]); prefer validating CLI input first.
     pub fn new(cfg: BatchConfig) -> ServerCore {
         if let Err(e) = cfg.validate() {
+            // tod-lint: allow(srv-panic) reason="documented construction-time contract; CLI validates first, no request exists yet"
             panic!("invalid batch config: {e}");
         }
         // reserve the admission bound up front: once every variant has
@@ -509,6 +510,7 @@ impl ServerCore {
                 return BatchPoll::Batch(MicroBatch {
                     dnn,
                     jobs: buf,
+                    // tod-lint: allow(hot-clone) reason="Arc refcount bump handing the recycle pool to the batch, not a deep copy"
                     recycle: Some(sh.spare.clone()),
                 });
             }

@@ -1,0 +1,15 @@
+//! Hot-path fixture: Core::step is policy-enumerated, Core::cold is not.
+
+pub struct Core;
+
+impl Core {
+    pub fn step(&self) -> usize {
+        let v: Vec<usize> = (0..4).collect();
+        let w = v.clone();
+        w.len()
+    }
+
+    pub fn cold(&self) -> Vec<usize> {
+        (0..4).collect()
+    }
+}

@@ -1,0 +1,9 @@
+//! Determinism-zone fixture: deliberately violates every det rule.
+
+pub fn stamp() -> f64 {
+    let t = std::time::Instant::now();
+    let mut m = std::collections::HashMap::new();
+    m.insert("k", 1);
+    let _ord = 0.1_f64.partial_cmp(&0.2).unwrap();
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,22 @@
+//! Serving-zone fixture: panic sites outside tests, one exempt inside.
+
+pub fn live(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn looked(x: Option<u32>) -> u32 {
+    x.expect("present")
+}
+
+pub fn boom() {
+    panic!("no");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Waiver fixture: honoured, reason-less, and stale waivers.
+
+pub fn guarded() {
+    // tod-lint: allow(srv-panic) reason="fixture: documented contract"
+    panic!("guarded");
+}
+
+pub fn reasonless(x: Option<u32>) -> u32 {
+    // tod-lint: allow(srv-unwrap)
+    x.unwrap()
+}
+
+pub fn stale() {
+    // tod-lint: allow(srv-expect) reason="fixture: nothing to waive"
+    let _ = 1 + 1;
+}

@@ -1,0 +1,172 @@
+//! Integration tests for `tod lint` (analysis/, DESIGN.md §16).
+//!
+//! Three layers: a fixture tree with known-bad snippets asserting that
+//! each rule fires with the right id and file:line; the waiver
+//! round-trip (honoured, reason-less, stale); and the self-run gate —
+//! the crate's own `src/` under the shipped `lint-policy.json` must be
+//! clean, which is exactly what `tod lint --check` enforces in CI.
+
+use std::path::Path;
+
+use tod::analysis::report::{REPORT_SCHEMA, REPORT_VERSION};
+use tod::analysis::{run_lint, Policy, Zone};
+use tod::util::json::Json;
+
+/// Policy mapping the fixture tree's paths onto the three zones.
+const FIXTURE_POLICY: &str = r#"{
+  "schema": "tod-lint-policy",
+  "schema_version": 1,
+  "version": 7,
+  "zones": {
+    "determinism": {"paths": ["obs/"]},
+    "serving": {"paths": ["runtime/"]},
+    "hot_path": {"functions": ["Core::step"]}
+  },
+  "severity": {"srv-slice-index": "warn"}
+}"#;
+
+fn fixture_root() -> &'static Path {
+    Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/lint"
+    ))
+}
+
+#[test]
+fn fixtures_flag_every_rule_with_id_and_line() {
+    let policy = Policy::parse(FIXTURE_POLICY).unwrap();
+    let rep = run_lint(fixture_root(), &policy).unwrap();
+    assert_eq!(rep.files_scanned, 4);
+    assert_eq!(rep.policy_version, 7);
+
+    let got: Vec<(&str, usize, &str)> = rep
+        .findings
+        .iter()
+        .map(|f| (f.file.as_str(), f.line, f.rule.as_str()))
+        .collect();
+    // sorted by (file, line, rule) — the report pins this order
+    let want = [
+        ("hot.rs", 7, "hot-collect"),
+        ("hot.rs", 8, "hot-clone"),
+        ("obs/clocky.rs", 4, "det-wall-clock"),
+        ("obs/clocky.rs", 5, "det-unordered-iter"),
+        ("obs/clocky.rs", 7, "det-float-cmp-unwrap"),
+        ("runtime/request.rs", 4, "srv-unwrap"),
+        ("runtime/request.rs", 8, "srv-expect"),
+        ("runtime/request.rs", 12, "srv-panic"),
+        ("runtime/waived.rs", 9, "waiver-missing-reason"),
+        ("runtime/waived.rs", 10, "srv-unwrap"),
+    ];
+    assert_eq!(got, want, "deny findings (file, line, rule)");
+
+    // the unwrap inside request.rs's #[cfg(test)] module is exempt:
+    // no finding points past line 12 of that file
+    assert!(rep
+        .findings
+        .iter()
+        .all(|f| f.file != "runtime/request.rs" || f.line <= 12));
+    // Core::cold's collect (hot.rs:13) is outside the hot zone
+    assert!(!got.contains(&("hot.rs", 13, "hot-collect")));
+}
+
+#[test]
+fn waiver_round_trip_honoured_and_enumerated() {
+    let policy = Policy::parse(FIXTURE_POLICY).unwrap();
+    let rep = run_lint(fixture_root(), &policy).unwrap();
+
+    // honoured: the panic under the reasoned waiver is suppressed but
+    // enumerated with its reason
+    assert_eq!(rep.waived.len(), 1);
+    let w = &rep.waived[0];
+    assert_eq!(w.finding.file, "runtime/waived.rs");
+    assert_eq!(w.finding.line, 5);
+    assert_eq!(w.finding.rule, "srv-panic");
+    assert_eq!(w.reason, "fixture: documented contract");
+
+    // stale: the srv-expect waiver covering a clean line surfaces as
+    // an unused-waiver advisory at its declaration line
+    assert_eq!(rep.advisories.len(), 1);
+    assert_eq!(rep.advisories[0].rule, "unused-waiver");
+    assert_eq!(rep.advisories[0].file, "runtime/waived.rs");
+    assert_eq!(rep.advisories[0].line, 14);
+}
+
+#[test]
+fn report_json_is_versioned_and_complete() {
+    let policy = Policy::parse(FIXTURE_POLICY).unwrap();
+    let rep = run_lint(fixture_root(), &policy).unwrap();
+    let j = rep.to_json();
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some(REPORT_SCHEMA));
+    assert_eq!(
+        j.get("schema_version").and_then(Json::as_usize),
+        Some(REPORT_VERSION as usize)
+    );
+    assert_eq!(j.get("policy_version").and_then(Json::as_usize), Some(7));
+    assert_eq!(j.get("files_scanned").and_then(Json::as_usize), Some(4));
+    let findings = j.get("findings").and_then(Json::as_arr).unwrap();
+    assert_eq!(findings.len(), rep.findings.len());
+    let waived = j.get("waived").and_then(Json::as_arr).unwrap();
+    assert_eq!(
+        waived[0].get("reason").and_then(Json::as_str),
+        Some("fixture: documented contract")
+    );
+    // byte-determinism: re-running the scan renders identical JSON
+    let rep2 = run_lint(fixture_root(), &policy).unwrap();
+    assert_eq!(rep.to_json().to_pretty(), rep2.to_json().to_pretty());
+}
+
+#[test]
+fn shipped_policy_parses_and_maps_the_real_zones() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let policy = Policy::load(&root.join("lint-policy.json")).unwrap();
+    assert_eq!(
+        policy.path_zone("obs/trace.rs"),
+        Some(Zone::Determinism)
+    );
+    assert_eq!(
+        policy.path_zone("runtime/server.rs"),
+        Some(Zone::Serving)
+    );
+    assert_eq!(policy.path_zone("analysis/mod.rs"), None);
+    assert!(policy.is_hot_function("StreamSession::step"));
+    assert!(policy.is_hot_function("nms"));
+    assert!(!policy.is_hot_function("StreamSession::summary"));
+}
+
+#[test]
+fn self_run_is_clean_and_every_waiver_has_a_reason() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let policy = Policy::load(&root.join("lint-policy.json")).unwrap();
+    let rep = run_lint(&root.join("src"), &policy).unwrap();
+    assert!(rep.files_scanned > 50, "scanned {}", rep.files_scanned);
+
+    let details: Vec<String> = rep
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        rep.clean(),
+        "unwaived deny findings in src/:\n{}",
+        details.join("\n")
+    );
+    // the waiver protocol's own guarantee, end to end: everything
+    // waived in the real tree carries a non-empty reason
+    assert!(!rep.waived.is_empty(), "expected the documented waivers");
+    for w in &rep.waived {
+        assert!(
+            !w.reason.trim().is_empty(),
+            "{}:{} waived without reason",
+            w.finding.file,
+            w.finding.line
+        );
+    }
+    // and none of them is stale
+    let stale: Vec<String> = rep
+        .advisories
+        .iter()
+        .filter(|a| a.rule == "unused-waiver")
+        .map(|a| format!("{}:{}", a.file, a.line))
+        .collect();
+    assert!(stale.is_empty(), "stale waivers: {}", stale.join(", "));
+}
