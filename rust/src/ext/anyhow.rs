@@ -1,0 +1,193 @@
+//! Minimal `anyhow`-compatible error handling for the PJRT runtime.
+//!
+//! Implements exactly the subset `runtime/{engine,pool,serve,manifest}.rs`
+//! uses: an opaque [`Error`] carrying a context chain, [`Result`], the
+//! [`anyhow!`]/[`bail!`] macros, and the [`Context`] extension trait for
+//! `Result` and `Option`. Like the real crate, [`Error`] deliberately
+//! does *not* implement `std::error::Error`, which is what makes the
+//! blanket `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// Opaque error: a message plus the chain of contexts wrapped around it.
+pub struct Error {
+    /// Outermost context first, root cause last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Root error from anything displayable (what `anyhow!` expands to).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap one more layer of context around this error.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.chain.is_empty() {
+            return f.write_str("unknown error");
+        }
+        if f.alternate() {
+            // `{:#}`: the whole chain on one line, like the real crate
+            return f.write_str(&self.chain.join(": "));
+        }
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain.iter().enumerate() {
+            if i == 0 {
+                writeln!(f, "{msg}")?;
+            } else {
+                if i == 1 {
+                    writeln!(f, "\nCaused by:")?;
+                }
+                writeln!(f, "    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::ext::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::ext::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+
+/// Attach context to errors (`Result`) or absence (`Option`).
+pub trait Context<T> {
+    /// Wrap the error with `context` (eagerly evaluated).
+    fn context(self, context: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with lazily-built context.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, context: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, context: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let err = io_err()
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(err.to_string(), "reading manifest");
+        assert_eq!(err.root_cause(), "gone");
+        let chain: Vec<_> = err.chain().collect();
+        assert_eq!(chain, ["reading manifest", "gone"]);
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<u32> = None;
+        let err = missing.context("no value").unwrap_err();
+        assert_eq!(err.to_string(), "no value");
+
+        fn bails() -> Result<()> {
+            bail!("code {}", 7);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "code 7");
+        assert_eq!(anyhow!("x={}", 1).to_string(), "x=1");
+    }
+
+    #[test]
+    fn alternate_display_joins_the_chain() {
+        let err = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(format!("{err:#}"), "reading manifest: gone");
+        assert_eq!(format!("{err}"), "reading manifest");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let err = io_err()
+            .context("inner")
+            .map_err(|e| e.context("outer"))
+            .unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("gone"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Vendored shims for the two external crates the seed's PJRT runtime
+//! was written against (`anyhow`, `xla`), so the crate keeps its
+//! no-external-dependencies invariant (DESIGN.md §2) while the PJRT
+//! request path still compiles everywhere.
+//!
+//! * [`anyhow`] is a minimal API-compatible error type covering the
+//!   subset the runtime uses (`Result`, `anyhow!`, `bail!`,
+//!   `Context::{context,with_context}`, blanket `From<E: Error>`).
+//! * [`xla`] is a **stub**: every entry point that would touch the PJRT
+//!   C API returns [`xla::Error`] with an explanatory message, so
+//!   `tod serve` degrades to a clean runtime error instead of a build
+//!   break on machines without `xla_extension`. Swapping the real
+//!   bindings back in is a one-line import change in
+//!   `runtime/{engine,pool}.rs` plus a Cargo dependency.
+
+pub mod anyhow;
+pub mod xla;

@@ -1,0 +1,156 @@
+//! Stub of the `xla` crate's PJRT surface (the subset
+//! `runtime/{engine,pool}.rs` uses).
+//!
+//! Containers without `xla_extension` still build the full serving
+//! path; every entry point that would touch the PJRT C API returns
+//! [`Error`] instead. [`PjRtClient::cpu`] is the single choke point —
+//! it fails first, so the downstream methods on [`Literal`],
+//! [`PjRtBuffer`] and [`PjRtLoadedExecutable`] are unreachable at
+//! runtime but keep the real crate's shapes so swapping the genuine
+//! bindings back in is purely a dependency change.
+
+use std::fmt;
+
+pub const UNAVAILABLE: &str = "PJRT backend not built: this binary was compiled with the in-crate \
+     `xla` stub (src/ext/xla.rs). Link the real `xla` crate / \
+     xla_extension to serve compiled detector variants";
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(UNAVAILABLE.to_string())
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// The real constructor dlopens the PJRT CPU plugin; the stub fails
+    /// here so nothing downstream can be reached with a live client.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for `xla::Literal` (host tensor).
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for `xla::ArrayShape`.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructor_fails_with_explanation() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub client must not construct"),
+        };
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn stub_error_converts_into_anyhow() {
+        fn load() -> crate::ext::anyhow::Result<PjRtClient> {
+            Ok(PjRtClient::cpu()?)
+        }
+        let err = load().unwrap_err();
+        assert!(err.to_string().contains("PJRT backend not built"));
+    }
+}

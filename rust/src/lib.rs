@@ -189,6 +189,7 @@ pub mod dataset;
 pub mod detection;
 pub mod eval;
 pub mod exec;
+pub mod ext;
 pub mod experiments;
 pub mod features;
 pub mod geometry;

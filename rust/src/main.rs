@@ -198,11 +198,13 @@ fn usage() {
          Prometheus\n  \
          text exposition (default) or the versioned JSON snapshot\n\
          bench [--json] [--out BENCH_6.json] [--quick] [--filter SUBSTR]\n  \
-         [--check [--baseline ../BENCH_6.json] [--tolerance 0.15]]  runs \
-         the\n  \
-         hot-path micro-bench suite (see DESIGN.md s13); --check diffs \
-         against\n  \
-         the committed baseline and exits 1 on a pinned-metric regression\n\
+         [--comment TEXT] [--check [--baseline ../BENCH_6.json] \
+         [--tolerance 0.15]]\n  \
+         runs the hot-path micro-bench suite (see DESIGN.md s13); \
+         --check diffs\n  \
+         against the committed baseline and exits 1 on a pinned-metric \
+         regression;\n  \
+         --comment overrides the report's stamped provenance line\n\
          lint [--src DIR] [--policy FILE] [--json] [--out report.json] \
          [--check]\n  \
          zone-aware static analysis of the crate sources (DESIGN.md s16): \
@@ -1821,7 +1823,11 @@ fn cmd_bench(args: &Args) -> i32 {
         return 2;
     }
 
-    let report = run_suite(&opts);
+    let mut report = run_suite(&opts);
+    if let Some(c) = args.get("comment") {
+        // e.g. name the reference machine when pinning a baseline
+        report.comment = Some(c.to_string());
+    }
 
     if args.has("json") {
         println!("{}", report.to_json().to_pretty());

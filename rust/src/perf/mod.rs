@@ -13,8 +13,12 @@
 //!   committed baseline and gates regressions: `min_ns` within 15%,
 //!   allocs/op never up. `null` baseline metrics are record-only
 //!   (bootstrap semantics for baselines authored without a toolchain).
+//!   Every report stamps a `comment` provenance line
+//!   ([`suite::default_provenance`], overridable with `--comment`) so a
+//!   committed baseline says which machine/profile produced its numbers.
 //!
-//! Driven by `tod bench [--json] [--out PATH] [--baseline PATH] [--check]`.
+//! Driven by `tod bench [--json] [--out PATH] [--baseline PATH] [--check]
+//! [--comment TEXT]`.
 
 pub mod alloc;
 pub mod report;

@@ -71,6 +71,10 @@ pub struct BenchReport {
     pub generation: u32,
     /// `"quick"` or `"full"` (target time per case).
     pub mode: String,
+    /// Free-form provenance of the run (reference machine, toolchain,
+    /// pinning protocol). Never compared by [`diff`](Self::diff) — it
+    /// exists so a committed baseline says where its numbers came from.
+    pub comment: Option<String>,
     pub cases: Vec<CaseReport>,
 }
 
@@ -98,13 +102,17 @@ impl BenchReport {
                 ("ops_per_s", opt_num(c.ops_per_s)),
             ])
         });
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::str(BENCH_SCHEMA)),
             ("schema_version", Json::num(BENCH_SCHEMA_VERSION as f64)),
             ("generation", Json::num(self.generation as f64)),
             ("mode", Json::str(&self.mode)),
             ("cases", Json::arr(cases)),
-        ])
+        ];
+        if let Some(c) = &self.comment {
+            fields.push(("comment", Json::str(c)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {
@@ -134,6 +142,10 @@ impl BenchReport {
             .and_then(Json::as_str)
             .unwrap_or("full")
             .to_string();
+        let comment = j
+            .get("comment")
+            .and_then(Json::as_str)
+            .map(str::to_string);
         let raw = j
             .get("cases")
             .and_then(Json::as_arr)
@@ -158,7 +170,7 @@ impl BenchReport {
                 ops_per_s: read_opt_num(c, "ops_per_s"),
             });
         }
-        Ok(BenchReport { generation, mode, cases })
+        Ok(BenchReport { generation, mode, comment, cases })
     }
 
     pub fn save(&self, path: &Path) -> io::Result<()> {
@@ -308,7 +320,12 @@ mod tests {
     }
 
     fn report(cases: Vec<CaseReport>) -> BenchReport {
-        BenchReport { generation: 6, mode: "full".to_string(), cases }
+        BenchReport {
+            generation: 6,
+            mode: "full".to_string(),
+            comment: None,
+            cases,
+        }
     }
 
     #[test]
@@ -317,6 +334,21 @@ mod tests {
         let j = r.to_json();
         let back = BenchReport::from_json(&j).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn comment_roundtrips_and_is_optional() {
+        // a baseline without the key (every pre-provenance BENCH_<n>)
+        // parses as None; a comment survives the round trip verbatim
+        let bare = report(vec![]);
+        let parsed = BenchReport::from_json(&bare.to_json()).unwrap();
+        assert_eq!(parsed.comment, None);
+        assert!(!bare.to_json().to_pretty().contains("comment"));
+
+        let mut with = report(vec![]);
+        with.comment = Some("ref machine: jetson-nano, rustc 1.79".into());
+        let back = BenchReport::from_json(&with.to_json()).unwrap();
+        assert_eq!(back.comment, with.comment);
     }
 
     #[test]

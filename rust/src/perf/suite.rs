@@ -107,9 +107,26 @@ impl Suite {
         BenchReport {
             generation: SUITE_GENERATION,
             mode: mode.to_string(),
+            comment: Some(default_provenance()),
             cases: self.cases,
         }
     }
+}
+
+/// Machine/toolchain provenance stamped into every report this binary
+/// writes, so a committed baseline's numbers are interpretable later.
+/// Only compile-time facts — no wall clock, no hostname — so the same
+/// binary always stamps the same string.
+pub fn default_provenance() -> String {
+    format!(
+        "recorded by tod bench: target {}-{}, {} build; pin protocol: \
+         run `tod bench --out BENCH_{}.json` on the reference machine \
+         and commit the result",
+        std::env::consts::ARCH,
+        std::env::consts::OS,
+        if cfg!(debug_assertions) { "debug" } else { "release" },
+        SUITE_GENERATION,
+    )
 }
 
 /// Mixed-class detection set with MOT-like box geometry.

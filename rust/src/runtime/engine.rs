@@ -4,7 +4,8 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::ext::anyhow::{bail, Context, Result};
+use crate::ext::xla;
 
 use crate::runtime::manifest::VariantSpec;
 

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::ext::anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 use crate::DnnKind;

@@ -11,6 +11,12 @@
 //! Scaling layer: [`batch`] collects requests from concurrent streams
 //! into per-DNN micro-batches and [`server`] serves them panic-free
 //! behind bounded admission — see DESIGN.md §11.
+//!
+//! The `anyhow`/`xla` surface these modules consume is vendored in
+//! [`crate::ext`] (the crate itself stays dependency-free): error
+//! chaining is fully functional, while the PJRT facade fails cleanly
+//! at `PjRtClient::cpu()` until a real backend is linked, so every
+//! simulator/eval path runs without one.
 
 // Serving zone (lint-policy.json): the request path must never die.
 // The inner attribute covers every submodule file; tests are exempt

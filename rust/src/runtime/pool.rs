@@ -3,7 +3,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::ext::anyhow::{anyhow, Result};
+use crate::ext::xla;
 
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::Manifest;

@@ -18,7 +18,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use crate::ext::anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::policy::{MbbsPolicy, SelectionPolicy};
 use crate::coordinator::scheduler::{DetectError, Detector};

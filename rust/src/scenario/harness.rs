@@ -852,6 +852,119 @@ mod tests {
         );
     }
 
+    /// A backend that always reports the same single detection, so the
+    /// noise post-filter's effect is directly observable per frame.
+    struct ConstDetector;
+    impl Detector for ConstDetector {
+        fn detect(
+            &mut self,
+            _frame: u64,
+            _gt: &[GtEntry],
+            _dnn: DnnKind,
+        ) -> Result<Vec<Detection>, DetectError> {
+            Ok(vec![Detection::new(
+                crate::geometry::BBox::new(10.0, 10.0, 40.0, 80.0),
+                0.9,
+                0,
+            )])
+        }
+    }
+
+    #[test]
+    fn noise_switches_exactly_at_phase_start() {
+        // miss = 0 keeps the filter deterministic: only the confidence
+        // attenuation distinguishes the noisy phase, so the boundary
+        // frame semantics (first_frame is *in* its phase) are pinned
+        // byte-exactly.
+        let night = NoiseProfile { miss: 0.0, conf_loss: 0.5 };
+        let mut det = NoisyDetector::new(
+            Box::new(ConstDetector),
+            7,
+            vec![(1, NoiseProfile::DAY), (31, night)],
+        );
+        let clean = det.detect(30, &[], DnnKind::Y416).unwrap();
+        assert_eq!(clean[0].score, 0.9, "frame 30 is still the clean phase");
+        let noisy = det.detect(31, &[], DnnKind::Y416).unwrap();
+        assert_eq!(noisy[0].score, 0.45, "frame 31 opens the noisy phase");
+        let later = det.detect(70, &[], DnnKind::Y416).unwrap();
+        assert_eq!(later[0].score, 0.45, "noise persists past the boundary");
+    }
+
+    /// Probe policy recording the clock values its hooks observe.
+    struct ClockProbe {
+        log: std::rc::Rc<std::cell::RefCell<Vec<f64>>>,
+    }
+    impl SelectionPolicy for ClockProbe {
+        fn select(
+            &mut self,
+            _features: &crate::features::FrameFeatures,
+        ) -> DnnKind {
+            DnnKind::Y416
+        }
+        fn label(&self) -> String {
+            "probe".into()
+        }
+        fn on_frame(&mut self, t_s: f64) {
+            self.log.borrow_mut().push(t_s);
+        }
+        fn on_inferred(&mut self, start_s: f64, end_s: f64, _dnn: DnnKind) {
+            self.log.borrow_mut().push(start_s);
+            self.log.borrow_mut().push(end_s);
+        }
+    }
+
+    #[test]
+    fn epoch_shift_offsets_every_policy_clock() {
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let probe = Box::new(ClockProbe { log: log.clone() });
+        let mut shifted = EpochShift { inner: probe, epoch: 2.5 };
+        shifted.on_frame(1.0);
+        shifted.on_inferred(1.0, 1.25, DnnKind::Y416);
+        assert_eq!(*log.borrow(), vec![3.5, 3.5, 3.75]);
+    }
+
+    #[test]
+    fn late_joiner_contends_in_board_time() {
+        let spec = ScenarioSpec::new(
+            "harness-churn",
+            "late joiner",
+            vec![
+                StreamSpec::new(
+                    "early",
+                    vec![PhaseSpec::new("only", 60).density(6)],
+                ),
+                StreamSpec::new(
+                    "late",
+                    vec![PhaseSpec::new("only", 60).density(6)],
+                )
+                .join_at(5.0),
+            ],
+        )
+        .seed(13);
+        let streams = spec.compile().unwrap();
+        let run =
+            run_scenario(&spec.name, &streams, &HarnessConfig::tod()).unwrap();
+        assert_eq!(run.per_stream[1].join_s, 5.0);
+        // every frame of both streams is accounted for: inferred+dropped
+        for s in &run.per_stream {
+            assert_eq!(
+                s.result.n_inferred + s.result.n_dropped,
+                s.result.n_frames
+            );
+            assert_eq!(s.result.n_frames, 60);
+        }
+        // board timeline extends past the late stream's join epoch, and
+        // no board-time busy interval of the late stream precedes it
+        assert!(run.utilisation.makespan >= 5.0);
+        let late = &run.per_stream[1];
+        for &(start, _, _) in &late.result.trace.busy {
+            assert!(
+                late.join_s + start >= 5.0 - 1e-9,
+                "late stream ran at board {start}"
+            );
+        }
+    }
+
     #[test]
     fn config_labels_are_canonical() {
         assert_eq!(HarnessConfig::tod().label(), "tod");

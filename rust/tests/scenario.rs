@@ -117,6 +117,50 @@ fn matrix_conformance_differential_and_schema() {
     }
 }
 
+/// The pinned-goldens gate: every golden committed under
+/// `tests/goldens/` must replay byte-identically with **no**
+/// `--bootstrap` escape hatch — this test never records, it only
+/// verifies. On a checkout still in the bootstrap state (README only,
+/// no `.json`) it reports and passes, because there is nothing pinned
+/// to defend yet; the CI golden-pin guard is what keeps that state
+/// from persisting silently.
+#[test]
+fn committed_goldens_replay_without_bootstrap() {
+    let dir = goldens_dir();
+    let committed = std::fs::read_dir(&dir)
+        .map(|rd| {
+            rd.filter_map(Result::ok)
+                .filter(|e| {
+                    e.path().extension().is_some_and(|x| x == "json")
+                })
+                .count()
+        })
+        .unwrap_or(0);
+    if committed == 0 {
+        eprintln!(
+            "note: {} holds no goldens — bootstrap state, nothing \
+             pinned to verify (the conformance test above records and \
+             cross-checks; commit its output to activate this gate)",
+            dir.display()
+        );
+        return;
+    }
+    assert_eq!(
+        committed,
+        ScenarioId::ALL.len(),
+        "{}: partial golden set — re-run `tod scenario record` and \
+         commit all {} scenarios",
+        dir.display(),
+        ScenarioId::ALL.len()
+    );
+    for (name, verdict) in conformance::check_goldens(&dir).expect("check") {
+        assert!(
+            matches!(verdict, CheckVerdict::Match),
+            "{name}: committed golden failed strict replay: {verdict:?}"
+        );
+    }
+}
+
 /// Determinism without any files: replaying one scenario twice from
 /// its seed yields byte-identical canonical records.
 #[test]

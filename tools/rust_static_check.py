@@ -1,0 +1,959 @@
+#!/usr/bin/env python3
+"""Static cross-checker for the `tod` crate, for containers without cargo.
+
+The crate has zero external dependencies, so every non-`std` name must
+resolve inside the crate itself. That makes a useful subset of rustc's
+name resolution implementable with text analysis:
+
+  1. module-tree construction from lib.rs / mod.rs `pub mod` items;
+  2. per-module public item inventory (struct/enum/trait/fn/const/type);
+  3. resolution of every `use crate::...` (and `use tod::...` from
+     tests/benches/examples) against that inventory;
+  4. enum-variant reference checks (`Enum::Variant` paths);
+  5. struct-literal field checks against the struct definition;
+  6. trait-impl completeness (required methods without default bodies);
+  7. method-existence probe for `.method(` calls against the union of
+     inherent/trait methods (advisory: no type inference).
+
+It is deliberately conservative: anything it cannot resolve with
+confidence is reported as `advisory`, not `error`. Errors are meant to
+be real compile breaks worth fixing before the first `cargo build`.
+
+Usage:  python3 tools/rust_static_check.py [--root rust] [--advisory]
+Exit:   non-zero iff any `error`-severity finding is emitted.
+"""
+
+import argparse
+import os
+import re
+import sys
+from collections import defaultdict
+
+# --------------------------------------------------------------------------
+# masking: blank comments / strings / char literals, preserve byte layout
+# --------------------------------------------------------------------------
+
+def mask_source(src: str) -> str:
+    out = list(src)
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        two = src[i : i + 2]
+        if two == "//":
+            j = i
+            while j < n and src[j] != "\n":
+                out[j] = " "
+                j += 1
+            i = j
+        elif two == "/*":
+            depth, j = 1, i + 2
+            out[i] = out[i + 1] = " "
+            while j < n and depth:
+                if src[j : j + 2] == "/*":
+                    depth += 1
+                    out[j] = out[j + 1] = " "
+                    j += 2
+                elif src[j : j + 2] == "*/":
+                    depth -= 1
+                    out[j] = out[j + 1] = " "
+                    j += 2
+                else:
+                    if src[j] != "\n":
+                        out[j] = " "
+                    j += 1
+            i = j
+        elif c == '"':
+            # raw string?
+            back = i - 1
+            hashes = 0
+            while back >= 0 and src[back] == "#":
+                hashes += 1
+                back -= 1
+            is_raw = back >= 0 and src[back] == "r" and (back == 0 or not (src[back - 1].isalnum() or src[back - 1] == "_") or src[back - 1] == "b")
+            j = i + 1
+            if is_raw and hashes >= 0:
+                close = '"' + "#" * hashes
+                end = src.find(close, j)
+                end = n if end == -1 else end + len(close)
+                for k in range(i, end):
+                    if src[k] != "\n":
+                        out[k] = " "
+                i = end
+            else:
+                while j < n:
+                    if src[j] == "\\":
+                        j += 2
+                        continue
+                    if src[j] == '"':
+                        j += 1
+                        break
+                    j += 1
+                for k in range(i, min(j, n)):
+                    if src[k] != "\n":
+                        out[k] = " "
+                i = j
+        elif c == "'":
+            # char literal vs lifetime: 'x' or '\x' is a literal; 'ident is a lifetime
+            if i + 2 < n and (src[i + 1] == "\\" or src[i + 2] == "'"):
+                j = i + 1
+                while j < n and src[j] != "'":
+                    if src[j] == "\\":
+                        j += 1
+                    j += 1
+                j += 1
+                for k in range(i, min(j, n)):
+                    out[k] = " "
+                i = j
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out)
+
+
+# --------------------------------------------------------------------------
+# crate model
+# --------------------------------------------------------------------------
+
+ITEM_RE = re.compile(
+    r"^\s*(?:pub(?:\(\w+\))?\s+)?(struct|enum|trait|fn|const|static|type|union|mod|macro_rules!)\s+([A-Za-z_][A-Za-z0-9_]*)",
+    re.M,
+)
+
+def line_of(src: str, pos: int) -> int:
+    return src.count("\n", 0, pos) + 1
+
+
+class Module:
+    def __init__(self, path, file):
+        self.path = path          # e.g. "scenario::harness"
+        self.file = file
+        self.items = {}           # name -> kind
+        self.enums = {}           # name -> set(variants)
+        self.structs = {}         # name -> set(fields) | None (tuple/unknown)
+        self.traits = {}          # name -> {"required": set(), "provided": set()}
+        self.reexports = []       # list of (use-path, alias-or-None, line)
+        self.fns = {}             # name -> arity (top-level only)
+
+
+def brace_span(src, open_idx):
+    depth = 0
+    for j in range(open_idx, len(src)):
+        if src[j] == "{":
+            depth += 1
+        elif src[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(src) - 1
+
+
+GENERIC_RE = re.compile(r"<[^<>]*>")
+
+def strip_generics(s: str) -> str:
+    prev = None
+    while prev != s:
+        prev = s
+        s = GENERIC_RE.sub("", s)
+    return s
+
+
+def split_top(s: str, sep: str = ","):
+    s = s.replace("->", "  ").replace("=>", "  ")  # arrows are not generics
+    parts, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "<([{":
+            depth += 1
+        elif ch in ">)]}":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        parts.append("".join(buf))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def parse_module(path, file, masked):
+    m = Module(path, file)
+    # enums
+    for em in re.finditer(r"(?:pub(?:\(\w+\))?\s+)?enum\s+([A-Za-z_][A-Za-z0-9_]*)\s*(?:<[^{]*>)?\s*\{", masked):
+        name = em.group(1)
+        close = brace_span(masked, masked.index("{", em.start()))
+        body = masked[em.end() : close]
+        variants = set()
+        for part in split_top(body):
+            vm = re.match(r"(?:#\[[^\]]*\]\s*)*([A-Z][A-Za-z0-9_]*)", part.strip())
+            if vm:
+                variants.add(vm.group(1))
+        m.enums[name] = variants
+        m.items[name] = "enum"
+    # structs with named fields
+    for sm in re.finditer(r"(?:pub(?:\(\w+\))?\s+)?struct\s+([A-Za-z_][A-Za-z0-9_]*)\s*(?:<[^;{(]*>)?\s*(\{|\(|;)", masked):
+        name, opener = sm.group(1), sm.group(2)
+        if opener == "{":
+            close = brace_span(masked, masked.index("{", sm.start()))
+            body = masked[sm.end() : close]
+            fields = set()
+            for part in split_top(body):
+                fm = re.match(
+                    r"(?:#\[[^\]]*\]\s*)*(?:pub(?:\(\w+\))?\s+)?([a-z_][A-Za-z0-9_]*)\s*:",
+                    part.strip(),
+                )
+                if fm:
+                    fields.add(fm.group(1))
+            m.structs[name] = fields
+        else:
+            m.structs[name] = None
+        m.items[name] = "struct"
+    # traits
+    for tm in re.finditer(r"(?:pub(?:\(\w+\))?\s+)?trait\s+([A-Za-z_][A-Za-z0-9_]*)[^{;]*\{", masked):
+        name = tm.group(1)
+        open_idx = masked.index("{", tm.start())
+        close = brace_span(masked, open_idx)
+        body = masked[open_idx + 1 : close]
+        req, prov = set(), set()
+        for fm in re.finditer(r"fn\s+([a-z_][A-Za-z0-9_]*)\s*(?:<[^(]*>)?\s*\(", body):
+            # does this fn have a body? scan forward for ';' vs '{' at depth 0
+            j = fm.end()
+            depth = 1  # inside the ( we just matched
+            while j < len(body) and depth:
+                if body[j] in "([{<":
+                    depth += 1
+                elif body[j] in ")]}>":
+                    depth -= 1
+                j += 1
+            # after params, skip return type to first ';' or '{'
+            while j < len(body) and body[j] not in ";{":
+                if body[j] == "<":
+                    d2 = 1
+                    j += 1
+                    while j < len(body) and d2:
+                        if body[j] == "<":
+                            d2 += 1
+                        elif body[j] == ">":
+                            d2 -= 1
+                        j += 1
+                else:
+                    j += 1
+            (req if j < len(body) and body[j] == ";" else prov).add(fm.group(1))
+        m.traits[name] = {"required": req, "provided": prov}
+        m.items[name] = "trait"
+    # top-level items of remaining kinds
+    for im in ITEM_RE.finditer(masked):
+        kind, name = im.group(1), im.group(2)
+        if kind in ("fn", "const", "static", "type", "union", "macro_rules!"):
+            m.items.setdefault(name, kind)
+    # re-exports:  pub use x::y::{A, B as C};
+    for um in re.finditer(r"^\s*pub\s+use\s+([^;]+);", masked, re.M):
+        m.reexports.append((um.group(1).strip(), line_of(masked, um.start())))
+    return m
+
+
+def expand_use(stem: str):
+    """Expand `a::b::{C, D as E, self}` into [(path, leaf)] pairs."""
+    stem = re.sub(r"\s+", " ", stem)
+    out = []
+    brace = stem.find("{")
+    if brace == -1:
+        p = stem
+        alias = None
+        if " as " in p:
+            p, alias = p.split(" as ")
+        p = p.strip()
+        out.append(p)
+        return out
+    prefix = stem[:brace].rstrip(": ")
+    inner = stem[brace + 1 : stem.rfind("}")]
+    for part in split_top(inner):
+        if part == "self":
+            out.append(prefix)
+            continue
+        if " as " in part:
+            part = part.split(" as ")[0].strip()
+        if "{" in part:
+            out.extend(expand_use(prefix + "::" + part))
+        else:
+            out.append(prefix + "::" + part)
+    return out
+
+
+class Crate:
+    def __init__(self, root):
+        self.root = root
+        self.modules = {}  # "a::b" -> Module
+        self.findings = []
+
+    def report(self, sev, file, line, msg):
+        self.findings.append((sev, file, line, msg))
+
+    def load(self):
+        src_root = os.path.join(self.root, "src")
+        for dirpath, _dirs, files in os.walk(src_root):
+            for f in files:
+                if not f.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, f)
+                rel = os.path.relpath(full, src_root)
+                parts = rel[:-3].split(os.sep)
+                if parts[-1] in ("mod", "lib", "main"):
+                    parts = parts[:-1]
+                mod_path = "::".join(parts)
+                with open(full, encoding="utf-8") as fh:
+                    src = fh.read()
+                masked = mask_source(src)
+                mod = parse_module(mod_path, full, masked)
+                if mod_path in self.modules:
+                    # merge (lib.rs + main.rs both map to "")
+                    prev = self.modules[mod_path]
+                    prev.items.update(mod.items)
+                    prev.enums.update(mod.enums)
+                    prev.structs.update(mod.structs)
+                    prev.traits.update(mod.traits)
+                    prev.reexports.extend(mod.reexports)
+                else:
+                    self.modules[mod_path] = mod
+
+    # ---- resolution ------------------------------------------------------
+
+    def module_exists(self, path):
+        return path in self.modules
+
+    def item_in(self, mod_path, name):
+        mod = self.modules.get(mod_path)
+        if mod and name in mod.items:
+            return True
+        # via re-export
+        if mod:
+            for stem, _ln in mod.reexports:
+                for p in expand_use(stem):
+                    if p.split("::")[-1] == name:
+                        return True
+                    if p.endswith("::*"):
+                        base = self.norm_crate_path(p[:-3], mod_path)
+                        if base and self.item_in(base, name):
+                            return True
+        return False
+
+    def norm_crate_path(self, p, current_mod=""):
+        p = p.strip()
+        segs = p.split("::")
+        if segs[0] in ("crate", "tod"):
+            segs = segs[1:]
+        elif segs[0] == "self":
+            segs = (current_mod.split("::") if current_mod else []) + segs[1:]
+        elif segs[0] == "super":
+            base = current_mod.split("::")[:-1] if current_mod else []
+            segs = base + segs[1:]
+        else:
+            return None
+        return "::".join(segs)
+
+    def resolve_use(self, full_path, file, line):
+        """full_path like scenario::harness::ScenarioHarness (already crate-rooted)."""
+        segs = [s for s in full_path.split("::") if s]
+        if not segs:
+            return
+        if segs[0] == "*":
+            return  # glob of crate root (or untracked inline module)
+        # single-segment path: item in the crate root (lib.rs / re-export)
+        if len(segs) == 1 and self.item_in("", segs[0]):
+            return
+        # longest module prefix
+        for cut in range(len(segs), 0, -1):
+            prefix = "::".join(segs[:cut])
+            if self.module_exists(prefix):
+                rest = segs[cut:]
+                if not rest:
+                    return  # imported a module
+                if len(rest) >= 1:
+                    name = rest[0]
+                    if name == "*":
+                        return
+                    if self.item_in(prefix, name):
+                        # if deeper segs remain it's an enum variant / assoc item; check variant
+                        if len(rest) >= 2:
+                            mod = self.modules[prefix]
+                            if name in mod.enums and rest[1] not in mod.enums[name] and rest[1] != "*":
+                                self.report("error", file, line,
+                                            f"`{full_path}`: enum `{name}` has no variant `{rest[1]}`")
+                        return
+                    self.report("error", file, line,
+                                f"unresolved import `{full_path}`: no `{name}` in `{prefix or 'crate root'}`")
+                    return
+        self.report("error", file, line, f"unresolved import `{full_path}`: no such module path")
+
+    def check_uses(self, file, masked, current_mod, crate_names=("crate", "tod")):
+        for um in re.finditer(r"^\s*(?:pub\s+)?use\s+([^;]+);", masked, re.M):
+            stem = um.group(1)
+            ln = line_of(masked, um.start())
+            for p in expand_use(stem):
+                head = p.split("::")[0]
+                if head in crate_names or head in ("self", "super"):
+                    norm = self.norm_crate_path(p, current_mod)
+                    if norm is not None and norm != "":
+                        if norm.endswith("::*"):
+                            base = norm[:-3]
+                            if not self.module_exists(base):
+                                self.report("error", file, ln, f"glob import from missing module `{base}`")
+                        else:
+                            self.resolve_use(norm, file, ln)
+
+    def all_enum_variants(self):
+        d = defaultdict(set)
+        for mod in self.modules.values():
+            for en, vs in mod.enums.items():
+                d[en] |= vs
+        return d
+
+    def all_struct_fields(self):
+        d = {}
+        for mod in self.modules.values():
+            for sn, fs in mod.structs.items():
+                if fs is None:
+                    d[sn] = None  # tuple struct or unknown: never field-check
+                elif sn not in d:
+                    d[sn] = set(fs)
+                elif d[sn] is not None and d[sn] != set(fs):
+                    d[sn] = None  # same name, different shape: ambiguous
+        return d
+
+    def all_methods(self):
+        """Union of every `fn name(` appearing inside any impl/trait block."""
+        methods = set()
+        for mod in self.modules.values():
+            with open(mod.file, encoding="utf-8") as fh:
+                masked = mask_source(fh.read())
+            for fm in re.finditer(r"fn\s+([a-z_][A-Za-z0-9_]*)\s*(?:<[^(]*>)?\s*\(", masked):
+                methods.add(fm.group(1))
+        return methods
+
+
+STD_METHODS = {
+    # Option/Result
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "expect",
+    "ok", "err", "is_ok", "is_err", "is_some", "is_none", "map_err", "and_then",
+    "or_else", "ok_or", "ok_or_else", "take", "replace", "as_ref", "as_mut",
+    "as_deref", "cloned", "copied", "flatten", "unwrap_err", "get_or_insert_with",
+    # iterator
+    "iter", "iter_mut", "into_iter", "map", "filter", "filter_map", "fold",
+    "sum", "product", "collect", "enumerate", "zip", "chain", "rev", "skip",
+    "skip_while", "take_while", "step_by", "flat_map", "find", "find_map",
+    "position", "any", "all", "count", "min", "max", "min_by", "max_by",
+    "min_by_key", "max_by_key", "last", "nth", "peekable", "peek", "by_ref",
+    "windows", "chunks", "chunks_exact", "partition", "unzip", "scan", "cycle",
+    "inspect", "copied", "sum_by", "reduce", "try_fold",
+    # vec/slice
+    "len", "is_empty", "push", "pop", "insert", "remove", "clear", "truncate",
+    "extend", "extend_from_slice", "append", "sort", "sort_by", "sort_unstable",
+    "sort_by_key", "sort_unstable_by", "sort_unstable_by_key", "dedup",
+    "binary_search", "binary_search_by", "partition_point", "split_at",
+    "split_first", "split_last", "first", "get", "get_mut", "contains",
+    "starts_with", "ends_with", "join", "concat", "to_vec", "swap", "fill",
+    "resize", "retain", "drain", "reserve", "reserve_exact", "capacity",
+    "with_capacity", "shrink_to_fit", "swap_remove", "rotate_left", "split_off",
+    "first_mut", "last_mut", "iter_rows", "as_slice", "as_mut_slice",
+    # string
+    "to_string", "to_owned", "as_str", "as_bytes", "bytes", "chars", "char_indices",
+    "trim", "trim_start", "trim_end", "trim_start_matches", "trim_end_matches",
+    "split", "splitn", "rsplitn", "split_whitespace", "split_terminator", "lines",
+    "parse", "replace", "replacen", "to_lowercase", "to_uppercase", "repeat",
+    "push_str", "strip_prefix", "strip_suffix", "find", "rfind", "matches",
+    "eq_ignore_ascii_case", "is_char_boundary",
+    # numbers
+    "abs", "sqrt", "powi", "powf", "exp", "ln", "log2", "log10", "floor", "ceil",
+    "round", "trunc", "fract", "min", "max", "clamp", "is_finite", "is_nan",
+    "is_infinite", "is_sign_negative", "is_sign_positive", "signum", "recip",
+    "to_bits", "from_bits", "hypot", "mul_add", "rem_euclid", "div_euclid",
+    "saturating_add", "saturating_sub", "saturating_mul", "checked_add",
+    "checked_sub", "checked_mul", "checked_div", "wrapping_add", "wrapping_sub",
+    "wrapping_mul", "overflowing_add", "leading_zeros", "trailing_zeros",
+    "count_ones", "pow", "isqrt", "abs_diff", "total_cmp", "partial_cmp",
+    "to_le_bytes", "to_be_bytes", "to_ne_bytes",
+    # maps/sets
+    "entry", "or_insert", "or_insert_with", "or_default", "keys", "values",
+    "values_mut", "contains_key", "range", "insert", "remove_entry",
+    # misc std
+    "clone", "eq", "ne", "cmp", "hash", "fmt", "default", "into", "try_into",
+    "from", "try_from", "as_any", "borrow", "borrow_mut", "to_path_buf",
+    "display", "exists", "is_file", "is_dir", "extension", "file_name",
+    "file_stem", "parent", "components", "read_to_string", "write_all",
+    "flush", "read_line", "lock", "try_lock", "read", "write", "send", "recv",
+    "try_recv", "recv_timeout", "spawn", "sleep", "elapsed", "as_secs",
+    "as_secs_f64", "as_millis", "as_micros", "as_nanos", "from_secs",
+    "from_secs_f64", "from_millis", "from_micros", "from_nanos", "duration_since",
+    "checked_duration_since", "saturating_duration_since", "now", "wait",
+    "wait_timeout", "notify_one", "notify_all", "load", "store", "fetch_add",
+    "fetch_sub", "compare_exchange", "swap", "fetch_max", "fetch_min",
+    "is_poisoned", "into_inner", "get_ref", "get_many_mut", "join", "thread",
+    "id", "name", "panicking", "catch_unwind", "resume_unwind", "downcast",
+    "downcast_ref", "downcast_mut", "is", "type_id", "to_ascii_lowercase",
+    "to_ascii_uppercase", "make_ascii_lowercase", "is_ascii_digit",
+    "is_ascii_alphanumeric", "is_ascii_alphabetic", "is_ascii_whitespace",
+    "is_ascii_uppercase", "is_ascii_lowercase", "is_alphabetic", "is_numeric",
+    "is_alphanumeric", "is_whitespace", "is_uppercase", "is_lowercase",
+    "to_digit", "next", "next_back", "rem", "div", "mul", "add", "sub", "neg",
+    "not", "bitand", "bitor", "bitxor", "shl", "shr", "index", "index_mut",
+    "deref", "deref_mut", "drop", "finish", "debug_struct", "debug_tuple",
+    "debug_list", "debug_map", "field", "key", "value", "args", "var",
+    "current_dir", "temp_dir", "create_dir_all", "remove_file", "remove_dir_all",
+    "read_dir", "metadata", "canonicalize", "set_extension", "with_extension",
+    "to_str", "to_string_lossy", "as_os_str", "into_os_string", "success",
+    "code", "status", "stdout", "stderr", "stdin", "output", "arg", "env",
+}
+
+
+def check_enum_refs(crate, file, masked, variants_by_enum, items_global):
+    """Check Path::Variant references where Path is a known enum."""
+    for rm in re.finditer(r"\b([A-Z][A-Za-z0-9_]*)::([A-Za-z_][A-Za-z0-9_]*)\b", masked):
+        en, member = rm.group(1), rm.group(2)
+        if en in variants_by_enum:
+            vs = variants_by_enum[en]
+            if member in vs:
+                continue
+            # assoc fn/const on the enum? allow lowercase or SCREAMING or known-fn heuristics
+            if not member[0].isupper():
+                continue  # assoc fn
+            if member.isupper():
+                continue  # assoc const
+            if member in ("Output", "Item", "Err", "Ok"):
+                continue
+            crate.report("error", file, line_of(masked, rm.start()),
+                         f"enum `{en}` has no variant `{member}`")
+
+
+STD_STRUCT_WHITELIST = {
+    "Some", "Ok", "Err", "None", "Box", "Vec", "String", "Duration", "Range",
+    "RangeInclusive", "Instant", "PathBuf", "HashMap", "BTreeMap", "HashSet",
+    "BTreeSet", "VecDeque", "Ordering", "Self",
+}
+
+
+def check_struct_literals(crate, file, masked, fields_by_struct):
+    """`Name { field: v, .. }` — flag unknown field names (skip ..-spread unknown)."""
+    for sm in re.finditer(r"\b([A-Z][A-Za-z0-9_]*)\s*\{", masked):
+        name = sm.group(1)
+        if name in STD_STRUCT_WHITELIST or name not in fields_by_struct:
+            continue
+        known = fields_by_struct[name]
+        if known is None:
+            continue
+        open_idx = masked.index("{", sm.start())
+        # exclude match arms / blocks: struct literal heuristics — preceding
+        # non-space char should not be ')' '>' 'else' etc. Keep simple: check
+        # the body looks like `ident:` pairs or `..`.
+        close = brace_span(masked, open_idx)
+        body = masked[open_idx + 1 : close]
+        # only treat as literal if first token is `ident:` or `ident,` or `..`
+        probe = body.strip()
+        if not re.match(r"^(\.\.|[a-z_][A-Za-z0-9_]*\s*[:,}])", probe) and probe != "":
+            continue
+        for fm in re.finditer(r"(?:^|,)\s*([a-z_][A-Za-z0-9_]*)\s*(?=[:,}])", body):
+            fname = fm.group(1)
+            # shorthand or explicit — both must be real fields
+            if fname not in known:
+                crate.report("advisory", file, line_of(masked, open_idx),
+                             f"struct `{name}` has no field `{fname}` (pattern or literal)")
+
+
+IMPL_RE = re.compile(
+    r"^\s*impl(?:\s*<[^>]*>)?\s+(?:([A-Za-z_][A-Za-z0-9_]*(?:::[A-Za-z_][A-Za-z0-9_]*)*)\s*(?:<[^>]*>)?\s+for\s+)?"
+    r"([A-Za-z_][A-Za-z0-9_]*)",
+    re.M,
+)
+
+FN_RE = re.compile(r"\bfn\s+([a-z_][A-Za-z0-9_]*)\s*(?:<[^(]*>)?\s*\(")
+
+
+def paren_span(s, open_idx):
+    depth = 0
+    for j in range(open_idx, len(s)):
+        if s[j] in "([{":
+            depth += 1
+        elif s[j] in ")]}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(s) - 1
+
+
+def fn_arity(params: str):
+    """(has_self, n_args) from a raw parameter list."""
+    parts = split_top(params)
+    has_self = bool(parts) and ("self" == parts[0].split(":")[0].strip().split()[-1].lstrip("&").strip()
+                                or parts[0].strip() in ("self", "&self", "&mut self", "mut self"))
+    if has_self:
+        parts = parts[1:]
+    return has_self, len(parts)
+
+
+def collect_impls(masked):
+    """Yield (trait_name_or_None, type_name, {method: (has_self, arity)})."""
+    out = []
+    for im in IMPL_RE.finditer(masked):
+        trait_name, type_name = im.group(1), im.group(2)
+        brace = masked.find("{", im.end())
+        semi = masked.find(";", im.end())
+        if brace == -1 or (semi != -1 and semi < brace):
+            continue
+        close = brace_span(masked, brace)
+        body = masked[brace + 1 : close]
+        methods = {}
+        for fm in FN_RE.finditer(body):
+            p_open = body.index("(", fm.end() - 1)
+            p_close = paren_span(body, p_open)
+            methods[fm.group(1)] = fn_arity(body[p_open + 1 : p_close])
+        out.append((trait_name, type_name, methods, line_of(masked, im.start())))
+    return out
+
+
+def check_trait_impls(crate, file, masked, traits_by_name):
+    for trait_name, type_name, methods, ln in collect_impls(masked):
+        if not trait_name:
+            continue
+        tshort = trait_name.split("::")[-1]
+        td = traits_by_name.get(tshort)
+        if td is None:
+            continue  # std trait (Display, Drop, ...) or unknown
+        allowed = td["required"] | td["provided"]
+        for m in methods:
+            if m not in allowed:
+                crate.report("error", file, ln,
+                             f"impl {tshort} for {type_name}: `{m}` is not a member of the trait")
+        missing = td["required"] - set(methods)
+        if missing:
+            crate.report("error", file, ln,
+                         f"impl {tshort} for {type_name}: missing required method(s) {sorted(missing)}")
+
+
+ARM_CATCHALL_RE = re.compile(r"^\s*(_|[a-z_][A-Za-z0-9_]*)\s*$")
+HEAD_ENUM_RE = re.compile(r"\b([A-Z][A-Za-z0-9_]*)::([A-Z][A-Za-z0-9_]*)")
+
+STD_ENUMS = {"Option", "Result", "Ordering", "Bound", "Cow", "Entry", "ControlFlow"}
+
+
+def match_arms(body):
+    """Split a match body into (head, has_more) arm heads at depth 0."""
+    heads = []
+    i, n = 0, len(body)
+    while i < n:
+        # collect head up to => at depth 0
+        depth = 0
+        start = i
+        while i < n:
+            c = body[i]
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+            elif depth == 0 and body[i : i + 2] == "=>":
+                break
+            i += 1
+        if i >= n:
+            break
+        head = body[start:i].strip()
+        heads.append(head)
+        i += 2
+        # skip arm body
+        while i < n and body[i] in " \t\n":
+            i += 1
+        if i < n and body[i] == "{":
+            i = brace_span(body, i) + 1
+            if i < n and body[i : i + 1] == ",":
+                i += 1
+        else:
+            depth = 0
+            while i < n:
+                c = body[i]
+                if c in "([{":
+                    depth += 1
+                elif c in ")]}":
+                    depth -= 1
+                elif c == "," and depth == 0:
+                    i += 1
+                    break
+                i += 1
+    return heads
+
+
+def check_match_exhaustiveness(crate, file, masked, variants_by_enum):
+    for mm in re.finditer(r"\bmatch\b", masked):
+        brace = masked.find("{", mm.end())
+        if brace == -1:
+            continue
+        # guard against `match` in idents (premasked word boundary ok) and
+        # matches! macro (masked keeps `matches!` text: the ! precedes `(`)
+        close = brace_span(masked, brace)
+        body = masked[brace + 1 : close]
+        heads = match_arms(body)
+        if not heads:
+            continue
+        seen = defaultdict(set)
+        catchall = False
+        enums_in_heads = []
+        ok = True
+        for head in heads:
+            head_nog = head.split(" if ")[0]
+            if ARM_CATCHALL_RE.match(head_nog) or ".." in head_nog and "{" not in head_nog and "(" not in head_nog:
+                catchall = True
+                continue
+            refs = HEAD_ENUM_RE.findall(head_nog)
+            top = [r for r in refs if r[0] not in STD_ENUMS]
+            if not refs:
+                # literal / tuple / binding-with-struct pattern — bail out
+                ok = False
+                break
+            if not top:
+                ok = False  # std-enum match; rustc handles, skip
+                break
+            first = top[0]
+            enums_in_heads.append(first[0])
+            for en, v in top:
+                if en == first[0]:
+                    seen[en].add(v)
+        if not ok or catchall or not enums_in_heads:
+            continue
+        if len(set(enums_in_heads)) != 1:
+            continue
+        en = enums_in_heads[0]
+        known = variants_by_enum.get(en)
+        if not known:
+            continue
+        missing = known - seen[en]
+        # variants referenced that don't exist are caught elsewhere; here only missing
+        if missing and seen[en] <= known:
+            crate.report("error", file, line_of(masked, mm.start()),
+                         f"match on `{en}` missing variant(s) {sorted(missing)} and no catch-all arm")
+
+
+def build_method_signatures(crate):
+    """name -> set of (has_self, arity) across every impl block in src."""
+    sigs = defaultdict(set)
+    for mod in crate.modules.values():
+        with open(mod.file, encoding="utf-8") as fh:
+            masked = mask_source(fh.read())
+        for _tr, _ty, methods, _ln in collect_impls(masked):
+            for name, sig in methods.items():
+                sigs[name].add(sig)
+    return sigs
+
+
+def call_arg_count(orig_inner: str, masked_inner: str) -> int:
+    """Top-level commas from masked text, segment emptiness from original."""
+    commas = []
+    depth = 0
+    for i, ch in enumerate(masked_inner):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            commas.append(i)
+    count = 0
+    for a, b in zip([0] + [c + 1 for c in commas], commas + [len(orig_inner)]):
+        masked_seg = masked_inner[a:b]
+        orig_seg = orig_inner[a:b]
+        if masked_seg.strip():
+            count += 1
+        elif ('"' in orig_seg or "'" in orig_seg) and orig_seg.strip():
+            count += 1  # a lone string/char literal, blanked by masking
+    return count
+
+
+def check_call_arity(crate, file, src, masked, sigs):
+    for cm in re.finditer(r"\.([a-z_][A-Za-z0-9_]*)\s*\(", masked):
+        name = cm.group(1)
+        if name in STD_METHODS or name not in sigs or len(sigs[name]) != 1:
+            continue
+        ((has_self, arity),) = sigs[name]
+        if not has_self:
+            continue
+        p_open = masked.index("(", cm.end() - 1)
+        p_close = paren_span(masked, p_open)
+        call_arity = call_arg_count(src[p_open + 1 : p_close], masked[p_open + 1 : p_close])
+        if call_arity != arity:
+            crate.report("advisory", file, line_of(masked, cm.start()),
+                         f"call `.{name}(…)` passes {call_arity} arg(s); sole crate "
+                         f"definition takes {arity}")
+
+
+def build_assoc_signatures(crate):
+    """(type, fn) -> set of (has_self, arity); also enum tuple-variant arity."""
+    sigs = defaultdict(set)
+    for mod in crate.modules.values():
+        with open(mod.file, encoding="utf-8") as fh:
+            masked = mask_source(fh.read())
+        for _tr, ty, methods, _ln in collect_impls(masked):
+            for name, sig in methods.items():
+                sigs[(ty, name)].add(sig)
+    return sigs
+
+
+def build_variant_arity(crate):
+    """(enum, Variant) -> arity for tuple variants; -1 for struct/unit."""
+    out = {}
+    for mod in crate.modules.values():
+        with open(mod.file, encoding="utf-8") as fh:
+            masked = mask_source(fh.read())
+        for em in re.finditer(
+            r"(?:pub(?:\(\w+\))?\s+)?enum\s+([A-Za-z_][A-Za-z0-9_]*)\s*(?:<[^{]*>)?\s*\{", masked
+        ):
+            name = em.group(1)
+            close = brace_span(masked, masked.index("{", em.start()))
+            body = masked[em.end() : close]
+            for part in split_top(body):
+                part = part.strip()
+                vm = re.match(r"(?:#\[[^\]]*\]\s*)*([A-Z][A-Za-z0-9_]*)\s*(\(|\{|=|$)", part)
+                if not vm:
+                    continue
+                vname, opener = vm.group(1), vm.group(2)
+                if opener == "(":
+                    p_open = part.index("(", vm.end() - 1)
+                    p_close = paren_span(part, p_open)
+                    out[(name, vname)] = len(split_top(part[p_open + 1 : p_close]))
+                else:
+                    out[(name, vname)] = -1
+    return out
+
+
+def check_assoc_calls(crate, file, src, masked, assoc_sigs, variant_arity, enums):
+    """`Type::func(args)` arity for unique crate definitions; tuple-variant arity."""
+    for cm in re.finditer(r"\b([A-Z][A-Za-z0-9_]*)::([A-Za-z_][A-Za-z0-9_]*)\s*\(", masked):
+        ty, name = cm.group(1), cm.group(2)
+        p_open = masked.index("(", cm.end() - 1)
+        p_close = paren_span(masked, p_open)
+        call_arity = call_arg_count(src[p_open + 1 : p_close], masked[p_open + 1 : p_close])
+        if ty in enums and name[0].isupper():
+            want = variant_arity.get((ty, name))
+            if want is not None and want >= 0 and call_arity != want:
+                crate.report("error", file, line_of(masked, cm.start()),
+                             f"`{ty}::{name}` takes {want} value(s); constructed with {call_arity}")
+            continue
+        if name[0].isupper():
+            continue
+        key = (ty, name)
+        if key not in assoc_sigs or len(assoc_sigs[key]) != 1:
+            continue
+        ((has_self, arity),) = assoc_sigs[key]
+        want = arity + (1 if has_self else 0)  # UFCS passes the receiver
+        ok = call_arity == arity or (has_self and call_arity == want)
+        if not ok:
+            crate.report("advisory", file, line_of(masked, cm.start()),
+                         f"call `{ty}::{name}(…)` passes {call_arity} arg(s); "
+                         f"definition takes {arity}{' (+self)' if has_self else ''}")
+
+
+CONFIDENT_LIT_PREFIX = re.compile(r"(=|\(|,|\[|return|\bSome\(|\bOk\(|\bErr\(|=>|\.push\(|\bBox::new\()\s*$")
+
+
+def check_struct_literal_completeness(crate, file, masked, crate_struct_fields):
+    """E0063: literal without `..` base must name every field."""
+    for sm in re.finditer(r"\b([A-Z][A-Za-z0-9_]*)\s*\{", masked):
+        name = sm.group(1)
+        fields = crate_struct_fields.get(name)
+        if not fields:
+            continue
+        prefix = masked[max(0, sm.start() - 24) : sm.start()]
+        if not CONFIDENT_LIT_PREFIX.search(prefix):
+            continue
+        open_idx = masked.index("{", sm.start())
+        close = brace_span(masked, open_idx)
+        body = masked[open_idx + 1 : close]
+        if ".." in re.sub(r"\.\.[=.]", "", body):
+            continue  # functional-update base (mask range ops crudely)
+        named = set()
+        bad = False
+        for part in split_top(body):
+            fm = re.match(r"^([a-z_][A-Za-z0-9_]*)\s*(?::|$)", part.strip())
+            if fm:
+                named.add(fm.group(1))
+            else:
+                bad = True  # not a plain literal after all (e.g. a block)
+        if bad or not named:
+            continue
+        missing = fields - named
+        extra = named - fields
+        if extra:
+            continue  # probably a pattern or shadowed-name false positive
+        if missing:
+            crate.report("error", file, line_of(masked, sm.start()),
+                         f"literal `{name} {{…}}` missing field(s) {sorted(missing)} with no `..` base")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="rust")
+    ap.add_argument("--advisory", action="store_true", help="print advisory findings too")
+    args = ap.parse_args()
+
+    crate = Crate(args.root)
+    crate.load()
+
+    variants = crate.all_enum_variants()
+    fields = crate.all_struct_fields()
+    methods = crate.all_methods()
+    sigs = build_method_signatures(crate)
+    assoc_sigs = build_assoc_signatures(crate)
+    variant_arity = build_variant_arity(crate)
+    traits_by_name = {}
+    for mod in crate.modules.values():
+        traits_by_name.update(mod.traits)
+
+    # check src files
+    for mod in sorted(crate.modules.values(), key=lambda m: m.file):
+        with open(mod.file, encoding="utf-8") as fh:
+            src_text = fh.read()
+        masked = mask_source(src_text)
+        crate.check_uses(mod.file, masked, mod.path)
+        check_enum_refs(crate, mod.file, masked, variants, None)
+        check_trait_impls(crate, mod.file, masked, traits_by_name)
+        check_match_exhaustiveness(crate, mod.file, masked, variants)
+        check_call_arity(crate, mod.file, src_text, masked, sigs)
+        check_assoc_calls(crate, mod.file, src_text, masked, assoc_sigs, variant_arity, variants)
+        check_struct_literal_completeness(crate, mod.file, masked, fields)
+
+    # tests / benches / examples: `use tod::...`
+    extra = []
+    for sub in ("tests", "benches"):
+        d = os.path.join(args.root, sub)
+        if os.path.isdir(d):
+            for f in sorted(os.listdir(d)):
+                if f.endswith(".rs"):
+                    extra.append(os.path.join(d, f))
+    exdir = os.path.join(os.path.dirname(args.root) or ".", "examples")
+    if os.path.isdir(exdir):
+        for f in sorted(os.listdir(exdir)):
+            if f.endswith(".rs"):
+                extra.append(os.path.join(exdir, f))
+    for file in extra:
+        with open(file, encoding="utf-8") as fh:
+            src_text = fh.read()
+        masked = mask_source(src_text)
+        crate.check_uses(file, masked, "")
+        check_enum_refs(crate, file, masked, variants, None)
+        check_trait_impls(crate, file, masked, traits_by_name)
+        check_match_exhaustiveness(crate, file, masked, variants)
+        check_call_arity(crate, file, src_text, masked, sigs)
+        check_assoc_calls(crate, file, src_text, masked, assoc_sigs, variant_arity, variants)
+        check_struct_literal_completeness(crate, file, masked, fields)
+        # method-existence probe
+        for mm in re.finditer(r"\.([a-z_][A-Za-z0-9_]*)\s*\(", masked):
+            name = mm.group(1)
+            if name not in methods and name not in STD_METHODS:
+                crate.report("advisory", file, line_of(masked, mm.start()),
+                             f"method `.{name}()` not found in any impl block (may be std)")
+
+    errors = [f for f in crate.findings if f[0] == "error"]
+    advisories = [f for f in crate.findings if f[0] != "error"]
+    shown = crate.findings if args.advisory else errors
+    for sev, file, line, msg in sorted(shown, key=lambda t: (t[1], t[2])):
+        print(f"{sev}: {file}:{line}: {msg}")
+    print(f"\n{len(errors)} error(s), {len(advisories)} advisory finding(s) "
+          f"across {len(crate.modules)} modules")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
